@@ -1,0 +1,66 @@
+//! Ablation bench: what the Fig. 5 flip-storage scheme buys.
+//!
+//! Packs the sparse blocks of a realistic compressed feature map into
+//! the 8-SRAM feature-map buffer with and without alternate-block
+//! vertical flipping and reports SRAM utilization; also ablates the
+//! IDCT index-gating power saving.
+
+use fmc_accel::bench_util::{pct, Bencher, Table};
+use fmc_accel::compress::encode::{pack_without_flip, FlipPacker};
+use fmc_accel::compress::{codec, qtable::qtable};
+use fmc_accel::data::{natural_image, Smoothness};
+
+fn main() {
+    println!("== ablation: flip storage (Fig 5) ==");
+    let mut t = Table::new(&[
+        "Feature map",
+        "util (flip)",
+        "util (no flip)",
+        "SRAM words saved",
+    ]);
+    for (name, s) in [
+        ("early, Q1", Smoothness::Natural),
+        ("mid, Q1", Smoothness::Mixed),
+        ("deep, Q1", Smoothness::Abstract),
+    ] {
+        let fmap = natural_image(5, 8, 64, 64, s, true);
+        let cf = codec::compress(&fmap, &qtable(1));
+        let mut flip = FlipPacker::new();
+        for b in &cf.blocks {
+            flip.push(b);
+        }
+        let noflip = pack_without_flip(&cf.blocks);
+        t.row(&[
+            name.to_string(),
+            pct(flip.utilization()),
+            pct(noflip.utilization()),
+            format!(
+                "{}",
+                noflip.allocated_words() as i64
+                    - flip.allocated_words() as i64
+            ),
+        ]);
+    }
+    t.print();
+
+    println!("\n== ablation: IDCT index gating ==");
+    let fmap = natural_image(6, 8, 64, 64, Smoothness::Natural, true);
+    let cf = codec::compress(&fmap, &qtable(1));
+    let density =
+        cf.nnz() as f64 / (cf.blocks.len() * 64) as f64;
+    println!(
+        "nnz density {:.1}% -> {:.1}% of IDCT multiplies gated off",
+        density * 100.0,
+        (1.0 - density) * 100.0
+    );
+
+    let b = Bencher::default();
+    let s = b.run("flip-pack 4096 blocks", || {
+        let mut p = FlipPacker::new();
+        for blk in &cf.blocks {
+            p.push(blk);
+        }
+        p.total_words()
+    });
+    println!("\n{}", s.report());
+}

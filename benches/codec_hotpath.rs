@@ -1,0 +1,67 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! DCT naive vs Gong-fast, whole-feature-map compress/decompress
+//! throughput, and the encode/pack stage.
+
+use fmc_accel::bench_util::Bencher;
+use fmc_accel::compress::{codec, dct, qtable::qtable};
+use fmc_accel::data::{natural_image, Smoothness};
+use fmc_accel::testutil::Prng;
+
+fn main() {
+    let b = Bencher::new(3, 20);
+    let mut p = Prng::new(1);
+    let mut blocks = vec![[0f32; 64]; 4096];
+    for blk in blocks.iter_mut() {
+        p.fill_normal(blk, 1.0);
+    }
+
+    let s1 = b.run("dct2d naive x4096", || {
+        let mut acc = 0f32;
+        for blk in &blocks {
+            acc += dct::dct2d(blk)[0];
+        }
+        acc
+    });
+    let s2 = b.run("dct2d fast  x4096", || {
+        let mut acc = 0f32;
+        for blk in &blocks {
+            acc += dct::dct2d_fast(blk)[0];
+        }
+        acc
+    });
+    let s3 = b.run("idct2d fast x4096", || {
+        let mut acc = 0f32;
+        for blk in &blocks {
+            acc += dct::idct2d_fast(blk)[0];
+        }
+        acc
+    });
+
+    let fmap =
+        natural_image(9, 32, 64, 64, Smoothness::Natural, true);
+    let qt = qtable(1);
+    let s4 = b.run("compress 32x64x64 fmap", || {
+        codec::compress(&fmap, &qt).compressed_bits()
+    });
+    let cf = codec::compress(&fmap, &qt);
+    let s5 = b.run("decompress 32x64x64 fmap", || {
+        codec::decompress(&cf).data[0]
+    });
+
+    for s in [&s1, &s2, &s3, &s4, &s5] {
+        println!("{}", s.report());
+    }
+    let elems = (32 * 64 * 64) as f64;
+    println!(
+        "\ncompress throughput : {:.1} Melem/s",
+        elems / s4.mean.as_secs_f64() / 1e6
+    );
+    println!(
+        "decompress throughput: {:.1} Melem/s",
+        elems / s5.mean.as_secs_f64() / 1e6
+    );
+    println!(
+        "fast-DCT speedup over naive: {:.2}x",
+        s1.mean.as_secs_f64() / s2.mean.as_secs_f64()
+    );
+}

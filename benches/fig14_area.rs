@@ -1,0 +1,20 @@
+//! Regenerates paper Fig. 14: area breakdown of the accelerator.
+//! Expected shape: PE array ≈ 26% of logic gates, DCT/IDCT ≈ 13%
+//! ("light hardware overhead"), SRAM > half the core area.
+
+use fmc_accel::config::AccelConfig;
+use fmc_accel::harness::figs;
+use fmc_accel::sim::energy::AreaBreakdown;
+
+fn main() {
+    let cfg = AccelConfig::default();
+    println!("== Fig 14: area breakdown ==");
+    figs::fig14(&cfg).print();
+    let a = AreaBreakdown::compute(&cfg);
+    println!(
+        "\ntotal logic: {} K gates (paper: 1127 K); \
+         DCT/IDCT share {:.1}% (paper: ~13%)",
+        a.total_gates() / 1000,
+        a.dct_fraction() * 100.0
+    );
+}

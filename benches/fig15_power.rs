@@ -1,0 +1,17 @@
+//! Regenerates paper Fig. 15: dynamic power breakdown on a VGG-16-BN
+//! run. Expected shape: DCT+IDCT ≈ 19% of core dynamic power, PE
+//! array the largest consumer.
+
+use fmc_accel::bench_util::Bencher;
+use fmc_accel::config::AccelConfig;
+use fmc_accel::harness::figs;
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let s = Bencher::new(0, 1)
+        .run("fig15 (VGG sim + profile)", || figs::fig15(&cfg, 42));
+    println!("== Fig 15: power breakdown (VGG-16-BN) ==");
+    figs::fig15(&cfg, 42).print();
+    println!("\npaper: 186.6 mW total dynamic, DCT/IDCT 19%");
+    println!("\n{}", s.report());
+}

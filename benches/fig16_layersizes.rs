@@ -1,0 +1,21 @@
+//! Regenerates paper Fig. 16 (a)–(d): original vs compressed
+//! interlayer data size of the first ten fusion layers for VGG-16-BN,
+//! ResNet-50, Yolo-v3 and MobileNet-v1.
+//!
+//! Expected shape: VGG layer sizes drop below ~1 MB compressed;
+//! ResNet large maps below ~0.5 MB; Yolo's biggest layers land between
+//! 0.5 and 1.5 MB; MobileNet compresses less but its largest three
+//! layers still shrink markedly.
+
+use fmc_accel::bench_util::Bencher;
+use fmc_accel::harness::figs;
+
+fn main() {
+    let s = Bencher::new(0, 1)
+        .run("fig16 (4 networks x 10 layers)", || figs::fig16(42));
+    for series in figs::fig16(42) {
+        println!("\n--- {} ---", series.network);
+        figs::fig16_table(&series).print();
+    }
+    println!("\n{}", s.report());
+}

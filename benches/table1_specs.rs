@@ -1,0 +1,19 @@
+//! Regenerates paper Table I (hardware specifications) from the
+//! configuration + area model, and times the area-model evaluation.
+
+use fmc_accel::bench_util::Bencher;
+use fmc_accel::config::AccelConfig;
+use fmc_accel::harness::tables;
+use fmc_accel::sim::energy::AreaBreakdown;
+
+fn main() {
+    let cfg = AccelConfig::default();
+    println!("== Table I: hardware specifications ==");
+    tables::table1(&cfg).print();
+    println!(
+        "\npaper: 1127K gates, 403 GOPS, 480KB SRAM, 1.65x1.3 mm^2"
+    );
+    let s = Bencher::default()
+        .run("area model", || AreaBreakdown::compute(&cfg));
+    println!("\n{}", s.report());
+}

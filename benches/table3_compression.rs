@@ -1,0 +1,23 @@
+//! Regenerates paper Table III: layer-by-layer compression ratio of
+//! the first ten fusion layers + overall, five networks.
+//!
+//! Expected shape (paper): VGG-16-BN best overall (~31%), MobileNets
+//! worst (~61-71%); fusion-1 ratios far below deep-layer ratios.
+//! (The accuracy rows of Table III are produced by
+//! python/tests/test_accuracy.py on the really-trained SmallCNN.)
+
+use fmc_accel::bench_util::Bencher;
+use fmc_accel::harness::tables;
+
+fn main() {
+    let s = Bencher::new(0, 1)
+        .run("table3 (5 networks x 10 layers)", || tables::table3(42));
+    let t = tables::table3(42);
+    println!("== Table III: layer-by-layer compression ratio ==");
+    tables::table3_table(&t).print();
+    println!("\npaper overall row: VGG 30.63%, ResNet 52.51%, \
+              Yolo 65.63%, MBv1 61.02%, MBv2 71.05%");
+    println!("accuracy rows: see python/tests/test_accuracy.py \
+              (trained SmallCNN, <1% loss at calibrated levels)");
+    println!("\n{}", s.report());
+}

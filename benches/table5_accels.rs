@@ -1,0 +1,22 @@
+//! Regenerates paper Table V: comparison with other accelerators.
+//! Comparator rows are quoted from the paper (their silicon numbers);
+//! our row is measured on the simulator running VGG-16-BN with the
+//! first 10 fusion layers compressed. Includes the baseline-codec
+//! companion table (RLE / CSR / COO vs DCT on the same maps).
+
+use fmc_accel::bench_util::Bencher;
+use fmc_accel::config::AccelConfig;
+use fmc_accel::harness::tables;
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let s = Bencher::new(0, 1)
+        .run("table5 (sim VGG run)", || tables::table5(&cfg, 42));
+    println!("== Table V: comparison with other accelerators ==");
+    tables::table5_table(&tables::table5(&cfg, 42)).print();
+    println!("\npaper (this work row): 403 GOPS peak, 186.6 mW, \
+              2.16 TOPS/W, 10.53 fps VGG-16");
+    println!("\n-- baseline codecs on identical feature maps --");
+    tables::baseline_comparison(42).print();
+    println!("\n{}", s.report());
+}

@@ -1,0 +1,111 @@
+//! End-to-end validation driver (DESIGN.md §5 row E2E): serve batched
+//! classification requests through the full stack —
+//!
+//!   shapes workload → coordinator (queue + dynamic batcher)
+//!   → PJRT runtime executing the AOT JAX/Pallas artifact with the
+//!     interlayer DCT codec inside → responses with latency
+//!   → simulated-accelerator accounting (cycles/energy per request)
+//!   → rust codec measuring the actual interlayer compression
+//!
+//! and print throughput/latency/accuracy plus the hardware numbers.
+//! Requires `make artifacts`. Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e_serving -- [n_requests]`
+
+use std::time::Instant;
+
+use fmc_accel::compress::{codec, qtable::qtable};
+use fmc_accel::config::models;
+use fmc_accel::coordinator::{InferenceServer, ServerConfig};
+use fmc_accel::data;
+use fmc_accel::harness::profiles;
+use fmc_accel::runtime::default_artifacts_dir;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128);
+
+    // --- measure the real interlayer compression of the workload's
+    //     own feature maps (SmallCNN schedule 1,2,3), via the codec
+    let net = models::smallcnn().with_default_schedule(3);
+    let prof = profiles::profile_network(&net, 11);
+    println!("interlayer compression of the served model:");
+    for (l, p) in net.layers.iter().zip(prof.iter()) {
+        if let Some(p) = p {
+            println!(
+                "  {:4}  Q-level {}  ratio {:5.1}%  nnz {:4.1}%",
+                l.name,
+                p.qlevel,
+                p.ratio * 100.0,
+                p.nnz_density * 100.0
+            );
+        }
+    }
+    println!(
+        "  overall: {:.1}%\n",
+        profiles::overall_ratio(&prof) * 100.0
+    );
+
+    // --- serve
+    let mut cfg = ServerConfig::new(default_artifacts_dir());
+    cfg.compressed = true;
+    let server = InferenceServer::start(cfg)?;
+    let workload = data::shapes_batch(2024, n, 32);
+
+    let t0 = Instant::now();
+    let rxs: Vec<_> = workload
+        .iter()
+        .map(|(img, _)| server.submit(img.clone()))
+        .collect();
+    let mut correct = 0usize;
+    let mut sim_cycles = 0u64;
+    let mut sim_energy = 0f64;
+    for ((_, label), rx) in workload.iter().zip(rxs) {
+        let resp = rx.recv()?;
+        if resp.class == *label {
+            correct += 1;
+        }
+        sim_cycles += resp.sim_cycles;
+        sim_energy += resp.sim_energy_j;
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown();
+
+    println!("requests          : {n}");
+    println!("batches           : {}", metrics.batches);
+    println!(
+        "accuracy          : {:.1}%",
+        correct as f64 / n as f64 * 100.0
+    );
+    println!(
+        "wall time         : {:.2} s  ({:.1} req/s host)",
+        wall.as_secs_f64(),
+        n as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "mean / p99 latency: {:.1} / {:.1} ms (incl. first-compile)",
+        metrics.mean_latency_us() / 1e3,
+        metrics.quantile_us(0.99) as f64 / 1e3
+    );
+    println!(
+        "simulated HW cost : {} cycles/img ({:.2} ms @700 MHz), {:.1} uJ/img",
+        sim_cycles / n as u64,
+        sim_cycles as f64 / n as f64 / 700e6 * 1e3,
+        sim_energy / n as f64 * 1e6
+    );
+
+    // --- sanity: the served pipeline really is lossy-compressed; show
+    //     the roundtrip distortion on one image
+    let (img, _) = &workload[0];
+    let rt = codec::roundtrip(img, &qtable(1));
+    println!(
+        "input codec roundtrip MSE (Q-level 1): {:.6}",
+        img.mse(&rt)
+    );
+    if metrics.errors > 0 {
+        anyhow::bail!("{} serving errors", metrics.errors);
+    }
+    Ok(())
+}

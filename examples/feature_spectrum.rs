@@ -1,0 +1,62 @@
+//! Fig 2 motivation study: why DCT compression works on early layers
+//! and fades on deep ones.
+//!
+//! Generates activation maps with depth-appropriate statistics, shows
+//! their DCT energy compaction, compression ratio at every Q-level,
+//! and the reconstruction SNR — the quantitative version of the
+//! paper's Fig. 2 "layer 1/5 look like images, layer 50 doesn't".
+//!
+//! Run: `cargo run --release --example feature_spectrum`
+
+use fmc_accel::bench_util::{pct, Table};
+use fmc_accel::compress::{codec, dct, qtable::qtable};
+use fmc_accel::data::{natural_image, Smoothness};
+use fmc_accel::harness::figs;
+
+fn main() {
+    println!("== spectrum vs depth (summary) ==");
+    figs::fig2_spectrum(42).print();
+
+    println!("\n== per-Q-level detail ==");
+    let mut t = Table::new(&[
+        "Depth", "Q-level", "ratio", "nnz", "SNR (dB)",
+    ]);
+    for (name, s) in [
+        ("early", Smoothness::Natural),
+        ("mid", Smoothness::Mixed),
+        ("deep", Smoothness::Abstract),
+    ] {
+        let fmap = natural_image(7, 8, 32, 32, s, true);
+        for level in 0..4 {
+            let qt = qtable(level);
+            let cf = codec::compress(&fmap, &qt);
+            let snr = codec::roundtrip_snr_db(&fmap, &qt);
+            t.row(&[
+                name.to_string(),
+                level.to_string(),
+                pct(cf.compression_ratio()),
+                pct(cf.nnz() as f64 / (cf.blocks.len() * 64) as f64),
+                format!("{snr:.1}"),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n== DCT energy compaction of one early-layer block ==");
+    let fmap = natural_image(3, 1, 8, 8, Smoothness::Natural, false);
+    let mut blk = [0f32; 64];
+    blk.copy_from_slice(&fmap.data);
+    let z = dct::dct2d(&blk);
+    let total: f32 = z.iter().map(|v| v * v).sum();
+    let mut cum = 0f32;
+    for (i, zz) in z.iter().enumerate().take(16) {
+        cum += zz * zz;
+        println!(
+            "coef {:2} (zig {:2}): energy {:6.2}%  cumulative {:6.2}%",
+            i,
+            i,
+            zz * zz / total * 100.0,
+            cum / total * 100.0
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! Quickstart: compress a feature map with the paper's DCT codec and
+//! simulate one VGG-16-BN inference on the 403-GOPS accelerator.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fmc_accel::compress::{codec, qtable::qtable};
+use fmc_accel::config::{models, AccelConfig};
+use fmc_accel::data::{natural_image, Smoothness};
+use fmc_accel::harness::profiles;
+use fmc_accel::sim::Accelerator;
+use fmc_accel::util::human_bytes;
+
+fn main() {
+    // 1. The codec: 8x8 DCT -> two-step quantization -> sparse bitmap.
+    let fmap =
+        natural_image(1, 8, 64, 64, Smoothness::Natural, true);
+    let compressed = codec::compress(&fmap, &qtable(1));
+    println!("codec: {} -> {} ({:.1}% of original)",
+             human_bytes(compressed.original_bits() / 8),
+             human_bytes(compressed.compressed_bits() / 8),
+             compressed.compression_ratio() * 100.0);
+    let restored = codec::decompress(&compressed);
+    println!("reconstruction MSE: {:.5}\n", fmap.mse(&restored));
+
+    // 2. The accelerator: simulate VGG-16-BN with the first 10 fusion
+    //    layers compressed (the paper's Table II/III setup).
+    let net = models::vgg16_bn().with_paper_schedule();
+    let prof = profiles::profile_network(&net, 42);
+    let accel = Accelerator::new(AccelConfig::default());
+    let rep = accel.run(&net, &profiles::to_sim_profiles(&prof));
+    println!("{}: {:.2} fps, {:.1} GOPS, {:.2} TOPS/W",
+             rep.network, rep.fps(), rep.gops(), rep.tops_per_w());
+    println!("DRAM feature-map traffic: {}",
+             human_bytes(rep.dram_fmap_bytes()));
+
+    // 3. Versus no compression:
+    let raw = accel.run_flat(&net, None);
+    println!("without compression     : {}",
+             human_bytes(raw.dram_fmap_bytes()));
+    println!("traffic reduction       : {:.1}x",
+             raw.dram_fmap_bytes() as f64
+                 / rep.dram_fmap_bytes().max(1) as f64);
+}

@@ -1,0 +1,192 @@
+"""AOT lowering: jax (L2) + pallas (L1) -> HLO *text* artifacts for rust.
+
+Interchange is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to ../artifacts/, consumed by rust/src/runtime/):
+
+  model.hlo.txt           SmallCNN fwd, batch=4, trained weights baked in,
+                          NO interlayer compression (golden baseline).
+  model_comp.hlo.txt      Same, with the interlayer DCT codec roundtrip
+                          after every fusion layer (calibrated Q-levels).
+  dct_compress.hlo.txt    L1 compress kernel: (N,8,8) blocks + Q-table ->
+                          (q2, fmin, fmax). N = 1024.
+  dct_decompress.hlo.txt  L1 decompress kernel (inverse).
+  fusion_layer.hlo.txt    One parametric conv3x3+BN+ReLU+pool fusion layer
+                          (x, w, scale, bias as runtime parameters).
+  manifest.json           entry -> {file, arg shapes/dtypes, outputs}.
+
+Run via `make artifacts`. Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import dct8x8, ref
+from .train import params_from_flat, train, params_to_flat
+
+# SmallCNN per-layer Q-levels used by the compressed artifact: calibrated
+# offline (the paper's "off-line regression experiment"): aggressive early,
+# gentle late. test_accuracy.py verifies <1% accuracy delta at these.
+CALIBRATED_QLEVELS = (1, 2, 3)
+
+DCT_BLOCKS = 1024  # blocks per compress/decompress artifact invocation
+MODEL_BATCH = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    print_large_constants=True is essential: the default printer elides
+    array constants (e.g. the baked DCT basis and trained weights) as
+    `constant({...})`, which the xla_extension 0.5.1 text parser reads
+    back as zeros — silently corrupting the artifact.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def build_artifacts(outdir: str, weights_path: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+
+    # --- trained weights (train now if absent: `make artifacts` from clean)
+    if not os.path.exists(weights_path):
+        print("weights.npz missing -> training SmallCNN ...")
+        params = train(verbose=True)
+        np.savez(weights_path, **params_to_flat(params))
+    params = params_from_flat(np.load(weights_path))
+
+    manifest = {}
+
+    def emit(name: str, lowered, args, outputs: list) -> None:
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        # Self-check: an elided constant would silently zero the DCT
+        # basis / trained weights on the rust side (see to_hlo_text).
+        if "constant({...})" in text:
+            raise RuntimeError(
+                f"{name}: HLO text contains elided constants — "
+                "print_large_constants regression"
+            )
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": args,
+            "outputs": outputs,
+        }
+        print(f"  {name}: {len(text)} chars")
+
+    # --- SmallCNN, uncompressed --------------------------------------------
+    xspec = jax.ShapeDtypeStruct((MODEL_BATCH, 1, 32, 32), jnp.float32)
+
+    def fwd_plain(x):
+        return (model.smallcnn_fwd_batch(params, x, qlevels=(None,) * 3,
+                                         use_kernels=True),)
+
+    emit("model", jax.jit(fwd_plain).lower(xspec),
+         [_spec((MODEL_BATCH, 1, 32, 32))], [_spec((MODEL_BATCH, 4))])
+
+    # --- SmallCNN, interlayer compression at calibrated Q-levels -----------
+    def fwd_comp(x):
+        return (model.smallcnn_fwd_batch(params, x,
+                                         qlevels=CALIBRATED_QLEVELS,
+                                         use_kernels=True),)
+
+    emit("model_comp", jax.jit(fwd_comp).lower(xspec),
+         [_spec((MODEL_BATCH, 1, 32, 32))], [_spec((MODEL_BATCH, 4))])
+
+    # --- L1 codec kernels ----------------------------------------------------
+    bspec = jax.ShapeDtypeStruct((DCT_BLOCKS, 8, 8), jnp.float32)
+    qtspec = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    vspec = jax.ShapeDtypeStruct((DCT_BLOCKS,), jnp.float32)
+
+    def comp_fn(blocks, qt):
+        return dct8x8.compress(blocks, qt)
+
+    emit("dct_compress", jax.jit(comp_fn).lower(bspec, qtspec),
+         [_spec((DCT_BLOCKS, 8, 8)), _spec((8, 8))],
+         [_spec((DCT_BLOCKS, 8, 8)), _spec((DCT_BLOCKS,)),
+          _spec((DCT_BLOCKS,))])
+
+    def decomp_fn(q2, fmin, fmax, qt):
+        return (dct8x8.decompress(q2, fmin, fmax, qt),)
+
+    emit("dct_decompress",
+         jax.jit(decomp_fn).lower(bspec, vspec, vspec, qtspec),
+         [_spec((DCT_BLOCKS, 8, 8)), _spec((DCT_BLOCKS,)),
+          _spec((DCT_BLOCKS,)), _spec((8, 8))],
+         [_spec((DCT_BLOCKS, 8, 8))])
+
+    # --- parametric fusion layer ------------------------------------------
+    FL_CIN, FL_COUT, FL_HW = 16, 32, 32
+    spec = model.FusionSpec(cin=FL_CIN, cout=FL_COUT, act="relu",
+                            pool="max", qlevel=1)
+
+    def fusion_fn(x, w, scale, bias):
+        p = model.FusionParams(w=w, bn_scale=scale, bn_bias=bias,
+                               prelu_a=jnp.full((1,), 0.1, jnp.float32))
+        return (model.fusion_layer(x, p, spec, use_kernels=True),)
+
+    emit(
+        "fusion_layer",
+        jax.jit(fusion_fn).lower(
+            jax.ShapeDtypeStruct((FL_CIN, FL_HW, FL_HW), jnp.float32),
+            jax.ShapeDtypeStruct((FL_COUT, FL_CIN, 3, 3), jnp.float32),
+            jax.ShapeDtypeStruct((FL_COUT,), jnp.float32),
+            jax.ShapeDtypeStruct((FL_COUT,), jnp.float32),
+        ),
+        [
+            _spec((FL_CIN, FL_HW, FL_HW)),
+            _spec((FL_COUT, FL_CIN, 3, 3)),
+            _spec((FL_COUT,)),
+            _spec((FL_COUT,)),
+        ],
+        [_spec((FL_COUT, FL_HW // 2, FL_HW // 2))],
+    )
+
+    manifest["_meta"] = {
+        "model_batch": MODEL_BATCH,
+        "dct_blocks": DCT_BLOCKS,
+        "calibrated_qlevels": list(CALIBRATED_QLEVELS),
+        "classes": 4,
+        "qtables": {
+            str(l): np.asarray(ref.qtable(l)).astype(float).tolist()
+            for l in range(4)
+        },
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  manifest.json: {len(manifest) - 1} entries")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the primary artifact; its directory "
+                    "receives all artifacts")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    build_artifacts(outdir, os.path.join(outdir, "weights.npz"))
+
+
+if __name__ == "__main__":
+    main()

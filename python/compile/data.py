@@ -1,0 +1,83 @@
+"""Synthetic workloads (build-time twins of rust/src/data/).
+
+Two generators:
+
+* `shapes_dataset` — a tiny 4-class geometric-shapes classification set
+  used to *really train* the small CNN for the paper's accuracy-loss
+  experiment (Table III bottom rows). The paper used PASCAL-VOC
+  pretrained models we cannot download; a trained-from-scratch classifier
+  exercises the identical code path (accuracy with vs without interlayer
+  compression at each Q-level).
+
+* `natural_images` — 1/f-spectrum Gaussian random fields. Natural images
+  famously have ~1/f amplitude spectra; feature maps of early CNN layers
+  inherit that smoothness (paper Fig. 2), which is precisely what makes
+  DCT compression work. These drive the compression-ratio experiments.
+
+The rust twin (`rust/src/data/`) generates statistically equivalent
+workloads with its own seeded PRNG (bit-exactness across numpy/rust FFTs
+is not required — the compression experiments depend only on the spectral
+statistics, which both sides match; the *codec* itself is pinned
+bit-exactly via golden files instead).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 4  # circle, square, triangle, cross
+
+
+def _draw_shape(rng: np.random.Generator, cls: int, size: int) -> np.ndarray:
+    """Rasterize one shape with random position/scale on a noisy canvas."""
+    img = rng.normal(0.0, 0.08, size=(size, size)).astype(np.float32)
+    cx, cy = rng.uniform(size * 0.3, size * 0.7, size=2)
+    r = rng.uniform(size * 0.15, size * 0.3)
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float32)
+    if cls == 0:  # circle
+        mask = (xx - cx) ** 2 + (yy - cy) ** 2 <= r * r
+    elif cls == 1:  # square
+        mask = (np.abs(xx - cx) <= r) & (np.abs(yy - cy) <= r)
+    elif cls == 2:  # triangle (upward)
+        mask = (yy >= cy - r) & (yy <= cy + r) & (
+            np.abs(xx - cx) <= (yy - (cy - r)) / 2.0
+        )
+    else:  # cross
+        mask = ((np.abs(xx - cx) <= r / 3) & (np.abs(yy - cy) <= r)) | (
+            (np.abs(yy - cy) <= r / 3) & (np.abs(xx - cx) <= r)
+        )
+    img[mask] += rng.uniform(0.7, 1.0)
+    return img
+
+
+def shapes_dataset(n: int, size: int = 32, seed: int = 0):
+    """n images of shape (n, 1, size, size) + labels (n,)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, NUM_CLASSES, size=n)
+    imgs = np.stack([_draw_shape(rng, int(c), size) for c in labels])
+    return imgs[:, None, :, :].astype(np.float32), labels.astype(np.int32)
+
+
+def natural_images(n: int, channels: int, size: int, seed: int = 0,
+                   alpha: float = 1.2) -> np.ndarray:
+    """1/f^alpha-spectrum Gaussian random fields, (n, channels, size, size).
+
+    alpha ~= 1.0-1.4 matches natural-image statistics; alpha = 0 is white
+    noise (the "deep layer / abstract features" end of the paper's Fig. 2).
+    """
+    rng = np.random.default_rng(seed)
+    fy = np.fft.fftfreq(size)[:, None]
+    fx = np.fft.rfftfreq(size)[None, :]
+    f = np.sqrt(fy * fy + fx * fx)
+    f[0, 0] = 1.0 / size  # avoid div-by-zero at DC
+    amp = f ** (-alpha)
+    out = np.empty((n, channels, size, size), np.float32)
+    for i in range(n):
+        for c in range(channels):
+            phase = rng.normal(size=(size, size // 2 + 1)) + 1j * rng.normal(
+                size=(size, size // 2 + 1)
+            )
+            field = np.fft.irfft2(phase * amp, s=(size, size))
+            field = (field - field.mean()) / (field.std() + 1e-8)
+            out[i, c] = field.astype(np.float32)
+    return out

@@ -1,0 +1,78 @@
+"""Emit golden vectors pinning the codec semantics for the rust tests.
+
+Run (from python/):  python -m compile.golden
+Writes rust/tests/golden/codec_golden.json. The rust compress module
+(`rust/src/compress/`) must reproduce these numbers bit-exactly in f32
+(same ops, round-half-to-even), which is what locks the L1/L2/L3 layers
+to a single semantics.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def f32list(a) -> list:
+    return [float(x) for x in np.asarray(a, np.float32).reshape(-1)]
+
+
+def main() -> None:
+    rng = np.random.default_rng(20210913)  # fixed forever
+    cases = []
+    # Mix of block statistics: noise, smooth ramp, sparse impulse, constant.
+    blocks = [
+        rng.normal(0, 1, (8, 8)),
+        np.broadcast_to(np.linspace(-1, 1, 8)[:, None], (8, 8)).copy(),
+        np.zeros((8, 8)),
+        np.full((8, 8), 2.75),
+        rng.normal(0, 10, (8, 8)),
+        np.outer(np.linspace(0, 1, 8), np.linspace(1, 0, 8)),
+    ]
+    for i, b in enumerate(blocks):
+        x = jnp.asarray(b[None].astype(np.float32))
+        z = ref.dct2d_blocks(x)
+        case = {
+            "name": f"block{i}",
+            "input": f32list(x),
+            "dct": f32list(z),
+            "levels": [],
+        }
+        for level in range(4):
+            qt = ref.qtable(level)
+            q2, mn, mx = ref.compress_blocks(x, qt)
+            rec = ref.decompress_blocks(q2, mn, mx, qt)
+            case["levels"].append(
+                {
+                    "level": level,
+                    "q2": f32list(q2),
+                    "fmin": float(np.asarray(mn)[0]),
+                    "fmax": float(np.asarray(mx)[0]),
+                    "recon": f32list(rec),
+                }
+            )
+        cases.append(case)
+
+    out = {
+        "dct_matrix": f32list(ref.dct_matrix(8)),
+        "qtables": [f32list(ref.qtable(l)) for l in range(4)],
+        "imax": ref.IMAX,
+        "cases": cases,
+    }
+    path = os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "golden"
+    )
+    os.makedirs(path, exist_ok=True)
+    fname = os.path.join(path, "codec_golden.json")
+    with open(fname, "w") as f:
+        json.dump(out, f)
+    print(f"wrote {os.path.abspath(fname)} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (build-time only; lowered into AOT artifacts)."""
+from . import ref, dct8x8, conv_rf  # noqa: F401

@@ -1,0 +1,178 @@
+"""L1 Pallas kernel: row-frame convolution (the PE-array datapath).
+
+The paper's PE array (§V-B, Figs. 8-10) convolves 8-row "row frames"
+(the same 8-row granularity as the 8x8 DCT blocks): 32 PE units x 9 MACs
+compute a 3x3 convolution over 8 rows x 4 input channels in parallel,
+with a data MUX resolving the 3x3 overlap across row-frame boundaries by
+assigning PE units 0 and 7 to the previous/next frame's partial sums.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the per-PE MAC fabric
+becomes a tensordot against the 3x3 taps; the row-frame streaming becomes
+a grid over (output-channel block, row frame); the halo rows that the
+data MUX forwards between frames become two extra padded input rows read
+per frame (the input stays in ANY/HBM and each frame's 10-row slab is
+sliced into VMEM with pl.dynamic_slice — the BlockSpec analogue of the
+feature-map-buffer -> PE-array fetch). Partial-sum accumulation over
+input channels stays kernel-local (the scratch-pad analogue).
+
+interpret=True: correctness path for CPU PJRT; structure mirrors what a
+Mosaic lowering would tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output channels computed per grid step: the PE array time-multiplexes 4
+# filters over 4 cycles in 3x3 mode and 8 filters per cycle in 1x1 mode.
+COUT_BLOCK_3X3 = 4
+COUT_BLOCK_1X1 = 8
+ROW_FRAME = 8
+
+
+def _conv_rf_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int,
+                    cout_blk: int, rows_out: int, w_out: int):
+    """One grid step: `cout_blk` output maps x one output row frame.
+
+    x_ref: full padded input (Cin, Hp, Wp) in ANY memory space.
+    w_ref: full weights (Cout, Cin, K, K).
+    o_ref: output block (cout_blk, ROW_FRAME, w_out).
+    """
+    co = pl.program_id(0)
+    rf = pl.program_id(1)
+
+    cin = x_ref.shape[0]
+    wp = x_ref.shape[2]
+    in_rows = (rows_out - 1) * stride + k
+
+    # 10-row slab for 3x3/stride-1 (8 + 2 halo): the data-MUX window.
+    slab = pl.load(
+        x_ref,
+        (pl.dslice(0, cin),
+         pl.dslice(rf * ROW_FRAME * stride, in_rows),
+         pl.dslice(0, wp)),
+    )
+    wblk = pl.load(
+        w_ref,
+        (pl.dslice(co * cout_blk, cout_blk), pl.dslice(0, cin),
+         pl.dslice(0, k), pl.dslice(0, k)),
+    )
+
+    acc = jnp.zeros((cout_blk, rows_out, w_out), x_ref.dtype)
+    # K*K tap loop is static (<= 9 iterations): each tap is one
+    # (cout_blk, Cin) x (Cin, rows, cols) contraction — the MAC fabric.
+    for kr in range(k):
+        for kc in range(k):
+            xs = slab[:, kr:kr + (rows_out - 1) * stride + 1:stride,
+                      kc:kc + (w_out - 1) * stride + 1:stride]
+            acc = acc + jnp.tensordot(wblk[:, :, kr, kc], xs, axes=(1, 0))
+    o_ref[...] = acc
+
+
+def conv2d_rf(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+              padding: int = 1) -> jnp.ndarray:
+    """Row-frame convolution. x: (Cin,H,W); w: (Cout,Cin,K,K).
+
+    Semantics identical to ref.conv2d_nchw (cross-correlation, zero pad).
+    The output height is padded up to a whole number of row frames and
+    cropped afterwards, mirroring the accelerator's row-frame granularity.
+    """
+    cin, h, wdt = x.shape
+    cout, cin_w, k, k2 = w.shape
+    assert cin == cin_w and k == k2, (x.shape, w.shape)
+    assert stride in (1, 2), stride
+
+    h_out = (h + 2 * padding - k) // stride + 1
+    w_out = (wdt + 2 * padding - k) // stride + 1
+    cout_blk = COUT_BLOCK_1X1 if k == 1 else COUT_BLOCK_3X3
+
+    # Pad channels-out to a block multiple, rows-out to whole row frames.
+    co_pad = (-cout) % cout_blk
+    if co_pad:
+        w = jnp.concatenate(
+            [w, jnp.zeros((co_pad, cin, k, k), w.dtype)], axis=0)
+    n_rf = -(-h_out // ROW_FRAME)
+    rows_padded = n_rf * ROW_FRAME
+
+    # Zero-pad the input: conv padding + bottom rows so the last row frame
+    # has a full input slab.
+    need_rows = (rows_padded - 1) * stride + k
+    bottom = max(0, need_rows - (h + 2 * padding))
+    xp = jnp.pad(x, ((0, 0), (padding, padding + bottom),
+                     (padding, padding)))
+
+    grid = ((cout + co_pad) // cout_blk, n_rf)
+    out = pl.pallas_call(
+        functools.partial(_conv_rf_kernel, k=k, stride=stride,
+                          cout_blk=cout_blk, rows_out=ROW_FRAME,
+                          w_out=w_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((cout_blk, ROW_FRAME, w_out),
+                               lambda co, rf: (co, rf, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (cout + co_pad, rows_padded, w_out), x.dtype),
+        interpret=True,
+    )(xp, w)
+    return out[:cout, :h_out, :]
+
+
+def dwconv2d_rf(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                padding: int = 1) -> jnp.ndarray:
+    """Depthwise row-frame convolution. x: (C,H,W); w: (C,K,K).
+
+    MobileNet's depthwise stage on the same PE fabric (each PE group gets
+    one channel; no channel accumulation). Implemented by reusing the
+    dense kernel per-channel-group with block-diagonal weights would waste
+    MACs, so we run a dedicated contraction: out[c] = x[c] * w[c] taps.
+    """
+    c, h, wdt = x.shape
+    cw, k, k2 = w.shape
+    assert c == cw and k == k2
+    h_out = (h + 2 * padding - k) // stride + 1
+    w_out = (wdt + 2 * padding - k) // stride + 1
+    n_rf = -(-h_out // ROW_FRAME)
+    rows_padded = n_rf * ROW_FRAME
+    need_rows = (rows_padded - 1) * stride + k
+    bottom = max(0, need_rows - (h + 2 * padding))
+    xp = jnp.pad(x, ((0, 0), (padding, padding + bottom),
+                     (padding, padding)))
+
+    def kernel(x_ref, w_ref, o_ref):
+        rf = pl.program_id(0)
+        cin = x_ref.shape[0]
+        wp = x_ref.shape[2]
+        in_rows = (ROW_FRAME - 1) * stride + k
+        slab = pl.load(
+            x_ref,
+            (pl.dslice(0, cin),
+             pl.dslice(rf * ROW_FRAME * stride, in_rows),
+             pl.dslice(0, wp)),
+        )
+        taps = w_ref[...]
+        acc = jnp.zeros((cin, ROW_FRAME, w_out), x_ref.dtype)
+        for kr in range(k):
+            for kc in range(k):
+                xs = slab[:, kr:kr + (ROW_FRAME - 1) * stride + 1:stride,
+                          kc:kc + (w_out - 1) * stride + 1:stride]
+                acc = acc + taps[:, kr, kc][:, None, None] * xs
+        o_ref[...] = acc
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_rf,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((c, ROW_FRAME, w_out),
+                               lambda rf: (0, rf, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, rows_padded, w_out), x.dtype),
+        interpret=True,
+    )(xp, w)
+    return out[:, :h_out, :]

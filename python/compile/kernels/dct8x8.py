@@ -1,0 +1,214 @@
+"""L1 Pallas kernels: batched 8x8 DCT-II / IDCT + two-step quantization.
+
+This is the compute hot-spot of the paper's compression path. The ASIC
+implements it as a 128-constant-coefficient-multiplier (CCM) array that
+multiplies an 8x8 matrix by an 8x1 column per cycle per 32-CCM group,
+processing 4 channels in parallel (paper §V-D, Fig. 12).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CCM array is a
+fixed-coefficient matmul engine, so the natural MXU mapping is a *batched
+8x8 matmul*:  Z_i = C @ X_i @ C^T  computed as two einsum contractions
+over a VMEM-resident batch of blocks. The DCT basis C is the analogue of
+the CCM constants and is materialized once per grid step in VMEM. The
+grid dimension over block-batches mirrors the accelerator's streaming of
+row frames through the DCT unit.
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); they lower into the same HLO as the surrounding jax code
+so the AOT artifacts contain the whole fused pipeline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Blocks processed per grid step. 256 blocks = 256*8*8*4 B = 64 KiB input
+# + 64 KiB output + scratch in VMEM: comfortably under a TPU core's
+# ~16 MiB VMEM while big enough to keep the MXU's 128x128 tiles fed
+# (the einsum contracts the 8-dim with a 64-wide batch-minor layout).
+BLOCK_BATCH = 256
+
+
+def _pad_blocks(blocks: jnp.ndarray, batch: int):
+    """Pad (N,8,8) to a multiple of `batch` along N. Returns (padded, n)."""
+    n = blocks.shape[0]
+    rem = (-n) % batch
+    if rem:
+        blocks = jnp.concatenate(
+            [blocks, jnp.zeros((rem, 8, 8), blocks.dtype)], axis=0
+        )
+    return blocks, n
+
+
+# ---------------------------------------------------------------------------
+# DCT / IDCT kernels
+# ---------------------------------------------------------------------------
+
+
+def _dct2d_kernel(x_ref, c_ref, o_ref, *, inverse: bool):
+    """One grid step: 2-D (I)DCT of a (B,8,8) batch of blocks.
+
+    The DCT basis C arrives as an operand (the CCM constants analogue);
+    Pallas kernels may not capture array constants.
+    """
+    c = c_ref[...]
+    x = x_ref[...]
+    if inverse:
+        # X = C^T Z C
+        o_ref[...] = jnp.einsum("kn,bkl,lm->bnm", c, x, c,
+                                preferred_element_type=x.dtype)
+    else:
+        # Z = C X C^T
+        o_ref[...] = jnp.einsum("kn,bnm,lm->bkl", c, x, c,
+                                preferred_element_type=x.dtype)
+
+
+def _dct2d_call(blocks: jnp.ndarray, inverse: bool,
+                batch: int = BLOCK_BATCH) -> jnp.ndarray:
+    padded, n = _pad_blocks(blocks, batch)
+    grid = (padded.shape[0] // batch,)
+    c = ref.dct_matrix(8, padded.dtype)
+    out = pl.pallas_call(
+        functools.partial(_dct2d_kernel, inverse=inverse),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, 8, 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, 8, 8), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(padded.shape, padded.dtype),
+        interpret=True,
+    )(padded, c)
+    return out[:n]
+
+
+def dct2d(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Batched forward 2-D DCT-II over (N, 8, 8) blocks (paper Eq. 5)."""
+    return _dct2d_call(blocks, inverse=False)
+
+
+def idct2d(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Batched inverse 2-D DCT (DCT-III) over (N, 8, 8) blocks (Eq. 6)."""
+    return _dct2d_call(blocks, inverse=True)
+
+
+# ---------------------------------------------------------------------------
+# Fused compress / decompress kernels
+# ---------------------------------------------------------------------------
+
+
+def _compress_kernel(x_ref, qt_ref, c_ref, q2_ref, fmin_ref, fmax_ref):
+    """DCT -> GEMM quant (Eq.7) -> Q-table quant (Eq.8), fused per batch."""
+    c = c_ref[...]
+    x = x_ref[...]
+    freq = jnp.einsum("kn,bnm,lm->bkl", c, x, c,
+                      preferred_element_type=x.dtype)
+    fmin = jnp.min(freq, axis=(1, 2))
+    fmax = jnp.max(freq, axis=(1, 2))
+    span = fmax - fmin
+    safe = jnp.where(span > 0, span, 1.0)
+    q1 = jnp.round((freq - fmin[:, None, None]) / safe[:, None, None]
+                   * ref.IMAX)
+    q1 = jnp.where(span[:, None, None] > 0, q1, 0.0)
+    zp = jnp.clip(jnp.round((0.0 - fmin) / safe * ref.IMAX),
+                  0.0, float(ref.IMAX))
+    q2_ref[...] = jnp.round((q1 - zp[:, None, None])
+                            / qt_ref[...][None, :, :])
+    fmin_ref[...] = fmin
+    fmax_ref[...] = fmax
+
+
+def compress(blocks: jnp.ndarray, qt: jnp.ndarray,
+             batch: int = BLOCK_BATCH):
+    """Fused compression of (N,8,8) blocks. Returns (q2, fmin, fmax).
+
+    Matches ref.compress_blocks exactly (same f32 ops, same rounding).
+    """
+    padded, n = _pad_blocks(blocks, batch)
+    grid = (padded.shape[0] // batch,)
+    np_ = padded.shape[0]
+    c = ref.dct_matrix(8, padded.dtype)
+    q2, fmin, fmax = pl.pallas_call(
+        _compress_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, 8, 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((batch, 8, 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((batch,), lambda i: (i,)),
+            pl.BlockSpec((batch,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, 8, 8), padded.dtype),
+            jax.ShapeDtypeStruct((np_,), padded.dtype),
+            jax.ShapeDtypeStruct((np_,), padded.dtype),
+        ],
+        interpret=True,
+    )(padded, qt, c)
+    return q2[:n], fmin[:n], fmax[:n]
+
+
+def _decompress_kernel(q2_ref, fmin_ref, fmax_ref, qt_ref, c_ref, o_ref):
+    """Inverse Q-table (Eq.9) -> inverse GEMM quant (Eq.10) -> IDCT."""
+    c = c_ref[...]
+    fmin = fmin_ref[...]
+    fmax = fmax_ref[...]
+    span = fmax - fmin
+    safe = jnp.where(span > 0, span, 1.0)
+    zp = jnp.clip(jnp.round((0.0 - fmin) / safe * ref.IMAX),
+                  0.0, float(ref.IMAX))
+    q1p = q2_ref[...] * qt_ref[...][None, :, :] + zp[:, None, None]
+    freq = (q1p / ref.IMAX * span[:, None, None]
+            + fmin[:, None, None])
+    o_ref[...] = jnp.einsum("kn,bkl,lm->bnm", c, freq, c,
+                            preferred_element_type=q1p.dtype)
+
+
+def decompress(q2: jnp.ndarray, fmin: jnp.ndarray, fmax: jnp.ndarray,
+               qt: jnp.ndarray, batch: int = BLOCK_BATCH) -> jnp.ndarray:
+    """Fused decompression; inverse of `compress`."""
+    n = q2.shape[0]
+    rem = (-n) % batch
+    if rem:
+        q2 = jnp.concatenate([q2, jnp.zeros((rem, 8, 8), q2.dtype)], axis=0)
+        fmin = jnp.concatenate([fmin, jnp.zeros((rem,), fmin.dtype)])
+        fmax = jnp.concatenate([fmax, jnp.ones((rem,), fmax.dtype)])
+    np_ = q2.shape[0]
+    grid = (np_ // batch,)
+    out = pl.pallas_call(
+        _decompress_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, 8, 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((batch,), lambda i: (i,)),
+            pl.BlockSpec((batch,), lambda i: (i,)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, 8, 8), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 8, 8), q2.dtype),
+        interpret=True,
+    )(q2, fmin, fmax, qt, ref.dct_matrix(8, q2.dtype))
+    return out[:n]
+
+
+def roundtrip(blocks: jnp.ndarray, qt: jnp.ndarray) -> jnp.ndarray:
+    """compress -> decompress, the storage roundtrip a consumer layer sees."""
+    q2, fmin, fmax = compress(blocks, qt)
+    return decompress(q2, fmin, fmax, qt)
+
+
+def roundtrip_fmap(fmap: jnp.ndarray, level: int) -> jnp.ndarray:
+    """(C,H,W) feature-map roundtrip at Q-level `level` via the kernels."""
+    c, h, w = fmap.shape
+    qt = ref.qtable(level, fmap.dtype)
+    return ref.from_blocks(roundtrip(ref.to_blocks(fmap), qt), c, h, w)

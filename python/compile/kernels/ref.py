@@ -1,0 +1,254 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These functions define the *reference semantics* of the paper's
+compression pipeline (Shao et al. 2021, §III):
+
+    8x8 DCT-II  ->  low-precision GEMM quantization (Eq. 7)
+                ->  Q-table quantization (Eq. 8)
+    [storage: sparse bitmap + flip packing -- modelled on the rust side]
+    inverse Q-table (Eq. 9) -> inverse GEMM quant (Eq. 10) -> IDCT
+
+The rust codec (`rust/src/compress/`) implements the same arithmetic
+bit-exactly (f32, round-half-to-even); python/tests/test_kernel.py checks
+the Pallas kernels against these oracles, and rust unit tests pin a set
+of golden vectors generated from this file.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Number of quantization bits of the low-precision GEMM step (Eq. 7).
+GEMM_BITS = 8
+IMAX = (1 << GEMM_BITS) - 1  # 255
+
+# ---------------------------------------------------------------------------
+# DCT basis
+# ---------------------------------------------------------------------------
+
+
+def dct_matrix(n: int = 8, dtype=jnp.float32) -> jnp.ndarray:
+    """Orthonormal DCT-II basis matrix C (paper Eq. 2/4, orthonormalized).
+
+    C[k, j] = s_k * cos(pi * (j + 1/2) * k / n),
+    s_0 = sqrt(1/n), s_k = sqrt(2/n) (k > 0),  so that C @ C.T == I and
+    the 2-D transform is  Z = C @ X @ C.T  (Eq. 5),  X = C.T @ Z @ C (Eq. 6).
+    """
+    k = np.arange(n)[:, None].astype(np.float64)
+    j = np.arange(n)[None, :].astype(np.float64)
+    c = np.cos(np.pi * (j + 0.5) * k / n)
+    c[0, :] *= np.sqrt(1.0 / n)
+    c[1:, :] *= np.sqrt(2.0 / n)
+    return jnp.asarray(c, dtype=dtype)
+
+
+# JPEG Annex-K luminance quantization table — the paper's Q-table starting
+# point ("we refer to the JPEG Q-table", §III-B).
+JPEG_LUMA_QTABLE = np.array(
+    [
+        [16, 11, 10, 16, 24, 40, 51, 61],
+        [12, 12, 14, 19, 26, 58, 60, 55],
+        [14, 13, 16, 24, 40, 57, 69, 56],
+        [14, 17, 22, 29, 51, 87, 80, 62],
+        [18, 22, 37, 56, 68, 109, 103, 77],
+        [24, 35, 55, 64, 81, 104, 113, 92],
+        [49, 64, 78, 87, 103, 121, 120, 101],
+        [72, 92, 95, 98, 112, 100, 103, 99],
+    ],
+    dtype=np.float64,
+)
+
+# Four quantization levels selected by the paper's 2-bit register.
+# Level 0 is the most aggressive (early layers, big feature maps), level 3
+# the gentlest (deeper layers, accuracy-sensitive). Values clamped >= 1.
+QLEVEL_SCALES = (2.0, 1.0, 0.5, 0.25)
+
+
+def qtable(level: int, dtype=jnp.float32) -> jnp.ndarray:
+    """8x8 Q-table for one of the 4 levels of the paper's 2-bit register."""
+    if not 0 <= level <= 3:
+        raise ValueError(f"q-level must be 0..3, got {level}")
+    t = np.maximum(np.round(JPEG_LUMA_QTABLE * QLEVEL_SCALES[level]), 1.0)
+    return jnp.asarray(t, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocking helpers
+# ---------------------------------------------------------------------------
+
+
+def to_blocks(fmap: jnp.ndarray) -> jnp.ndarray:
+    """(C, H, W) feature map -> (C*H/8*W/8, 8, 8) blocks (row-major scan).
+
+    H and W must be multiples of 8 (the accelerator zero-pads row frames;
+    padding is done by the caller so block arithmetic stays shape-static).
+    """
+    c, h, w = fmap.shape
+    assert h % 8 == 0 and w % 8 == 0, (h, w)
+    x = fmap.reshape(c, h // 8, 8, w // 8, 8)
+    x = jnp.transpose(x, (0, 1, 3, 2, 4))
+    return x.reshape(-1, 8, 8)
+
+
+def from_blocks(blocks: jnp.ndarray, c: int, h: int, w: int) -> jnp.ndarray:
+    """Inverse of `to_blocks`."""
+    x = blocks.reshape(c, h // 8, w // 8, 8, 8)
+    x = jnp.transpose(x, (0, 1, 3, 2, 4))
+    return x.reshape(c, h, w)
+
+
+# ---------------------------------------------------------------------------
+# Reference transform pipeline (oracle for kernels/dct8x8.py)
+# ---------------------------------------------------------------------------
+
+
+def dct2d_blocks(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Batched 2-D DCT-II:  Z_i = C @ X_i @ C.T   over (N, 8, 8)."""
+    c = dct_matrix(8, blocks.dtype)
+    return jnp.einsum("kn,bnm,lm->bkl", c, blocks, c)
+
+
+def idct2d_blocks(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Batched 2-D IDCT:  X_i = C.T @ Z_i @ C   over (N, 8, 8).
+
+    With c axes (freq k, spatial n):  X[n,m] = sum_kl C[k,n] Z[k,l] C[l,m].
+    """
+    c = dct_matrix(8, blocks.dtype)
+    return jnp.einsum("kn,bkl,lm->bnm", c, blocks, c)
+
+
+def zero_point(fmin: jnp.ndarray, fmax: jnp.ndarray) -> jnp.ndarray:
+    """Affine zero-point of the Eq.7 quantizer: the q1 code of value 0.
+
+    NOTE (deviation from the paper's literal Eq. 8, see DESIGN.md): the
+    paper claims the quantized matrix "has a large number of zeros in the
+    bottom right corner", but under a literal reading of Eq. 7+8 a zero
+    DCT coefficient maps to the *nonzero* code round(-fmin/span*imax).
+    Subtracting the zero-point before the Q-table step (standard affine
+    quantization practice, e.g. Jacob et al. [32] which the paper cites)
+    restores exactly the behaviour the paper describes: near-zero
+    high-frequency coefficients encode to 0 and the sparse encoder sees
+    the bottom-right zeros. zp needs no extra storage — it is derived
+    from the (fmin, fmax) header already stored per block.
+    """
+    span = fmax - fmin
+    safe = jnp.where(span > 0, span, 1.0)
+    zp = jnp.round((0.0 - fmin) / safe * IMAX)
+    return jnp.clip(zp, 0.0, float(IMAX))
+
+
+def gemm_quantize(freq: jnp.ndarray):
+    """Low-precision GEMM quantization (paper Eq. 7), per 8x8 block.
+
+    Returns (q1 uint8-valued f32, fmin, fmax) with fmin/fmax of shape (N,).
+    Degenerate blocks (fmax == fmin) quantize to all-zero.
+    """
+    fmin = jnp.min(freq, axis=(1, 2))
+    fmax = jnp.max(freq, axis=(1, 2))
+    span = fmax - fmin
+    safe = jnp.where(span > 0, span, 1.0)
+    q1 = jnp.round((freq - fmin[:, None, None]) / safe[:, None, None] * IMAX)
+    q1 = jnp.where(span[:, None, None] > 0, q1, 0.0)
+    return q1, fmin, fmax
+
+
+def qtable_quantize(q1: jnp.ndarray, qt: jnp.ndarray,
+                    zp: jnp.ndarray) -> jnp.ndarray:
+    """Q-table quantization (paper Eq. 8 + zero-point, see zero_point):
+
+        q2 = round((q1 - zp) / QT)
+
+    q2 is a small signed integer; |q2| <= imax / min(QT) = 85 fits i8.
+    """
+    return jnp.round((q1 - zp[:, None, None]) / qt[None, :, :])
+
+
+def qtable_dequantize(q2: jnp.ndarray, qt: jnp.ndarray,
+                      zp: jnp.ndarray) -> jnp.ndarray:
+    """Inverse Q-table step (paper Eq. 9 + zero-point):  q1' = q2*QT + zp."""
+    return q2 * qt[None, :, :] + zp[:, None, None]
+
+
+def gemm_dequantize(q1p: jnp.ndarray, fmin: jnp.ndarray, fmax: jnp.ndarray):
+    """Inverse GEMM quantization (paper Eq. 10)."""
+    span = fmax - fmin
+    return q1p / IMAX * span[:, None, None] + fmin[:, None, None]
+
+
+def compress_blocks(blocks: jnp.ndarray, qt: jnp.ndarray):
+    """Full forward path: DCT -> Eq.7 -> Eq.8.
+
+    Returns (q2, fmin, fmax). q2 holds small integers (stored sparsely by
+    the hardware; sparsity/packing is modelled in rust, the numerics here).
+    """
+    freq = dct2d_blocks(blocks)
+    q1, fmin, fmax = gemm_quantize(freq)
+    q2 = qtable_quantize(q1, qt, zero_point(fmin, fmax))
+    return q2, fmin, fmax
+
+
+def decompress_blocks(q2: jnp.ndarray, fmin: jnp.ndarray, fmax: jnp.ndarray,
+                      qt: jnp.ndarray) -> jnp.ndarray:
+    """Full inverse path: Eq.9 -> Eq.10 -> IDCT."""
+    q1p = qtable_dequantize(q2, qt, zero_point(fmin, fmax))
+    freq = gemm_dequantize(q1p, fmin, fmax)
+    return idct2d_blocks(freq)
+
+
+def roundtrip_blocks(blocks: jnp.ndarray, qt: jnp.ndarray) -> jnp.ndarray:
+    """compress -> decompress (what a layer's consumer actually reads)."""
+    q2, fmin, fmax = compress_blocks(blocks, qt)
+    return decompress_blocks(q2, fmin, fmax, qt)
+
+
+def roundtrip_fmap(fmap: jnp.ndarray, level: int) -> jnp.ndarray:
+    """Roundtrip a (C, H, W) feature map at a given Q-level."""
+    c, h, w = fmap.shape
+    qt = qtable(level, fmap.dtype)
+    return from_blocks(roundtrip_blocks(to_blocks(fmap), qt), c, h, w)
+
+
+# ---------------------------------------------------------------------------
+# Reference row-frame convolution (oracle for kernels/conv_rf.py)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_nchw(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                padding: int = 1) -> jnp.ndarray:
+    """Plain 2-D convolution oracle, (Cin,H,W) x (Cout,Cin,K,K) -> (Cout,H',W').
+
+    Matches the accelerator's conv semantics (paper Eq. 1): cross-correlation
+    (no kernel flip), zero padding, stride 1 or 2.
+    """
+    import jax.lax as lax
+
+    out = lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def compression_stats(q2: np.ndarray, orig_bits: int = 16):
+    """Storage accounting used for compression-ratio tables.
+
+    Per 8x8 block the hardware stores:
+      - a 64-bit index bitmap (index buffer),
+      - one 16-bit SRAM word per non-zero coefficient (the feature map
+        buffer word width — compression wins by skipping zeros, not by
+        narrowing the SRAM),
+      - a 32-bit header (fmin/fmax as two 16-bit dynamic-fixed-point
+        words).
+    The original block is 64 activations x `orig_bits`.
+    Returns (compressed_bits, original_bits, ratio).
+    """
+    q2 = np.asarray(q2)
+    n = q2.shape[0]
+    nnz = int(np.count_nonzero(q2))
+    comp = n * (64 + 32) + nnz * 16
+    orig = n * 64 * orig_bits
+    return comp, orig, comp / orig

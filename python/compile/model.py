@@ -1,0 +1,196 @@
+"""L2: the paper's compute graph in JAX — fusion layers + interlayer
+DCT compression — calling the L1 Pallas kernels.
+
+A *fusion layer* (paper Table III footnote) is conv -> BN -> activation
+-> pooling executed in one stream; the accelerator compresses the feature
+map only at fusion-layer boundaries. `fusion_layer` reproduces exactly
+that: the L1 row-frame conv kernel, inference-mode BN, the activation
+family the non-linear module supports, 2x2 pooling, then the L1
+compress/decompress roundtrip standing in for the feature-map-buffer
+store + next-layer fetch.
+
+The SmallCNN below is the trainable model for the accuracy-loss
+experiment (Table III); `python/compile/train.py` trains it on the
+synthetic shapes dataset and `aot.py` bakes the trained weights into the
+HLO artifacts the rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv_rf, dct8x8, ref
+
+
+class FusionSpec(NamedTuple):
+    """Static configuration of one fusion layer."""
+
+    cin: int
+    cout: int
+    kernel: int = 3
+    stride: int = 1
+    padding: int = 1
+    depthwise: bool = False
+    act: str = "relu"  # relu | leaky_relu | prelu | none
+    pool: Optional[str] = None  # max | avg | None
+    qlevel: Optional[int] = None  # None = layer not compressed
+
+
+class FusionParams(NamedTuple):
+    """Learnable parameters of one fusion layer."""
+
+    w: jnp.ndarray  # (cout, cin, k, k) or (c, k, k) if depthwise
+    bn_scale: jnp.ndarray  # (cout,) folded gamma/sqrt(var)
+    bn_bias: jnp.ndarray  # (cout,) folded beta - mean*scale
+    prelu_a: jnp.ndarray  # (1,) slope (used by leaky/prelu)
+
+
+def init_fusion(rng: np.random.Generator, spec: FusionSpec) -> FusionParams:
+    """He-initialized parameters for one fusion layer."""
+    if spec.depthwise:
+        shape = (spec.cin, spec.kernel, spec.kernel)
+        fan_in = spec.kernel * spec.kernel
+    else:
+        shape = (spec.cout, spec.cin, spec.kernel, spec.kernel)
+        fan_in = spec.cin * spec.kernel * spec.kernel
+    w = rng.normal(0, np.sqrt(2.0 / fan_in), size=shape).astype(np.float32)
+    cout = spec.cin if spec.depthwise else spec.cout
+    return FusionParams(
+        w=jnp.asarray(w),
+        bn_scale=jnp.ones((cout,), jnp.float32),
+        bn_bias=jnp.zeros((cout,), jnp.float32),
+        prelu_a=jnp.full((1,), 0.1, jnp.float32),
+    )
+
+
+def activate(x: jnp.ndarray, act: str, a: jnp.ndarray) -> jnp.ndarray:
+    """The non-linear module's activation family (paper Table I)."""
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "leaky_relu":
+        return jnp.where(x >= 0, x, 0.1 * x)
+    if act == "prelu":
+        return jnp.where(x >= 0, x, a * x)
+    if act == "none":
+        return x
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def pool2x2(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """2x2/stride-2 pooling over (C, H, W); H, W must be even."""
+    c, h, w = x.shape
+    xr = x.reshape(c, h // 2, 2, w // 2, 2)
+    if kind == "max":
+        return jnp.max(xr, axis=(2, 4))
+    if kind == "avg":
+        return jnp.mean(xr, axis=(2, 4))
+    raise ValueError(f"unknown pool {kind!r}")
+
+
+def compress_roundtrip(x: jnp.ndarray, qlevel: int,
+                       use_kernel: bool = True) -> jnp.ndarray:
+    """Interlayer store/fetch through the DCT codec at `qlevel`.
+
+    Pads H, W up to 8 (row-frame granularity) before blocking, crops
+    after — matching the accelerator's zero-padded row frames.
+    """
+    c, h, w = x.shape
+    ph, pw = (-h) % 8, (-w) % 8
+    xp = jnp.pad(x, ((0, 0), (0, ph), (0, pw)))
+    hp, wp = h + ph, w + pw
+    qt = ref.qtable(qlevel, x.dtype)
+    blocks = ref.to_blocks(xp)
+    rt = dct8x8.roundtrip(blocks, qt) if use_kernel else \
+        ref.roundtrip_blocks(blocks, qt)
+    return ref.from_blocks(rt, c, hp, wp)[:, :h, :w]
+
+
+def fusion_layer(x: jnp.ndarray, params: FusionParams, spec: FusionSpec,
+                 use_kernels: bool = True) -> jnp.ndarray:
+    """One fusion layer over a single (Cin, H, W) image.
+
+    use_kernels=False routes conv through the pure-jnp oracle (used for
+    *training*: the Pallas interpret path has no efficient VJP; the two
+    paths are verified numerically identical in python/tests).
+    """
+    if spec.depthwise:
+        if use_kernels:
+            y = conv_rf.dwconv2d_rf(x, params.w, spec.stride, spec.padding)
+        else:
+            import jax.lax as lax
+
+            y = lax.conv_general_dilated(
+                x[None], params.w[:, None],
+                (spec.stride, spec.stride),
+                [(spec.padding, spec.padding)] * 2,
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+                feature_group_count=x.shape[0],
+            )[0]
+    else:
+        if use_kernels:
+            y = conv_rf.conv2d_rf(x, params.w, spec.stride, spec.padding)
+        else:
+            y = ref.conv2d_nchw(x, params.w, spec.stride, spec.padding)
+    y = y * params.bn_scale[:, None, None] + params.bn_bias[:, None, None]
+    y = activate(y, spec.act, params.prelu_a)
+    if spec.pool is not None:
+        y = pool2x2(y, spec.pool)
+    if spec.qlevel is not None:
+        y = compress_roundtrip(y, spec.qlevel, use_kernel=use_kernels)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Small trainable CNN (accuracy-loss experiment)
+# ---------------------------------------------------------------------------
+
+# 32x32x1 -> 16x16x16 -> 8x8x32 -> 4x4x64 -> GAP -> 4 classes
+SMALLCNN_SPECS: Sequence[FusionSpec] = (
+    FusionSpec(cin=1, cout=16, act="relu", pool="max"),
+    FusionSpec(cin=16, cout=32, act="relu", pool="max"),
+    FusionSpec(cin=32, cout=64, act="relu", pool="max"),
+)
+
+
+class SmallCNNParams(NamedTuple):
+    fusions: tuple
+    fc_w: jnp.ndarray  # (classes, 64)
+    fc_b: jnp.ndarray  # (classes,)
+
+
+def init_smallcnn(seed: int = 0, classes: int = 4) -> SmallCNNParams:
+    rng = np.random.default_rng(seed)
+    fus = tuple(init_fusion(rng, s) for s in SMALLCNN_SPECS)
+    fc_w = rng.normal(0, 0.1, size=(classes, 64)).astype(np.float32)
+    return SmallCNNParams(
+        fusions=fus,
+        fc_w=jnp.asarray(fc_w),
+        fc_b=jnp.zeros((classes,), jnp.float32),
+    )
+
+
+def smallcnn_fwd(params: SmallCNNParams, x: jnp.ndarray,
+                 qlevels: Optional[Sequence[Optional[int]]] = None,
+                 use_kernels: bool = False) -> jnp.ndarray:
+    """Logits for one image (1, 32, 32). qlevels overrides per-layer
+    compression (None entries = uncompressed), mirroring the accelerator's
+    per-layer 2-bit Q-level register."""
+    for i, (p, s) in enumerate(zip(params.fusions, SMALLCNN_SPECS)):
+        q = s.qlevel if qlevels is None else qlevels[i]
+        s = s._replace(qlevel=q)
+        x = fusion_layer(x, p, s, use_kernels=use_kernels)
+    feat = jnp.mean(x, axis=(1, 2))  # GAP, the paper offloads FC to CPU
+    return params.fc_w @ feat + params.fc_b
+
+
+def smallcnn_fwd_batch(params: SmallCNNParams, xs: jnp.ndarray,
+                       qlevels=None, use_kernels: bool = False):
+    """vmapped logits over (N, 1, 32, 32)."""
+    fn = functools.partial(smallcnn_fwd, qlevels=qlevels,
+                           use_kernels=use_kernels)
+    return jax.vmap(lambda x: fn(params, x))(xs)

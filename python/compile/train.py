@@ -1,0 +1,103 @@
+"""Train the SmallCNN on the synthetic shapes dataset (build-time only).
+
+This supplies the trained weights for the Table III accuracy-loss
+experiment: the paper measures VOC accuracy of five pretrained networks
+with and without interlayer compression; we train a classifier from
+scratch (no external data available offline) and run the identical
+with/without comparison at every Q-level.
+
+Usage:  python -m compile.train --out ../artifacts/weights.npz
+The npz is consumed by aot.py (baked into HLO artifacts) and by
+python/tests/test_accuracy.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+
+def accuracy(params, xs, ys, qlevels=None) -> float:
+    logits = model.smallcnn_fwd_batch(params, xs, qlevels=qlevels)
+    return float(jnp.mean(jnp.argmax(logits, -1) == ys))
+
+
+def params_to_flat(params: model.SmallCNNParams) -> dict:
+    out = {"fc_w": np.asarray(params.fc_w), "fc_b": np.asarray(params.fc_b)}
+    for i, f in enumerate(params.fusions):
+        out[f"f{i}_w"] = np.asarray(f.w)
+        out[f"f{i}_scale"] = np.asarray(f.bn_scale)
+        out[f"f{i}_bias"] = np.asarray(f.bn_bias)
+        out[f"f{i}_prelu"] = np.asarray(f.prelu_a)
+    return out
+
+
+def params_from_flat(d) -> model.SmallCNNParams:
+    fus = []
+    i = 0
+    while f"f{i}_w" in d:
+        fus.append(
+            model.FusionParams(
+                w=jnp.asarray(d[f"f{i}_w"]),
+                bn_scale=jnp.asarray(d[f"f{i}_scale"]),
+                bn_bias=jnp.asarray(d[f"f{i}_bias"]),
+                prelu_a=jnp.asarray(d[f"f{i}_prelu"]),
+            )
+        )
+        i += 1
+    return model.SmallCNNParams(
+        fusions=tuple(fus),
+        fc_w=jnp.asarray(d["fc_w"]),
+        fc_b=jnp.asarray(d["fc_b"]),
+    )
+
+
+def train(steps: int = 300, batch: int = 64, lr: float = 3e-2,
+          seed: int = 0, verbose: bool = True) -> model.SmallCNNParams:
+    """SGD-with-momentum training to >95% held-out accuracy in ~300 steps."""
+    xs, ys = data.shapes_dataset(4096, seed=seed)
+    xte, yte = data.shapes_dataset(512, seed=seed + 1)
+    params = model.init_smallcnn(seed=seed)
+
+    def loss_fn(p, xb, yb):
+        return cross_entropy(model.smallcnn_fwd_batch(p, xb), yb)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    mom = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(seed + 2)
+    for step in range(steps):
+        idx = rng.integers(0, xs.shape[0], size=batch)
+        loss, g = grad_fn(params, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+        mom = jax.tree.map(lambda m, gi: 0.9 * m + gi, mom, g)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+        if verbose and (step % 50 == 0 or step == steps - 1):
+            print(f"step {step:4d}  loss {float(loss):.4f}")
+    if verbose:
+        print(f"test accuracy (uncompressed): {accuracy(params, jnp.asarray(xte), jnp.asarray(yte)):.4f}")
+    return params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/weights.npz")
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    params = train(steps=args.steps)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    np.savez(args.out, **params_to_flat(params))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

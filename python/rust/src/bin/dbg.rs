@@ -1,0 +1,30 @@
+use fmc_accel::runtime::Runtime;
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::open("artifacts")?;
+    // model on zeros
+    let lit = xla::Literal::vec1(&vec![0f32; 4*1*32*32]).reshape(&[4,1,32,32])?;
+    let out = rt.exec("model", &[lit])?;
+    println!("model logits: {:?}", &out[0].to_vec::<f32>()?[..4]);
+    let lit = xla::Literal::vec1(&vec![0f32; 4*1*32*32]).reshape(&[4,1,32,32])?;
+    let out = rt.exec("model_comp", &[lit])?;
+    println!("model_comp logits: {:?}", &out[0].to_vec::<f32>()?[..4]);
+    // dct_compress on simple input
+    let mut blocks = vec![0f32; 1024*64];
+    for i in 0..64 { blocks[i] = i as f32; }
+    let b = xla::Literal::vec1(&blocks).reshape(&[1024,8,8])?;
+    let qt = fmc_accel::compress::qtable::qtable(1);
+    let q = xla::Literal::vec1(&qt[..]).reshape(&[8,8])?;
+    let out = rt.exec("dct_compress", &[b, q])?;
+    let q2 = out[0].to_vec::<f32>()?;
+    println!("pjrt q2 block0 row0: {:?}", &q2[..8]);
+    // rust expectation
+    use fmc_accel::compress::{dct, quant};
+    let blk: [f32;64] = blocks[..64].try_into().unwrap();
+    let f = dct::dct2d(&blk);
+    let (q1,h) = quant::gemm_quantize(&f);
+    let w = quant::qtable_quantize(&q1,&qt,&h);
+    println!("rust q2 block0 row0: {:?}", &w[..8]);
+    println!("pjrt fmin/fmax: {} {}", out[1].to_vec::<f32>()?[0], out[2].to_vec::<f32>()?[0]);
+    println!("rust fmin/fmax: {} {}", h.fmin, h.fmax);
+    Ok(())
+}

@@ -1,0 +1,70 @@
+"""Table III accuracy-loss experiment (python half).
+
+The paper reports <1% accuracy loss on five VOC-pretrained networks when
+interlayer feature maps are compressed at calibrated Q-levels. We run the
+identical comparison on the really-trained SmallCNN: accuracy on held-out
+shapes data, uncompressed vs compressed at every Q-level and at the
+calibrated per-layer schedule baked into the AOT artifacts.
+
+Slow-ish (trains once per session): marked so `-m "not slow"` can skip.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data, model
+from compile.train import train, accuracy
+from compile.aot import CALIBRATED_QLEVELS
+
+
+@pytest.fixture(scope="module")
+def trained():
+    params = train(steps=200, verbose=False)
+    xte, yte = data.shapes_dataset(384, seed=99)
+    return params, jnp.asarray(xte), jnp.asarray(yte)
+
+
+@pytest.mark.slow
+class TestAccuracyLoss:
+    def test_baseline_accuracy_high(self, trained):
+        params, xte, yte = trained
+        assert accuracy(params, xte, yte) >= 0.95
+
+    def test_calibrated_schedule_within_1pct(self, trained):
+        # The paper's headline: <1% accuracy loss at calibrated Q-levels.
+        params, xte, yte = trained
+        base = accuracy(params, xte, yte)
+        comp = accuracy(params, xte, yte, qlevels=CALIBRATED_QLEVELS)
+        assert base - comp <= 0.01 + 1e-9, (base, comp)
+
+    def test_gentlest_level_within_1pct(self, trained):
+        params, xte, yte = trained
+        base = accuracy(params, xte, yte)
+        comp = accuracy(params, xte, yte, qlevels=(3, 3, 3))
+        assert base - comp <= 0.01 + 1e-9, (base, comp)
+
+    def test_accuracy_monotone_in_qlevel(self, trained):
+        # Gentler tables (higher level index) must not hurt accuracy more
+        # than aggressive ones (allowing small noise).
+        params, xte, yte = trained
+        accs = [
+            accuracy(params, xte, yte, qlevels=(l, l, l)) for l in range(4)
+        ]
+        assert accs[3] >= accs[0] - 0.02, accs
+
+    def test_first_layer_tolerates_aggressive_q(self, trained):
+        # Paper: "The first few layers' compression has negligible effect"
+        # — an aggressive table on layer 1 only costs <1%.
+        params, xte, yte = trained
+        base = accuracy(params, xte, yte)
+        comp = accuracy(params, xte, yte, qlevels=(1, None, None))
+        assert base - comp <= 0.01 + 1e-9, (base, comp)
+
+    def test_uniform_aggressive_degrades_more_than_calibrated(self, trained):
+        # Why per-layer calibration exists (the paper's 2-bit register):
+        # the most aggressive table on *every* layer hurts noticeably.
+        params, xte, yte = trained
+        cal = accuracy(params, xte, yte, qlevels=CALIBRATED_QLEVELS)
+        uni = accuracy(params, xte, yte, qlevels=(0, 0, 0))
+        assert cal > uni, (cal, uni)

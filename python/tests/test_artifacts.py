@@ -1,0 +1,81 @@
+"""Artifact-bundle integrity tests (run after `make artifacts`).
+
+Skipped when artifacts/ is absent so a clean checkout stays green;
+these are the python-side half of rust/tests/runtime_pjrt.rs.
+"""
+
+import json
+import os
+
+import pytest
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..",
+                         "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        return json.load(f)
+
+
+REQUIRED = ["model", "model_comp", "dct_compress", "dct_decompress",
+            "fusion_layer"]
+
+
+def test_manifest_has_all_entries(manifest):
+    for name in REQUIRED:
+        assert name in manifest, name
+        assert "args" in manifest[name]
+        assert "outputs" in manifest[name]
+
+
+def test_hlo_files_exist_and_nonempty(manifest):
+    for name in REQUIRED:
+        path = os.path.join(ARTIFACTS, manifest[name]["file"])
+        assert os.path.getsize(path) > 1000, path
+
+
+def test_no_elided_constants(manifest):
+    # the failure mode that silently zeroes weights on the rust side
+    for name in REQUIRED:
+        path = os.path.join(ARTIFACTS, manifest[name]["file"])
+        with open(path) as f:
+            assert "constant({...})" not in f.read(), name
+
+
+def test_meta_fields(manifest):
+    meta = manifest["_meta"]
+    assert meta["model_batch"] >= 1
+    assert meta["dct_blocks"] >= 64
+    assert meta["classes"] == 4
+    assert len(meta["calibrated_qlevels"]) == 3
+    qt = meta["qtables"]
+    assert set(qt.keys()) == {"0", "1", "2", "3"}
+    for level in qt.values():
+        assert len(level) == 8 and len(level[0]) == 8
+
+
+def test_qtables_match_ref(manifest):
+    import numpy as np
+
+    from compile.kernels import ref
+
+    for level in range(4):
+        want = np.asarray(ref.qtable(level))
+        got = np.asarray(manifest["_meta"]["qtables"][str(level)])
+        np.testing.assert_array_equal(got, want)
+
+
+def test_model_shapes(manifest):
+    m = manifest["model"]
+    assert m["args"][0]["shape"] == [4, 1, 32, 32]
+    assert m["outputs"][0]["shape"] == [4, 4]
+    dc = manifest["dct_compress"]
+    assert dc["args"][0]["shape"] == [1024, 8, 8]
+    assert dc["args"][1]["shape"] == [8, 8]

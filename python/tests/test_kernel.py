@@ -1,0 +1,315 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Every kernel in python/compile/kernels/ is checked against ref.py, with
+hypothesis sweeping shapes, value ranges, and Q-levels.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, dct8x8, conv_rf
+
+RNG = np.random.default_rng(1234)
+
+
+def blocks(n, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return jnp.asarray(rng.normal(size=(n, 8, 8)).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# DCT basis properties
+# ---------------------------------------------------------------------------
+
+
+class TestDctBasis:
+    def test_orthonormal(self):
+        c = np.asarray(ref.dct_matrix(8))
+        np.testing.assert_allclose(c @ c.T, np.eye(8), atol=1e-6)
+
+    def test_dc_row_is_constant(self):
+        c = np.asarray(ref.dct_matrix(8))
+        assert np.allclose(c[0], c[0, 0])
+        assert np.isclose(c[0, 0], 1 / np.sqrt(8))
+
+    def test_rows_alternate_symmetry(self):
+        # Even-k rows are symmetric, odd-k rows antisymmetric — the property
+        # the Gong fast algorithm (paper Eq. 12-18) exploits.
+        c = np.asarray(ref.dct_matrix(8))
+        for k in range(8):
+            flipped = c[k][::-1]
+            if k % 2 == 0:
+                np.testing.assert_allclose(c[k], flipped, atol=1e-6)
+            else:
+                np.testing.assert_allclose(c[k], -flipped, atol=1e-6)
+
+    def test_energy_preservation(self):
+        x = blocks(16)
+        z = ref.dct2d_blocks(x)
+        np.testing.assert_allclose(
+            np.sum(np.asarray(x) ** 2), np.sum(np.asarray(z) ** 2), rtol=1e-5
+        )
+
+    def test_constant_block_all_energy_in_dc(self):
+        x = jnp.full((1, 8, 8), 3.5, jnp.float32)
+        z = np.asarray(ref.dct2d_blocks(x)).copy()[0]
+        assert np.isclose(z[0, 0], 3.5 * 8.0)
+        z[0, 0] = 0
+        assert np.max(np.abs(z)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Pallas DCT/IDCT vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestDctKernel:
+    @pytest.mark.parametrize("n", [1, 7, 256, 300, 513])
+    def test_dct_matches_ref(self, n):
+        x = blocks(n)
+        np.testing.assert_allclose(
+            np.asarray(dct8x8.dct2d(x)), np.asarray(ref.dct2d_blocks(x)),
+            atol=1e-5,
+        )
+
+    @pytest.mark.parametrize("n", [1, 7, 256, 300])
+    def test_idct_matches_ref(self, n):
+        z = blocks(n)
+        np.testing.assert_allclose(
+            np.asarray(dct8x8.idct2d(z)), np.asarray(ref.idct2d_blocks(z)),
+            atol=1e-5,
+        )
+
+    def test_idct_inverts_dct(self):
+        x = blocks(64)
+        np.testing.assert_allclose(
+            np.asarray(dct8x8.idct2d(dct8x8.dct2d(x))), np.asarray(x),
+            atol=1e-4,
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=64),
+        scale=st.floats(min_value=1e-3, max_value=1e3),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_dct_hypothesis_sweep(self, n, scale, seed):
+        x = blocks(n, scale=scale, seed=seed)
+        got = np.asarray(dct8x8.dct2d(x))
+        want = np.asarray(ref.dct2d_blocks(x))
+        np.testing.assert_allclose(got, want, atol=1e-4 * scale)
+
+    @pytest.mark.parametrize("batch", [8, 32, 128])
+    def test_batch_size_invariance(self, batch):
+        # Different VMEM block-batches must not change the numerics.
+        x = blocks(100)
+        got = np.asarray(dct8x8._dct2d_call(x, inverse=False, batch=batch))
+        want = np.asarray(dct8x8.dct2d(x))
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Quantization (Eq. 7-10)
+# ---------------------------------------------------------------------------
+
+
+class TestQuant:
+    def test_gemm_quant_range(self):
+        z = ref.dct2d_blocks(blocks(32))
+        q1, fmin, fmax = ref.gemm_quantize(z)
+        q1 = np.asarray(q1)
+        assert q1.min() >= 0 and q1.max() <= ref.IMAX
+        assert np.all(np.asarray(fmin) <= np.asarray(fmax))
+
+    def test_gemm_quant_degenerate_block(self):
+        z = jnp.zeros((2, 8, 8), jnp.float32)
+        q1, _, _ = ref.gemm_quantize(z)
+        assert np.all(np.asarray(q1) == 0)
+
+    def test_gemm_quant_extremes_hit_imax(self):
+        z = blocks(8)
+        q1, _, _ = ref.gemm_quantize(z)
+        q1 = np.asarray(q1)
+        for b in range(8):
+            assert q1[b].max() == ref.IMAX
+            assert q1[b].min() == 0
+
+    def test_qtables_monotone_levels(self):
+        # Level 0 is the most aggressive: element-wise >= every later level.
+        tables = [np.asarray(ref.qtable(l)) for l in range(4)]
+        for l in range(3):
+            assert np.all(tables[l] >= tables[l + 1])
+        for t in tables:
+            assert t.min() >= 1.0
+
+    def test_qtable_rejects_bad_level(self):
+        with pytest.raises(ValueError):
+            ref.qtable(4)
+        with pytest.raises(ValueError):
+            ref.qtable(-1)
+
+    @pytest.mark.parametrize("level", [0, 1, 2, 3])
+    def test_compress_kernel_matches_ref(self, level):
+        x = blocks(96)
+        qt = ref.qtable(level)
+        q2k, mnk, mxk = dct8x8.compress(x, qt)
+        q2r, mnr, mxr = ref.compress_blocks(x, qt)
+        np.testing.assert_array_equal(np.asarray(q2k), np.asarray(q2r))
+        np.testing.assert_allclose(np.asarray(mnk), np.asarray(mnr), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(mxk), np.asarray(mxr), atol=1e-6)
+
+    @pytest.mark.parametrize("level", [0, 1, 2, 3])
+    def test_decompress_kernel_matches_ref(self, level):
+        x = blocks(96)
+        qt = ref.qtable(level)
+        q2, mn, mx = ref.compress_blocks(x, qt)
+        got = np.asarray(dct8x8.decompress(q2, mn, mx, qt))
+        want = np.asarray(ref.decompress_blocks(q2, mn, mx, qt))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_more_aggressive_level_more_zeros(self):
+        x = blocks(128, scale=4.0)
+        nnz = []
+        for level in range(4):
+            q2, _, _ = ref.compress_blocks(x, ref.qtable(level))
+            nnz.append(int(np.count_nonzero(np.asarray(q2))))
+        assert nnz[0] <= nnz[1] <= nnz[2] <= nnz[3]
+
+    def test_smooth_data_compresses_harder_than_noise(self):
+        # The paper's Fig. 2 motivation: image-like (smooth) maps compress.
+        rows = np.linspace(0, 1, 8, dtype=np.float32)
+        smooth = jnp.asarray(
+            np.broadcast_to(rows[None, :, None], (32, 8, 8)).copy()
+        )
+        noise = blocks(32)
+        qt = ref.qtable(1)
+        q2s, _, _ = ref.compress_blocks(smooth, qt)
+        q2n, _, _ = ref.compress_blocks(noise, qt)
+        assert np.count_nonzero(np.asarray(q2s)) < np.count_nonzero(
+            np.asarray(q2n)
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        level=st.integers(min_value=0, max_value=3),
+        seed=st.integers(min_value=0, max_value=2**31),
+        scale=st.floats(min_value=0.01, max_value=100.0),
+    )
+    def test_roundtrip_error_bounded(self, level, seed, scale):
+        # Reconstruction error is bounded by the quantization step sizes:
+        # |err_freq| <= (0.5*QT + 0.5) / IMAX * span  per coefficient, and
+        # the IDCT is orthonormal so the L2 norm carries over.
+        x = blocks(16, scale=scale, seed=seed)
+        qt = ref.qtable(level)
+        q2, mn, mx = ref.compress_blocks(x, qt)
+        rec = ref.decompress_blocks(q2, mn, mx, qt)
+        span = (np.asarray(mx) - np.asarray(mn))[:, None, None]
+        step = (np.asarray(qt)[None] * 0.5 + 0.5) / ref.IMAX * span
+        err_freq_bound = np.sqrt((step ** 2).sum(axis=(1, 2)))
+        err = np.sqrt(
+            ((np.asarray(rec) - np.asarray(x)) ** 2).sum(axis=(1, 2))
+        )
+        assert np.all(err <= err_freq_bound * 1.01 + 1e-5)
+
+    def test_compression_stats_accounting(self):
+        q2 = np.zeros((4, 8, 8), np.float32)
+        q2[0, 0, 0] = 5
+        comp, orig, ratio = ref.compression_stats(q2, orig_bits=16)
+        assert orig == 4 * 64 * 16
+        assert comp == 4 * 96 + 16
+        assert np.isclose(ratio, comp / orig)
+
+
+# ---------------------------------------------------------------------------
+# Blocking helpers
+# ---------------------------------------------------------------------------
+
+
+class TestBlocking:
+    @pytest.mark.parametrize("shape", [(1, 8, 8), (3, 16, 24), (7, 32, 8)])
+    def test_to_from_blocks_roundtrip(self, shape):
+        c, h, w = shape
+        x = jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(ref.from_blocks(ref.to_blocks(x), c, h, w)),
+            np.asarray(x),
+        )
+
+    def test_block_count(self):
+        x = jnp.zeros((4, 16, 32), jnp.float32)
+        assert ref.to_blocks(x).shape == (4 * 2 * 4, 8, 8)
+
+
+# ---------------------------------------------------------------------------
+# Row-frame convolution kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestConvRf:
+    @pytest.mark.parametrize(
+        "cin,cout,h,w,k,stride,pad",
+        [
+            (3, 8, 16, 16, 3, 1, 1),
+            (3, 10, 19, 23, 3, 1, 1),
+            (4, 4, 8, 8, 3, 2, 1),
+            (8, 16, 32, 32, 1, 1, 0),
+            (5, 13, 19, 23, 1, 1, 0),
+            (3, 6, 17, 17, 3, 2, 1),
+            (2, 4, 24, 24, 5, 1, 2),
+            (2, 4, 24, 24, 7, 1, 3),
+        ],
+    )
+    def test_matches_oracle(self, cin, cout, h, w, k, stride, pad):
+        x = jnp.asarray(RNG.normal(size=(cin, h, w)).astype(np.float32))
+        wts = jnp.asarray(
+            RNG.normal(size=(cout, cin, k, k)).astype(np.float32)
+        )
+        got = np.asarray(conv_rf.conv2d_rf(x, wts, stride=stride,
+                                           padding=pad))
+        want = np.asarray(ref.conv2d_nchw(x, wts, stride=stride,
+                                          padding=pad))
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        cin=st.integers(min_value=1, max_value=8),
+        cout=st.integers(min_value=1, max_value=12),
+        h=st.integers(min_value=8, max_value=40),
+        w=st.integers(min_value=8, max_value=40),
+        stride=st.sampled_from([1, 2]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep_3x3(self, cin, cout, h, w, stride, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(cin, h, w)).astype(np.float32))
+        wts = jnp.asarray(
+            rng.normal(size=(cout, cin, 3, 3)).astype(np.float32)
+        )
+        got = np.asarray(conv_rf.conv2d_rf(x, wts, stride=stride))
+        want = np.asarray(ref.conv2d_nchw(x, wts, stride=stride))
+        np.testing.assert_allclose(got, want, atol=1e-3)
+
+    @pytest.mark.parametrize("stride", [1, 2])
+    def test_depthwise_matches_lax(self, stride):
+        import jax.lax as lax
+
+        x = jnp.asarray(RNG.normal(size=(6, 20, 20)).astype(np.float32))
+        wts = jnp.asarray(RNG.normal(size=(6, 3, 3)).astype(np.float32))
+        got = np.asarray(conv_rf.dwconv2d_rf(x, wts, stride=stride))
+        want = lax.conv_general_dilated(
+            x[None], wts[:, None], (stride, stride), [(1, 1), (1, 1)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=6,
+        )[0]
+        np.testing.assert_allclose(got, np.asarray(want), atol=1e-4)
+
+    def test_identity_kernel(self):
+        x = jnp.asarray(RNG.normal(size=(2, 16, 16)).astype(np.float32))
+        wts = np.zeros((2, 2, 3, 3), np.float32)
+        wts[0, 0, 1, 1] = 1.0
+        wts[1, 1, 1, 1] = 1.0
+        got = np.asarray(conv_rf.conv2d_rf(x, jnp.asarray(wts)))
+        np.testing.assert_allclose(got, np.asarray(x), atol=1e-6)

@@ -1,0 +1,156 @@
+"""L2 model tests: fusion-layer shapes/semantics, kernel-vs-oracle parity,
+and the synthetic data generators."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data, model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def rand(shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+class TestFusionLayer:
+    def spec(self, **kw):
+        d = dict(cin=4, cout=8, act="relu", pool=None, qlevel=None)
+        d.update(kw)
+        return model.FusionSpec(**d)
+
+    def test_shapes_conv_only(self):
+        s = self.spec()
+        p = model.init_fusion(np.random.default_rng(0), s)
+        y = model.fusion_layer(rand((4, 16, 16)), p, s, use_kernels=False)
+        assert y.shape == (8, 16, 16)
+
+    def test_shapes_pool(self):
+        s = self.spec(pool="max")
+        p = model.init_fusion(np.random.default_rng(0), s)
+        y = model.fusion_layer(rand((4, 16, 16)), p, s, use_kernels=False)
+        assert y.shape == (8, 8, 8)
+
+    def test_shapes_stride2(self):
+        s = self.spec(stride=2)
+        p = model.init_fusion(np.random.default_rng(0), s)
+        y = model.fusion_layer(rand((4, 16, 16)), p, s, use_kernels=False)
+        assert y.shape == (8, 8, 8)
+
+    def test_depthwise_shapes(self):
+        s = self.spec(depthwise=True, cout=4)
+        p = model.init_fusion(np.random.default_rng(0), s)
+        y = model.fusion_layer(rand((4, 16, 16)), p, s, use_kernels=False)
+        assert y.shape == (4, 16, 16)
+
+    def test_kernel_path_matches_oracle_path(self):
+        # The Pallas path (inference/artifacts) and the jnp path (training)
+        # must agree — this ties L1 and L2 together.
+        for s in [
+            self.spec(pool="max", qlevel=2),
+            self.spec(stride=2),
+            self.spec(depthwise=True, cout=4, qlevel=1),
+        ]:
+            p = model.init_fusion(np.random.default_rng(1), s)
+            x = rand((4, 16, 16))
+            yk = model.fusion_layer(x, p, s, use_kernels=True)
+            yo = model.fusion_layer(x, p, s, use_kernels=False)
+            np.testing.assert_allclose(
+                np.asarray(yk), np.asarray(yo), atol=1e-4
+            )
+
+    def test_relu_nonnegative(self):
+        s = self.spec()
+        p = model.init_fusion(np.random.default_rng(0), s)
+        y = model.fusion_layer(rand((4, 16, 16)), p, s, use_kernels=False)
+        assert float(jnp.min(y)) >= 0.0
+
+    def test_activations(self):
+        x = jnp.asarray([-2.0, 0.0, 3.0])
+        a = jnp.asarray([0.25])
+        np.testing.assert_allclose(
+            np.asarray(model.activate(x, "relu", a)), [0, 0, 3])
+        np.testing.assert_allclose(
+            np.asarray(model.activate(x, "leaky_relu", a)), [-0.2, 0, 3])
+        np.testing.assert_allclose(
+            np.asarray(model.activate(x, "prelu", a)), [-0.5, 0, 3])
+        np.testing.assert_allclose(
+            np.asarray(model.activate(x, "none", a)), [-2, 0, 3])
+        with pytest.raises(ValueError):
+            model.activate(x, "mish", a)
+
+    def test_pooling(self):
+        x = jnp.asarray(
+            np.arange(16, dtype=np.float32).reshape(1, 4, 4))
+        mx = model.pool2x2(x, "max")
+        av = model.pool2x2(x, "avg")
+        np.testing.assert_allclose(np.asarray(mx)[0], [[5, 7], [13, 15]])
+        np.testing.assert_allclose(np.asarray(av)[0], [[2.5, 4.5],
+                                                       [10.5, 12.5]])
+
+    def test_compress_roundtrip_nonmultiple_of_8(self):
+        # 20x20 map: row frames are zero-padded then cropped.
+        x = rand((3, 20, 20))
+        y = model.compress_roundtrip(x, 3, use_kernel=False)
+        assert y.shape == x.shape
+        # gentle level on smooth-ish data: bounded distortion
+        assert float(jnp.max(jnp.abs(y - x))) < float(jnp.max(jnp.abs(x)))
+
+
+class TestSmallCNN:
+    def test_fwd_shapes(self):
+        p = model.init_smallcnn()
+        x = rand((1, 32, 32))
+        logits = model.smallcnn_fwd(p, x)
+        assert logits.shape == (4,)
+
+    def test_batch_fwd(self):
+        p = model.init_smallcnn()
+        xs = rand((5, 1, 32, 32))
+        logits = model.smallcnn_fwd_batch(p, xs)
+        assert logits.shape == (5, 4)
+
+    def test_compression_changes_little(self):
+        p = model.init_smallcnn()
+        xs = rand((2, 1, 32, 32))
+        base = model.smallcnn_fwd_batch(p, xs)
+        comp = model.smallcnn_fwd_batch(p, xs, qlevels=(3, 3, 3))
+        # gentlest level: logits shift but stay finite & correlated
+        assert np.all(np.isfinite(np.asarray(comp)))
+        assert float(jnp.max(jnp.abs(comp - base))) < 10.0
+
+
+class TestData:
+    def test_shapes_dataset_shapes(self):
+        xs, ys = data.shapes_dataset(16, seed=3)
+        assert xs.shape == (16, 1, 32, 32)
+        assert ys.shape == (16,)
+        assert set(np.unique(ys)).issubset({0, 1, 2, 3})
+
+    def test_shapes_dataset_deterministic(self):
+        a, la = data.shapes_dataset(8, seed=5)
+        b, lb = data.shapes_dataset(8, seed=5)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(la, lb)
+
+    def test_natural_images_spectrum(self):
+        # 1/f fields must have more low-frequency DCT energy than white
+        # noise — the property the whole compression scheme rides on.
+        imgs = data.natural_images(2, 1, 32, seed=1, alpha=1.2)
+        noise = data.natural_images(2, 1, 32, seed=1, alpha=0.0)
+
+        def lowfreq_fraction(x):
+            blocks = ref.to_blocks(jnp.asarray(x[0]))
+            z = np.asarray(ref.dct2d_blocks(blocks))
+            total = (z ** 2).sum()
+            low = (z[:, :4, :4] ** 2).sum()
+            return low / total
+
+        assert lowfreq_fraction(imgs) > lowfreq_fraction(noise) + 0.2
+
+    def test_natural_images_normalized(self):
+        imgs = data.natural_images(1, 2, 16, seed=2)
+        assert abs(float(imgs.mean())) < 0.2
+        assert 0.5 < float(imgs.std()) < 2.0

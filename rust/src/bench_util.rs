@@ -1,0 +1,174 @@
+//! Benchmark harness substrate (criterion is unavailable offline;
+//! DESIGN.md §4).
+//!
+//! `cargo bench` runs the `benches/*.rs` binaries (harness = false);
+//! each uses [`Bencher`] for timing and the table helpers to print the
+//! rows of the paper table/figure it regenerates.
+
+use std::time::{Duration, Instant};
+
+/// Simple measured statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+/// Micro-benchmark runner: warms up, then times `iters` runs.
+pub struct Bencher {
+    pub warmup: u32,
+    pub iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 2,
+            iters: 10,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: u32, iters: u32) -> Self {
+        Bencher { warmup, iters }
+    }
+
+    /// Time `f`, returning per-iteration stats. A `black_box` on the
+    /// closure result prevents the optimizer from deleting the work.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F)
+                                   -> Sample {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        let mean_ns = times.iter().map(|d| d.as_nanos()).sum::<u128>()
+            / times.len() as u128;
+        let var = times
+            .iter()
+            .map(|d| {
+                let x = d.as_nanos() as f64 - mean_ns as f64;
+                x * x
+            })
+            .sum::<f64>()
+            / times.len() as f64;
+        Sample {
+            name: name.to_string(),
+            iters: self.iters,
+            mean: Duration::from_nanos(mean_ns as u64),
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+            min: times.iter().min().copied().unwrap_or_default(),
+        }
+    }
+}
+
+impl Sample {
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>12.3?} ± {:>10.3?}  (min {:?}, n={})",
+            self.name, self.mean, self.stddev, self.min, self.iters
+        )
+    }
+}
+
+/// Fixed-width markdown-ish table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            widths: headers.iter().map(|h| h.len()).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells.iter()) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s
+        };
+        println!("{}", line(&self.headers, &self.widths));
+        let sep: Vec<String> = self
+            .widths
+            .iter()
+            .map(|w| "-".repeat(*w))
+            .collect();
+        println!("{}", line(&sep, &self.widths));
+        for r in &self.rows {
+            println!("{}", line(r, &self.widths));
+        }
+    }
+}
+
+/// Percentage formatter used across the table benches.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_times_work() {
+        let b = Bencher::new(0, 3);
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.mean.as_nanos() > 0);
+        assert!(s.min <= s.mean);
+        assert!(s.report().contains("spin"));
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["x".into(), "yyyy".into()]);
+        assert_eq!(t.rows_len(), 1);
+        t.print(); // smoke: no panic
+    }
+
+    #[test]
+    #[should_panic(expected = "column mismatch")]
+    fn table_rejects_ragged() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["x".into(), "y".into()]);
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.3063), "30.63%");
+    }
+}

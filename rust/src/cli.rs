@@ -1,0 +1,114 @@
+//! Command-line argument parser substrate (clap is unavailable
+//! offline; DESIGN.md §4).
+//!
+//! Grammar: `prog <subcommand> [--key=value | --key value | --flag]
+//! [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("simulate vgg16 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.positional, vec!["vgg16", "extra"]);
+    }
+
+    #[test]
+    fn options_both_styles() {
+        let a = parse("run --network=vgg16 --seed 7 --verbose");
+        assert_eq!(a.opt("network"), Some("vgg16"));
+        assert_eq!(a.opt_usize("seed", 0), 7);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.opt_or("missing", "d"), "d");
+        assert_eq!(a.opt_usize("n", 3), 3);
+        assert_eq!(a.opt_f64("r", 0.5), 0.5);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_subcommand() {
+        let a = parse("--fast run");
+        // --fast consumes "run" as value per the grammar; document it:
+        assert_eq!(a.opt("fast"), Some("run"));
+    }
+}

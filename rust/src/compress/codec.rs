@@ -1,0 +1,249 @@
+//! Whole-feature-map codec: blocks a (C, H, W) map into 8×8 tiles
+//! (zero-padded row frames), runs the DCT + two-step quantization +
+//! sparse encoding pipeline, and accounts storage exactly as the
+//! hardware does (index buffer bits + value bits + headers vs 16-bit
+//! originals). This is the L3 twin of the fused Pallas kernels.
+
+use super::dct;
+use super::encode::EncodedBlock;
+use super::quant::{
+    gemm_dequantize, gemm_quantize, qtable_dequantize, qtable_quantize,
+};
+use super::{Block, BLOCK};
+use crate::nn::Tensor3;
+
+/// Bits per original (uncompressed) activation: the accelerator stores
+/// 16-bit dynamic fixed point (paper §IV).
+pub const ORIG_BITS: u64 = 16;
+
+/// A compressed feature map: sparse blocks + original geometry.
+#[derive(Debug, Clone)]
+pub struct CompressedFmap {
+    pub blocks: Vec<EncodedBlock>,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Q-table used (needed for decode).
+    pub qtable: Block,
+}
+
+impl CompressedFmap {
+    /// Blocks per channel (padded row frames × padded column tiles).
+    pub fn blocks_per_channel(&self) -> usize {
+        self.h.div_ceil(BLOCK) * self.w.div_ceil(BLOCK)
+    }
+
+    /// Total compressed size in bits (values + bitmaps + headers).
+    pub fn compressed_bits(&self) -> u64 {
+        self.blocks.iter().map(|b| b.compressed_bits()).sum()
+    }
+
+    /// Uncompressed size in bits at 16-bit fixed point.
+    pub fn original_bits(&self) -> u64 {
+        (self.c * self.h * self.w) as u64 * ORIG_BITS
+    }
+
+    /// Paper Eq. 20: compressed / original (smaller is better).
+    pub fn compression_ratio(&self) -> f64 {
+        self.compressed_bits() as f64 / self.original_bits() as f64
+    }
+
+    /// Total non-zero coefficients (drives IDCT gating + SRAM traffic).
+    pub fn nnz(&self) -> u64 {
+        self.blocks.iter().map(|b| b.nnz() as u64).sum()
+    }
+}
+
+/// Extract the 8×8 tile at (channel, row-frame `br`, col tile `bc`),
+/// zero-padding beyond the map edge.
+fn extract_block(x: &Tensor3, ch: usize, br: usize, bc: usize) -> Block {
+    let mut blk = [0f32; 64];
+    for r in 0..BLOCK {
+        let y = br * BLOCK + r;
+        if y >= x.h {
+            break;
+        }
+        for c in 0..BLOCK {
+            let xx = bc * BLOCK + c;
+            if xx >= x.w {
+                break;
+            }
+            blk[r * BLOCK + c] = x.get(ch, y, xx);
+        }
+    }
+    blk
+}
+
+/// Write a decoded 8×8 tile back, cropping at the map edge.
+fn insert_block(x: &mut Tensor3, blk: &Block, ch: usize, br: usize,
+                bc: usize) {
+    for r in 0..BLOCK {
+        let y = br * BLOCK + r;
+        if y >= x.h {
+            break;
+        }
+        for c in 0..BLOCK {
+            let xx = bc * BLOCK + c;
+            if xx >= x.w {
+                break;
+            }
+            x.set(ch, y, xx, blk[r * BLOCK + c]);
+        }
+    }
+}
+
+/// Compress a feature map with the given Q-table.
+pub fn compress(x: &Tensor3, qtable: &Block) -> CompressedFmap {
+    let hb = x.h.div_ceil(BLOCK);
+    let wb = x.w.div_ceil(BLOCK);
+    let mut blocks = Vec::with_capacity(x.c * hb * wb);
+    for ch in 0..x.c {
+        for br in 0..hb {
+            for bc in 0..wb {
+                let blk = extract_block(x, ch, br, bc);
+                let freq = dct::dct2d(&blk);
+                let (q1, hdr) = gemm_quantize(&freq);
+                let q2 = qtable_quantize(&q1, qtable, &hdr);
+                blocks.push(EncodedBlock::encode(&q2, hdr));
+            }
+        }
+    }
+    CompressedFmap {
+        blocks,
+        c: x.c,
+        h: x.h,
+        w: x.w,
+        qtable: *qtable,
+    }
+}
+
+/// Decompress back to a dense (C, H, W) map.
+pub fn decompress(cf: &CompressedFmap) -> Tensor3 {
+    let hb = cf.h.div_ceil(BLOCK);
+    let wb = cf.w.div_ceil(BLOCK);
+    let mut out = Tensor3::zeros(cf.c, cf.h, cf.w);
+    let mut bi = 0;
+    for ch in 0..cf.c {
+        for br in 0..hb {
+            for bc in 0..wb {
+                let b = &cf.blocks[bi];
+                bi += 1;
+                let q2 = b.decode();
+                let q1p = qtable_dequantize(&q2, &cf.qtable, &b.header);
+                let freq = gemm_dequantize(&q1p, &b.header);
+                let blk = dct::idct2d(&freq);
+                insert_block(&mut out, &blk, ch, br, bc);
+            }
+        }
+    }
+    out
+}
+
+/// compress → decompress: what the next layer reads from the buffer.
+pub fn roundtrip(x: &Tensor3, qtable: &Block) -> Tensor3 {
+    decompress(&compress(x, qtable))
+}
+
+/// Reconstruction SNR (dB) of a codec roundtrip — the calibrator metric.
+pub fn roundtrip_snr_db(x: &Tensor3, qtable: &Block) -> f64 {
+    let y = roundtrip(x, qtable);
+    let mut sig = 0f64;
+    let mut err = 0f64;
+    for (a, b) in x.data.iter().zip(y.data.iter()) {
+        sig += (*a as f64) * (*a as f64);
+        let e = (*a - *b) as f64;
+        err += e * e;
+    }
+    if err == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (sig / err).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::qtable::qtable;
+    use crate::testutil::Prng;
+
+    fn rand_map(c: usize, h: usize, w: usize, seed: u64) -> Tensor3 {
+        let mut p = Prng::new(seed);
+        let mut t = Tensor3::zeros(c, h, w);
+        for v in t.data.iter_mut() {
+            *v = p.normal() as f32;
+        }
+        t
+    }
+
+    #[test]
+    fn block_count_matches_geometry() {
+        let x = rand_map(3, 16, 24, 1);
+        let cf = compress(&x, &qtable(1));
+        assert_eq!(cf.blocks.len(), 3 * 2 * 3);
+        assert_eq!(cf.blocks_per_channel(), 6);
+    }
+
+    #[test]
+    fn non_multiple_of_8_padded_and_cropped() {
+        let x = rand_map(2, 19, 21, 2);
+        let cf = compress(&x, &qtable(3));
+        assert_eq!(cf.blocks.len(), 2 * 3 * 3);
+        let y = decompress(&cf);
+        assert_eq!((y.c, y.h, y.w), (2, 19, 21));
+    }
+
+    #[test]
+    fn roundtrip_bounded_error() {
+        let x = rand_map(2, 16, 16, 3);
+        let y = roundtrip(&x, &qtable(3));
+        let max_abs = x.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in x.data.iter().zip(y.data.iter()) {
+            assert!((a - b).abs() < max_abs, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn smooth_map_compresses_below_one() {
+        // A smooth gradient map must compress well below 100%.
+        let mut x = Tensor3::zeros(1, 32, 32);
+        for r in 0..32 {
+            for c in 0..32 {
+                x.set(0, r, c, (r as f32 * 0.1).sin() + c as f32 * 0.01);
+            }
+        }
+        let cf = compress(&x, &qtable(1));
+        assert!(cf.compression_ratio() < 0.35, "{}", cf.compression_ratio());
+    }
+
+    #[test]
+    fn noise_compresses_worse_than_smooth() {
+        let noise = rand_map(1, 32, 32, 4);
+        let mut smooth = Tensor3::zeros(1, 32, 32);
+        for r in 0..32 {
+            for c in 0..32 {
+                smooth.set(0, r, c, (r + c) as f32 * 0.05);
+            }
+        }
+        let rn = compress(&noise, &qtable(1)).compression_ratio();
+        let rs = compress(&smooth, &qtable(1)).compression_ratio();
+        assert!(rs < rn, "smooth {rs} vs noise {rn}");
+    }
+
+    #[test]
+    fn snr_improves_with_gentler_level() {
+        let x = rand_map(1, 16, 16, 5);
+        let snrs: Vec<f64> =
+            (0..4).map(|l| roundtrip_snr_db(&x, &qtable(l))).collect();
+        assert!(snrs[3] > snrs[0], "{snrs:?}");
+    }
+
+    #[test]
+    fn lossless_on_zero_map() {
+        let x = Tensor3::zeros(2, 8, 8);
+        let cf = compress(&x, &qtable(0));
+        assert_eq!(cf.nnz(), 0);
+        let y = decompress(&cf);
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,323 @@
+//! 8×8 DCT-II / IDCT: naive matrix form (Eq. 5/6) and the
+//! Gong–He–Cao fast decomposition (Eq. 12–18) the ASIC implements.
+//!
+//! The naive form is the bit-reference (it matches the jnp einsum order
+//! of the Pallas kernels); the fast form models the hardware datapath —
+//! it saves half the multiplies by splitting the basis into even
+//! (symmetric) and odd (antisymmetric) 4×4 halves, and is verified
+//! against the naive form to float tolerance plus against the golden
+//! vectors produced by `python -m compile.golden`.
+
+use std::sync::OnceLock;
+
+use super::Block;
+
+/// Orthonormal DCT-II basis matrix C (row k = frequency k).
+///
+/// `C[k][n] = s_k cos(pi (n+1/2) k / 8)`, `s_0 = sqrt(1/8)`,
+/// `s_k = sqrt(2/8)`; `C Cᵀ = I` so `Z = C X Cᵀ`, `X = Cᵀ Z C`.
+pub fn dct_matrix() -> &'static [[f32; 8]; 8] {
+    static M: OnceLock<[[f32; 8]; 8]> = OnceLock::new();
+    M.get_or_init(|| {
+        let mut c = [[0f32; 8]; 8];
+        for (k, row) in c.iter_mut().enumerate() {
+            let s = if k == 0 {
+                (1.0f64 / 8.0).sqrt()
+            } else {
+                (2.0f64 / 8.0).sqrt()
+            };
+            for (n, v) in row.iter_mut().enumerate() {
+                *v = (s
+                    * (std::f64::consts::PI * (n as f64 + 0.5) * k as f64
+                        / 8.0)
+                        .cos()) as f32;
+            }
+        }
+        c
+    })
+}
+
+/// Forward 2-D DCT-II, naive matrix form: `Z = C X Cᵀ`.
+pub fn dct2d(x: &Block) -> Block {
+    let c = dct_matrix();
+    // t = C X  (t[k][m] = sum_n C[k][n] x[n][m])
+    let mut t = [0f32; 64];
+    for k in 0..8 {
+        for m in 0..8 {
+            let mut acc = 0f32;
+            for n in 0..8 {
+                acc += c[k][n] * x[n * 8 + m];
+            }
+            t[k * 8 + m] = acc;
+        }
+    }
+    // z = t Cᵀ  (z[k][l] = sum_m t[k][m] C[l][m])
+    let mut z = [0f32; 64];
+    for k in 0..8 {
+        for l in 0..8 {
+            let mut acc = 0f32;
+            for m in 0..8 {
+                acc += t[k * 8 + m] * c[l][m];
+            }
+            z[k * 8 + l] = acc;
+        }
+    }
+    z
+}
+
+/// Inverse 2-D DCT (DCT-III), naive matrix form: `X = Cᵀ Z C`.
+pub fn idct2d(z: &Block) -> Block {
+    let c = dct_matrix();
+    // t = Cᵀ Z  (t[n][l] = sum_k C[k][n] z[k][l])
+    let mut t = [0f32; 64];
+    for n in 0..8 {
+        for l in 0..8 {
+            let mut acc = 0f32;
+            for k in 0..8 {
+                acc += c[k][n] * z[k * 8 + l];
+            }
+            t[n * 8 + l] = acc;
+        }
+    }
+    // x = t C  (x[n][m] = sum_l t[n][l] C[l][m])
+    let mut x = [0f32; 64];
+    for n in 0..8 {
+        for m in 0..8 {
+            let mut acc = 0f32;
+            for l in 0..8 {
+                acc += t[n * 8 + l] * c[l][m];
+            }
+            x[n * 8 + m] = acc;
+        }
+    }
+    x
+}
+
+// ---------------------------------------------------------------------------
+// Gong fast algorithm (the hardware datapath, Eq. 12-18)
+// ---------------------------------------------------------------------------
+
+/// Even-half 4×4 coefficients `Ce` (rows k = 0,2,4,6 of C, left half).
+fn ce() -> &'static [[f32; 4]; 4] {
+    static M: OnceLock<[[f32; 4]; 4]> = OnceLock::new();
+    M.get_or_init(|| {
+        let c = dct_matrix();
+        let mut m = [[0f32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                m[i][j] = c[2 * i][j];
+            }
+        }
+        m
+    })
+}
+
+/// Odd-half 4×4 coefficients `Co` (rows k = 1,3,5,7 of C, left half).
+fn co() -> &'static [[f32; 4]; 4] {
+    static M: OnceLock<[[f32; 4]; 4]> = OnceLock::new();
+    M.get_or_init(|| {
+        let c = dct_matrix();
+        let mut m = [[0f32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                m[i][j] = c[2 * i + 1][j];
+            }
+        }
+        m
+    })
+}
+
+/// 1-D fast DCT of an 8-vector via the even/odd split:
+/// even coefficients = Ce (front + reversed back), odd = Co (front - back).
+///
+/// This is exactly what the paper's CCM array computes: the input column
+/// is folded by the pre-adder (Fig. 12 "the bottom part will be reversed
+/// at first, then added to the upper part"), then hits a 4×4 constant
+/// multiplier bank — half the multiplies of the direct 8×8 product.
+#[inline]
+pub fn dct1d_fast(x: &[f32; 8]) -> [f32; 8] {
+    let ce = ce();
+    let co = co();
+    let mut sum = [0f32; 4];
+    let mut dif = [0f32; 4];
+    for i in 0..4 {
+        sum[i] = x[i] + x[7 - i];
+        dif[i] = x[i] - x[7 - i];
+    }
+    let mut out = [0f32; 8];
+    for k in 0..4 {
+        let mut e = 0f32;
+        let mut o = 0f32;
+        for i in 0..4 {
+            e += ce[k][i] * sum[i];
+            o += co[k][i] * dif[i];
+        }
+        out[2 * k] = e;
+        out[2 * k + 1] = o;
+    }
+    out
+}
+
+/// 1-D fast IDCT (inverse of [`dct1d_fast`]): reconstruct front/back
+/// halves from the even/odd partial products.
+#[inline]
+pub fn idct1d_fast(z: &[f32; 8]) -> [f32; 8] {
+    let ce = ce();
+    let co = co();
+    // s = Ceᵀ z_even, d = Coᵀ z_odd  (4-vectors)
+    let mut s = [0f32; 4];
+    let mut d = [0f32; 4];
+    for n in 0..4 {
+        for k in 0..4 {
+            s[n] += ce[k][n] * z[2 * k];
+            d[n] += co[k][n] * z[2 * k + 1];
+        }
+    }
+    let mut x = [0f32; 8];
+    for n in 0..4 {
+        x[n] = s[n] + d[n];
+        x[7 - n] = s[n] - d[n];
+    }
+    x
+}
+
+/// Forward 2-D DCT via the fast 1-D transform on rows then columns.
+pub fn dct2d_fast(x: &Block) -> Block {
+    let mut t = [0f32; 64];
+    for r in 0..8 {
+        let row: [f32; 8] = x[r * 8..r * 8 + 8].try_into().unwrap();
+        let out = dct1d_fast(&row);
+        t[r * 8..r * 8 + 8].copy_from_slice(&out);
+    }
+    let mut z = [0f32; 64];
+    for ccol in 0..8 {
+        let mut col = [0f32; 8];
+        for r in 0..8 {
+            col[r] = t[r * 8 + ccol];
+        }
+        let out = dct1d_fast(&col);
+        for r in 0..8 {
+            z[r * 8 + ccol] = out[r];
+        }
+    }
+    z
+}
+
+/// Inverse 2-D DCT via the fast 1-D transform on columns then rows.
+pub fn idct2d_fast(z: &Block) -> Block {
+    let mut t = [0f32; 64];
+    for ccol in 0..8 {
+        let mut col = [0f32; 8];
+        for r in 0..8 {
+            col[r] = z[r * 8 + ccol];
+        }
+        let out = idct1d_fast(&col);
+        for r in 0..8 {
+            t[r * 8 + ccol] = out[r];
+        }
+    }
+    let mut x = [0f32; 64];
+    for r in 0..8 {
+        let row: [f32; 8] = t[r * 8..r * 8 + 8].try_into().unwrap();
+        let out = idct1d_fast(&row);
+        x[r * 8..r * 8 + 8].copy_from_slice(&out);
+    }
+    x
+}
+
+/// Multiply count of the naive 2-D transform (two 8×8·8×8 products).
+pub const MULS_NAIVE: usize = 2 * 8 * 8 * 8;
+/// Multiply count of the fast transform (16 folded 4×4·4 products).
+pub const MULS_FAST: usize = 16 * 2 * 4 * 4;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prng;
+
+    fn rand_block(p: &mut Prng) -> Block {
+        let mut b = [0f32; 64];
+        for v in b.iter_mut() {
+            *v = p.normal() as f32;
+        }
+        b
+    }
+
+    #[test]
+    fn basis_orthonormal() {
+        let c = dct_matrix();
+        for i in 0..8 {
+            for j in 0..8 {
+                let dot: f32 =
+                    (0..8).map(|n| c[i][n] * c[j][n]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-6, "({i},{j}) {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn idct_inverts_dct() {
+        let mut p = Prng::new(42);
+        for _ in 0..20 {
+            let x = rand_block(&mut p);
+            let z = dct2d(&x);
+            let y = idct2d(&z);
+            for i in 0..64 {
+                assert!((x[i] - y[i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn fast_matches_naive_forward() {
+        let mut p = Prng::new(7);
+        for _ in 0..50 {
+            let x = rand_block(&mut p);
+            let a = dct2d(&x);
+            let b = dct2d_fast(&x);
+            for i in 0..64 {
+                assert!((a[i] - b[i]).abs() < 1e-4, "{i}: {} {}", a[i], b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn fast_matches_naive_inverse() {
+        let mut p = Prng::new(8);
+        for _ in 0..50 {
+            let z = rand_block(&mut p);
+            let a = idct2d(&z);
+            let b = idct2d_fast(&z);
+            for i in 0..64 {
+                assert!((a[i] - b[i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_block_energy_in_dc() {
+        let x = [3.5f32; 64];
+        let z = dct2d(&x);
+        assert!((z[0] - 3.5 * 8.0).abs() < 1e-4);
+        for (i, v) in z.iter().enumerate().skip(1) {
+            assert!(v.abs() < 1e-4, "coef {i} = {v}");
+        }
+    }
+
+    #[test]
+    fn energy_preserved() {
+        let mut p = Prng::new(9);
+        let x = rand_block(&mut p);
+        let z = dct2d(&x);
+        let ex: f32 = x.iter().map(|v| v * v).sum();
+        let ez: f32 = z.iter().map(|v| v * v).sum();
+        assert!((ex - ez).abs() / ex < 1e-5);
+    }
+
+    #[test]
+    fn fast_saves_half_the_multiplies() {
+        assert_eq!(MULS_NAIVE, 1024);
+        assert_eq!(MULS_FAST, 512);
+    }
+}

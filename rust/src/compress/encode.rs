@@ -1,0 +1,273 @@
+//! Sparse-matrix encoding + flip storage (paper §III-B "Encoding",
+//! Fig. 5).
+//!
+//! Per quantized 8×8 block the hardware stores:
+//! * a 64-bit **index bitmap** (1 = non-zero) in the index buffer;
+//! * the **non-zero values** (8-bit each) packed into the feature-map
+//!   buffer, which is 8 SRAMs — SRAM *i* holds the non-zeros of matrix
+//!   row *i*, written column-by-column;
+//! * a 32-bit header (fmin/fmax as 16-bit dynamic fixed point).
+//!
+//! Because zeros concentrate in the bottom-right, row 0 is full while
+//! row 7 is nearly empty; packing consecutive blocks unflipped would
+//! leave SRAM 7 vacant when SRAM 0 overflows. The hardware therefore
+//! **flips every odd block vertically** so block *n+1*'s row 7 shares
+//! SRAM 0's stream with block *n*'s row 0, levelling the occupancy —
+//! modelled bit-exactly by [`FlipPacker`].
+
+use super::quant::QuantHeader;
+
+/// Bits of one stored non-zero coefficient. The feature-map buffer's
+/// SRAM word is 16 bits (the accelerator's dynamic-fixed-point data
+/// width, §IV); quantized codes occupy a full word each — the
+/// compression win comes from *skipping zeros*, not from narrowing the
+/// SRAM (this is what reproduces the paper's deep-layer ratios).
+pub const VALUE_BITS: u64 = 16;
+/// Bits of the per-block index bitmap.
+pub const INDEX_BITS: u64 = 64;
+/// Bits of the per-block (fmin, fmax) header (2 × 16-bit dyn-fxp).
+pub const HEADER_BITS: u64 = 32;
+
+/// One sparse-encoded 8×8 block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodedBlock {
+    /// Index bitmap; bit (r*8+c) set ⇔ quantized value at (r,c) ≠ 0.
+    pub bitmap: u64,
+    /// Non-zero values in row-major scan order, i8 each.
+    pub values: Vec<i8>,
+    /// Inverse-quantization header.
+    pub header: QuantHeader,
+}
+
+impl EncodedBlock {
+    /// Encode a quantized block (values must fit i8; all defined
+    /// Q-tables guarantee |q2| ≤ 85).
+    pub fn encode(q2: &[i16; 64], header: QuantHeader) -> Self {
+        let mut bitmap = 0u64;
+        let mut values = Vec::new();
+        for (i, &v) in q2.iter().enumerate() {
+            if v != 0 {
+                bitmap |= 1u64 << i;
+                debug_assert!((-128..=127).contains(&v), "q2 overflow {v}");
+                values.push(v as i8);
+            }
+        }
+        EncodedBlock {
+            bitmap,
+            values,
+            header,
+        }
+    }
+
+    /// Decode back to the dense quantized block.
+    pub fn decode(&self) -> [i16; 64] {
+        let mut q2 = [0i16; 64];
+        let mut vi = 0;
+        for (i, q) in q2.iter_mut().enumerate() {
+            if self.bitmap & (1u64 << i) != 0 {
+                *q = self.values[vi] as i16;
+                vi += 1;
+            }
+        }
+        debug_assert_eq!(vi, self.values.len());
+        q2
+    }
+
+    /// Number of non-zero coefficients.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Non-zeros in matrix row `r` (0..8).
+    pub fn row_nnz(&self, r: usize) -> usize {
+        ((self.bitmap >> (r * 8)) & 0xFF).count_ones() as usize
+    }
+
+    /// Total storage cost in bits (bitmap + header + values).
+    pub fn compressed_bits(&self) -> u64 {
+        INDEX_BITS + HEADER_BITS + VALUE_BITS * self.values.len() as u64
+    }
+
+    /// Per-coefficient multiplier gating mask for the IDCT module: the
+    /// paper uses the index bitmap "as the gate signal of the multiplier
+    /// in the IDCT module to skip IDCT matrix calculation".
+    pub fn idct_gate_mask(&self) -> u64 {
+        self.bitmap
+    }
+}
+
+/// Occupancy model of the 8-SRAM feature-map buffer with alternate-block
+/// vertical flipping (Fig. 5). Tracks how many value-words each SRAM row
+/// stream holds; utilization compares against the ideal (perfectly
+/// level) packing.
+#[derive(Debug, Default, Clone)]
+pub struct FlipPacker {
+    /// Words currently held by each of the 8 SRAM row streams.
+    pub row_occupancy: [u64; 8],
+    /// Blocks packed so far (parity decides flipping).
+    pub blocks: u64,
+}
+
+impl FlipPacker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pack one encoded block; odd blocks are flipped vertically.
+    /// Returns the row occupancy added, post-flip.
+    pub fn push(&mut self, b: &EncodedBlock) -> [u64; 8] {
+        let flip = self.blocks % 2 == 1;
+        let mut added = [0u64; 8];
+        for r in 0..8 {
+            let sram = if flip { 7 - r } else { r };
+            let n = b.row_nnz(r) as u64;
+            self.row_occupancy[sram] += n;
+            added[sram] = n;
+        }
+        self.blocks += 1;
+        added
+    }
+
+    /// Total value-words stored.
+    pub fn total_words(&self) -> u64 {
+        self.row_occupancy.iter().sum()
+    }
+
+    /// SRAM words *allocated*: 8 × the fullest row stream (each SRAM
+    /// must be provisioned to its own high-water mark; rows fill
+    /// independently).
+    pub fn allocated_words(&self) -> u64 {
+        8 * self.row_occupancy.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Utilization = stored / allocated ∈ (0, 1]; 1.0 = perfectly level.
+    pub fn utilization(&self) -> f64 {
+        let alloc = self.allocated_words();
+        if alloc == 0 {
+            1.0
+        } else {
+            self.total_words() as f64 / alloc as f64
+        }
+    }
+}
+
+/// Pack the same blocks *without* flipping — the strawman of Fig. 5(b)
+/// used by the ablation bench to quantify what flipping buys.
+pub fn pack_without_flip(blocks: &[EncodedBlock]) -> FlipPacker {
+    let mut p = FlipPacker::new();
+    for b in blocks {
+        // emulate push() with flip disabled
+        for r in 0..8 {
+            p.row_occupancy[r] += b.row_nnz(r) as u64;
+        }
+        p.blocks += 1;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hdr() -> QuantHeader {
+        QuantHeader {
+            fmin: -1.0,
+            fmax: 1.0,
+        }
+    }
+
+    fn block_with(coords: &[(usize, i16)]) -> [i16; 64] {
+        let mut q = [0i16; 64];
+        for &(i, v) in coords {
+            q[i] = v;
+        }
+        q
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let q2 = block_with(&[(0, 42), (7, -5), (63, 1), (32, 127)]);
+        let e = EncodedBlock::encode(&q2, hdr());
+        assert_eq!(e.nnz(), 4);
+        assert_eq!(e.decode(), q2);
+    }
+
+    #[test]
+    fn empty_block() {
+        let e = EncodedBlock::encode(&[0i16; 64], hdr());
+        assert_eq!(e.nnz(), 0);
+        assert_eq!(e.bitmap, 0);
+        assert_eq!(e.compressed_bits(), INDEX_BITS + HEADER_BITS);
+        assert_eq!(e.decode(), [0i16; 64]);
+    }
+
+    #[test]
+    fn dense_block() {
+        let q2 = [1i16; 64];
+        let e = EncodedBlock::encode(&q2, hdr());
+        assert_eq!(e.nnz(), 64);
+        assert_eq!(e.bitmap, u64::MAX);
+        assert_eq!(
+            e.compressed_bits(),
+            64 + 32 + VALUE_BITS * 64
+        );
+    }
+
+    #[test]
+    fn row_nnz_counts() {
+        // row 0 fully dense, row 3 has 2, others empty
+        let mut q2 = [0i16; 64];
+        for c in 0..8 {
+            q2[c] = 9;
+        }
+        q2[3 * 8 + 1] = -2;
+        q2[3 * 8 + 5] = 4;
+        let e = EncodedBlock::encode(&q2, hdr());
+        assert_eq!(e.row_nnz(0), 8);
+        assert_eq!(e.row_nnz(3), 2);
+        assert_eq!(e.row_nnz(7), 0);
+    }
+
+    /// A "typical" top-heavy block: row r holds 8-r non-zeros.
+    fn top_heavy() -> EncodedBlock {
+        let mut q2 = [0i16; 64];
+        for r in 0..8 {
+            for c in 0..(8 - r) {
+                q2[r * 8 + c] = 1;
+            }
+        }
+        EncodedBlock::encode(&q2, hdr())
+    }
+
+    #[test]
+    fn flipping_levels_occupancy() {
+        let blocks: Vec<_> = (0..32).map(|_| top_heavy()).collect();
+        let mut flip = FlipPacker::new();
+        for b in &blocks {
+            flip.push(b);
+        }
+        let noflip = pack_without_flip(&blocks);
+        assert_eq!(flip.total_words(), noflip.total_words());
+        // With flipping, every pair of blocks adds 8+1, 7+2, ... = 9 per
+        // SRAM: perfectly level.
+        assert!(flip.utilization() > 0.99, "{}", flip.utilization());
+        // Without flipping, SRAM0 gets 8/block while SRAM7 gets 1.
+        assert!(noflip.utilization() < 0.6, "{}", noflip.utilization());
+    }
+
+    #[test]
+    fn flip_parity_alternates() {
+        let b = top_heavy();
+        let mut p = FlipPacker::new();
+        let add0 = p.push(&b);
+        let add1 = p.push(&b);
+        assert_eq!(add0[0], 8); // unflipped: row 0 -> SRAM 0
+        assert_eq!(add1[0], 1); // flipped: row 7 -> SRAM 0
+        assert_eq!(add1[7], 8); // flipped: row 0 -> SRAM 7
+    }
+
+    #[test]
+    fn utilization_empty_is_one() {
+        assert_eq!(FlipPacker::new().utilization(), 1.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Number formats of the accelerator (paper §IV): 16-bit *dynamic*
+//! fixed point for activations/partial sums (per-tensor shared
+//! exponent, [Gupta et al.]) and 8-bit *feature-wise* (per-channel)
+//! quantization for weights [Krishnamoorthi].
+//!
+//! These model the datapath precision for the simulator and give the
+//! storage constants behind the compression-ratio accounting.
+
+/// 16-bit dynamic fixed point: values stored as i16 with one shared
+/// power-of-two scale chosen from the tensor's max magnitude.
+#[derive(Debug, Clone)]
+pub struct DynFixed16 {
+    pub data: Vec<i16>,
+    /// Value = data × 2^exp.
+    pub exp: i32,
+}
+
+impl DynFixed16 {
+    /// Quantize an f32 slice. The exponent is the smallest that fits the
+    /// max magnitude into i16 (15 fractional-ish bits of headroom).
+    pub fn quantize(xs: &[f32]) -> Self {
+        let maxabs = xs.iter().fold(0f32, |m, v| m.max(v.abs()));
+        let exp = if maxabs == 0.0 {
+            0
+        } else {
+            // need maxabs / 2^exp <= 32767
+            (maxabs / 32767.0).log2().ceil() as i32
+        };
+        let scale = (2f32).powi(-exp);
+        let data = xs
+            .iter()
+            .map(|&v| {
+                (v * scale).round_ties_even().clamp(-32768.0, 32767.0)
+                    as i16
+            })
+            .collect();
+        DynFixed16 { data, exp }
+    }
+
+    /// Dequantize back to f32.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let scale = (2f32).powi(self.exp);
+        self.data.iter().map(|&v| v as f32 * scale).collect()
+    }
+
+    /// Worst-case absolute quantization error: half an LSB.
+    pub fn max_error(&self) -> f32 {
+        0.5 * (2f32).powi(self.exp)
+    }
+
+    pub fn bits(&self) -> u64 {
+        16 * self.data.len() as u64
+    }
+}
+
+/// 8-bit feature-wise (per-channel) weight quantization: one f32 scale
+/// per output channel, symmetric around zero.
+#[derive(Debug, Clone)]
+pub struct FeatureWise8 {
+    /// i8 codes, channel-major layout preserved from input.
+    pub data: Vec<i8>,
+    /// Per-channel scale (value = code × scale).
+    pub scales: Vec<f32>,
+    /// Elements per channel.
+    pub per_channel: usize,
+}
+
+impl FeatureWise8 {
+    /// Quantize `channels × per_channel` values.
+    pub fn quantize(xs: &[f32], channels: usize) -> Self {
+        assert!(channels > 0 && xs.len() % channels == 0);
+        let per_channel = xs.len() / channels;
+        let mut data = Vec::with_capacity(xs.len());
+        let mut scales = Vec::with_capacity(channels);
+        for ch in 0..channels {
+            let sl = &xs[ch * per_channel..(ch + 1) * per_channel];
+            let maxabs = sl.iter().fold(0f32, |m, v| m.max(v.abs()));
+            let scale = if maxabs == 0.0 { 1.0 } else { maxabs / 127.0 };
+            scales.push(scale);
+            for &v in sl {
+                data.push(
+                    (v / scale).round_ties_even().clamp(-127.0, 127.0)
+                        as i8,
+                );
+            }
+        }
+        FeatureWise8 {
+            data,
+            scales,
+            per_channel,
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.data
+            .chunks(self.per_channel)
+            .zip(self.scales.iter())
+            .flat_map(|(chunk, &s)| {
+                chunk.iter().map(move |&v| v as f32 * s)
+            })
+            .collect()
+    }
+
+    pub fn bits(&self) -> u64 {
+        8 * self.data.len() as u64 + 32 * self.scales.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prng;
+
+    #[test]
+    fn dynfixed_roundtrip_error_bounded() {
+        let mut p = Prng::new(11);
+        let xs: Vec<f32> =
+            (0..256).map(|_| p.normal() as f32 * 12.0).collect();
+        let q = DynFixed16::quantize(&xs);
+        let y = q.dequantize();
+        for (a, b) in xs.iter().zip(y.iter()) {
+            assert!((a - b).abs() <= q.max_error() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn dynfixed_zero_tensor() {
+        let q = DynFixed16::quantize(&[0.0; 8]);
+        assert!(q.dequantize().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dynfixed_large_range() {
+        let xs = vec![1e6f32, -1e6, 0.5];
+        let q = DynFixed16::quantize(&xs);
+        let y = q.dequantize();
+        assert!((y[0] - 1e6).abs() / 1e6 < 1e-3);
+        // small value loses precision under the shared exponent —
+        // exactly the dynamic-fixed-point trade-off.
+        assert!((y[2] - 0.5).abs() <= q.max_error());
+    }
+
+    #[test]
+    fn dynfixed_16x_smaller_than_f32_is_half() {
+        let q = DynFixed16::quantize(&[1.0; 100]);
+        assert_eq!(q.bits(), 1600);
+    }
+
+    #[test]
+    fn featurewise_per_channel_scales() {
+        // channel 0 small values, channel 1 large: independent scales.
+        let xs = [0.01f32, -0.02, 0.005, 0.0, 100.0, -50.0, 25.0, 10.0];
+        let q = FeatureWise8::quantize(&xs, 2);
+        let y = q.dequantize();
+        for (i, (a, b)) in xs.iter().zip(y.iter()).enumerate() {
+            // error bounded by half a channel-scale step
+            let tol = q.scales[i / 4] * 0.5 + 1e-6;
+            assert!((a - b).abs() <= tol, "{a} vs {b}");
+        }
+        assert!(q.scales[1] > q.scales[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn featurewise_rejects_ragged() {
+        FeatureWise8::quantize(&[1.0; 7], 2);
+    }
+}

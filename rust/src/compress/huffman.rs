@@ -1,0 +1,289 @@
+//! Zig-zag scan + canonical Huffman coding — the encoding the paper
+//! *considered and rejected* (§III-B): "Huffman coding is the best
+//! method to achieve the theoretical highest compression ratio.
+//! However, the implementation ... will request a look-up table which
+//! introduces considerable hardware overhead [and] symbols cannot be
+//! decoded in parallel".
+//!
+//! We implement it to quantify that trade-off (`ablation_encoding`
+//! bench): ratio vs the bitmap scheme, plus the *critical-path length*
+//! of decoding (bit-serial for Huffman, O(1) per word for the bitmap).
+
+use std::collections::BinaryHeap;
+
+/// Zig-zag scan order of an 8×8 block (JPEG order): low frequencies
+/// first, so trailing zeros cluster for run-length symbols.
+pub const ZIGZAG: [usize; 64] = [
+    0, 1, 8, 16, 9, 2, 3, 10, 17, 24, 32, 25, 18, 11, 4, 5, 12, 19,
+    26, 33, 40, 48, 41, 34, 27, 20, 13, 6, 7, 14, 21, 28, 35, 42, 49,
+    56, 57, 50, 43, 36, 29, 22, 15, 23, 30, 37, 44, 51, 58, 59, 52,
+    45, 38, 31, 39, 46, 53, 60, 61, 54, 47, 55, 62, 63,
+];
+
+/// Scan a block into zig-zag order.
+pub fn zigzag_scan(block: &[i16; 64]) -> [i16; 64] {
+    let mut out = [0i16; 64];
+    for (i, &src) in ZIGZAG.iter().enumerate() {
+        out[i] = block[src];
+    }
+    out
+}
+
+/// Inverse zig-zag.
+pub fn zigzag_unscan(scanned: &[i16; 64]) -> [i16; 64] {
+    let mut out = [0i16; 64];
+    for (i, &dst) in ZIGZAG.iter().enumerate() {
+        out[dst] = scanned[i];
+    }
+    out
+}
+
+/// Canonical Huffman code lengths from symbol frequencies
+/// (package-merge-free, plain heap construction; lengths only — the
+/// storage analysis needs lengths, not an actual bitstream).
+pub fn code_lengths(freqs: &[u64]) -> Vec<u32> {
+    let n = freqs.len();
+    let mut lengths = vec![0u32; n];
+    let alive: Vec<usize> =
+        (0..n).filter(|&i| freqs[i] > 0).collect();
+    if alive.is_empty() {
+        return lengths;
+    }
+    if alive.len() == 1 {
+        lengths[alive[0]] = 1;
+        return lengths;
+    }
+    // heap of (freq, node id); parent array for depth recovery
+    #[derive(PartialEq, Eq)]
+    struct Node(u64, usize);
+    impl Ord for Node {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            o.0.cmp(&self.0).then(o.1.cmp(&self.1)) // min-heap
+        }
+    }
+    impl PartialOrd for Node {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    let mut heap = BinaryHeap::new();
+    let mut parent: Vec<Option<usize>> = vec![None; alive.len()];
+    for (id, &sym) in alive.iter().enumerate() {
+        heap.push(Node(freqs[sym], id));
+    }
+    let mut next_id = alive.len();
+    while heap.len() > 1 {
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        parent.push(None);
+        parent[a.1] = Some(next_id);
+        parent[b.1] = Some(next_id);
+        heap.push(Node(a.0 + b.0, next_id));
+        next_id += 1;
+    }
+    for (id, &sym) in alive.iter().enumerate() {
+        let mut d = 0;
+        let mut cur = id;
+        while let Some(p) = parent[cur] {
+            d += 1;
+            cur = p;
+        }
+        lengths[sym] = d.max(1);
+    }
+    lengths
+}
+
+/// Result of Huffman-coding a stream of quantized blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HuffmanCost {
+    /// Payload bits (sum of code lengths over all symbols).
+    pub payload_bits: u64,
+    /// Code-table bits (canonical: 8 bits of length per symbol seen).
+    pub table_bits: u64,
+    /// Longest codeword — the decoder's bit-serial critical path per
+    /// symbol (the paper's parallel-decode objection).
+    pub max_code_len: u32,
+    /// Symbols emitted (sequential decode steps needed).
+    pub symbols: u64,
+}
+
+impl HuffmanCost {
+    pub fn total_bits(&self) -> u64 {
+        self.payload_bits + self.table_bits
+    }
+}
+
+/// Symbol alphabet: JPEG-style (zero-run up to 15, value bucket) pairs
+/// plus end-of-block. Value buckets are magnitude categories (JPEG
+/// "size"), each costing `category` extra raw bits.
+fn symbol_of(run: u32, value: i16) -> (usize, u32) {
+    let mag = (value.unsigned_abs() as u32).max(1);
+    let category = 32 - mag.leading_zeros(); // bits needed
+    ((run.min(15) as usize) * 12 + category as usize, category)
+}
+
+/// Cost of coding blocks with a per-feature-map Huffman table.
+pub fn huffman_cost(blocks: &[[i16; 64]]) -> HuffmanCost {
+    const EOB: usize = 16 * 12;
+    let mut freqs = vec![0u64; EOB + 1];
+    let mut extra_bits = 0u64;
+    let mut symbols_list: Vec<usize> = Vec::new();
+    for b in blocks {
+        let z = zigzag_scan(b);
+        let mut run = 0u32;
+        let last_nz =
+            z.iter().rposition(|&v| v != 0).map(|i| i as i64);
+        for (i, &v) in z.iter().enumerate() {
+            if last_nz.map(|l| i as i64 > l).unwrap_or(true) {
+                break;
+            }
+            if v == 0 {
+                run += 1;
+                if run == 16 {
+                    // ZRL symbol: reuse run=15, category 0 bucket
+                    let (s, _) = symbol_of(15, 1);
+                    freqs[s] += 1;
+                    symbols_list.push(s);
+                    run = 0;
+                }
+            } else {
+                let (s, cat) = symbol_of(run, v);
+                freqs[s] += 1;
+                symbols_list.push(s);
+                extra_bits += cat as u64;
+                run = 0;
+            }
+        }
+        freqs[EOB] += 1;
+        symbols_list.push(EOB);
+    }
+    let lengths = code_lengths(&freqs);
+    let payload: u64 = symbols_list
+        .iter()
+        .map(|&s| lengths[s] as u64)
+        .sum::<u64>()
+        + extra_bits;
+    let table_bits =
+        lengths.iter().filter(|&&l| l > 0).count() as u64 * 8;
+    HuffmanCost {
+        payload_bits: payload,
+        table_bits,
+        max_code_len: lengths.iter().copied().max().unwrap_or(0),
+        symbols: symbols_list.len() as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::encode::EncodedBlock;
+    use crate::compress::quant::QuantHeader;
+    use crate::testutil::Prng;
+
+    #[test]
+    fn zigzag_is_a_permutation() {
+        let mut seen = [false; 64];
+        for &i in ZIGZAG.iter() {
+            assert!(!seen[i], "dup {i}");
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        let mut p = Prng::new(1);
+        let mut b = [0i16; 64];
+        for v in b.iter_mut() {
+            *v = (p.below(100) as i16) - 50;
+        }
+        assert_eq!(zigzag_unscan(&zigzag_scan(&b)), b);
+    }
+
+    #[test]
+    fn zigzag_starts_dc_then_low_freq() {
+        assert_eq!(ZIGZAG[0], 0);
+        assert_eq!(ZIGZAG[1], 1);
+        assert_eq!(ZIGZAG[2], 8);
+        assert_eq!(ZIGZAG[63], 63);
+    }
+
+    #[test]
+    fn code_lengths_kraft_inequality() {
+        let freqs = vec![50, 20, 10, 5, 5, 5, 3, 2];
+        let lens = code_lengths(&freqs);
+        let kraft: f64 = lens
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| (2f64).powi(-(l as i32)))
+            .sum();
+        assert!(kraft <= 1.0 + 1e-9, "kraft {kraft}");
+        // more frequent symbols get shorter codes
+        assert!(lens[0] <= lens[7]);
+    }
+
+    #[test]
+    fn code_lengths_degenerate() {
+        assert_eq!(code_lengths(&[0, 7, 0]), vec![0, 1, 0]);
+        assert!(code_lengths(&[0, 0]).iter().all(|&l| l == 0));
+    }
+
+    /// Typical top-left-heavy quantized block.
+    fn sparse_block(p: &mut Prng) -> [i16; 64] {
+        let mut b = [0i16; 64];
+        for r in 0..3 {
+            for c in 0..(4 - r) {
+                b[r * 8 + c] = (p.below(20) as i16) - 10;
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn huffman_beats_bitmap_on_ratio() {
+        // The paper concedes Huffman wins on ratio — verify, then the
+        // bench quantifies the decode-parallelism price.
+        let mut p = Prng::new(5);
+        let blocks: Vec<[i16; 64]> =
+            (0..256).map(|_| sparse_block(&mut p)).collect();
+        let h = huffman_cost(&blocks);
+        let bitmap_bits: u64 = blocks
+            .iter()
+            .map(|b| {
+                EncodedBlock::encode(
+                    b,
+                    QuantHeader {
+                        fmin: 0.0,
+                        fmax: 1.0,
+                    },
+                )
+                .compressed_bits()
+            })
+            .sum();
+        assert!(
+            h.total_bits() < bitmap_bits,
+            "huffman {} vs bitmap {bitmap_bits}",
+            h.total_bits()
+        );
+    }
+
+    #[test]
+    fn huffman_decode_is_bit_serial() {
+        let mut p = Prng::new(6);
+        let blocks: Vec<[i16; 64]> =
+            (0..64).map(|_| sparse_block(&mut p)).collect();
+        let h = huffman_cost(&blocks);
+        // variable-length codes: some codeword longer than the fixed
+        // 8-bit words of the bitmap scheme -> no fixed-offset parallel
+        // fetch (the paper's hardware objection)
+        assert!(h.max_code_len > 1);
+        assert!(h.symbols > 0);
+    }
+
+    #[test]
+    fn empty_blocks_cost_only_eob() {
+        let blocks = vec![[0i16; 64]; 4];
+        let h = huffman_cost(&blocks);
+        assert_eq!(h.symbols, 4); // one EOB per block
+    }
+}

@@ -1,0 +1,33 @@
+//! The paper's interlayer feature-map codec (§III), bit-exact with the
+//! L1 Pallas kernels / pure-jnp oracles (`python/compile/kernels/ref.py`).
+//!
+//! Pipeline per 8×8 block:
+//!
+//! ```text
+//! DCT-II (Eq.5)  →  GEMM quant (Eq.7)  →  Q-table quant (Eq.8 + zp)
+//!                →  bitmap sparse encoding + flip storage (Fig.5)
+//! decode  →  inverse Q-table (Eq.9)  →  inverse GEMM (Eq.10)  →  IDCT
+//! ```
+//!
+//! Submodules: [`dct`] (naive + Gong-fast transforms), [`qtable`],
+//! [`quant`], [`encode`] (bitmap + flip packing), [`codec`] (whole
+//! feature maps), [`baseline`] (RLE / CSR / COO / STC comparators),
+//! [`fixed`] (16-bit dynamic fixed point, 8-bit feature-wise quant).
+
+pub mod baseline;
+pub mod codec;
+pub mod dct;
+pub mod encode;
+pub mod fixed;
+pub mod huffman;
+pub mod qtable;
+pub mod quant;
+
+/// One 8×8 spatial/frequency block, row-major.
+pub type Block = [f32; 64];
+
+/// Number of quantization codes of the Eq. 7 step (8-bit => 255).
+pub const IMAX: f32 = 255.0;
+
+/// Row-frame height = DCT block size = 8 (paper §III-B).
+pub const BLOCK: usize = 8;

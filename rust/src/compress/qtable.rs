@@ -1,0 +1,100 @@
+//! Quantization tables (paper §III-B): JPEG Annex-K luminance table
+//! scaled to the four levels of the accelerator's 2-bit Q-level
+//! register, plus the offline calibrator that assigns a level per layer
+//! (the paper's "off-line regression experiment").
+
+use super::Block;
+
+/// JPEG Annex-K luminance quantization table — the paper's starting
+/// point ("we refer to the JPEG Q-table"). Small values top-left
+/// (preserve low frequencies), large bottom-right (discard high).
+pub const JPEG_LUMA: [f32; 64] = [
+    16., 11., 10., 16., 24., 40., 51., 61., //
+    12., 12., 14., 19., 26., 58., 60., 55., //
+    14., 13., 16., 24., 40., 57., 69., 56., //
+    14., 17., 22., 29., 51., 87., 80., 62., //
+    18., 22., 37., 56., 68., 109., 103., 77., //
+    24., 35., 55., 64., 81., 104., 113., 92., //
+    49., 64., 78., 87., 103., 121., 120., 101., //
+    72., 92., 95., 98., 112., 100., 103., 99.,
+];
+
+/// Scale factor per Q-level. Level 0 is the most aggressive (early,
+/// storage-bound layers); level 3 the gentlest (accuracy-sensitive).
+pub const LEVEL_SCALES: [f32; 4] = [2.0, 1.0, 0.5, 0.25];
+
+/// Number of levels addressable by the 2-bit register.
+pub const NUM_LEVELS: usize = 4;
+
+/// Q-table for one level: `max(round(JPEG * scale), 1)`, matching
+/// `ref.qtable` on the python side bit-exactly (np.round is
+/// half-to-even, hence `round_ties_even`).
+pub fn qtable(level: usize) -> Block {
+    assert!(level < NUM_LEVELS, "q-level must be 0..3, got {level}");
+    let mut t = [0f32; 64];
+    for (i, v) in t.iter_mut().enumerate() {
+        *v = (JPEG_LUMA[i] * LEVEL_SCALES[level])
+            .round_ties_even()
+            .max(1.0);
+    }
+    t
+}
+
+/// Pick the gentlest-to-most-aggressive level per layer from measured
+/// reconstruction SNRs: the most aggressive level whose SNR stays above
+/// `min_snr_db`. This is the software twin of the paper's offline
+/// regression; `harness` uses it to derive the per-layer schedules.
+pub fn calibrate_level(snr_db_per_level: &[f64; NUM_LEVELS],
+                       min_snr_db: f64) -> usize {
+    for (level, &snr) in snr_db_per_level.iter().enumerate() {
+        if snr >= min_snr_db {
+            return level; // levels ordered aggressive -> gentle
+        }
+    }
+    NUM_LEVELS - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_monotone_across_levels() {
+        let ts: Vec<Block> = (0..4).map(qtable).collect();
+        for l in 0..3 {
+            for i in 0..64 {
+                assert!(ts[l][i] >= ts[l + 1][i], "level {l} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn tables_at_least_one() {
+        for l in 0..4 {
+            assert!(qtable(l).iter().all(|&v| v >= 1.0));
+        }
+    }
+
+    #[test]
+    fn low_freq_gentler_than_high_freq() {
+        for l in 0..4 {
+            let t = qtable(l);
+            assert!(t[0] < t[63], "level {l}");
+            assert!(t[1] < t[62]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "q-level")]
+    fn rejects_bad_level() {
+        qtable(4);
+    }
+
+    #[test]
+    fn calibrator_picks_most_aggressive_passing() {
+        // SNRs improve with level index (gentler tables).
+        assert_eq!(calibrate_level(&[10.0, 20.0, 30.0, 40.0], 15.0), 1);
+        assert_eq!(calibrate_level(&[10.0, 20.0, 30.0, 40.0], 5.0), 0);
+        assert_eq!(calibrate_level(&[1.0, 2.0, 3.0, 4.0], 50.0), 3);
+    }
+}

@@ -1,0 +1,204 @@
+//! Two-step quantization (paper Eq. 7–10) with the affine zero-point
+//! refinement documented in DESIGN.md §2.
+//!
+//! Step 1 ("low-precision GEMM", Eq. 7): per-block affine map of the DCT
+//! coefficients onto 0..=255 from the block (min, max).
+//! Step 2 (Q-table, Eq. 8 + zp): `q2 = round((q1 - zp) / QT)` — small
+//! signed integers, dense in the top-left (low frequencies), zero in the
+//! bottom-right, exactly as Fig. 4/5 depict.
+//!
+//! All rounding is round-half-to-even to match `jnp.round`.
+
+use super::{Block, IMAX};
+use crate::util::rint;
+
+/// Per-block quantization header: the values the hardware stores as two
+/// 16-bit dynamic-fixed-point words alongside the sparse data.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantHeader {
+    pub fmin: f32,
+    pub fmax: f32,
+}
+
+impl QuantHeader {
+    #[inline]
+    pub fn span(&self) -> f32 {
+        self.fmax - self.fmin
+    }
+
+    /// Affine zero-point: the q1 code representing coefficient 0.
+    #[inline]
+    pub fn zero_point(&self) -> f32 {
+        let span = self.span();
+        let safe = if span > 0.0 { span } else { 1.0 };
+        rint((0.0 - self.fmin) / safe * IMAX).clamp(0.0, IMAX)
+    }
+}
+
+/// Eq. 7: quantize DCT coefficients to q1 ∈ 0..=255 (returned as f32 to
+/// mirror the f32 kernel arithmetic). Degenerate blocks map to all-zero.
+pub fn gemm_quantize(freq: &Block) -> (Block, QuantHeader) {
+    let mut fmin = f32::INFINITY;
+    let mut fmax = f32::NEG_INFINITY;
+    for &v in freq.iter() {
+        fmin = fmin.min(v);
+        fmax = fmax.max(v);
+    }
+    let hdr = QuantHeader { fmin, fmax };
+    let span = hdr.span();
+    let mut q1 = [0f32; 64];
+    if span > 0.0 {
+        for (q, &v) in q1.iter_mut().zip(freq.iter()) {
+            *q = rint((v - fmin) / span * IMAX);
+        }
+    }
+    (q1, hdr)
+}
+
+/// Eq. 8 (+zp): `q2 = round((q1 - zp) / QT)`. |q2| ≤ 255 fits i16
+/// comfortably (i8 for every defined Q-table; i16 keeps the type safe
+/// for custom tables with entries < 3).
+pub fn qtable_quantize(q1: &Block, qt: &Block, hdr: &QuantHeader)
+                       -> [i16; 64] {
+    let zp = hdr.zero_point();
+    // Two passes: the all-f32 divide/round loop auto-vectorizes
+    // (vdivps+vroundps); interleaving the i16 casts defeats SIMD and
+    // costs ~8x on this hot path (EXPERIMENTS.md §Perf).
+    let mut tmp = [0f32; 64];
+    for i in 0..64 {
+        tmp[i] = rint((q1[i] - zp) / qt[i]);
+    }
+    let mut q2 = [0i16; 64];
+    for i in 0..64 {
+        q2[i] = tmp[i] as i16;
+    }
+    q2
+}
+
+/// Eq. 9 (+zp): `q1' = q2 * QT + zp`.
+pub fn qtable_dequantize(q2: &[i16; 64], qt: &Block, hdr: &QuantHeader)
+                         -> Block {
+    let zp = hdr.zero_point();
+    let mut q1 = [0f32; 64];
+    for i in 0..64 {
+        q1[i] = q2[i] as f32 * qt[i] + zp;
+    }
+    q1
+}
+
+/// Eq. 10: reconstruct approximate DCT coefficients from q1'.
+pub fn gemm_dequantize(q1p: &Block, hdr: &QuantHeader) -> Block {
+    let span = hdr.span();
+    let mut f = [0f32; 64];
+    for i in 0..64 {
+        f[i] = q1p[i] / IMAX * span + hdr.fmin;
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{dct, qtable::qtable};
+    use crate::testutil::Prng;
+
+    fn rand_freq(p: &mut Prng) -> Block {
+        let mut b = [0f32; 64];
+        for v in b.iter_mut() {
+            *v = p.normal() as f32 * 3.0;
+        }
+        b
+    }
+
+    #[test]
+    fn q1_within_code_range() {
+        let mut p = Prng::new(1);
+        for _ in 0..20 {
+            let f = rand_freq(&mut p);
+            let (q1, hdr) = gemm_quantize(&f);
+            assert!(q1.iter().all(|&v| (0.0..=IMAX).contains(&v)));
+            assert!(hdr.fmin <= hdr.fmax);
+            // extremes hit the rails
+            assert!(q1.iter().any(|&v| v == 0.0));
+            assert!(q1.iter().any(|&v| v == IMAX));
+        }
+    }
+
+    #[test]
+    fn degenerate_block_quantizes_to_zero() {
+        let f = [2.5f32; 64];
+        let (q1, hdr) = gemm_quantize(&f);
+        assert!(q1.iter().all(|&v| v == 0.0));
+        assert_eq!(hdr.span(), 0.0);
+    }
+
+    #[test]
+    fn zero_coefficient_encodes_to_zero() {
+        // The zero-point property: freq==0 -> q2==0 regardless of range.
+        let mut f = [0f32; 64];
+        f[0] = 5.0; // fmax
+        f[1] = -3.0; // fmin
+        let (q1, hdr) = gemm_quantize(&f);
+        let q2 = qtable_quantize(&q1, &qtable(0), &hdr);
+        for i in 2..64 {
+            assert_eq!(q2[i], 0, "idx {i}");
+        }
+        assert_ne!(q2[0], 0);
+        assert_ne!(q2[1], 0);
+    }
+
+    #[test]
+    fn quant_roundtrip_error_bounded() {
+        let mut p = Prng::new(3);
+        let qt = qtable(2);
+        for _ in 0..30 {
+            let f = rand_freq(&mut p);
+            let (q1, hdr) = gemm_quantize(&f);
+            let q2 = qtable_quantize(&q1, &qt, &hdr);
+            let q1p = qtable_dequantize(&q2, &qt, &hdr);
+            let fp = gemm_dequantize(&q1p, &hdr);
+            let span = hdr.span();
+            for i in 0..64 {
+                // |err| <= (QT/2 + 0.5 + 0.5[zp rounding]) / IMAX * span
+                let bound = (qt[i] * 0.5 + 1.0) / IMAX * span + 1e-4;
+                assert!(
+                    (fp[i] - f[i]).abs() <= bound,
+                    "idx {i}: err {} bound {bound}",
+                    (fp[i] - f[i]).abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn aggressive_tables_make_more_zeros() {
+        let mut p = Prng::new(4);
+        let mut nnz = [0usize; 4];
+        for _ in 0..20 {
+            let x: Block = {
+                let mut b = [0f32; 64];
+                for v in b.iter_mut() {
+                    *v = p.normal() as f32;
+                }
+                b
+            };
+            let f = dct::dct2d(&x);
+            let (q1, hdr) = gemm_quantize(&f);
+            for (level, cnt) in nnz.iter_mut().enumerate() {
+                let q2 = qtable_quantize(&q1, &qtable(level), &hdr);
+                *cnt += q2.iter().filter(|&&v| v != 0).count();
+            }
+        }
+        assert!(nnz[0] <= nnz[1]);
+        assert!(nnz[1] <= nnz[2]);
+        assert!(nnz[2] <= nnz[3]);
+    }
+
+    #[test]
+    fn zero_point_clamped() {
+        let hdr = QuantHeader { fmin: 1.0, fmax: 3.0 }; // all positive
+        assert_eq!(hdr.zero_point(), 0.0);
+        let hdr = QuantHeader { fmin: -3.0, fmax: -1.0 }; // all negative
+        assert_eq!(hdr.zero_point(), IMAX);
+    }
+}

@@ -1,0 +1,133 @@
+//! Accelerator hardware configuration (paper Table I).
+//!
+//! Defaults reproduce the prototype: TSMC 28 nm, 700 MHz, 288 PEs
+//! (32 PE units × 9 MACs), 2×128 CCMs in the DCT/IDCT module, 480 KB
+//! buffer bank with the reconfigurable split of Fig. 11, 16-bit fixed
+//! point. Peak throughput = 288 MACs × 2 ops × 700 MHz = 403 GOPS.
+
+/// Memory sizes in bytes.
+pub const KB: usize = 1024;
+
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    /// Core clock (Hz).
+    pub clock_hz: f64,
+    /// PE units in the array (each computes one 3×3 window/cycle).
+    pub pe_units: usize,
+    /// MACs per PE unit (3×3 window).
+    pub macs_per_pe: usize,
+    /// Input channels processed in parallel (PE groups).
+    pub parallel_cin: usize,
+    /// Rows per row frame (= DCT block size).
+    pub row_frame: usize,
+    /// Filters time-multiplexed per pass in 3×3 mode.
+    pub filters_3x3: usize,
+    /// Filters computed per cycle in 1×1 mode.
+    pub filters_1x1: usize,
+    /// Constant-coefficient multipliers in the DCT unit.
+    pub dct_ccms: usize,
+    /// CCMs in the IDCT unit.
+    pub idct_ccms: usize,
+    /// Fixed feature-map buffer size per ping/pong half (bytes).
+    pub fmap_buffer: usize,
+    /// Dedicated scratch-pad size (bytes).
+    pub scratch_base: usize,
+    /// Configurable memories (each attaches to fmap buffer or scratch).
+    pub config_banks: usize,
+    /// Size of one configurable bank (bytes); each holds 2 sub-banks.
+    pub config_bank_size: usize,
+    /// Index buffer (bytes).
+    pub index_buffer: usize,
+    /// Datapath precision (bits).
+    pub precision_bits: usize,
+    /// Technology node (nm) — used by the Table V normalization.
+    pub tech_nm: f64,
+    /// Core supply voltage (V).
+    pub voltage: f64,
+    /// Off-chip (DRAM) access energy, pJ/bit (paper Table II: 70).
+    pub dram_pj_per_bit: f64,
+    /// DMA bandwidth, bytes/s (DW-axi-dmac per Table II's time column:
+    /// 54.36 MB / 14.12 ms ≈ 3.85 GB/s).
+    pub dma_bytes_per_s: f64,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            clock_hz: 700e6,
+            pe_units: 32,
+            macs_per_pe: 9,
+            parallel_cin: 4,
+            row_frame: 8,
+            filters_3x3: 4,
+            filters_1x1: 8,
+            dct_ccms: 128,
+            idct_ccms: 128,
+            fmap_buffer: 128 * KB,
+            scratch_base: 64 * KB,
+            config_banks: 2,
+            config_bank_size: 64 * KB,
+            index_buffer: 32 * KB,
+            precision_bits: 16,
+            tech_nm: 28.0,
+            voltage: 0.72,
+            dram_pj_per_bit: 70.0,
+            dma_bytes_per_s: 3.85e9,
+        }
+    }
+}
+
+impl AccelConfig {
+    /// Total MACs in the PE array (288 in the prototype).
+    pub fn total_macs(&self) -> usize {
+        self.pe_units * self.macs_per_pe
+    }
+
+    /// Peak throughput in GOPS (1 MAC = 2 ops).
+    pub fn peak_gops(&self) -> f64 {
+        self.total_macs() as f64 * 2.0 * self.clock_hz / 1e9
+    }
+
+    /// Total on-chip SRAM (bytes): ping + pong fmap buffers,
+    /// configurable banks, scratch pad, index buffer.
+    pub fn total_sram(&self) -> usize {
+        2 * self.fmap_buffer
+            + self.config_banks * self.config_bank_size
+            + self.scratch_base
+            + self.index_buffer
+    }
+
+    /// Feature-map buffer size range (bytes): both halves + 0..=2
+    /// configurable banks.
+    pub fn fmap_range(&self) -> (usize, usize) {
+        (
+            2 * self.fmap_buffer,
+            2 * self.fmap_buffer
+                + self.config_banks * self.config_bank_size,
+        )
+    }
+
+    /// Scratch-pad size range (bytes).
+    pub fn scratch_range(&self) -> (usize, usize) {
+        (
+            self.scratch_base,
+            self.scratch_base
+                + self.config_banks * self.config_bank_size,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_headline_numbers() {
+        let c = AccelConfig::default();
+        assert_eq!(c.total_macs(), 288);
+        assert!((c.peak_gops() - 403.2).abs() < 0.5);
+        assert_eq!(c.total_sram(), 480 * KB);
+        assert_eq!(c.fmap_range(), (256 * KB, 384 * KB));
+        assert_eq!(c.scratch_range(), (64 * KB, 192 * KB));
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration: accelerator hardware parameters ([`accel`]),
+//! fusion-layer network descriptors ([`network`]) and layer-exact
+//! builders for the paper's benchmark CNNs ([`models`]).
+
+pub mod accel;
+pub mod models;
+pub mod network;
+
+pub use accel::AccelConfig;
+pub use network::{Act, FusionLayer, LayerKind, Network, Pool};

@@ -1,0 +1,350 @@
+//! Layer-exact fusion-layer descriptors of the paper's benchmark CNNs
+//! (§VI-B): VGG-16-BN, ResNet-50, Yolo-v3 (Darknet-53 backbone),
+//! MobileNet-v1, MobileNet-v2 — plus the SmallCNN twin of the trained
+//! JAX model.
+//!
+//! Residual/branch topologies (ResNet bottlenecks, MobileNet-v2 inverted
+//! residuals, Yolo shortcut blocks) are linearized into their convolution
+//! chains: the compression experiments depend on per-layer feature-map
+//! geometry and statistics, which the chains preserve; skip-connection
+//! adds are executed by the non-linear module without extra feature-map
+//! storage (documented substitution, DESIGN.md §2).
+
+use super::network::{Act, FusionLayer, LayerKind, Network, Pool};
+
+#[allow(clippy::too_many_arguments)]
+fn conv(name: &str, cin: usize, cout: usize, h: usize, w: usize,
+        k: usize, stride: usize, act: Act, pool: Pool) -> FusionLayer {
+    FusionLayer {
+        name: name.into(),
+        kind: LayerKind::Conv,
+        cin,
+        cout,
+        h,
+        w,
+        kernel: k,
+        stride,
+        padding: k / 2,
+        act,
+        pool,
+        qlevel: None,
+    }
+}
+
+fn dw(name: &str, c: usize, h: usize, w: usize, stride: usize,
+      act: Act) -> FusionLayer {
+    FusionLayer {
+        name: name.into(),
+        kind: LayerKind::DwConv,
+        cin: c,
+        cout: c,
+        h,
+        w,
+        kernel: 3,
+        stride,
+        padding: 1,
+        act,
+        pool: Pool::None,
+        qlevel: None,
+    }
+}
+
+/// VGG-16 with batch norm, 224×224×3 input: 13 conv fusion layers,
+/// max-pool folded into layers 2, 4, 7, 10, 13.
+pub fn vgg16_bn() -> Network {
+    let r = Act::Relu;
+    let layers = vec![
+        conv("conv1_1", 3, 64, 224, 224, 3, 1, r, Pool::None),
+        conv("conv1_2", 64, 64, 224, 224, 3, 1, r, Pool::Max2x2),
+        conv("conv2_1", 64, 128, 112, 112, 3, 1, r, Pool::None),
+        conv("conv2_2", 128, 128, 112, 112, 3, 1, r, Pool::Max2x2),
+        conv("conv3_1", 128, 256, 56, 56, 3, 1, r, Pool::None),
+        conv("conv3_2", 256, 256, 56, 56, 3, 1, r, Pool::None),
+        conv("conv3_3", 256, 256, 56, 56, 3, 1, r, Pool::Max2x2),
+        conv("conv4_1", 256, 512, 28, 28, 3, 1, r, Pool::None),
+        conv("conv4_2", 512, 512, 28, 28, 3, 1, r, Pool::None),
+        conv("conv4_3", 512, 512, 28, 28, 3, 1, r, Pool::Max2x2),
+        conv("conv5_1", 512, 512, 14, 14, 3, 1, r, Pool::None),
+        conv("conv5_2", 512, 512, 14, 14, 3, 1, r, Pool::None),
+        conv("conv5_3", 512, 512, 14, 14, 3, 1, r, Pool::Max2x2),
+    ];
+    Network {
+        name: "VGG-16-BN".into(),
+        layers,
+    }
+}
+
+/// ResNet-50, 224×224×3 input, bottlenecks linearized (stem 7×7/2 +
+/// max-pool, then [1×1, 3×3, 1×1] × (3, 4, 6, 3)).
+pub fn resnet50() -> Network {
+    let r = Act::Relu;
+    let mut layers =
+        vec![conv("stem", 3, 64, 224, 224, 7, 2, r, Pool::Max2x2)];
+    // (stage, blocks, mid channels, out channels, spatial in)
+    let stages: [(usize, usize, usize, usize); 4] = [
+        (3, 64, 256, 56),
+        (4, 128, 512, 56),
+        (6, 256, 1024, 28),
+        (3, 512, 2048, 14),
+    ];
+    let mut cin = 64;
+    let mut hw = 56;
+    for (s, &(blocks, mid, out, _)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            // stride-2 on the 3×3 of the first block of stages 2..4
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            layers.push(conv(
+                &format!("s{}b{}_1x1a", s + 1, b + 1),
+                cin, mid, hw, hw, 1, 1, r, Pool::None,
+            ));
+            layers.push(conv(
+                &format!("s{}b{}_3x3", s + 1, b + 1),
+                mid, mid, hw, hw, 3, stride, r, Pool::None,
+            ));
+            if stride == 2 {
+                hw /= 2;
+            }
+            layers.push(conv(
+                &format!("s{}b{}_1x1b", s + 1, b + 1),
+                mid, out, hw, hw, 1, 1, r, Pool::None,
+            ));
+            cin = out;
+        }
+    }
+    Network {
+        name: "ResNet-50".into(),
+        layers,
+    }
+}
+
+/// Yolo-v3 backbone (Darknet-53 without the detection heads),
+/// 416×416×3 input, leaky-ReLU throughout — the dense-activation case
+/// that motivates transform-domain compression (paper §I).
+pub fn yolov3() -> Network {
+    let l = Act::LeakyRelu;
+    let mut layers = vec![conv("conv0", 3, 32, 416, 416, 3, 1, l,
+                               Pool::None)];
+    let mut hw = 416;
+    let mut cin = 32;
+    // (residual blocks, downsample-to channels)
+    let stages: [(usize, usize); 5] =
+        [(1, 64), (2, 128), (8, 256), (8, 512), (4, 1024)];
+    for (s, &(blocks, ch)) in stages.iter().enumerate() {
+        layers.push(conv(
+            &format!("down{}", s + 1),
+            cin, ch, hw, hw, 3, 2, l, Pool::None,
+        ));
+        hw /= 2;
+        cin = ch;
+        for b in 0..blocks {
+            layers.push(conv(
+                &format!("s{}b{}_1x1", s + 1, b + 1),
+                ch, ch / 2, hw, hw, 1, 1, l, Pool::None,
+            ));
+            layers.push(conv(
+                &format!("s{}b{}_3x3", s + 1, b + 1),
+                ch / 2, ch, hw, hw, 3, 1, l, Pool::None,
+            ));
+        }
+    }
+    Network {
+        name: "Yolo-v3".into(),
+        layers,
+    }
+}
+
+/// MobileNet-v1, 224×224×3: stem + 13 depthwise-separable pairs.
+pub fn mobilenet_v1() -> Network {
+    let r = Act::Relu6;
+    let mut layers =
+        vec![conv("stem", 3, 32, 224, 224, 3, 2, r, Pool::None)];
+    // (stride of dw, pointwise out channels)
+    let cfg: [(usize, usize); 13] = [
+        (1, 64),
+        (2, 128),
+        (1, 128),
+        (2, 256),
+        (1, 256),
+        (2, 512),
+        (1, 512),
+        (1, 512),
+        (1, 512),
+        (1, 512),
+        (1, 512),
+        (2, 1024),
+        (1, 1024),
+    ];
+    let mut c = 32;
+    let mut hw = 112;
+    for (i, &(s, out)) in cfg.iter().enumerate() {
+        layers.push(dw(&format!("dw{}", i + 1), c, hw, hw, s, r));
+        if s == 2 {
+            hw /= 2;
+        }
+        layers.push(conv(
+            &format!("pw{}", i + 1),
+            c, out, hw, hw, 1, 1, r, Pool::None,
+        ));
+        c = out;
+    }
+    Network {
+        name: "MobileNet-v1".into(),
+        layers,
+    }
+}
+
+/// MobileNet-v2, 224×224×3: inverted residuals linearized
+/// (expand-1×1 / dw-3×3 / project-1×1 with linear bottleneck).
+pub fn mobilenet_v2() -> Network {
+    let r = Act::Relu6;
+    let mut layers =
+        vec![conv("stem", 3, 32, 224, 224, 3, 2, r, Pool::None)];
+    // (expansion t, out channels c, repeats n, first stride s)
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut cin = 32;
+    let mut hw = 112;
+    let mut bi = 0;
+    for &(t, cout, n, s0) in cfg.iter() {
+        for rep in 0..n {
+            bi += 1;
+            let s = if rep == 0 { s0 } else { 1 };
+            let mid = cin * t;
+            if t != 1 {
+                layers.push(conv(
+                    &format!("b{bi}_expand"),
+                    cin, mid, hw, hw, 1, 1, r, Pool::None,
+                ));
+            }
+            layers.push(dw(&format!("b{bi}_dw"), mid, hw, hw, s, r));
+            if s == 2 {
+                hw /= 2;
+            }
+            // linear bottleneck: no activation on the projection
+            layers.push(conv(
+                &format!("b{bi}_project"),
+                mid, cout, hw, hw, 1, 1, Act::None, Pool::None,
+            ));
+            cin = cout;
+        }
+    }
+    layers.push(conv("head", cin, 1280, hw, hw, 1, 1, r, Pool::None));
+    Network {
+        name: "MobileNet-v2".into(),
+        layers,
+    }
+}
+
+/// SmallCNN — the trained JAX model's exact topology (32×32×1, three
+/// conv+pool fusion layers; FC head offloaded to the host as the paper
+/// offloads FC layers to the CPU).
+pub fn smallcnn() -> Network {
+    let r = Act::Relu;
+    Network {
+        name: "SmallCNN".into(),
+        layers: vec![
+            conv("f0", 1, 16, 32, 32, 3, 1, r, Pool::Max2x2),
+            conv("f1", 16, 32, 16, 16, 3, 1, r, Pool::Max2x2),
+            conv("f2", 32, 64, 8, 8, 3, 1, r, Pool::Max2x2),
+        ],
+    }
+}
+
+/// All five paper benchmarks, in Table II/III order.
+pub fn paper_benchmarks() -> Vec<Network> {
+    vec![
+        yolov3(),
+        resnet50(),
+        vgg16_bn(),
+        mobilenet_v1(),
+        mobilenet_v2(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_validate() {
+        for net in paper_benchmarks().into_iter().chain([smallcnn()]) {
+            net.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn vgg_geometry() {
+        let net = vgg16_bn();
+        assert_eq!(net.layers.len(), 13);
+        let (c, h, w) = net.layers.last().unwrap().out_dims();
+        assert_eq!((c, h, w), (512, 7, 7));
+        // VGG-16 conv MACs ≈ 15.3 GMACs
+        let g = net.total_macs() as f64 / 1e9;
+        assert!((14.0..16.5).contains(&g), "{g} GMACs");
+    }
+
+    #[test]
+    fn resnet_geometry() {
+        let net = resnet50();
+        assert_eq!(net.layers.len(), 1 + 3 * (3 + 4 + 6 + 3));
+        let (c, h, w) = net.layers.last().unwrap().out_dims();
+        assert_eq!((c, h, w), (2048, 7, 7));
+        let g = net.total_macs() as f64 / 1e9;
+        // linearized chain: ~3.7 GMACs (shortcut 1x1s excluded)
+        assert!((3.0..4.5).contains(&g), "{g} GMACs");
+    }
+
+    #[test]
+    fn yolo_geometry() {
+        let net = yolov3();
+        assert_eq!(net.layers.len(), 1 + 5 + 2 * (1 + 2 + 8 + 8 + 4));
+        let (c, h, w) = net.layers.last().unwrap().out_dims();
+        assert_eq!((c, h, w), (1024, 13, 13));
+        // Yolo-v3 has by far the largest interlayer data of the five
+        let others =
+            [resnet50(), vgg16_bn(), mobilenet_v1(), mobilenet_v2()];
+        for o in others {
+            assert!(
+                net.total_fmap_bytes() > o.total_fmap_bytes(),
+                "{}",
+                o.name
+            );
+        }
+    }
+
+    #[test]
+    fn mobilenet_v1_geometry() {
+        let net = mobilenet_v1();
+        assert_eq!(net.layers.len(), 1 + 26);
+        let (c, h, w) = net.layers.last().unwrap().out_dims();
+        assert_eq!((c, h, w), (1024, 7, 7));
+        let g = net.total_macs() as f64 / 1e9;
+        assert!((0.4..0.7).contains(&g), "{g} GMACs");
+    }
+
+    #[test]
+    fn mobilenet_v2_geometry() {
+        let net = mobilenet_v2();
+        let (c, h, w) = net.layers.last().unwrap().out_dims();
+        assert_eq!((c, h, w), (1280, 7, 7));
+        let g = net.total_macs() as f64 / 1e9;
+        assert!((0.25..0.5).contains(&g), "{g} GMACs");
+    }
+
+    #[test]
+    fn vgg_first_layer_is_biggest_fmap() {
+        // Paper: "the first ten fusion layers have a much larger size"
+        let net = vgg16_bn();
+        let first = net.layers[0].out_fmap_bytes();
+        for l in net.layers.iter().skip(3) {
+            assert!(first >= l.out_fmap_bytes(), "{}", l.name);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Fusion-layer network descriptors.
+//!
+//! A *fusion layer* (paper Table III footnote) bundles a convolution
+//! with its BN, activation and optional pooling; the accelerator runs
+//! the bundle in one stream and compresses only at fusion boundaries.
+
+/// Activation inside a fusion layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    LeakyRelu,
+    Relu6,
+}
+
+impl Act {
+    /// Does this activation force feature-map sparsity? (paper §I: ReLU
+    /// zeroes negatives; leaky variants make maps dense.)
+    pub fn sparsifying(&self) -> bool {
+        matches!(self, Act::Relu | Act::Relu6)
+    }
+}
+
+/// Pooling appended to a fusion layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pool {
+    None,
+    Max2x2,
+    Avg2x2,
+}
+
+/// Convolution flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Dense convolution.
+    Conv,
+    /// Depthwise convolution (cout == cin).
+    DwConv,
+}
+
+/// One fusion layer.
+#[derive(Debug, Clone)]
+pub struct FusionLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub cin: usize,
+    pub cout: usize,
+    /// Input spatial size.
+    pub h: usize,
+    pub w: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub act: Act,
+    pub pool: Pool,
+    /// Compression Q-level (None = layer left uncompressed).
+    pub qlevel: Option<usize>,
+}
+
+impl FusionLayer {
+    /// Convolution output spatial dims (before pooling).
+    pub fn conv_out(&self) -> (usize, usize) {
+        (
+            (self.h + 2 * self.padding - self.kernel) / self.stride + 1,
+            (self.w + 2 * self.padding - self.kernel) / self.stride + 1,
+        )
+    }
+
+    /// Fusion-layer output dims (after pooling).
+    pub fn out_dims(&self) -> (usize, usize, usize) {
+        let (ho, wo) = self.conv_out();
+        match self.pool {
+            Pool::None => (self.cout, ho, wo),
+            _ => (self.cout, ho / 2, wo / 2),
+        }
+    }
+
+    /// MAC count of the convolution.
+    pub fn macs(&self) -> u64 {
+        let (ho, wo) = self.conv_out();
+        let k2 = (self.kernel * self.kernel) as u64;
+        match self.kind {
+            LayerKind::Conv => {
+                self.cin as u64
+                    * self.cout as u64
+                    * ho as u64
+                    * wo as u64
+                    * k2
+            }
+            LayerKind::DwConv => {
+                self.cout as u64 * ho as u64 * wo as u64 * k2
+            }
+        }
+    }
+
+    /// Weight parameter count.
+    pub fn weight_count(&self) -> u64 {
+        let k2 = (self.kernel * self.kernel) as u64;
+        match self.kind {
+            LayerKind::Conv => self.cin as u64 * self.cout as u64 * k2,
+            LayerKind::DwConv => self.cout as u64 * k2,
+        }
+    }
+
+    /// Output feature-map size in bytes at 16-bit fixed point.
+    pub fn out_fmap_bytes(&self) -> u64 {
+        let (c, h, w) = self.out_dims();
+        (c * h * w) as u64 * 2
+    }
+
+    /// Input feature-map size in bytes at 16-bit fixed point.
+    pub fn in_fmap_bytes(&self) -> u64 {
+        (self.cin * self.h * self.w) as u64 * 2
+    }
+}
+
+/// A whole network as a chain of fusion layers.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<FusionLayer>,
+}
+
+impl Network {
+    /// Validate the chain: each layer's input matches its predecessor's
+    /// output.
+    pub fn validate(&self) -> Result<(), String> {
+        for i in 1..self.layers.len() {
+            let (c, h, w) = self.layers[i - 1].out_dims();
+            let l = &self.layers[i];
+            if l.cin != c || l.h != h || l.w != w {
+                return Err(format!(
+                    "{}: layer {} expects ({},{},{}) but predecessor \
+                     produces ({c},{h},{w})",
+                    self.name, l.name, l.cin, l.h, l.w
+                ));
+            }
+            if l.kind == LayerKind::DwConv && l.cin != l.cout {
+                return Err(format!(
+                    "{}: depthwise layer {} must keep channels",
+                    self.name, l.name
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total MACs over the network.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total interlayer feature-map bytes (outputs of every layer).
+    pub fn total_fmap_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.out_fmap_bytes()).sum()
+    }
+
+    /// Total weight bytes at 8-bit feature-wise quantization.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_count()).sum()
+    }
+
+    /// Assign Q-levels: the first `n_compressed` layers get a schedule
+    /// derived from depth (aggressive early, gentle later), the rest
+    /// stay uncompressed — the paper's compression strategy.
+    pub fn with_default_schedule(mut self, n_compressed: usize) -> Self {
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            l.qlevel = if i < n_compressed {
+                Some(match i {
+                    0..=2 => 1,
+                    3..=6 => 2,
+                    _ => 3,
+                })
+            } else {
+                None
+            };
+        }
+        self
+    }
+
+    /// The paper's per-network schedule: "the total number of the
+    /// fusion layers that can benefit from the compression ranges from
+    /// 10 to 20" — compress up to 20 layers, bounded by the net depth.
+    pub fn with_paper_schedule(self) -> Self {
+        let n = self.layers.len().min(20);
+        self.with_default_schedule(n)
+    }
+
+    /// Does the network contain depthwise layers (MobileNet family)?
+    pub fn has_depthwise(&self) -> bool {
+        self.layers
+            .iter()
+            .any(|l| l.kind == LayerKind::DwConv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(cin: usize, cout: usize, h: usize, w: usize) -> FusionLayer {
+        FusionLayer {
+            name: "t".into(),
+            kind: LayerKind::Conv,
+            cin,
+            cout,
+            h,
+            w,
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+            act: Act::Relu,
+            pool: Pool::None,
+            qlevel: None,
+        }
+    }
+
+    #[test]
+    fn conv_out_dims() {
+        let mut l = layer(3, 8, 32, 32);
+        assert_eq!(l.conv_out(), (32, 32));
+        l.stride = 2;
+        assert_eq!(l.conv_out(), (16, 16));
+        l.pool = Pool::Max2x2;
+        assert_eq!(l.out_dims(), (8, 8, 8));
+    }
+
+    #[test]
+    fn macs_and_weights() {
+        let l = layer(3, 8, 32, 32);
+        assert_eq!(l.macs(), 3 * 8 * 32 * 32 * 9);
+        assert_eq!(l.weight_count(), 3 * 8 * 9);
+    }
+
+    #[test]
+    fn depthwise_macs() {
+        let mut l = layer(8, 8, 16, 16);
+        l.kind = LayerKind::DwConv;
+        assert_eq!(l.macs(), 8 * 16 * 16 * 9);
+        assert_eq!(l.weight_count(), 8 * 9);
+    }
+
+    #[test]
+    fn validate_catches_shape_break() {
+        let net = Network {
+            name: "bad".into(),
+            layers: vec![layer(3, 8, 32, 32), layer(4, 8, 32, 32)],
+        };
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn schedule_assignment() {
+        let net = Network {
+            name: "n".into(),
+            layers: (0..12).map(|_| layer(3, 3, 32, 32)).collect(),
+        }
+        .with_default_schedule(10);
+        assert_eq!(net.layers[0].qlevel, Some(1));
+        assert_eq!(net.layers[4].qlevel, Some(2));
+        assert_eq!(net.layers[8].qlevel, Some(3));
+        assert_eq!(net.layers[10].qlevel, None);
+    }
+}

@@ -1,0 +1,110 @@
+//! Dynamic batcher: groups queued requests up to the artifact batch
+//! size, with a linger window to trade latency for batch fill — the
+//! host-side mirror of the PE array computing 4 output maps in
+//! parallel.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch (the lowered artifact batch).
+    pub max_batch: usize,
+    /// How long to wait for more requests once one is pending.
+    pub linger: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 4,
+            linger: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Collect the next batch from a channel. Blocks for the first item
+/// (until `idle_timeout`), then lingers up to `policy.linger` filling
+/// the batch. Returns None when the channel is closed and drained, or
+/// on idle timeout with nothing pending.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy,
+                     idle_timeout: Duration) -> Option<Vec<T>> {
+    let first = match rx.recv_timeout(idle_timeout) {
+        Ok(v) => v,
+        Err(RecvTimeoutError::Timeout) => return None,
+        Err(RecvTimeoutError::Disconnected) => return None,
+    };
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.linger;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(v) => batch.push(v),
+            Err(_) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let p = BatchPolicy {
+            max_batch: 4,
+            linger: Duration::from_millis(5),
+        };
+        let b1 =
+            next_batch(&rx, p, Duration::from_millis(10)).unwrap();
+        assert_eq!(b1, vec![0, 1, 2, 3]);
+        let b2 =
+            next_batch(&rx, p, Duration::from_millis(10)).unwrap();
+        assert_eq!(b2.len(), 4);
+    }
+
+    #[test]
+    fn returns_partial_after_linger() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        let p = BatchPolicy {
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+        };
+        let b = next_batch(&rx, p, Duration::from_millis(10)).unwrap();
+        assert_eq!(b, vec![42]);
+    }
+
+    #[test]
+    fn none_on_idle_timeout() {
+        let (_tx, rx) = channel::<u32>();
+        let b = next_batch(
+            &rx,
+            BatchPolicy::default(),
+            Duration::from_millis(1),
+        );
+        assert!(b.is_none());
+    }
+
+    #[test]
+    fn none_when_disconnected() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(
+            &rx,
+            BatchPolicy::default(),
+            Duration::from_millis(1)
+        )
+        .is_none());
+    }
+}

@@ -1,0 +1,145 @@
+//! Serving metrics: request counters + latency distribution.
+
+use std::time::Duration;
+
+/// Fixed-boundary latency histogram + counters.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    /// Histogram bucket upper bounds (µs).
+    bounds_us: Vec<u64>,
+    buckets: Vec<u64>,
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        // 100µs .. ~10s, roughly ×2 per bucket
+        let bounds_us = vec![
+            100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000,
+            50_000, 100_000, 250_000, 500_000, 1_000_000, 2_500_000,
+            10_000_000,
+        ];
+        let n = bounds_us.len() + 1;
+        Metrics {
+            bounds_us,
+            buckets: vec![0; n],
+            requests: 0,
+            batches: 0,
+            errors: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+
+    pub fn observe(&mut self, latency: Duration) {
+        let us = latency.as_micros() as u64;
+        let idx = self
+            .bounds_us
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(self.bounds_us.len());
+        self.buckets[idx] += 1;
+        self.requests += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.requests as f64
+        }
+    }
+
+    pub fn max_latency_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Latency quantile from the histogram (upper-bound estimate).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self
+                    .bounds_us
+                    .get(i)
+                    .copied()
+                    .unwrap_or(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Merge another metrics block.
+    pub fn merge(&mut self, o: &Metrics) {
+        for (a, b) in self.buckets.iter_mut().zip(o.buckets.iter()) {
+            *a += b;
+        }
+        self.requests += o.requests;
+        self.batches += o.batches;
+        self.errors += o.errors;
+        self.sum_us += o.sum_us;
+        self.max_us = self.max_us.max(o.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_and_mean() {
+        let mut m = Metrics::new();
+        m.observe(Duration::from_micros(100));
+        m.observe(Duration::from_micros(300));
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.mean_latency_us(), 200.0);
+        assert_eq!(m.max_latency_us(), 300);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let mut m = Metrics::new();
+        for i in 1..=100u64 {
+            m.observe(Duration::from_micros(i * 1000));
+        }
+        let p50 = m.quantile_us(0.5);
+        let p99 = m.quantile_us(0.99);
+        assert!(p50 <= p99, "{p50} {p99}");
+        assert!(p99 <= m.max_latency_us().max(p99));
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.observe(Duration::from_micros(10));
+        b.observe(Duration::from_micros(20));
+        b.batches = 3;
+        a.merge(&b);
+        assert_eq!(a.requests, 2);
+        assert_eq!(a.batches, 3);
+    }
+
+    #[test]
+    fn empty_quantile_zero() {
+        assert_eq!(Metrics::new().quantile_us(0.99), 0);
+    }
+}

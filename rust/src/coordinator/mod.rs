@@ -1,0 +1,16 @@
+//! Inference coordinator: the serving layer around the accelerator.
+//!
+//! The paper's system is an edge inference engine; the coordinator is
+//! the host-side stack a deployment would wrap it with: a request
+//! queue, a [`batcher`] matching the artifact batch size (the paper's
+//! dataflow computes 4 output maps in parallel for exactly this kind of
+//! batching economy), a worker thread owning the PJRT [`crate::runtime`]
+//! (executables are not Sync), and [`metrics`]. Built on std threads +
+//! channels — tokio is unavailable offline (DESIGN.md §4).
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use metrics::Metrics;
+pub use server::{InferenceServer, Request, Response, ServerConfig};

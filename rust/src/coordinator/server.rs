@@ -1,0 +1,197 @@
+//! The inference server: a worker thread owning the PJRT runtime,
+//! fed by a request channel through the dynamic batcher; every batch
+//! is also accounted on the simulated accelerator so each response
+//! carries the hardware cost it *would* incur on the 403-GOPS ASIC.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::{models, AccelConfig};
+use crate::coordinator::batcher::{next_batch, BatchPolicy};
+use crate::coordinator::metrics::Metrics;
+use crate::nn::Tensor3;
+use crate::runtime::Runtime;
+use crate::sim::scheduler::CompressionProfile;
+use crate::sim::Accelerator;
+
+/// One classification request.
+pub struct Request {
+    pub image: Tensor3,
+    pub resp: Sender<Response>,
+    pub submitted: Instant,
+}
+
+/// Response with host + simulated-hardware accounting.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub class: usize,
+    pub logits: Vec<f32>,
+    /// End-to-end host latency.
+    pub latency: Duration,
+    /// Cycles this request's share of the batch would cost on the
+    /// simulated accelerator.
+    pub sim_cycles: u64,
+    /// Simulated core energy share (J).
+    pub sim_energy_j: f64,
+}
+
+/// Server configuration.
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    /// Use the interlayer-compressed model artifact.
+    pub compressed: bool,
+    pub policy: BatchPolicy,
+    /// Accelerator model for the per-request hardware accounting.
+    pub accel: AccelConfig,
+    /// Compression profile applied in the hardware model (measured
+    /// ratio of the SmallCNN maps; None = uncompressed accounting).
+    pub sim_profile: Option<CompressionProfile>,
+}
+
+impl ServerConfig {
+    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Self {
+        ServerConfig {
+            artifacts_dir: artifacts_dir.into(),
+            compressed: true,
+            policy: BatchPolicy::default(),
+            accel: AccelConfig::default(),
+            sim_profile: Some(CompressionProfile {
+                ratio: 0.4,
+                nnz_density: 0.4,
+            }),
+        }
+    }
+}
+
+/// Handle to the running server.
+pub struct InferenceServer {
+    tx: Sender<Request>,
+    worker: Option<JoinHandle<Metrics>>,
+}
+
+impl InferenceServer {
+    /// Start the worker thread (compiles artifacts on first batch).
+    pub fn start(cfg: ServerConfig) -> anyhow::Result<Self> {
+        let (tx, rx) = channel::<Request>();
+        let worker = std::thread::Builder::new()
+            .name("fmc-worker".into())
+            .spawn(move || worker_loop(cfg, rx))?;
+        Ok(InferenceServer {
+            tx,
+            worker: Some(worker),
+        })
+    }
+
+    /// Submit an image; returns a receiver for the response.
+    pub fn submit(&self, image: Tensor3)
+                  -> std::sync::mpsc::Receiver<Response> {
+        let (rtx, rrx) = channel();
+        let _ = self.tx.send(Request {
+            image,
+            resp: rtx,
+            submitted: Instant::now(),
+        });
+        rrx
+    }
+
+    /// Close the queue and join the worker, returning its metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        drop(self.tx);
+        self.worker
+            .take()
+            .map(|w| w.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+fn worker_loop(cfg: ServerConfig, rx: Receiver<Request>) -> Metrics {
+    let mut metrics = Metrics::new();
+    let mut runtime = match Runtime::open(&cfg.artifacts_dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("worker: {e:#}");
+            metrics.errors += 1;
+            return metrics;
+        }
+    };
+    let batch_cap = runtime.model_batch();
+    let policy = BatchPolicy {
+        max_batch: cfg.policy.max_batch.min(batch_cap),
+        ..cfg.policy
+    };
+    // Pre-compute the per-batch hardware cost on the simulator once:
+    // the SmallCNN geometry is static, so every full batch costs the
+    // same cycles/energy.
+    let accel = Accelerator::new(cfg.accel.clone());
+    let net = models::smallcnn();
+    let profiles: Vec<Option<CompressionProfile>> = net
+        .layers
+        .iter()
+        .map(|_| if cfg.compressed { cfg.sim_profile } else { None })
+        .collect();
+    let hw = accel.run(&net, &profiles);
+    let cycles_per_image = hw.stats.cycles;
+    let energy_per_image = hw.energy.total_j();
+
+    loop {
+        let Some(batch) =
+            next_batch(&rx, policy, Duration::from_millis(200))
+        else {
+            // idle poll: exit only when the channel is closed
+            match rx.recv() {
+                Ok(first) => {
+                    handle_batch(
+                        vec![first],
+                        &mut runtime,
+                        &cfg,
+                        &mut metrics,
+                        cycles_per_image,
+                        energy_per_image,
+                    );
+                    continue;
+                }
+                Err(_) => break,
+            }
+        };
+        handle_batch(
+            batch,
+            &mut runtime,
+            &cfg,
+            &mut metrics,
+            cycles_per_image,
+            energy_per_image,
+        );
+    }
+    metrics
+}
+
+fn handle_batch(batch: Vec<Request>, runtime: &mut Runtime,
+                cfg: &ServerConfig, metrics: &mut Metrics,
+                cycles_per_image: u64, energy_per_image: f64) {
+    metrics.batches += 1;
+    let images: Vec<Tensor3> =
+        batch.iter().map(|r| r.image.clone()).collect();
+    match runtime.classify(&images, cfg.compressed) {
+        Ok(results) => {
+            for (req, (class, logits)) in
+                batch.into_iter().zip(results)
+            {
+                let latency = req.submitted.elapsed();
+                metrics.observe(latency);
+                let _ = req.resp.send(Response {
+                    class,
+                    logits,
+                    latency,
+                    sim_cycles: cycles_per_image,
+                    sim_energy_j: energy_per_image,
+                });
+            }
+        }
+        Err(e) => {
+            eprintln!("batch failed: {e:#}");
+            metrics.errors += batch.len() as u64;
+        }
+    }
+}

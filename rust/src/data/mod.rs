@@ -1,0 +1,272 @@
+//! Seeded synthetic workloads (rust twin of `python/compile/data.py`).
+//!
+//! * [`natural_image`] — 1/f-style Gaussian random fields approximated
+//!   by summing octaves of smoothed noise (spatial-domain construction;
+//!   no FFT dependency). Natural images have ~1/f amplitude spectra and
+//!   early-layer CNN feature maps inherit that smoothness (paper Fig. 2)
+//!   — this is what the compression-ratio experiments ride on.
+//! * [`shapes_image`] — the 4-class geometric-shapes workload used by
+//!   the end-to-end serving example (classified by the PJRT-loaded
+//!   SmallCNN artifact).
+
+use crate::nn::Tensor3;
+use crate::testutil::Prng;
+
+/// Smoothness presets mapped to network depth: early layers look like
+/// images (strong 1/f), deep layers look like noise (paper Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Smoothness {
+    /// Image-like, first fusion layers.
+    Natural,
+    /// Mid-network: partially decorrelated.
+    Mixed,
+    /// Deep abstract features: near-white.
+    Abstract,
+}
+
+impl Smoothness {
+    /// Octave weights: larger low-frequency octaves = smoother field.
+    fn octave_gain(&self, octave: usize) -> f64 {
+        // octave 0 is the coarsest (lowest frequency)
+        let alpha: f64 = match self {
+            Smoothness::Natural => 1.2,
+            Smoothness::Mixed => 0.6,
+            Smoothness::Abstract => 0.12,
+        };
+        (2f64).powf(-(alpha * octave as f64))
+    }
+
+    /// Map a fusion-layer index (0-based) to the depth-appropriate
+    /// smoothness, following the paper's Fig. 2 observation.
+    pub fn for_layer(index: usize) -> Smoothness {
+        match index {
+            0..=2 => Smoothness::Natural,
+            3..=7 => Smoothness::Mixed,
+            _ => Smoothness::Abstract,
+        }
+    }
+
+    /// One step less smooth (dense activations / depthwise nets).
+    pub fn downgrade(self) -> Smoothness {
+        match self {
+            Smoothness::Natural => Smoothness::Mixed,
+            _ => Smoothness::Abstract,
+        }
+    }
+
+    /// Depth mapping with architecture effects (paper §VI-B): leaky
+    /// activations keep maps dense and high-frequency (Yolo-v3), and
+    /// depthwise-separable nets decorrelate channels early so their
+    /// maps lose image-like smoothness faster (MobileNets — "it is
+    /// difficult for further compression on these two networks").
+    pub fn for_layer_arch(index: usize, dense_act: bool,
+                          depthwise_net: bool) -> Smoothness {
+        let mut s = Smoothness::for_layer(index);
+        if dense_act {
+            s = s.downgrade();
+        }
+        if depthwise_net && index > 0 {
+            s = s.downgrade();
+        }
+        s
+    }
+}
+
+/// Bilinear upsample of a (h, w) grid to (h2, w2).
+fn upsample(src: &[f32], h: usize, w: usize, h2: usize, w2: usize)
+            -> Vec<f32> {
+    let mut out = vec![0f32; h2 * w2];
+    for r in 0..h2 {
+        let fy = r as f32 * (h - 1).max(1) as f32 / (h2 - 1).max(1) as f32;
+        let y0 = fy.floor() as usize;
+        let y1 = (y0 + 1).min(h - 1);
+        let ty = fy - y0 as f32;
+        for c in 0..w2 {
+            let fx =
+                c as f32 * (w - 1).max(1) as f32 / (w2 - 1).max(1) as f32;
+            let x0 = fx.floor() as usize;
+            let x1 = (x0 + 1).min(w - 1);
+            let tx = fx - x0 as f32;
+            let a = src[y0 * w + x0] * (1.0 - tx) + src[y0 * w + x1] * tx;
+            let b = src[y1 * w + x0] * (1.0 - tx) + src[y1 * w + x1] * tx;
+            out[r * w2 + c] = a * (1.0 - ty) + b * ty;
+        }
+    }
+    out
+}
+
+/// One channel of pseudo-natural data: octaves of upsampled noise
+/// weighted by the smoothness profile, normalized to zero mean / unit
+/// std.
+pub fn natural_channel(p: &mut Prng, h: usize, w: usize,
+                       smooth: Smoothness) -> Vec<f32> {
+    let mut acc = vec![0f32; h * w];
+    let octaves = (h.min(w) as f64).log2().floor() as usize + 1;
+    for o in 0..octaves {
+        let gh = (h >> (octaves - 1 - o)).max(2).min(h);
+        let gw = (w >> (octaves - 1 - o)).max(2).min(w);
+        let mut grid = vec![0f32; gh * gw];
+        p.fill_normal(&mut grid, 1.0);
+        let up = upsample(&grid, gh, gw, h, w);
+        let g = smooth.octave_gain(o) as f32;
+        for (a, u) in acc.iter_mut().zip(up.iter()) {
+            *a += u * g;
+        }
+    }
+    // normalize
+    let n = acc.len() as f32;
+    let mean = acc.iter().sum::<f32>() / n;
+    let var =
+        acc.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let std = var.sqrt().max(1e-6);
+    for v in acc.iter_mut() {
+        *v = (*v - mean) / std;
+    }
+    acc
+}
+
+/// A (C, H, W) field with depth-appropriate statistics. After a ReLU'd
+/// layer the activations are non-negative; `relu_like` clamps like the
+/// real feature maps the codec sees.
+pub fn natural_image(seed: u64, c: usize, h: usize, w: usize,
+                     smooth: Smoothness, relu_like: bool) -> Tensor3 {
+    let mut p = Prng::new(seed);
+    let mut t = Tensor3::zeros(c, h, w);
+    for ch in 0..c {
+        let field = natural_channel(&mut p, h, w, smooth);
+        let base = ch * h * w;
+        for (i, v) in field.into_iter().enumerate() {
+            t.data[base + i] = if relu_like { v.max(0.0) } else { v };
+        }
+    }
+    t
+}
+
+/// Shape classes of the synthetic classification workload.
+pub const NUM_CLASSES: usize = 4;
+
+/// Rasterize one 4-class shape image (1, size, size), matching the
+/// python generator's class definitions (circle/square/triangle/cross).
+pub fn shapes_image(p: &mut Prng, class: usize, size: usize) -> Tensor3 {
+    assert!(class < NUM_CLASSES);
+    let mut img = Tensor3::zeros(1, size, size);
+    p.fill_normal(&mut img.data, 0.08);
+    let cx = p.range(size as f64 * 0.3, size as f64 * 0.7) as f32;
+    let cy = p.range(size as f64 * 0.3, size as f64 * 0.7) as f32;
+    let r = p.range(size as f64 * 0.15, size as f64 * 0.3) as f32;
+    let lift = p.range(0.7, 1.0) as f32;
+    for y in 0..size {
+        for x in 0..size {
+            let (fx, fy) = (x as f32, y as f32);
+            let inside = match class {
+                0 => {
+                    (fx - cx).powi(2) + (fy - cy).powi(2) <= r * r
+                }
+                1 => (fx - cx).abs() <= r && (fy - cy).abs() <= r,
+                2 => {
+                    fy >= cy - r
+                        && fy <= cy + r
+                        && (fx - cx).abs() <= (fy - (cy - r)) / 2.0
+                }
+                _ => {
+                    ((fx - cx).abs() <= r / 3.0 && (fy - cy).abs() <= r)
+                        || ((fy - cy).abs() <= r / 3.0
+                            && (fx - cx).abs() <= r)
+                }
+            };
+            if inside {
+                let i = img.idx(0, y, x);
+                img.data[i] += lift;
+            }
+        }
+    }
+    img
+}
+
+/// A batch of labelled shapes images.
+pub fn shapes_batch(seed: u64, n: usize, size: usize)
+                    -> Vec<(Tensor3, usize)> {
+    let mut p = Prng::new(seed);
+    (0..n)
+        .map(|_| {
+            let class = p.below(NUM_CLASSES);
+            (shapes_image(&mut p, class, size), class)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{codec, qtable::qtable};
+
+    #[test]
+    fn natural_is_normalized() {
+        let t = natural_image(1, 2, 32, 32, Smoothness::Natural, false);
+        let mean: f32 =
+            t.data.iter().sum::<f32>() / t.data.len() as f32;
+        assert!(mean.abs() < 0.15, "mean {mean}");
+        let var: f32 = t
+            .data
+            .iter()
+            .map(|v| (v - mean) * (v - mean))
+            .sum::<f32>()
+            / t.data.len() as f32;
+        assert!((var.sqrt() - 1.0).abs() < 0.3, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn smoother_fields_compress_better() {
+        // The pivotal property: natural > mixed > abstract in
+        // compressibility (drives every Table III-shaped result).
+        let qt = qtable(1);
+        let r = |s| {
+            let t = natural_image(7, 4, 32, 32, s, true);
+            codec::compress(&t, &qt).compression_ratio()
+        };
+        let natural = r(Smoothness::Natural);
+        let mixed = r(Smoothness::Mixed);
+        let abstract_ = r(Smoothness::Abstract);
+        assert!(
+            natural < mixed && mixed < abstract_,
+            "{natural} {mixed} {abstract_}"
+        );
+    }
+
+    #[test]
+    fn relu_like_nonnegative() {
+        let t = natural_image(3, 1, 16, 16, Smoothness::Mixed, true);
+        assert!(t.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn depth_mapping() {
+        assert_eq!(Smoothness::for_layer(0), Smoothness::Natural);
+        assert_eq!(Smoothness::for_layer(5), Smoothness::Mixed);
+        assert_eq!(Smoothness::for_layer(20), Smoothness::Abstract);
+    }
+
+    #[test]
+    fn shapes_deterministic() {
+        let a = shapes_batch(5, 4, 32);
+        let b = shapes_batch(5, 4, 32);
+        for ((ta, ca), (tb, cb)) in a.iter().zip(b.iter()) {
+            assert_eq!(ca, cb);
+            assert_eq!(ta.data, tb.data);
+        }
+    }
+
+    #[test]
+    fn shapes_classes_in_range() {
+        for (_, c) in shapes_batch(9, 32, 16) {
+            assert!(c < NUM_CLASSES);
+        }
+    }
+
+    #[test]
+    fn shape_lifts_pixels() {
+        let mut p = Prng::new(2);
+        let img = shapes_image(&mut p, 1, 32);
+        assert!(img.max_abs() > 0.5);
+    }
+}

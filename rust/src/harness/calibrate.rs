@@ -1,0 +1,180 @@
+//! Offline Q-level calibration — the paper's "off-line regression
+//! experiment on the test datasets" (§III-B): for every layer, measure
+//! the codec's reconstruction SNR at all four Q-levels on
+//! depth-representative activations and pick the most aggressive level
+//! that stays above a quality floor. Early layers tolerate aggressive
+//! tables (large Q values, better ratio); deeper layers get gentle
+//! ones — exactly the schedule the 2-bit per-layer register encodes.
+
+use crate::compress::qtable::{calibrate_level, qtable, NUM_LEVELS};
+use crate::compress::{codec, BLOCK};
+use crate::config::Network;
+use crate::data::{natural_image, Smoothness};
+use crate::harness::profiles::SAMPLE_CHANNELS;
+
+/// Calibration result for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerCalibration {
+    pub layer: String,
+    /// Reconstruction SNR (dB) per Q-level.
+    pub snr_db: [f64; NUM_LEVELS],
+    /// Compression ratio per Q-level.
+    pub ratio: [f64; NUM_LEVELS],
+    /// Chosen level (most aggressive meeting the floor).
+    pub chosen: usize,
+    /// Whether the chosen level pays (< 1.0 ratio); otherwise the
+    /// layer is stored raw (module power-off).
+    pub compress: bool,
+}
+
+/// Calibrate every layer of a network against a minimum SNR floor.
+pub fn calibrate_network(net: &Network, min_snr_db: f64, seed: u64)
+                         -> Vec<LayerCalibration> {
+    let dw = net.has_depthwise();
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let (c, h, w) = l.out_dims();
+            let relu_like = l.act.sparsifying();
+            let smooth =
+                Smoothness::for_layer_arch(i, !relu_like, dw);
+            let fmap = natural_image(
+                seed ^ (i as u64) << 8,
+                c.min(SAMPLE_CHANNELS),
+                h,
+                w,
+                smooth,
+                relu_like,
+            );
+            let mut snr = [0f64; NUM_LEVELS];
+            let mut ratio = [0f64; NUM_LEVELS];
+            for level in 0..NUM_LEVELS {
+                let qt = qtable(level);
+                snr[level] = codec::roundtrip_snr_db(&fmap, &qt);
+                ratio[level] =
+                    codec::compress(&fmap, &qt).compression_ratio();
+            }
+            let chosen = calibrate_level(&snr, min_snr_db);
+            LayerCalibration {
+                layer: l.name.clone(),
+                snr_db: snr,
+                ratio,
+                chosen,
+                compress: ratio[chosen] < 1.0,
+            }
+        })
+        .collect()
+}
+
+/// Apply a calibration to the network's schedule (None = stored raw).
+pub fn apply_calibration(mut net: Network,
+                         cal: &[LayerCalibration]) -> Network {
+    for (l, c) in net.layers.iter_mut().zip(cal.iter()) {
+        l.qlevel = if c.compress { Some(c.chosen) } else { None };
+    }
+    net
+}
+
+/// Size-weighted overall ratio the calibrated schedule achieves over
+/// its compressed layers.
+pub fn calibrated_overall(net: &Network,
+                          cal: &[LayerCalibration]) -> f64 {
+    let (mut comp, mut raw) = (0f64, 0f64);
+    for (l, c) in net.layers.iter().zip(cal.iter()) {
+        if c.compress {
+            let bytes = l.out_fmap_bytes() as f64;
+            raw += bytes;
+            comp += bytes * c.ratio[c.chosen];
+        }
+    }
+    if raw == 0.0 {
+        1.0
+    } else {
+        comp / raw
+    }
+}
+
+/// Mean per-block SNR proxy of a schedule (quality side of the sweep).
+pub fn calibrated_mean_snr(cal: &[LayerCalibration]) -> f64 {
+    let vals: Vec<f64> = cal
+        .iter()
+        .filter(|c| c.compress)
+        .map(|c| c.snr_db[c.chosen].min(60.0))
+        .collect();
+    if vals.is_empty() {
+        f64::INFINITY
+    } else {
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}
+
+const _: () = assert!(BLOCK == 8);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models;
+
+    #[test]
+    fn snr_monotone_in_level() {
+        let net = models::smallcnn();
+        let cal = calibrate_network(&net, 12.0, 3);
+        for c in &cal {
+            assert!(
+                c.snr_db[3] >= c.snr_db[0] - 0.5,
+                "{}: {:?}",
+                c.layer,
+                c.snr_db
+            );
+        }
+    }
+
+    #[test]
+    fn stricter_floor_means_gentler_levels() {
+        let net = models::vgg16_bn();
+        let loose = calibrate_network(&net, 5.0, 3);
+        let strict = calibrate_network(&net, 25.0, 3);
+        for (a, b) in loose.iter().zip(strict.iter()) {
+            assert!(a.chosen <= b.chosen, "{}", a.layer);
+        }
+    }
+
+    #[test]
+    fn stricter_floor_costs_ratio() {
+        let net = models::vgg16_bn();
+        let loose = calibrate_network(&net, 5.0, 3);
+        let strict = calibrate_network(&net, 25.0, 3);
+        let r_loose = calibrated_overall(&net, &loose);
+        let r_strict = calibrated_overall(&net, &strict);
+        assert!(r_loose <= r_strict + 1e-9, "{r_loose} {r_strict}");
+        assert!(
+            calibrated_mean_snr(&strict)
+                >= calibrated_mean_snr(&loose) - 0.5
+        );
+    }
+
+    #[test]
+    fn apply_calibration_sets_schedule() {
+        let net = models::smallcnn();
+        let cal = calibrate_network(&net, 12.0, 3);
+        let net = apply_calibration(net, &cal);
+        for (l, c) in net.layers.iter().zip(cal.iter()) {
+            assert_eq!(l.qlevel.is_some(), c.compress);
+        }
+    }
+
+    #[test]
+    fn early_layers_calibrate_more_aggressive() {
+        // the paper's observation encoded: first layers tolerate
+        // larger Q values than deep ones at the same quality floor
+        let net = models::vgg16_bn();
+        let cal = calibrate_network(&net, 18.0, 3);
+        assert!(
+            cal[0].chosen <= cal[9].chosen,
+            "{} vs {}",
+            cal[0].chosen,
+            cal[9].chosen
+        );
+    }
+}

@@ -1,0 +1,219 @@
+//! Figure generators: Fig 14 (area breakdown), Fig 15 (power
+//! breakdown), Fig 16 (original vs compressed layer sizes), and the
+//! Fig 2-style depth/spectrum motivation. Output is textual (tables +
+//! ASCII bars) — the numbers are what the reproduction pins down.
+
+use crate::bench_util::{pct, Table};
+use crate::config::{models, AccelConfig};
+use crate::data::{natural_image, Smoothness};
+use crate::harness::profiles::{self, to_sim_profiles};
+use crate::sim::energy::AreaBreakdown;
+use crate::sim::Accelerator;
+
+fn bar(frac: f64, width: usize) -> String {
+    let n = (frac * width as f64).round() as usize;
+    "#".repeat(n.min(width))
+}
+
+/// Fig 14 — area breakdown of the accelerator (logic gates).
+pub fn fig14(cfg: &AccelConfig) -> Table {
+    let a = AreaBreakdown::compute(cfg);
+    let total = a.total_gates() as f64;
+    let mut t = Table::new(&["Module", "Gates (K)", "Share", ""]);
+    for (name, g) in a.rows() {
+        let f = g as f64 / total;
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", g as f64 / 1e3),
+            pct(f),
+            bar(f, 30),
+        ]);
+    }
+    t.row(&[
+        "SRAM (mm^2, separate)".into(),
+        format!("{:.2}", a.sram_mm2),
+        pct(a.sram_mm2 / a.core_mm2()),
+        bar(a.sram_mm2 / a.core_mm2(), 30),
+    ]);
+    t
+}
+
+/// Fig 15 — dynamic power breakdown on a VGG-16-BN run.
+pub fn fig15(cfg: &AccelConfig, seed: u64) -> Table {
+    let accel = Accelerator::new(cfg.clone());
+    let net = models::vgg16_bn().with_paper_schedule();
+    let prof = profiles::profile_network(&net, seed);
+    let rep = accel.run(&net, &to_sim_profiles(&prof));
+    let e = &rep.energy;
+    let total = e.total_j();
+    let mut t = Table::new(&["Module", "Power (mW)", "Share", ""]);
+    let secs = rep.runtime_secs();
+    for (name, j) in e.rows() {
+        let f = j / total;
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", j / secs * 1e3),
+            pct(f),
+            bar(f, 30),
+        ]);
+    }
+    t.row(&[
+        "TOTAL (core dynamic)".into(),
+        format!("{:.1}", rep.core_power_w() * 1e3),
+        pct(1.0),
+        String::new(),
+    ]);
+    t
+}
+
+/// One network's Fig 16 series: per-layer original and compressed MB.
+pub struct LayerSizes {
+    pub network: String,
+    pub original_mb: Vec<f64>,
+    pub compressed_mb: Vec<f64>,
+}
+
+/// Fig 16 — original vs compressed data size of the first 10 layers
+/// for VGG-16-BN, ResNet-50, Yolo-v3 and MobileNet-v1 (paper panels
+/// a–d).
+pub fn fig16(seed: u64) -> Vec<LayerSizes> {
+    [
+        models::vgg16_bn(),
+        models::resnet50(),
+        models::yolov3(),
+        models::mobilenet_v1(),
+    ]
+    .into_iter()
+    .map(|net| {
+        let net = net.with_paper_schedule();
+        let prof = profiles::profile_network(&net, seed);
+        let mut orig = Vec::new();
+        let mut comp = Vec::new();
+        for (l, p) in net.layers.iter().zip(prof.iter()).take(10) {
+            let raw = l.out_fmap_bytes() as f64 / 1e6;
+            orig.push(raw);
+            // bypassed layers are stored raw
+            comp.push(
+                p.map(|p| p.stored_bytes as f64 / 1e6).unwrap_or(raw),
+            );
+        }
+        LayerSizes {
+            network: net.name.clone(),
+            original_mb: orig,
+            compressed_mb: comp,
+        }
+    })
+    .collect()
+}
+
+pub fn fig16_table(s: &LayerSizes) -> Table {
+    let mut t = Table::new(&[
+        "Layer",
+        "Original (MB)",
+        "Compressed (MB)",
+        "Ratio",
+    ]);
+    for i in 0..s.original_mb.len() {
+        t.row(&[
+            format!("Fusion {}", i + 1),
+            format!("{:.3}", s.original_mb[i]),
+            format!("{:.3}", s.compressed_mb[i]),
+            pct(s.compressed_mb[i] / s.original_mb[i]),
+        ]);
+    }
+    t
+}
+
+/// Fig 2-style motivation: DCT low-frequency energy fraction vs layer
+/// depth class — early maps are image-like, deep maps near-white.
+pub fn fig2_spectrum(seed: u64) -> Table {
+    use crate::compress::dct;
+    let mut t = Table::new(&[
+        "Depth class",
+        "Low-freq energy",
+        "Compression ratio @L1",
+    ]);
+    for (name, s) in [
+        ("early (Natural)", Smoothness::Natural),
+        ("mid (Mixed)", Smoothness::Mixed),
+        ("deep (Abstract)", Smoothness::Abstract),
+    ] {
+        let fmap = natural_image(seed, 4, 32, 32, s, false);
+        // energy in the 4x4 low-frequency corner
+        let mut low = 0f64;
+        let mut tot = 0f64;
+        for ch in 0..fmap.c {
+            for br in 0..4 {
+                for bc in 0..4 {
+                    let mut blk = [0f32; 64];
+                    for r in 0..8 {
+                        for c in 0..8 {
+                            blk[r * 8 + c] =
+                                fmap.get(ch, br * 8 + r, bc * 8 + c);
+                        }
+                    }
+                    let z = dct::dct2d(&blk);
+                    for (i, v) in z.iter().enumerate() {
+                        let e = (*v as f64) * (*v as f64);
+                        tot += e;
+                        if i / 8 < 4 && i % 8 < 4 {
+                            low += e;
+                        }
+                    }
+                }
+            }
+        }
+        let ratio = crate::compress::codec::compress(
+            &fmap,
+            &crate::compress::qtable::qtable(1),
+        )
+        .compression_ratio();
+        t.row(&[name.to_string(), pct(low / tot), pct(ratio)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig14_has_all_modules() {
+        let t = fig14(&AccelConfig::default());
+        assert_eq!(t.rows_len(), 8);
+    }
+
+    #[test]
+    fn fig16_four_networks_ten_layers() {
+        let s = fig16(3);
+        assert_eq!(s.len(), 4);
+        for n in &s {
+            assert_eq!(n.original_mb.len(), 10, "{}", n.network);
+            // never larger (bypassed layers stay raw), and the big
+            // early layers genuinely shrink
+            for i in 0..10 {
+                assert!(
+                    n.compressed_mb[i] <= n.original_mb[i],
+                    "{} layer {i}",
+                    n.network
+                );
+            }
+            for i in 0..3 {
+                assert!(
+                    n.compressed_mb[i] < n.original_mb[i] * 0.8,
+                    "{} layer {i}",
+                    n.network
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig16_vgg_first_layer_large_then_small() {
+        let s = fig16(3);
+        let vgg = &s[0];
+        // conv1_1 output ≈ 6.4 MB raw; compressed below 1.5 MB
+        assert!(vgg.original_mb[0] > 4.0);
+        assert!(vgg.compressed_mb[0] < 1.5);
+    }
+}

@@ -1,0 +1,16 @@
+//! Evaluation harness: regenerates every table and figure of the
+//! paper's §VI on the simulated stack (see DESIGN.md §5 for the
+//! experiment index).
+//!
+//! * [`profiles`] — measures per-layer compression profiles by running
+//!   the real codec on depth-appropriate synthetic activations.
+//! * [`tables`] — Tables I (specs), II (memory-access savings),
+//!   III (layer-by-layer compression), IV (vs DAC'20 STC),
+//!   V (vs other accelerators).
+//! * [`figs`] — Figs 14 (area), 15 (power), 16 (layer sizes),
+//!   and the Fig 2-style spectrum motivation.
+
+pub mod calibrate;
+pub mod figs;
+pub mod profiles;
+pub mod tables;

@@ -1,0 +1,182 @@
+//! Per-layer compression profiling: run the real codec over synthetic
+//! activations whose smoothness follows the layer's depth (paper
+//! Fig. 2), producing the [`CompressionProfile`]s the simulator and the
+//! Table II/III/IV benches consume.
+
+use crate::compress::{codec, qtable::qtable, BLOCK};
+use crate::config::{FusionLayer, Network};
+use crate::data::{natural_image, Smoothness};
+use crate::sim::scheduler::CompressionProfile;
+
+/// Measured compression of one layer's output.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerProfile {
+    pub ratio: f64,
+    pub nnz_density: f64,
+    /// Raw output bytes (16-bit).
+    pub raw_bytes: u64,
+    /// Stored (compressed) bytes.
+    pub stored_bytes: u64,
+    pub qlevel: usize,
+}
+
+/// Channels sampled per layer: statistics converge fast across
+/// channels, so sampling caps the profiling cost on 400-channel maps.
+pub const SAMPLE_CHANNELS: usize = 8;
+
+/// Profile one layer's *output* feature map at a given Q-level.
+/// `depthwise_net` marks MobileNet-style architectures whose maps
+/// decorrelate early (see `Smoothness::for_layer_arch`).
+pub fn profile_layer(layer: &FusionLayer, layer_index: usize,
+                     qlevel: usize, seed: u64,
+                     depthwise_net: bool) -> LayerProfile {
+    let (c, h, w) = layer.out_dims();
+    let relu_like = layer.act.sparsifying();
+    let smooth = Smoothness::for_layer_arch(
+        layer_index,
+        !relu_like,
+        depthwise_net,
+    );
+    let sample_c = c.min(SAMPLE_CHANNELS);
+    let fmap = natural_image(
+        seed ^ (layer_index as u64) << 8,
+        sample_c,
+        h,
+        w,
+        smooth,
+        relu_like,
+    );
+    let cf = codec::compress(&fmap, &qtable(qlevel));
+    let ratio = cf.compression_ratio();
+    let blocks = cf.blocks.len() as u64;
+    let nnz_density = if blocks == 0 {
+        0.0
+    } else {
+        cf.nnz() as f64 / (blocks * (BLOCK * BLOCK) as u64) as f64
+    };
+    let raw = layer.out_fmap_bytes();
+    LayerProfile {
+        ratio,
+        nnz_density,
+        raw_bytes: raw,
+        stored_bytes: (raw as f64 * ratio).ceil() as u64,
+        qlevel,
+    }
+}
+
+/// Profile a network with its assigned per-layer schedule
+/// (`layer.qlevel`); unscheduled layers return None (stored raw).
+pub fn profile_network(net: &Network, seed: u64)
+                       -> Vec<Option<LayerProfile>> {
+    let dw = net.has_depthwise();
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            l.qlevel
+                .map(|q| profile_layer(l, i, q, seed, dw))
+                // Bypass: when measured compression does not pay
+                // (small/dense maps where padding + index overhead
+                // exceed the zero savings), the hardware turns the
+                // DCT modules off and stores raw (§VI-A).
+                .filter(|p| p.ratio < 1.0)
+        })
+        .collect()
+}
+
+/// Convert to the simulator's profile type.
+pub fn to_sim_profiles(profiles: &[Option<LayerProfile>])
+                       -> Vec<Option<CompressionProfile>> {
+    profiles
+        .iter()
+        .map(|p| {
+            p.map(|p| CompressionProfile {
+                ratio: p.ratio,
+                nnz_density: p.nnz_density,
+            })
+        })
+        .collect()
+}
+
+/// Overall network compression ratio over the *compressed* layers
+/// (paper Table III "Overall" row counts the scheduled layers).
+pub fn overall_ratio(profiles: &[Option<LayerProfile>]) -> f64 {
+    let (mut comp, mut raw) = (0f64, 0f64);
+    for p in profiles.iter().flatten() {
+        comp += p.stored_bytes as f64;
+        raw += p.raw_bytes as f64;
+    }
+    if raw == 0.0 {
+        1.0
+    } else {
+        comp / raw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models;
+
+    #[test]
+    fn early_layers_compress_better_than_deep() {
+        let net = models::vgg16_bn().with_default_schedule(10);
+        let p = profile_network(&net, 42);
+        let first = p[0].unwrap().ratio;
+        // deepest still-compressed layer of the first ten
+        let deep = p[..10]
+            .iter()
+            .rev()
+            .flatten()
+            .next()
+            .unwrap()
+            .ratio;
+        assert!(first < deep, "first {first} deep {deep}");
+    }
+
+    #[test]
+    fn ratios_in_unit_range() {
+        // bypass guarantees every surviving profile pays for itself
+        let net = models::smallcnn().with_default_schedule(3);
+        for p in profile_network(&net, 7).into_iter().flatten() {
+            assert!(p.ratio > 0.0 && p.ratio < 1.0, "{}", p.ratio);
+            assert!((0.0..=1.0).contains(&p.nnz_density));
+        }
+    }
+
+    #[test]
+    fn tiny_maps_bypass_compression() {
+        // SmallCNN f2 output is 64x4x4: padding overhead dominates,
+        // so the profiler must mark it uncompressed.
+        let net = models::smallcnn().with_default_schedule(3);
+        let p = profile_network(&net, 7);
+        assert!(p[2].is_none(), "{:?}", p[2]);
+    }
+
+    #[test]
+    fn unscheduled_layers_are_none() {
+        let net = models::vgg16_bn().with_default_schedule(2);
+        let p = profile_network(&net, 1);
+        assert!(p[0].is_some() && p[1].is_some());
+        assert!(p[2..].iter().all(|x| x.is_none()));
+    }
+
+    #[test]
+    fn overall_ratio_weights_by_size() {
+        let net = models::vgg16_bn().with_default_schedule(10);
+        let p = profile_network(&net, 3);
+        let overall = overall_ratio(&p);
+        assert!((0.05..0.9).contains(&overall), "{overall}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let net = models::smallcnn().with_default_schedule(3);
+        let a = profile_network(&net, 5);
+        let b = profile_network(&net, 5);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.map(|p| p.stored_bytes),
+                       y.map(|p| p.stored_bytes));
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! # fmc-accel — Memory-Efficient CNN Accelerator with Interlayer
+//! Feature-Map Compression
+//!
+//! Reproduction of Shao et al. (2021): a CNN inference accelerator that
+//! compresses interlayer feature maps on the fly with an 8×8 DCT,
+//! two-step quantization and a bitmap sparse encoding, cutting both
+//! on-chip SRAM and off-chip DRAM traffic.
+//!
+//! The crate is the L3 layer of a three-layer stack (see DESIGN.md):
+//!
+//! * [`compress`] — bit-exact software model of the paper's codec
+//!   (DCT/IDCT, Q-tables, quantizers, bitmap + flip-storage encoder,
+//!   baseline codecs used as comparators).
+//! * [`nn`] — golden functional model of the CNN operators the
+//!   accelerator executes (conv / depthwise / pool / BN / activations).
+//! * [`data`] — seeded synthetic workloads (1/f natural-statistics
+//!   fields, shapes dataset) replacing the paper's VOC inputs.
+//! * [`config`] — accelerator hardware parameters and layer-exact
+//!   descriptors of the paper's five benchmark networks.
+//! * [`sim`] — cycle-approximate microarchitecture simulator: PE array
+//!   with the row-frame data MUX, 128-CCM DCT/IDCT unit, reconfigurable
+//!   buffer bank, DMA, instruction queue, per-layer scheduler, and the
+//!   area/energy model behind Tables I/II/V and Figs 14/15.
+//! * [`runtime`] — PJRT CPU client executing the AOT-lowered JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) from the rust hot path.
+//! * [`coordinator`] — the inference server: request queue, batcher,
+//!   ping-pong layer pipeline, worker threads, metrics.
+//! * [`harness`] — regenerates every table and figure of the paper's
+//!   evaluation section.
+//!
+//! Support substrates built in-repo because the environment is offline
+//! (crates.io unreachable): [`util::json`], [`cli`], [`bench_util`],
+//! [`testutil`].
+
+pub mod bench_util;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod nn;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,408 @@
+//! fmc-accel — CLI for the feature-map-compression CNN accelerator
+//! reproduction (Shao et al. 2021).
+//!
+//! Subcommands:
+//!   report   <table1|table2|table3|table4|table5|fig2|fig14|fig15|fig16|all>
+//!   simulate --network <vgg16|resnet50|yolov3|mobilenetv1|mobilenetv2|smallcnn>
+//!            [--no-compress] [--layers N] [--seed S]
+//!   calibrate --network N [--floor SNR_DB] [--seed S] [--json]
+//!   compress-demo [--seed S] [--level L]
+//!   serve    --requests N [--no-compress] [--artifacts DIR]
+//!   selftest [--artifacts DIR]
+
+use fmc_accel::bench_util::{pct, Table};
+use fmc_accel::cli::Args;
+use fmc_accel::compress::{codec, qtable::qtable};
+use fmc_accel::config::AccelConfig;
+use fmc_accel::coordinator::{InferenceServer, ServerConfig};
+use fmc_accel::data;
+use fmc_accel::harness::{figs, profiles, tables};
+use fmc_accel::runtime::{default_artifacts_dir, Runtime};
+use fmc_accel::sim::Accelerator;
+use fmc_accel::util::human_bytes;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("report") => report(&args),
+        Some("simulate") => simulate(&args),
+        Some("calibrate") => calibrate_cmd(&args),
+        Some("compress-demo") => compress_demo(&args),
+        Some("serve") => serve(&args),
+        Some("selftest") => selftest(&args),
+        _ => {
+            eprintln!(
+                "usage: fmc-accel <report|simulate|calibrate|compress-demo|serve|selftest> [options]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn report(args: &Args) -> i32 {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let seed = args.opt_usize("seed", 42) as u64;
+    let cfg = AccelConfig::default();
+    let all = what == "all";
+    if all || what == "table1" {
+        println!("\n== Table I: hardware specifications ==");
+        tables::table1(&cfg).print();
+    }
+    if all || what == "table2" {
+        println!("\n== Table II: external memory access saved ==");
+        tables::table2_table(&tables::table2(&cfg, seed)).print();
+    }
+    if all || what == "table3" {
+        println!("\n== Table III: layer-by-layer compression ratio ==");
+        tables::table3_table(&tables::table3(seed)).print();
+    }
+    if all || what == "table4" {
+        println!("\n== Table IV: vs DAC'20 STC-like baseline ==");
+        let mut t = Table::new(&["Network", "STC-like", "This work"]);
+        for r in tables::table4(seed) {
+            t.row(&[r.network, pct(r.stc), pct(r.ours)]);
+        }
+        t.print();
+    }
+    if all || what == "table5" {
+        println!("\n== Table V: vs other accelerators ==");
+        tables::table5_table(&tables::table5(&cfg, seed)).print();
+        println!("\n-- baseline codecs on the same maps --");
+        tables::baseline_comparison(seed).print();
+    }
+    if all || what == "fig2" {
+        println!("\n== Fig 2 motivation: spectrum vs depth ==");
+        figs::fig2_spectrum(seed).print();
+    }
+    if all || what == "fig14" {
+        println!("\n== Fig 14: area breakdown ==");
+        figs::fig14(&cfg).print();
+    }
+    if all || what == "fig15" {
+        println!("\n== Fig 15: power breakdown (VGG-16-BN) ==");
+        figs::fig15(&cfg, seed).print();
+    }
+    if all || what == "fig16" {
+        println!("\n== Fig 16: original vs compressed layer sizes ==");
+        for s in figs::fig16(seed) {
+            println!("\n--- {} ---", s.network);
+            figs::fig16_table(&s).print();
+        }
+    }
+    0
+}
+
+fn simulate(args: &Args) -> i32 {
+    let name = args.opt_or("network", "vgg16");
+    let Some(net) = tables::network_by_name(name) else {
+        eprintln!("unknown network {name:?}");
+        return 2;
+    };
+    let n_comp = args.opt_usize("layers", 10);
+    let seed = args.opt_usize("seed", 42) as u64;
+    let net = if args.flag("no-compress") {
+        net
+    } else {
+        net.with_default_schedule(n_comp)
+    };
+    let prof = profiles::profile_network(&net, seed);
+    let accel = Accelerator::new(AccelConfig::default());
+    let rep = accel.run(&net, &profiles::to_sim_profiles(&prof));
+    println!("network: {}  ({} fusion layers)", rep.network,
+             rep.layers.len());
+    let mut t = Table::new(&[
+        "Layer", "Cycles", "PE util", "Out raw", "Out stored",
+        "DRAM fmap",
+    ]);
+    for l in &rep.layers {
+        t.row(&[
+            l.name.clone(),
+            l.cycles.to_string(),
+            format!("{:.0}%", l.pe_utilization * 100.0),
+            human_bytes(l.out_raw_bytes),
+            human_bytes(l.out_stored_bytes),
+            human_bytes(l.dram_fmap_bytes),
+        ]);
+    }
+    t.print();
+    println!();
+    println!("cycles          : {}", rep.stats.cycles);
+    println!("runtime         : {:.2} ms", rep.runtime_secs() * 1e3);
+    println!("fps             : {:.2}", rep.fps());
+    println!("achieved GOPS   : {:.1} (peak {:.1})", rep.gops(),
+             accel.cfg.peak_gops());
+    println!("PE utilization  : {:.1}%",
+             rep.stats.pe_utilization() * 100.0);
+    println!("DRAM fmap       : {}",
+             human_bytes(rep.dram_fmap_bytes()));
+    println!("DRAM weights    : {}",
+             human_bytes(rep.dma.weight_bytes));
+    println!("core power      : {:.1} mW",
+             rep.core_power_w() * 1e3);
+    println!("efficiency      : {:.2} TOPS/W", rep.tops_per_w());
+    println!("DCT energy share: {:.1}%",
+             rep.energy.dct_fraction() * 100.0);
+    0
+}
+
+fn calibrate_cmd(args: &Args) -> i32 {
+    use fmc_accel::harness::calibrate::{
+        apply_calibration, calibrate_network, calibrated_mean_snr,
+        calibrated_overall,
+    };
+    use fmc_accel::util::json::Json;
+    use std::collections::BTreeMap;
+
+    let name = args.opt_or("network", "vgg16");
+    let Some(net) = tables::network_by_name(name) else {
+        eprintln!("unknown network {name:?}");
+        return 2;
+    };
+    let floor = args.opt_f64("floor", 15.0);
+    let seed = args.opt_usize("seed", 42) as u64;
+    let cal = calibrate_network(&net, floor, seed);
+    if args.flag("json") {
+        // machine-readable schedule (consumable by external tooling)
+        let layers: Vec<Json> = cal
+            .iter()
+            .map(|c| {
+                let mut o = BTreeMap::new();
+                o.insert("layer".into(), Json::Str(c.layer.clone()));
+                o.insert(
+                    "level".into(),
+                    if c.compress {
+                        Json::Num(c.chosen as f64)
+                    } else {
+                        Json::Null
+                    },
+                );
+                o.insert(
+                    "snr_db".into(),
+                    Json::Arr(
+                        c.snr_db.iter().map(|&v| Json::Num(v)).collect(),
+                    ),
+                );
+                o.insert(
+                    "ratio".into(),
+                    Json::Arr(
+                        c.ratio.iter().map(|&v| Json::Num(v)).collect(),
+                    ),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("network".into(), Json::Str(net.name.clone()));
+        top.insert("snr_floor_db".into(), Json::Num(floor));
+        top.insert(
+            "overall_ratio".into(),
+            Json::Num(calibrated_overall(&net, &cal)),
+        );
+        top.insert("layers".into(), Json::Arr(layers));
+        println!("{}", Json::Obj(top));
+        return 0;
+    }
+    println!(
+        "calibration of {} at SNR floor {floor:.1} dB (seed {seed})",
+        net.name
+    );
+    let mut t = Table::new(&[
+        "Layer", "SNR@L0", "SNR@L3", "chosen", "ratio",
+    ]);
+    for c in &cal {
+        t.row(&[
+            c.layer.clone(),
+            format!("{:.1}", c.snr_db[0]),
+            format!("{:.1}", c.snr_db[3]),
+            if c.compress {
+                format!("L{}", c.chosen)
+            } else {
+                "bypass".into()
+            },
+            pct(c.ratio[c.chosen]),
+        ]);
+    }
+    t.print();
+    println!(
+        "\noverall ratio {} | mean SNR {:.1} dB",
+        pct(calibrated_overall(&net, &cal)),
+        calibrated_mean_snr(&cal)
+    );
+    let _ = apply_calibration(net, &cal); // schedule usable downstream
+    0
+}
+
+fn compress_demo(args: &Args) -> i32 {
+    let seed = args.opt_usize("seed", 1) as u64;
+    let level = args.opt_usize("level", 1);
+    println!("codec demo: 8-channel 64x64 natural-statistics map,");
+    println!("Q-level {level} (0 = most aggressive)\n");
+    let fmap = data::natural_image(
+        seed, 8, 64, 64, data::Smoothness::Natural, true,
+    );
+    let cf = codec::compress(&fmap, &qtable(level));
+    let rec = codec::decompress(&cf);
+    let snr = {
+        let mut sig = 0f64;
+        let mut err = 0f64;
+        for (a, b) in fmap.data.iter().zip(rec.data.iter()) {
+            sig += (*a as f64).powi(2);
+            err += ((a - b) as f64).powi(2);
+        }
+        10.0 * (sig / err.max(1e-30)).log10()
+    };
+    println!("original   : {}", human_bytes(cf.original_bits() / 8));
+    println!("compressed : {}", human_bytes(cf.compressed_bits() / 8));
+    println!("ratio      : {}", pct(cf.compression_ratio()));
+    println!("non-zeros  : {} / {}", cf.nnz(), cf.blocks.len() * 64);
+    println!("SNR        : {snr:.1} dB");
+    0
+}
+
+fn serve(args: &Args) -> i32 {
+    let n = args.opt_usize("requests", 64);
+    let dir = args
+        .opt("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(default_artifacts_dir);
+    let mut cfg = ServerConfig::new(dir);
+    cfg.compressed = !args.flag("no-compress");
+    let server = match InferenceServer::start(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: {e:#}");
+            return 1;
+        }
+    };
+    let images = data::shapes_batch(7, n, 32);
+    let mut correct = 0usize;
+    let rxs: Vec<_> = images
+        .iter()
+        .map(|(img, _)| server.submit(img.clone()))
+        .collect();
+    for ((_, label), rx) in images.iter().zip(rxs) {
+        match rx.recv() {
+            Ok(resp) => {
+                if resp.class == *label {
+                    correct += 1;
+                }
+            }
+            Err(_) => {
+                eprintln!("response channel closed");
+                return 1;
+            }
+        }
+    }
+    let metrics = server.shutdown();
+    println!("requests  : {}", metrics.requests);
+    println!("batches   : {}", metrics.batches);
+    println!("accuracy  : {:.1}%", correct as f64 / n as f64 * 100.0);
+    println!("mean lat  : {:.2} ms", metrics.mean_latency_us() / 1e3);
+    println!("p99 lat   : {:.2} ms",
+             metrics.quantile_us(0.99) as f64 / 1e3);
+    if metrics.errors > 0 {
+        eprintln!("errors    : {}", metrics.errors);
+        return 1;
+    }
+    0
+}
+
+fn selftest(args: &Args) -> i32 {
+    let dir = args
+        .opt("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(default_artifacts_dir);
+    let mut rt = match Runtime::open(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("selftest: {e:#}");
+            return 1;
+        }
+    };
+    println!("platform: {}", rt.platform());
+    // 1. codec kernel roundtrip through PJRT vs rust codec
+    let mut blocks = vec![0f32; 4 * 64];
+    let mut p = fmc_accel::testutil::Prng::new(9);
+    p.fill_normal(&mut blocks, 1.0);
+    let qt = qtable(1);
+    let (q2, mn, mx) = match rt.dct_compress(&blocks, &qt) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("dct_compress: {e:#}");
+            return 1;
+        }
+    };
+    // rust-side comparison. XLA's einsum accumulates f32 in a
+    // different order than the rust loops, so a coefficient sitting
+    // exactly on a rounding boundary may differ by one code — allow
+    // |diff| <= 1 with the overwhelming majority exact.
+    use fmc_accel::compress::{dct, quant};
+    let mut exact = 0usize;
+    for b in 0..4 {
+        let blk: [f32; 64] =
+            blocks[b * 64..(b + 1) * 64].try_into().unwrap();
+        let freq = dct::dct2d(&blk);
+        let (q1, hdr) = quant::gemm_quantize(&freq);
+        let want = quant::qtable_quantize(&q1, &qt, &hdr);
+        for i in 0..64 {
+            let got = q2[b * 64 + i];
+            let diff = (got - want[i] as f32).abs();
+            if diff > 1.0 {
+                eprintln!(
+                    "PJRT vs rust q2 mismatch at block {b} idx {i}: {got} vs {}",
+                    want[i]
+                );
+                return 1;
+            }
+            if diff == 0.0 {
+                exact += 1;
+            }
+        }
+        if (mn[b] - hdr.fmin).abs() > 1e-4
+            || (mx[b] - hdr.fmax).abs() > 1e-4
+        {
+            eprintln!("header mismatch at block {b}");
+            return 1;
+        }
+    }
+    if exact < 4 * 64 * 9 / 10 {
+        eprintln!("too many boundary diffs: {exact}/256 exact");
+        return 1;
+    }
+    println!(
+        "dct_compress: PJRT == rust codec ({exact}/256 exact, rest ±1)"
+    );
+    let rec = rt.dct_decompress(&q2, &mn, &mx, &qt).unwrap();
+    let mut max_err = 0f32;
+    for (a, b) in rec.iter().zip(blocks.iter()) {
+        max_err = max_err.max((a - b).abs());
+    }
+    println!("decompress roundtrip max err: {max_err:.4}");
+    // 2. classify a labelled batch
+    let batch = data::shapes_batch(3, 4, 32);
+    let images: Vec<_> =
+        batch.iter().map(|(i, _)| i.clone()).collect();
+    match rt.classify(&images, true) {
+        Ok(res) => {
+            let correct = res
+                .iter()
+                .zip(batch.iter())
+                .filter(|((c, _), (_, l))| c == l)
+                .count();
+            println!(
+                "classify (compressed model): {correct}/4 correct"
+            );
+        }
+        Err(e) => {
+            eprintln!("classify: {e:#}");
+            return 1;
+        }
+    }
+    println!("selftest OK");
+    0
+}

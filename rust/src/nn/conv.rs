@@ -1,0 +1,185 @@
+//! Reference convolutions (paper Eq. 1): cross-correlation, zero
+//! padding, stride 1 or 2, kernels 1×1–7×7, plus depthwise.
+//!
+//! This is the *functional* golden model; the cycle behaviour of the
+//! same computation lives in [`crate::sim::pe_array`].
+
+use super::tensor::{Tensor3, Weights};
+
+/// Output spatial size for one dimension.
+#[inline]
+pub fn out_dim(n: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (n + 2 * pad - k) / stride + 1
+}
+
+/// Dense 2-D convolution: (Cin,H,W) ⊛ (Cout,Cin,K,K) → (Cout,H',W').
+pub fn conv2d(x: &Tensor3, w: &Weights, stride: usize, pad: usize)
+              -> Tensor3 {
+    assert_eq!(x.c, w.cin, "channel mismatch");
+    assert!(stride == 1 || stride == 2, "stride 1 or 2 only");
+    let ho = out_dim(x.h, w.k, stride, pad);
+    let wo = out_dim(x.w, w.k, stride, pad);
+    let mut out = Tensor3::zeros(w.cout, ho, wo);
+    for co in 0..w.cout {
+        for r in 0..ho {
+            for cc in 0..wo {
+                let mut acc = 0f32;
+                for ci in 0..w.cin {
+                    for kr in 0..w.k {
+                        for kc in 0..w.k {
+                            let ir = (r * stride + kr) as isize
+                                - pad as isize;
+                            let ic = (cc * stride + kc) as isize
+                                - pad as isize;
+                            acc += x.get_padded(ci, ir, ic)
+                                * w.get(co, ci, kr, kc);
+                        }
+                    }
+                }
+                out.set(co, r, cc, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Depthwise convolution: (C,H,W) ⊛ (C,K,K) → (C,H',W'); weights laid
+/// out as a `Weights` with cout == C, cin == 1.
+pub fn dwconv2d(x: &Tensor3, w: &Weights, stride: usize, pad: usize)
+                -> Tensor3 {
+    assert_eq!(w.cin, 1, "depthwise weights are (C,1,K,K)");
+    assert_eq!(x.c, w.cout, "channel mismatch");
+    let ho = out_dim(x.h, w.k, stride, pad);
+    let wo = out_dim(x.w, w.k, stride, pad);
+    let mut out = Tensor3::zeros(x.c, ho, wo);
+    for ch in 0..x.c {
+        for r in 0..ho {
+            for cc in 0..wo {
+                let mut acc = 0f32;
+                for kr in 0..w.k {
+                    for kc in 0..w.k {
+                        let ir =
+                            (r * stride + kr) as isize - pad as isize;
+                        let ic =
+                            (cc * stride + kc) as isize - pad as isize;
+                        acc += x.get_padded(ch, ir, ic)
+                            * w.get(ch, 0, kr, kc);
+                    }
+                }
+                out.set(ch, r, cc, acc);
+            }
+        }
+    }
+    out
+}
+
+/// MAC count of a dense convolution layer (for GOPS accounting; one
+/// MAC = 2 ops as in the paper's GOPS convention).
+pub fn conv_macs(cin: usize, cout: usize, ho: usize, wo: usize, k: usize)
+                 -> u64 {
+    cin as u64 * cout as u64 * ho as u64 * wo as u64 * (k * k) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check_prop, Prng};
+
+    fn rand_tensor(p: &mut Prng, c: usize, h: usize, w: usize) -> Tensor3 {
+        let mut t = Tensor3::zeros(c, h, w);
+        p.fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    fn rand_weights(p: &mut Prng, co: usize, ci: usize, k: usize)
+                    -> Weights {
+        let mut w = Weights::zeros(co, ci, k);
+        p.fill_normal(&mut w.data, 1.0);
+        w
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        let mut p = Prng::new(1);
+        let x = rand_tensor(&mut p, 2, 6, 6);
+        let mut w = Weights::zeros(2, 2, 3);
+        w.set(0, 0, 1, 1, 1.0);
+        w.set(1, 1, 1, 1, 1.0);
+        let y = conv2d(&x, &w, 1, 1);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn shapes_stride2() {
+        let mut p = Prng::new(2);
+        let x = rand_tensor(&mut p, 3, 17, 19);
+        let w = rand_weights(&mut p, 5, 3, 3);
+        let y = conv2d(&x, &w, 2, 1);
+        assert_eq!((y.c, y.h, y.w), (5, 9, 10));
+    }
+
+    #[test]
+    fn conv_1x1_is_channel_mix() {
+        let mut p = Prng::new(3);
+        let x = rand_tensor(&mut p, 3, 4, 4);
+        let w = rand_weights(&mut p, 2, 3, 1);
+        let y = conv2d(&x, &w, 1, 0);
+        // check one pixel by hand
+        let want: f32 = (0..3)
+            .map(|ci| x.get(ci, 2, 3) * w.get(1, ci, 0, 0))
+            .sum();
+        assert!((y.get(1, 2, 3) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conv_7x7_shape() {
+        let mut p = Prng::new(4);
+        let x = rand_tensor(&mut p, 1, 16, 16);
+        let w = rand_weights(&mut p, 2, 1, 7);
+        let y = conv2d(&x, &w, 1, 3);
+        assert_eq!((y.c, y.h, y.w), (2, 16, 16));
+    }
+
+    #[test]
+    fn linearity_property() {
+        // conv(a*x) == a*conv(x) — catches accumulation bugs.
+        check_prop("conv linearity", 10, |p| {
+            let x = rand_tensor(p, 2, 8, 8);
+            let w = rand_weights(p, 3, 2, 3);
+            let a = p.range(0.5, 2.0) as f32;
+            let mut xa = x.clone();
+            for v in xa.data.iter_mut() {
+                *v *= a;
+            }
+            let y1 = conv2d(&xa, &w, 1, 1);
+            let y0 = conv2d(&x, &w, 1, 1);
+            for (v1, v0) in y1.data.iter().zip(y0.data.iter()) {
+                assert!((v1 - a * v0).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn depthwise_independent_channels() {
+        let mut p = Prng::new(5);
+        let x = rand_tensor(&mut p, 3, 8, 8);
+        let w = rand_weights(&mut p, 3, 1, 3);
+        let y = dwconv2d(&x, &w, 1, 1);
+        // zeroing channel 1's input only changes channel 1's output
+        let mut x2 = x.clone();
+        for r in 0..8 {
+            for c in 0..8 {
+                x2.set(1, r, c, 0.0);
+            }
+        }
+        let y2 = dwconv2d(&x2, &w, 1, 1);
+        assert_eq!(y.channel(0), y2.channel(0));
+        assert_eq!(y.channel(2), y2.channel(2));
+        assert!(y2.channel(1).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mac_count() {
+        assert_eq!(conv_macs(3, 8, 16, 16, 3), 3 * 8 * 256 * 9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Golden functional model of the CNN operators the accelerator
+//! executes (paper Table I "Supported CNN operations"): convolution
+//! (1×1–7×7, stride 1/2), depthwise convolution, BN, the ReLU family,
+//! and pooling. The simulator verifies its datapath against these, and
+//! the coordinator uses them as the software fallback when PJRT
+//! artifacts are not available for a layer shape.
+
+pub mod conv;
+pub mod ops;
+pub mod tensor;
+
+pub use conv::{conv2d, dwconv2d};
+pub use ops::{activate, avg_pool2x2, batch_norm, max_pool2x2, Activation};
+pub use tensor::{Tensor3, Weights};

@@ -1,0 +1,168 @@
+//! Non-convolutional operators of the accelerator's non-linear module
+//! (paper §V-C): batch norm (folded inference form), the ReLU family,
+//! and 2×2 pooling.
+
+use super::tensor::Tensor3;
+
+/// Activation functions supported by the non-linear module (Table I).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Activation {
+    None,
+    Relu,
+    /// Fixed 0.1 negative slope.
+    LeakyRelu,
+    /// Learnable negative slope ("Program ReLU" in Table I).
+    PRelu(f32),
+}
+
+/// Apply an activation in place.
+pub fn activate(x: &mut Tensor3, act: Activation) {
+    match act {
+        Activation::None => {}
+        Activation::Relu => {
+            for v in x.data.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        Activation::LeakyRelu => {
+            for v in x.data.iter_mut() {
+                if *v < 0.0 {
+                    *v *= 0.1;
+                }
+            }
+        }
+        Activation::PRelu(a) => {
+            for v in x.data.iter_mut() {
+                if *v < 0.0 {
+                    *v *= a;
+                }
+            }
+        }
+    }
+}
+
+/// Inference batch norm with folded (scale, bias) per channel:
+/// `y = x * scale[c] + bias[c]` (the coefficients are extracted during
+/// training and shipped with the weights — paper §V-C).
+pub fn batch_norm(x: &mut Tensor3, scale: &[f32], bias: &[f32]) {
+    assert_eq!(scale.len(), x.c);
+    assert_eq!(bias.len(), x.c);
+    let hw = x.h * x.w;
+    for ch in 0..x.c {
+        let (s, b) = (scale[ch], bias[ch]);
+        for v in x.data[ch * hw..(ch + 1) * hw].iter_mut() {
+            *v = *v * s + b;
+        }
+    }
+}
+
+/// 2×2/stride-2 max pooling; odd trailing rows/cols are dropped
+/// (floor semantics, matching the descriptor geometry).
+pub fn max_pool2x2(x: &Tensor3) -> Tensor3 {
+    pool2x2(x, true)
+}
+
+/// 2×2/stride-2 average pooling.
+pub fn avg_pool2x2(x: &Tensor3) -> Tensor3 {
+    pool2x2(x, false)
+}
+
+fn pool2x2(x: &Tensor3, max: bool) -> Tensor3 {
+    let ho = x.h / 2;
+    let wo = x.w / 2;
+    let mut out = Tensor3::zeros(x.c, ho, wo);
+    for ch in 0..x.c {
+        for r in 0..ho {
+            for c in 0..wo {
+                let a = x.get(ch, 2 * r, 2 * c);
+                let b = x.get(ch, 2 * r, 2 * c + 1);
+                let d = x.get(ch, 2 * r + 1, 2 * c);
+                let e = x.get(ch, 2 * r + 1, 2 * c + 1);
+                let v = if max {
+                    a.max(b).max(d).max(e)
+                } else {
+                    (a + b + d + e) * 0.25
+                };
+                out.set(ch, r, c, v);
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool: (C,H,W) → per-channel means.
+pub fn global_avg_pool(x: &Tensor3) -> Vec<f32> {
+    let hw = (x.h * x.w) as f32;
+    (0..x.c)
+        .map(|ch| x.channel(ch).iter().sum::<f32>() / hw)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_tensor() -> Tensor3 {
+        Tensor3::from_vec(
+            1,
+            4,
+            4,
+            (0..16).map(|i| i as f32 - 8.0).collect(),
+        )
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut t = seq_tensor();
+        activate(&mut t, Activation::Relu);
+        assert!(t.data.iter().all(|&v| v >= 0.0));
+        assert_eq!(t.get(0, 3, 3), 7.0);
+    }
+
+    #[test]
+    fn leaky_and_prelu_slopes() {
+        let mut a = Tensor3::from_vec(1, 1, 2, vec![-10.0, 4.0]);
+        activate(&mut a, Activation::LeakyRelu);
+        assert_eq!(a.data, vec![-1.0, 4.0]);
+        let mut b = Tensor3::from_vec(1, 1, 2, vec![-10.0, 4.0]);
+        activate(&mut b, Activation::PRelu(0.5));
+        assert_eq!(b.data, vec![-5.0, 4.0]);
+    }
+
+    #[test]
+    fn bn_per_channel() {
+        let mut t = Tensor3::from_vec(2, 1, 2, vec![1., 2., 3., 4.]);
+        batch_norm(&mut t, &[2.0, 10.0], &[0.5, -1.0]);
+        assert_eq!(t.data, vec![2.5, 4.5, 29.0, 39.0]);
+    }
+
+    #[test]
+    fn max_pool_values() {
+        let t = seq_tensor();
+        let y = max_pool2x2(&t);
+        assert_eq!((y.h, y.w), (2, 2));
+        assert_eq!(y.data, vec![-3.0, -1.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn avg_pool_values() {
+        let t = seq_tensor();
+        let y = avg_pool2x2(&t);
+        assert_eq!(y.data, vec![-5.5, -3.5, 2.5, 4.5]);
+    }
+
+    #[test]
+    fn pool_drops_odd_edge() {
+        let t = Tensor3::zeros(1, 5, 7);
+        let y = max_pool2x2(&t);
+        assert_eq!((y.h, y.w), (2, 3));
+    }
+
+    #[test]
+    fn gap_means() {
+        let t = Tensor3::from_vec(2, 1, 2, vec![1., 3., 10., 20.]);
+        assert_eq!(global_avg_pool(&t), vec![2.0, 15.0]);
+    }
+}

@@ -1,0 +1,168 @@
+//! Minimal CHW tensor used across the codec, simulator and NN ops.
+
+/// A dense (C, H, W) f32 tensor, row-major within each channel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor3 {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor3 {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Tensor3 {
+            c,
+            h,
+            w,
+            data: vec![0f32; c * h * w],
+        }
+    }
+
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), c * h * w, "shape/data mismatch");
+        Tensor3 { c, h, w, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, ch: usize, r: usize, col: usize) -> usize {
+        debug_assert!(ch < self.c && r < self.h && col < self.w);
+        (ch * self.h + r) * self.w + col
+    }
+
+    #[inline]
+    pub fn get(&self, ch: usize, r: usize, col: usize) -> f32 {
+        self.data[self.idx(ch, r, col)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, ch: usize, r: usize, col: usize, v: f32) {
+        let i = self.idx(ch, r, col);
+        self.data[i] = v;
+    }
+
+    /// Zero-padded read (used by convolution).
+    #[inline]
+    pub fn get_padded(&self, ch: usize, r: isize, col: isize) -> f32 {
+        if r < 0
+            || col < 0
+            || r as usize >= self.h
+            || col as usize >= self.w
+        {
+            0.0
+        } else {
+            self.get(ch, r as usize, col as usize)
+        }
+    }
+
+    /// One channel as a slice.
+    pub fn channel(&self, ch: usize) -> &[f32] {
+        &self.data[ch * self.h * self.w..(ch + 1) * self.h * self.w]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Max |x| over the tensor.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// Mean squared error against another tensor of the same shape.
+    pub fn mse(&self, other: &Tensor3) -> f64 {
+        assert_eq!(
+            (self.c, self.h, self.w),
+            (other.c, other.h, other.w)
+        );
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+}
+
+/// Weights of one convolution: (Cout, Cin, K, K), row-major.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub cout: usize,
+    pub cin: usize,
+    pub k: usize,
+    pub data: Vec<f32>,
+}
+
+impl Weights {
+    pub fn zeros(cout: usize, cin: usize, k: usize) -> Self {
+        Weights {
+            cout,
+            cin,
+            k,
+            data: vec![0f32; cout * cin * k * k],
+        }
+    }
+
+    pub fn from_vec(cout: usize, cin: usize, k: usize,
+                    data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), cout * cin * k * k);
+        Weights { cout, cin, k, data }
+    }
+
+    #[inline]
+    pub fn get(&self, co: usize, ci: usize, kr: usize, kc: usize) -> f32 {
+        self.data[((co * self.cin + ci) * self.k + kr) * self.k + kc]
+    }
+
+    #[inline]
+    pub fn set(&mut self, co: usize, ci: usize, kr: usize, kc: usize,
+               v: f32) {
+        let i = ((co * self.cin + ci) * self.k + kr) * self.k + kc;
+        self.data[i] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_layout() {
+        let mut t = Tensor3::zeros(2, 3, 4);
+        t.set(1, 2, 3, 7.0);
+        assert_eq!(t.data[(1 * 3 + 2) * 4 + 3], 7.0);
+        assert_eq!(t.get(1, 2, 3), 7.0);
+    }
+
+    #[test]
+    fn padded_reads() {
+        let mut t = Tensor3::zeros(1, 2, 2);
+        t.set(0, 0, 0, 5.0);
+        assert_eq!(t.get_padded(0, -1, 0), 0.0);
+        assert_eq!(t.get_padded(0, 0, 2), 0.0);
+        assert_eq!(t.get_padded(0, 0, 0), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_checks_shape() {
+        Tensor3::from_vec(1, 2, 2, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let t = Tensor3::from_vec(1, 1, 3, vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.mse(&t), 0.0);
+    }
+
+    #[test]
+    fn weights_layout() {
+        let mut w = Weights::zeros(2, 3, 3);
+        w.set(1, 2, 0, 1, 4.0);
+        assert_eq!(w.get(1, 2, 0, 1), 4.0);
+    }
+}

@@ -1,0 +1,381 @@
+//! Whole-accelerator simulation: execute a lowered program and produce
+//! per-layer + whole-run reports (cycles, traffic, energy, utilization)
+//! — the numbers behind Tables I/II/V and Figs 14/15.
+
+use crate::config::{AccelConfig, Network};
+use crate::sim::dct_unit;
+use crate::sim::dma::DmaTraffic;
+use crate::sim::energy::EnergyBreakdown;
+use crate::sim::isa::Instr;
+use crate::sim::pe_array;
+use crate::sim::scheduler::{self, CompressionProfile};
+use crate::sim::stats::Stats;
+
+/// Per-layer simulation result.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    pub cycles: u64,
+    pub conv_cycles: u64,
+    pub dct_cycles: u64,
+    pub idct_cycles: u64,
+    pub stall_cycles: u64,
+    pub macs: u64,
+    pub pe_utilization: f64,
+    pub out_raw_bytes: u64,
+    pub out_stored_bytes: u64,
+    pub dram_fmap_bytes: u64,
+    pub dram_weight_bytes: u64,
+}
+
+/// Whole-run result.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub network: String,
+    pub layers: Vec<LayerReport>,
+    pub stats: Stats,
+    pub dma: DmaTraffic,
+    pub energy: EnergyBreakdown,
+    pub clock_hz: f64,
+}
+
+impl RunReport {
+    /// Wall-clock seconds of one inference.
+    pub fn runtime_secs(&self) -> f64 {
+        self.stats.cycles as f64 / self.clock_hz
+    }
+
+    /// Frames per second.
+    pub fn fps(&self) -> f64 {
+        1.0 / self.runtime_secs()
+    }
+
+    /// Achieved GOPS.
+    pub fn gops(&self) -> f64 {
+        self.stats.gops(self.clock_hz)
+    }
+
+    /// Mean core dynamic power (W).
+    pub fn core_power_w(&self) -> f64 {
+        self.energy.mean_power_w(self.runtime_secs())
+    }
+
+    /// Core energy efficiency in TOPS/W.
+    pub fn tops_per_w(&self) -> f64 {
+        let p = self.core_power_w();
+        if p == 0.0 {
+            0.0
+        } else {
+            self.gops() / 1000.0 / p
+        }
+    }
+
+    /// Total DRAM feature-map traffic (bytes).
+    pub fn dram_fmap_bytes(&self) -> u64 {
+        self.dma.fmap_bytes
+    }
+}
+
+/// The simulated accelerator.
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub cfg: AccelConfig,
+}
+
+impl Accelerator {
+    pub fn new(cfg: AccelConfig) -> Self {
+        Accelerator { cfg }
+    }
+
+    /// Simulate one inference of `net`. `profiles[i]` describes layer
+    /// i's output compression (None = raw storage).
+    pub fn run(&self, net: &Network,
+               profiles: &[Option<CompressionProfile>]) -> RunReport {
+        let (plans, queue) = scheduler::lower(&self.cfg, net, profiles);
+        let mut stats = Stats::new();
+        let mut dma = DmaTraffic::default();
+        let mut layers = Vec::with_capacity(net.layers.len());
+
+        // Walk the program layer by layer (instructions between
+        // SwapBuffers belong to one layer).
+        let mut plan_iter = plans.iter();
+        let mut cur = plan_iter.next();
+        let mut conv_c = 0u64;
+        let mut dct_c = 0u64;
+        let mut idct_c = 0u64;
+        let mut layer_macs = 0u64;
+        let mut layer_slots = 0u64;
+        let mut li = 0usize;
+        for instr in queue.instrs.iter() {
+            match instr {
+                Instr::Cfg(_) => {}
+                Instr::LoadWeights { bytes } => {
+                    dma.add_weights(*bytes);
+                    stats.dram_weight_bits += bytes * 8;
+                }
+                Instr::LoadFmap { bytes, .. } => {
+                    dma.add_fmap(*bytes);
+                    stats.dram_fmap_bits += bytes * 8;
+                }
+                Instr::Decompress {
+                    blocks,
+                    nnz_density,
+                } => {
+                    let t = dct_unit::idct_timing(
+                        &self.cfg,
+                        *blocks,
+                        *nnz_density,
+                    );
+                    idct_c = t.cycles;
+                    stats.idct_ccm_ops += t.ccm_ops;
+                    stats.idct_gated_ops += t.gated_ops;
+                }
+                Instr::Conv {
+                    cin,
+                    cout,
+                    h_out,
+                    w_out,
+                    kernel,
+                    stride,
+                    depthwise,
+                    ..
+                } => {
+                    let t = pe_array::conv_cycles(
+                        &self.cfg, *cin, *cout, *h_out, *w_out,
+                        *kernel, *stride, *depthwise,
+                    );
+                    conv_c = t.cycles;
+                    layer_macs = t.macs;
+                    layer_slots = t.mac_slots;
+                    // SRAM traffic of the conv dataflow: the stored
+                    // input is re-read once per filter group; psums
+                    // round-trip the scratch pad once per cin group.
+                    if let Some(p) = cur {
+                        stats.sram_read_bits += p.in_stored_bytes
+                            * 8
+                            * p.filter_groups;
+                        let cin_groups = (*cin as u64)
+                            .div_ceil(self.cfg.parallel_cin as u64);
+                        let psum_bits = (*cout * *h_out * *w_out)
+                            as u64
+                            * 16;
+                        stats.sram_write_bits +=
+                            psum_bits * cin_groups;
+                        stats.sram_read_bits +=
+                            psum_bits * (cin_groups - 1).max(0);
+                    }
+                }
+                Instr::NonLinear { .. } => {
+                    // pipelined behind the scratch-pad drain: no extra
+                    // cycles at this granularity
+                }
+                Instr::StoreFmap {
+                    bytes,
+                    compressed,
+                    blocks,
+                } => {
+                    if *compressed {
+                        let t =
+                            dct_unit::dct_timing(&self.cfg, *blocks);
+                        dct_c = t.cycles;
+                        stats.dct_ccm_ops += t.ccm_ops;
+                    }
+                    stats.sram_write_bits += bytes * 8;
+                }
+                Instr::SpillOut { bytes } => {
+                    dma.add_fmap(*bytes);
+                    stats.dram_fmap_bits += bytes * 8;
+                }
+                Instr::SwapBuffers => {
+                    let plan = cur.expect("plan per layer");
+                    // spilled input re-fetch traffic
+                    let refetch = plan.spill_in_bytes
+                        * plan.filter_groups;
+                    if refetch > 0 {
+                        dma.add_fmap(refetch);
+                        stats.dram_fmap_bits += refetch * 8;
+                    }
+                    // DCT/IDCT pipeline with the PE array; DMA overlaps
+                    // compute. The layer takes the max of the streams.
+                    let dma_cycles = ((plan.spill_in_bytes
+                        * plan.filter_groups
+                        + plan.spill_out_bytes
+                        + plan.weight_bytes)
+                        as f64
+                        / self.cfg.dma_bytes_per_s
+                        * self.cfg.clock_hz)
+                        as u64;
+                    let compute =
+                        conv_c.max(dct_c).max(idct_c);
+                    let cycles = compute.max(dma_cycles);
+                    let stall = cycles - conv_c.min(cycles);
+                    let l = &net.layers[li];
+                    let (oc, oh, ow) = l.out_dims();
+                    layers.push(LayerReport {
+                        name: l.name.clone(),
+                        cycles,
+                        conv_cycles: conv_c,
+                        dct_cycles: dct_c,
+                        idct_cycles: idct_c,
+                        stall_cycles: stall,
+                        macs: layer_macs,
+                        pe_utilization: if layer_slots == 0 {
+                            0.0
+                        } else {
+                            layer_macs as f64 / layer_slots as f64
+                        },
+                        out_raw_bytes: (oc * oh * ow) as u64 * 2,
+                        out_stored_bytes: plan.out_stored_bytes,
+                        dram_fmap_bytes: plan.dram_fmap_bytes(),
+                        dram_weight_bytes: plan.weight_bytes,
+                    });
+                    stats.cycles += cycles;
+                    stats.macs += layer_macs;
+                    stats.mac_slots += layer_slots;
+                    stats.stall_cycles += stall;
+                    // DCT/IDCT modules stay clocked for the whole layer
+                    // when in use; clock-gated otherwise (§VI-A).
+                    if dct_c > 0 {
+                        stats.dct_active_cycles += cycles;
+                    }
+                    if idct_c > 0 {
+                        stats.idct_active_cycles += cycles;
+                    }
+                    conv_c = 0;
+                    dct_c = 0;
+                    idct_c = 0;
+                    layer_macs = 0;
+                    layer_slots = 0;
+                    li += 1;
+                    cur = plan_iter.next();
+                }
+            }
+        }
+        let energy = EnergyBreakdown::compute(&stats);
+        RunReport {
+            network: net.name.clone(),
+            layers,
+            stats,
+            dma,
+            energy,
+            clock_hz: self.cfg.clock_hz,
+        }
+    }
+
+    /// Convenience: run with every layer compressed at a flat profile.
+    pub fn run_flat(&self, net: &Network, profile: Option<CompressionProfile>)
+                    -> RunReport {
+        let profiles: Vec<_> =
+            net.layers.iter().map(|_| profile).collect();
+        self.run(net, &profiles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models;
+
+    fn accel() -> Accelerator {
+        Accelerator::new(AccelConfig::default())
+    }
+
+    fn flat(r: f64) -> Option<CompressionProfile> {
+        Some(CompressionProfile {
+            ratio: r,
+            nnz_density: r,
+        })
+    }
+
+    #[test]
+    fn vgg_runs_and_reports() {
+        let net = models::vgg16_bn();
+        let rep = accel().run_flat(&net, flat(0.3));
+        assert_eq!(rep.layers.len(), 13);
+        assert!(rep.stats.cycles > 0);
+        assert!(rep.gops() > 50.0, "gops {}", rep.gops());
+        assert!(rep.gops() < 403.2);
+    }
+
+    #[test]
+    fn vgg_fps_order_of_magnitude() {
+        // Paper Table V: 10.53 fps on VGG-16. Our linearized chain
+        // should land in the same decade.
+        let net = models::vgg16_bn();
+        let rep = accel().run_flat(&net, flat(0.3));
+        let fps = rep.fps();
+        assert!((4.0..25.0).contains(&fps), "fps {fps}");
+    }
+
+    #[test]
+    fn compression_cuts_dram_traffic() {
+        let net = models::vgg16_bn();
+        let raw = accel().run_flat(&net, None);
+        let comp = accel().run_flat(&net, flat(0.3));
+        assert!(
+            comp.dram_fmap_bytes() * 2 < raw.dram_fmap_bytes(),
+            "comp {} raw {}",
+            comp.dram_fmap_bytes(),
+            raw.dram_fmap_bytes()
+        );
+    }
+
+    #[test]
+    fn compression_does_not_slow_inference_much() {
+        // On-the-fly pipelining: DCT adds <10% cycles on VGG.
+        let net = models::vgg16_bn();
+        let raw = accel().run_flat(&net, None);
+        let comp = accel().run_flat(&net, flat(0.3));
+        // compressed run is *faster or equal* because spill DMA shrinks
+        assert!(
+            comp.stats.cycles
+                <= raw.stats.cycles + raw.stats.cycles / 10,
+            "comp {} raw {}",
+            comp.stats.cycles,
+            raw.stats.cycles
+        );
+    }
+
+    #[test]
+    fn core_power_in_paper_range() {
+        let net = models::vgg16_bn();
+        let rep = accel().run_flat(&net, flat(0.3));
+        let p = rep.core_power_w();
+        // paper: 186.6 mW dynamic
+        assert!((0.10..0.30).contains(&p), "power {p} W");
+    }
+
+    #[test]
+    fn dct_energy_fraction_near_paper() {
+        let net = models::vgg16_bn();
+        let rep = accel().run_flat(&net, flat(0.3));
+        let f = rep.energy.dct_fraction();
+        // paper: 19% of dynamic power
+        assert!((0.08..0.35).contains(&f), "dct fraction {f}");
+    }
+
+    #[test]
+    fn energy_efficiency_order() {
+        let net = models::vgg16_bn();
+        let rep = accel().run_flat(&net, flat(0.3));
+        let e = rep.tops_per_w();
+        // paper: 2.16 TOPS/W
+        assert!((0.8..5.0).contains(&e), "tops/w {e}");
+    }
+
+    #[test]
+    fn mobilenet_runs() {
+        for net in [models::mobilenet_v1(), models::mobilenet_v2()] {
+            let rep = accel().run_flat(&net, flat(0.65));
+            assert!(rep.fps() > 20.0, "{} fps {}", net.name, rep.fps());
+        }
+    }
+
+    #[test]
+    fn per_layer_cycles_sum_to_total() {
+        let net = models::smallcnn();
+        let rep = accel().run_flat(&net, flat(0.4));
+        let sum: u64 = rep.layers.iter().map(|l| l.cycles).sum();
+        assert_eq!(sum, rep.stats.cycles);
+    }
+}

@@ -1,0 +1,163 @@
+//! Reconfigurable buffer bank (paper §V-C, Fig. 11).
+//!
+//! Fixed parts: feature-map buffers A and B (128 KB each, ping-pong),
+//! scratch pad (64 KB), index buffer (32 KB). Two 64 KB configurable
+//! memories (each two 32 KB sub-banks) attach, per layer, to either a
+//! feature-map buffer or the scratch pad:
+//!
+//! * scratch pad: 64 / 128 / 192 KB,
+//! * each fmap buffer: 128 / 160 / 192 KB
+//!
+//! (sub-banks attach in 32 KB steps; the paper quotes the same ranges).
+
+use crate::config::accel::KB;
+use crate::config::AccelConfig;
+
+/// Where each 32 KB sub-bank is attached for one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemConfig {
+    /// Sub-banks (0..=4 in 32 KB units) given to fmap buffer A.
+    pub subbanks_a: usize,
+    /// Sub-banks given to fmap buffer B.
+    pub subbanks_b: usize,
+    /// Sub-banks given to the scratch pad.
+    pub subbanks_scratch: usize,
+}
+
+impl MemConfig {
+    /// All legal configurations (4 sub-banks distributed 3 ways).
+    pub fn enumerate() -> Vec<MemConfig> {
+        let mut v = Vec::new();
+        for a in 0..=4usize {
+            for b in 0..=(4 - a) {
+                v.push(MemConfig {
+                    subbanks_a: a,
+                    subbanks_b: b,
+                    subbanks_scratch: 4 - a - b,
+                });
+            }
+        }
+        v
+    }
+
+    pub fn valid(&self) -> bool {
+        self.subbanks_a + self.subbanks_b + self.subbanks_scratch <= 4
+    }
+}
+
+/// The buffer bank with a chosen configuration.
+#[derive(Debug, Clone)]
+pub struct BufferBank {
+    pub cfg: MemConfig,
+    /// Base sizes from the accelerator config.
+    fmap_base: usize,
+    scratch_base: usize,
+    index_size: usize,
+}
+
+impl BufferBank {
+    pub fn new(accel: &AccelConfig, cfg: MemConfig) -> Self {
+        assert!(cfg.valid(), "over-subscribed sub-banks: {cfg:?}");
+        BufferBank {
+            cfg,
+            fmap_base: accel.fmap_buffer,
+            scratch_base: accel.scratch_base,
+            index_size: accel.index_buffer,
+        }
+    }
+
+    /// Capacity of fmap buffer A (input side of the ping-pong), bytes.
+    pub fn fmap_a(&self) -> usize {
+        self.fmap_base + self.cfg.subbanks_a * 32 * KB
+    }
+
+    /// Capacity of fmap buffer B (output side), bytes.
+    pub fn fmap_b(&self) -> usize {
+        self.fmap_base + self.cfg.subbanks_b * 32 * KB
+    }
+
+    /// Scratch-pad capacity, bytes.
+    pub fn scratch(&self) -> usize {
+        self.scratch_base + self.cfg.subbanks_scratch * 32 * KB
+    }
+
+    /// Index buffer capacity (half per ping-pong side), bytes.
+    pub fn index_half(&self) -> usize {
+        self.index_size / 2
+    }
+
+    /// Does a compressed input of `bytes` (+ its index bits) fit the
+    /// input side?
+    pub fn input_fits(&self, data_bytes: usize, index_bytes: usize)
+                      -> bool {
+        data_bytes <= self.fmap_a() && index_bytes <= self.index_half()
+    }
+
+    /// Does a compressed output fit the output side?
+    pub fn output_fits(&self, data_bytes: usize, index_bytes: usize)
+                       -> bool {
+        data_bytes <= self.fmap_b() && index_bytes <= self.index_half()
+    }
+
+    /// Rows of partial sums the scratch pad can hold for a given tile
+    /// width and filter parallelism (16-bit psums).
+    pub fn psum_rows(&self, w_out: usize, filters: usize) -> usize {
+        self.scratch() / (w_out.max(1) * filters.max(1) * 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bank(a: usize, b: usize, s: usize) -> BufferBank {
+        BufferBank::new(
+            &AccelConfig::default(),
+            MemConfig {
+                subbanks_a: a,
+                subbanks_b: b,
+                subbanks_scratch: s,
+            },
+        )
+    }
+
+    #[test]
+    fn paper_size_ranges() {
+        // scratch 64..192 KB, each fmap 128..192 KB
+        assert_eq!(bank(0, 0, 0).scratch(), 64 * KB);
+        assert_eq!(bank(0, 0, 4).scratch(), 192 * KB);
+        assert_eq!(bank(0, 0, 0).fmap_a(), 128 * KB);
+        assert_eq!(bank(2, 0, 0).fmap_a(), 192 * KB);
+        assert_eq!(bank(0, 2, 0).fmap_b(), 192 * KB);
+    }
+
+    #[test]
+    fn enumerate_covers_all_splits() {
+        let all = MemConfig::enumerate();
+        assert_eq!(all.len(), 15); // C(4+2,2) compositions of <=4 into 3
+        assert!(all.iter().all(|c| c.valid()));
+    }
+
+    #[test]
+    #[should_panic(expected = "over-subscribed")]
+    fn rejects_oversubscription() {
+        bank(3, 2, 0);
+    }
+
+    #[test]
+    fn fits_checks() {
+        let b = bank(0, 0, 4);
+        assert!(b.input_fits(128 * KB, 16 * KB));
+        assert!(!b.input_fits(129 * KB, 16 * KB));
+        assert!(!b.input_fits(64 * KB, 17 * KB));
+    }
+
+    #[test]
+    fn psum_rows_scale_with_scratch() {
+        let small = bank(0, 0, 0).psum_rows(224, 4);
+        let big = bank(0, 0, 4).psum_rows(224, 4);
+        assert_eq!(small, 64 * KB / (224 * 4 * 2));
+        assert_eq!(big, 192 * KB / (224 * 4 * 2));
+        assert!(big >= 3 * small);
+    }
+}

@@ -1,0 +1,76 @@
+//! DMA + off-chip traffic model (paper §IV: two sub-modules moving
+//! feature maps and weights in parallel; Table II: DW-axi-dmac rate,
+//! 70 pJ/bit DRAM energy).
+
+use crate::config::AccelConfig;
+
+/// Accumulated off-chip traffic of one run.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct DmaTraffic {
+    /// Feature-map bytes moved (both directions).
+    pub fmap_bytes: u64,
+    /// Weight bytes moved (DRAM → chip only; weights are read-only).
+    pub weight_bytes: u64,
+}
+
+impl DmaTraffic {
+    pub fn total_bytes(&self) -> u64 {
+        self.fmap_bytes + self.weight_bytes
+    }
+
+    /// Transfer time at the DMA rate. Feature maps and weights move on
+    /// parallel sub-modules (paper §IV), so the time is the max of the
+    /// two streams, not the sum.
+    pub fn transfer_secs(&self, cfg: &AccelConfig) -> f64 {
+        let f = self.fmap_bytes as f64 / cfg.dma_bytes_per_s;
+        let w = self.weight_bytes as f64 / cfg.dma_bytes_per_s;
+        f.max(w)
+    }
+
+    /// DRAM access energy in joules (70 pJ/bit by default).
+    pub fn dram_energy_j(&self, cfg: &AccelConfig) -> f64 {
+        self.total_bytes() as f64 * 8.0 * cfg.dram_pj_per_bit * 1e-12
+    }
+
+    pub fn add_fmap(&mut self, bytes: u64) {
+        self.fmap_bytes += bytes;
+    }
+
+    pub fn add_weights(&mut self, bytes: u64) {
+        self.weight_bytes += bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_streams_take_max() {
+        let cfg = AccelConfig::default();
+        let t = DmaTraffic {
+            fmap_bytes: 3_850_000_000,
+            weight_bytes: 1_000,
+        };
+        assert!((t.transfer_secs(&cfg) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dram_energy_70pj_per_bit() {
+        let cfg = AccelConfig::default();
+        let t = DmaTraffic {
+            fmap_bytes: 1_000_000,
+            weight_bytes: 0,
+        };
+        let j = t.dram_energy_j(&cfg);
+        assert!((j - 1e6 * 8.0 * 70e-12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulation() {
+        let mut t = DmaTraffic::default();
+        t.add_fmap(10);
+        t.add_weights(5);
+        assert_eq!(t.total_bytes(), 15);
+    }
+}

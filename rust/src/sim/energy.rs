@@ -1,0 +1,280 @@
+//! Area / energy model (paper Table I, Figs 13–15, Table V).
+//!
+//! The paper's numbers come from DC synthesis + PrimeTime on TSMC 28 nm
+//! HPC+ at 0.72 V; offline we use an analytic model with per-module
+//! constants *calibrated to the paper's own breakdowns*: 1127 K NAND2
+//! gates excluding SRAM, PE array ≈ 26 % of area, DCT/IDCT ≈ 13 %,
+//! SRAM over half the 1.65×1.3 mm² core, DCT/IDCT ≈ 19 % of the
+//! 186.6 mW dynamic power. Energies follow published 28 nm per-op
+//! surveys (Horowitz ISSCC'14) scaled to 0.72 V.
+
+use crate::config::AccelConfig;
+use crate::sim::stats::Stats;
+
+// --- gate-count constants (NAND2-equivalent) ---------------------------
+
+/// One 16-bit MAC (multiplier + adder + pipeline regs).
+pub const GATES_PER_MAC: u64 = 1020;
+/// One constant-coefficient multiplier (cheaper than a full multiplier
+/// — the paper's motivation for the CCM array).
+pub const GATES_PER_CCM: u64 = 350;
+/// Quantization/encoding/decoding logic around the DCT datapath.
+pub const GATES_DCT_MISC: u64 = 60_000;
+/// Weight decoder + preload FIFO.
+pub const GATES_WEIGHT_DECODER: u64 = 120_000;
+/// Non-linear module (BN/ReLU-family/pool).
+pub const GATES_NONLINEAR: u64 = 90_000;
+/// Buffer manager + data MUXes.
+pub const GATES_BUFFER_MGR: u64 = 160_000;
+/// Top control + instruction queue + registers.
+pub const GATES_CONTROL: u64 = 150_000;
+/// DMA controller (two sub-modules).
+pub const GATES_DMA: u64 = 164_000;
+
+/// NAND2 area at 28 nm (µm²) with routing/utilization overhead.
+pub const UM2_PER_GATE: f64 = 0.49 / 0.7;
+/// SRAM macro density at 28 nm (mm² per Mbit, incl. periphery).
+pub const MM2_PER_MBIT: f64 = 0.28;
+
+// --- per-op dynamic energies (pJ) @ 28 nm, 0.72 V ----------------------
+
+/// One 16-bit MAC.
+pub const PJ_PER_MAC: f64 = 0.42;
+/// Mean toggle energy of one *clocked* CCM per cycle. The DCT/IDCT
+/// modules pipeline alongside the PE array for the whole layer (§V-A),
+/// so their power follows the duty cycle of the module clock, not the
+/// useful-multiply count — this is what makes them 19 % of dynamic
+/// power (Fig. 15) despite doing ~1 % of the MAC work. They are
+/// clock-gated off for uncompressed layers.
+pub const PJ_PER_CCM_CYCLE: f64 = 0.22;
+/// Extra energy of a useful CCM multiply above idle toggle.
+pub const PJ_PER_CCM_OP: f64 = 0.10;
+/// On-chip SRAM access per bit.
+pub const PJ_PER_SRAM_BIT: f64 = 0.08;
+/// Control/clock-tree overhead per active cycle.
+pub const PJ_CTRL_PER_CYCLE: f64 = 42.0;
+
+/// Per-module area breakdown (Fig. 14) in NAND2 gates + SRAM mm².
+#[derive(Debug, Clone, PartialEq)]
+pub struct AreaBreakdown {
+    pub pe_array_gates: u64,
+    pub dct_idct_gates: u64,
+    pub weight_decoder_gates: u64,
+    pub nonlinear_gates: u64,
+    pub buffer_mgr_gates: u64,
+    pub control_gates: u64,
+    pub dma_gates: u64,
+    pub sram_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn compute(cfg: &AccelConfig) -> Self {
+        let sram_bits = (cfg.total_sram() * 8) as f64;
+        AreaBreakdown {
+            pe_array_gates: cfg.total_macs() as u64 * GATES_PER_MAC,
+            dct_idct_gates: (cfg.dct_ccms + cfg.idct_ccms) as u64
+                * GATES_PER_CCM
+                + GATES_DCT_MISC,
+            weight_decoder_gates: GATES_WEIGHT_DECODER,
+            nonlinear_gates: GATES_NONLINEAR,
+            buffer_mgr_gates: GATES_BUFFER_MGR,
+            control_gates: GATES_CONTROL,
+            dma_gates: GATES_DMA,
+            sram_mm2: sram_bits / 1e6 * MM2_PER_MBIT,
+        }
+    }
+
+    /// Total logic gates (Table I "Gate Count", excludes SRAM).
+    pub fn total_gates(&self) -> u64 {
+        self.pe_array_gates
+            + self.dct_idct_gates
+            + self.weight_decoder_gates
+            + self.nonlinear_gates
+            + self.buffer_mgr_gates
+            + self.control_gates
+            + self.dma_gates
+    }
+
+    /// Logic area in mm².
+    pub fn logic_mm2(&self) -> f64 {
+        self.total_gates() as f64 * UM2_PER_GATE / 1e6
+    }
+
+    /// Core area (logic + SRAM) in mm².
+    pub fn core_mm2(&self) -> f64 {
+        self.logic_mm2() + self.sram_mm2
+    }
+
+    /// Fraction of *logic* area in the DCT/IDCT path — the paper's
+    /// "light hardware overhead" claim (≈13 %).
+    pub fn dct_fraction(&self) -> f64 {
+        self.dct_idct_gates as f64 / self.total_gates() as f64
+    }
+
+    /// (label, gates) rows for the Fig. 14 pie.
+    pub fn rows(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("PE array", self.pe_array_gates),
+            ("DCT/IDCT", self.dct_idct_gates),
+            ("Weight decoder", self.weight_decoder_gates),
+            ("Non-linear", self.nonlinear_gates),
+            ("Buffer manager", self.buffer_mgr_gates),
+            ("Control", self.control_gates),
+            ("DMA", self.dma_gates),
+        ]
+    }
+}
+
+/// Per-module dynamic energy of a run (Fig. 15) in joules.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EnergyBreakdown {
+    pub pe_array_j: f64,
+    pub dct_j: f64,
+    pub idct_j: f64,
+    pub sram_j: f64,
+    pub control_j: f64,
+}
+
+impl EnergyBreakdown {
+    /// Core dynamic energy from the run counters (DRAM energy is
+    /// accounted separately — it is off-chip). `ccms` is the size of
+    /// each CCM array (128 in the prototype).
+    pub fn compute_with(stats: &Stats, ccms: usize) -> Self {
+        let ccms = ccms as f64;
+        EnergyBreakdown {
+            pe_array_j: stats.macs as f64 * PJ_PER_MAC * 1e-12,
+            dct_j: (stats.dct_active_cycles as f64
+                * ccms
+                * PJ_PER_CCM_CYCLE
+                + stats.dct_ccm_ops as f64 * PJ_PER_CCM_OP)
+                * 1e-12,
+            // IDCT: the index-bitmap gate turns multipliers off for
+            // zero coefficients — only the op term shrinks with nnz.
+            idct_j: (stats.idct_active_cycles as f64
+                * ccms
+                * PJ_PER_CCM_CYCLE
+                + stats.idct_ccm_ops as f64 * PJ_PER_CCM_OP)
+                * 1e-12,
+            sram_j: (stats.sram_read_bits + stats.sram_write_bits)
+                as f64
+                * PJ_PER_SRAM_BIT
+                * 1e-12,
+            control_j: stats.cycles as f64 * PJ_CTRL_PER_CYCLE * 1e-12,
+        }
+    }
+
+    /// [`Self::compute_with`] at the prototype's 128-CCM arrays.
+    pub fn compute(stats: &Stats) -> Self {
+        Self::compute_with(stats, 128)
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.pe_array_j
+            + self.dct_j
+            + self.idct_j
+            + self.sram_j
+            + self.control_j
+    }
+
+    /// DCT+IDCT fraction of core dynamic energy (paper: ≈19 %).
+    pub fn dct_fraction(&self) -> f64 {
+        if self.total_j() == 0.0 {
+            0.0
+        } else {
+            (self.dct_j + self.idct_j) / self.total_j()
+        }
+    }
+
+    /// Mean dynamic power over `secs` of runtime, in watts.
+    pub fn mean_power_w(&self, secs: f64) -> f64 {
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.total_j() / secs
+        }
+    }
+
+    pub fn rows(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("PE array", self.pe_array_j),
+            ("DCT", self.dct_j),
+            ("IDCT", self.idct_j),
+            ("SRAM", self.sram_j),
+            ("Control", self.control_j),
+        ]
+    }
+}
+
+/// Dennard technology scaling for Table V's normalized energy
+/// efficiency: `eff × κ²` with `κ = tech / 28 nm` (paper footnote,
+/// ref. [43]).
+pub fn normalize_efficiency(tops_per_w: f64, tech_nm: f64) -> f64 {
+    let k = tech_nm / 28.0;
+    tops_per_w * k * k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_count_matches_table1() {
+        let a = AreaBreakdown::compute(&AccelConfig::default());
+        let total = a.total_gates();
+        // paper: 1127 K gates
+        assert!(
+            (1_050_000..1_200_000).contains(&total),
+            "total {total}"
+        );
+    }
+
+    #[test]
+    fn pe_array_about_26_percent() {
+        let a = AreaBreakdown::compute(&AccelConfig::default());
+        let f = a.pe_array_gates as f64 / a.total_gates() as f64;
+        assert!((0.22..0.30).contains(&f), "{f}");
+    }
+
+    #[test]
+    fn dct_overhead_about_13_percent() {
+        let a = AreaBreakdown::compute(&AccelConfig::default());
+        let f = a.dct_fraction();
+        assert!((0.10..0.16).contains(&f), "{f}");
+    }
+
+    #[test]
+    fn sram_over_half_of_core() {
+        let a = AreaBreakdown::compute(&AccelConfig::default());
+        assert!(a.sram_mm2 > a.core_mm2() * 0.5);
+        // core ≈ 1.65 × 1.3 = 2.145 mm²
+        assert!(
+            (1.6..2.6).contains(&a.core_mm2()),
+            "{}",
+            a.core_mm2()
+        );
+    }
+
+    #[test]
+    fn energy_rows_sum() {
+        let s = Stats {
+            macs: 1000,
+            dct_ccm_ops: 100,
+            idct_ccm_ops: 50,
+            sram_read_bits: 2000,
+            sram_write_bits: 1000,
+            cycles: 10,
+            ..Default::default()
+        };
+        let e = EnergyBreakdown::compute(&s);
+        let sum: f64 = e.rows().iter().map(|(_, j)| j).sum();
+        assert!((sum - e.total_j()).abs() < 1e-18);
+    }
+
+    #[test]
+    fn dennard_normalization() {
+        // 65 nm design at 0.434 TOPS/W → ~2.34 normalized (Table V)
+        let n = normalize_efficiency(0.434, 65.0);
+        assert!((n - 2.34).abs() < 0.02, "{n}");
+        assert_eq!(normalize_efficiency(1.0, 28.0), 1.0);
+    }
+}

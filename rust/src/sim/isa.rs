@@ -1,0 +1,125 @@
+//! Accelerator instruction set + instruction queue (paper §IV: "the
+//! accelerator instructions are stored in the instruction queue for
+//! parsing and execution ... executed in order").
+//!
+//! The compiler ([`crate::sim::scheduler`]) lowers a network descriptor
+//! into this ISA; [`crate::sim::accelerator`] executes the program.
+
+use crate::config::network::{Act, Pool};
+use crate::sim::buffer::MemConfig;
+
+/// One accelerator instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instr {
+    /// Reconfigure the buffer bank sub-bank attachment.
+    Cfg(MemConfig),
+    /// Load weights for the next conv from DRAM into the preload FIFO.
+    LoadWeights { bytes: u64 },
+    /// Load (part of) an input feature map from DRAM (first layer or
+    /// spill re-fetch). `compressed` selects codec vs raw traffic.
+    LoadFmap { bytes: u64, compressed: bool },
+    /// Run a convolution (geometry captured at lowering time).
+    Conv {
+        layer: usize,
+        cin: usize,
+        cout: usize,
+        h_out: usize,
+        w_out: usize,
+        kernel: usize,
+        stride: usize,
+        depthwise: bool,
+    },
+    /// Non-linear module pass (BN/activation/pool in one stream).
+    NonLinear { act: Act, pool: Pool, elems: u64 },
+    /// Compress + store the output feature map (DCT path) or raw store.
+    StoreFmap {
+        bytes: u64,
+        compressed: bool,
+        /// Block count for the DCT unit (0 when uncompressed).
+        blocks: u64,
+    },
+    /// Decompress the input feature map before a Conv (IDCT path).
+    Decompress { blocks: u64, nnz_density: f64 },
+    /// Write spilled output to DRAM.
+    SpillOut { bytes: u64 },
+    /// Flip the ping-pong buffers (layer boundary).
+    SwapBuffers,
+}
+
+/// A lowered program plus its in-order queue semantics.
+#[derive(Debug, Default, Clone)]
+pub struct InstrQueue {
+    pub instrs: Vec<Instr>,
+    cursor: usize,
+}
+
+impl InstrQueue {
+    pub fn new(instrs: Vec<Instr>) -> Self {
+        InstrQueue { instrs, cursor: 0 }
+    }
+
+    pub fn push(&mut self, i: Instr) {
+        self.instrs.push(i);
+    }
+
+    /// Fetch the next instruction (in order, as the hardware does).
+    pub fn fetch(&mut self) -> Option<&Instr> {
+        let i = self.instrs.get(self.cursor);
+        if i.is_some() {
+            self.cursor += 1;
+        }
+        i
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.instrs.len() - self.cursor
+    }
+
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+
+    /// Count instructions of a given discriminant (for program checks).
+    pub fn count_convs(&self) -> usize {
+        self.instrs
+            .iter()
+            .filter(|i| matches!(i, Instr::Conv { .. }))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_order_fetch() {
+        let mut q = InstrQueue::new(vec![
+            Instr::SwapBuffers,
+            Instr::LoadWeights { bytes: 10 },
+        ]);
+        assert_eq!(q.remaining(), 2);
+        assert!(matches!(q.fetch(), Some(Instr::SwapBuffers)));
+        assert!(matches!(q.fetch(), Some(Instr::LoadWeights { .. })));
+        assert!(q.fetch().is_none());
+        q.reset();
+        assert_eq!(q.remaining(), 2);
+    }
+
+    #[test]
+    fn conv_count() {
+        let mut q = InstrQueue::default();
+        q.push(Instr::Conv {
+            layer: 0,
+            cin: 3,
+            cout: 8,
+            h_out: 8,
+            w_out: 8,
+            kernel: 3,
+            stride: 1,
+            depthwise: false,
+        });
+        q.push(Instr::SwapBuffers);
+        assert_eq!(q.count_convs(), 1);
+    }
+}

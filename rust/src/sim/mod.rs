@@ -1,0 +1,24 @@
+//! Cycle-approximate simulator of the accelerator microarchitecture
+//! (paper §IV–V).
+//!
+//! The simulator is *analytic per tile*: instead of replaying every MAC
+//! it derives cycle counts, SRAM/DRAM traffic and energy from the
+//! dataflow equations of each module, which is what the paper's own
+//! evaluation does (Tables I/II/V are synthesis + counter numbers, not
+//! RTL traces). Functional correctness of the datapath is checked
+//! separately: [`pe_array`] carries a bit-faithful row-frame convolution
+//! with the Fig. 9/10 data-MUX splice that is verified against
+//! [`crate::nn::conv2d`].
+
+pub mod accelerator;
+pub mod buffer;
+pub mod dct_unit;
+pub mod dma;
+pub mod energy;
+pub mod isa;
+pub mod pe_array;
+pub mod scheduler;
+pub mod stats;
+
+pub use accelerator::{Accelerator, LayerReport, RunReport};
+pub use stats::Stats;

@@ -1,0 +1,297 @@
+//! PE-array model (paper §V-B, Figs 8–10): 32 PE units × 9 MACs,
+//! 4 input channels × 8 rows in parallel.
+//!
+//! Two halves:
+//!
+//! 1. **Timing** — [`conv_cycles`] derives the cycle count of a
+//!    convolution from the dataflow: 3×3 mode computes one output
+//!    column of 8 rows × 4 input channels per cycle and
+//!    time-multiplexes 4 filters over 4 cycles; 1×1 mode computes 8
+//!    filters per cycle with one of the 9 MACs idle (8/9 utilization);
+//!    stride-2 burns one bypass cycle per skipped column; kernels >3×3
+//!    are decomposed into ⌈K/3⌉² 3×3 passes (the filter-decomposition
+//!    technique of [14] the paper reuses).
+//! 2. **Function** — [`conv_row_frames`] executes the same convolution
+//!    row frame by row frame with the Fig. 9/10 data-MUX assignment:
+//!    PE units 1–6 produce "completed" partial sums, PE unit 0 merges
+//!    the previous frame's pending rows, PE unit 7 computes the next
+//!    frame's pending rows into the scratch pad. Verified against
+//!    [`crate::nn::conv2d`] — this is the datapath-correctness proof of
+//!    the overlap handling.
+
+use crate::config::AccelConfig;
+use crate::nn::{Tensor3, Weights};
+#[cfg(test)]
+use crate::nn::conv2d;
+use crate::sim::stats::Stats;
+
+/// Convolution mode derived from the kernel geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvMode {
+    /// 3×3 (or decomposed K>3): 4 filters over 4 cycles.
+    K3,
+    /// 1×1: 8 filters per cycle, 8/9 MACs active.
+    K1,
+    /// Depthwise 3×3: no channel reduction.
+    Dw3,
+}
+
+/// Cycle/ops estimate of one convolution on the PE array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConvTiming {
+    pub cycles: u64,
+    pub macs: u64,
+    pub mac_slots: u64,
+}
+
+/// Timing of a dense convolution (see module docs for the model).
+pub fn conv_cycles(cfg: &AccelConfig, cin: usize, cout: usize,
+                   h_out: usize, w_out: usize, k: usize, stride: usize,
+                   depthwise: bool) -> ConvTiming {
+    let rf = cfg.row_frame as u64;
+    let n_rf = (h_out as u64).div_ceil(rf);
+    // stride-2 bypass: one extra cycle per computed column
+    let col_cycles = w_out as u64 * stride as u64;
+    // decomposition of K>3 into 3x3 passes
+    let k3_passes = if k > 3 {
+        (k as u64).div_ceil(3).pow(2)
+    } else {
+        1
+    };
+    let (mode_cycles, slots_per_cycle) = if depthwise {
+        // 4 channels in parallel, each PE group reducing only itself
+        let ch_groups = (cin as u64).div_ceil(cfg.parallel_cin as u64);
+        (n_rf * col_cycles * ch_groups * k3_passes,
+         cfg.total_macs() as u64)
+    } else if k == 1 {
+        let cin_groups = (cin as u64).div_ceil(cfg.parallel_cin as u64);
+        let cout_groups = (cout as u64).div_ceil(cfg.filters_1x1 as u64);
+        (n_rf * col_cycles * cin_groups * cout_groups,
+         cfg.total_macs() as u64)
+    } else {
+        let cin_groups = (cin as u64).div_ceil(cfg.parallel_cin as u64);
+        let cout_groups = (cout as u64).div_ceil(cfg.filters_3x3 as u64);
+        (
+            n_rf * col_cycles
+                * cin_groups
+                * cout_groups
+                * cfg.filters_3x3 as u64
+                * k3_passes,
+            cfg.total_macs() as u64,
+        )
+    };
+    // pipeline fill: PE array starts after k columns arrive, per frame
+    // and per cin/cout pass — a small constant we fold per row frame.
+    let fill = n_rf * k as u64;
+    let cycles = mode_cycles + fill;
+    let macs = if depthwise {
+        cin as u64 * h_out as u64 * w_out as u64 * (k * k) as u64
+    } else {
+        cin as u64
+            * cout as u64
+            * h_out as u64
+            * w_out as u64
+            * (k * k) as u64
+    };
+    ConvTiming {
+        cycles,
+        macs,
+        mac_slots: cycles * slots_per_cycle,
+    }
+}
+
+/// Partial-sum rows produced per row frame in 3×3 mode: 8 current rows
+/// plus 2 pending rows for the next frame (paper §V-C: "10 rows and 4
+/// channels partial sums will be sent to the scratch pad each time").
+pub const PSUM_ROWS_3X3: usize = 10;
+
+/// Functional row-frame convolution with the data-MUX splice.
+///
+/// The input feature map arrives from the IDCT module in 8-row frames.
+/// An output row whose 3×3 taps stay inside one input frame is a
+/// "completed" partial sum (PE units 1–6). An output row whose taps
+/// straddle a frame boundary is computed in two halves: the taps in the
+/// owner frame (PE unit 7, stored to the scratch pad as PSUM″) and the
+/// taps in the next frame (PE unit 0, accumulated as PSUM′ when that
+/// frame streams in). The function computes the exact same sums —
+/// verified against [`conv2d`] — while `stats` counts the scratch-pad
+/// round trips the splice generates.
+pub fn conv_row_frames(x: &Tensor3, w: &Weights, stride: usize,
+                       pad: usize, stats: &mut Stats) -> Tensor3 {
+    assert_eq!(x.c, w.cin);
+    let ho = (x.h + 2 * pad - w.k) / stride + 1;
+    let wo = (x.w + 2 * pad - w.k) / stride + 1;
+    let mut out = Tensor3::zeros(w.cout, ho, wo);
+    for co in 0..w.cout {
+        for orow in 0..ho {
+            // frame that owns this output row = frame of its first
+            // in-bounds tap row
+            let first_tap =
+                (orow * stride) as isize - pad as isize;
+            let owner = (first_tap.max(0) as usize) / 8;
+            for cc in 0..wo {
+                let mut acc = 0f32;
+                let mut deferred = 0f32;
+                for ci in 0..w.cin {
+                    for kr in 0..w.k {
+                        let ir = (orow * stride + kr) as isize
+                            - pad as isize;
+                        let in_next_frame =
+                            ir >= 0 && (ir as usize) / 8 > owner;
+                        for kc in 0..w.k {
+                            let ic = (cc * stride + kc) as isize
+                                - pad as isize;
+                            let v = x.get_padded(ci, ir, ic)
+                                * w.get(co, ci, kr, kc);
+                            if in_next_frame {
+                                deferred += v;
+                            } else {
+                                acc += v;
+                            }
+                        }
+                    }
+                }
+                if deferred != 0.0 {
+                    // PSUM″ write by PE unit 7, PSUM′ read-accumulate
+                    // by PE unit 0 when the next frame arrives.
+                    stats.sram_write_bits += 16;
+                    stats.sram_read_bits += 16;
+                }
+                out.set(co, orow, cc, acc + deferred);
+            }
+        }
+    }
+    out
+}
+
+/// Mode of a layer for reporting.
+pub fn mode_of(k: usize, depthwise: bool) -> ConvMode {
+    if depthwise {
+        ConvMode::Dw3
+    } else if k == 1 {
+        ConvMode::K1
+    } else {
+        ConvMode::K3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check_prop, Prng};
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::default()
+    }
+
+    #[test]
+    fn full_3x3_utilization_near_one() {
+        // cin, cout multiples of the parallel factors: no padding waste.
+        let t = conv_cycles(&cfg(), 4, 4, 8, 32, 3, 1, false);
+        let util = t.macs as f64 / t.mac_slots as f64;
+        assert!(util > 0.95, "util {util}");
+    }
+
+    #[test]
+    fn one_by_one_mode_is_8_9ths() {
+        let t = conv_cycles(&cfg(), 4, 8, 8, 64, 1, 1, false);
+        let util = t.macs as f64 / t.mac_slots as f64;
+        assert!((util - 8.0 / 9.0).abs() < 0.05, "util {util}");
+    }
+
+    #[test]
+    fn ragged_channels_waste_slots() {
+        // cin=3 of 4 lanes filled -> ~75% utilization.
+        let t = conv_cycles(&cfg(), 3, 4, 8, 32, 3, 1, false);
+        let util = t.macs as f64 / t.mac_slots as f64;
+        assert!((0.6..0.85).contains(&util), "util {util}");
+    }
+
+    #[test]
+    fn stride2_costs_bypass_cycles() {
+        let s1 = conv_cycles(&cfg(), 4, 4, 8, 32, 3, 1, false);
+        let s2 = conv_cycles(&cfg(), 4, 4, 8, 32, 3, 2, false);
+        assert!(s2.cycles > s1.cycles * 3 / 2, "{} {}", s1.cycles,
+                s2.cycles);
+    }
+
+    #[test]
+    fn k7_decomposes_into_9_passes() {
+        let k3 = conv_cycles(&cfg(), 4, 4, 8, 32, 3, 1, false);
+        let k7 = conv_cycles(&cfg(), 4, 4, 8, 32, 7, 1, false);
+        let ratio = k7.cycles as f64 / k3.cycles as f64;
+        assert!((8.0..10.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn row_frame_conv_matches_reference_3x3() {
+        check_prop("rf-conv == conv2d", 8, |p| {
+            let cin = 1 + p.below(4);
+            let cout = 1 + p.below(5);
+            let h = 8 + p.below(24);
+            let w = 8 + p.below(16);
+            let mut x = Tensor3::zeros(cin, h, w);
+            p.fill_normal(&mut x.data, 1.0);
+            let mut wt = Weights::zeros(cout, cin, 3);
+            p.fill_normal(&mut wt.data, 1.0);
+            let mut st = Stats::new();
+            let got = conv_row_frames(&x, &wt, 1, 1, &mut st);
+            let want = conv2d(&x, &wt, 1, 1);
+            assert_eq!((got.c, got.h, got.w), (want.c, want.h, want.w));
+            for (a, b) in got.data.iter().zip(want.data.iter()) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn row_frame_conv_matches_reference_stride2() {
+        let mut p = Prng::new(3);
+        let mut x = Tensor3::zeros(2, 19, 17);
+        p.fill_normal(&mut x.data, 1.0);
+        let mut wt = Weights::zeros(3, 2, 3);
+        p.fill_normal(&mut wt.data, 1.0);
+        let mut st = Stats::new();
+        let got = conv_row_frames(&x, &wt, 2, 1, &mut st);
+        let want = conv2d(&x, &wt, 2, 1);
+        for (a, b) in got.data.iter().zip(want.data.iter()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn splice_uses_scratch_pad() {
+        // multi-frame map must generate PSUM″ writes + PSUM′ reads
+        let mut p = Prng::new(4);
+        let mut x = Tensor3::zeros(1, 24, 8);
+        p.fill_normal(&mut x.data, 1.0);
+        let mut wt = Weights::zeros(1, 1, 3);
+        p.fill_normal(&mut wt.data, 1.0);
+        let mut st = Stats::new();
+        let _ = conv_row_frames(&x, &wt, 1, 1, &mut st);
+        assert!(st.sram_write_bits > 0);
+        assert!(st.sram_read_bits > 0);
+    }
+
+    #[test]
+    fn single_frame_no_splice() {
+        let mut p = Prng::new(5);
+        let mut x = Tensor3::zeros(1, 8, 8);
+        p.fill_normal(&mut x.data, 1.0);
+        let mut wt = Weights::zeros(1, 1, 3);
+        p.fill_normal(&mut wt.data, 1.0);
+        let mut st = Stats::new();
+        let got = conv_row_frames(&x, &wt, 1, 1, &mut st);
+        let want = conv2d(&x, &wt, 1, 1);
+        for (a, b) in got.data.iter().zip(want.data.iter()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn mode_mapping() {
+        assert_eq!(mode_of(3, false), ConvMode::K3);
+        assert_eq!(mode_of(1, false), ConvMode::K1);
+        assert_eq!(mode_of(3, true), ConvMode::Dw3);
+    }
+}

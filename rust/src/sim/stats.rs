@@ -1,0 +1,124 @@
+//! Hardware counters accumulated across a simulated run.
+
+/// Counter block; every module adds into one shared instance.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct Stats {
+    /// Total core cycles.
+    pub cycles: u64,
+    /// MAC operations issued by the PE array.
+    pub macs: u64,
+    /// MAC slots available over active PE cycles (utilization denom).
+    pub mac_slots: u64,
+    /// CCM multiplies in the DCT unit.
+    pub dct_ccm_ops: u64,
+    /// CCM multiplies in the IDCT unit (after index gating).
+    pub idct_ccm_ops: u64,
+    /// IDCT multiplies *skipped* by the index-bitmap gate.
+    pub idct_gated_ops: u64,
+    /// Cycles the DCT module is clocked (layers that compress); the
+    /// modules are clock-gated off for uncompressed layers (§VI-A).
+    pub dct_active_cycles: u64,
+    /// Cycles the IDCT module is clocked.
+    pub idct_active_cycles: u64,
+    /// Bits read from on-chip SRAM.
+    pub sram_read_bits: u64,
+    /// Bits written to on-chip SRAM.
+    pub sram_write_bits: u64,
+    /// Bits moved to/from DRAM (feature-map spills).
+    pub dram_fmap_bits: u64,
+    /// Bits moved from DRAM (weights).
+    pub dram_weight_bits: u64,
+    /// Cycles the PE array stalled waiting on DCT/IDCT or DMA.
+    pub stall_cycles: u64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Merge another counter block into this one.
+    pub fn merge(&mut self, o: &Stats) {
+        self.cycles += o.cycles;
+        self.macs += o.macs;
+        self.mac_slots += o.mac_slots;
+        self.dct_ccm_ops += o.dct_ccm_ops;
+        self.idct_ccm_ops += o.idct_ccm_ops;
+        self.idct_gated_ops += o.idct_gated_ops;
+        self.dct_active_cycles += o.dct_active_cycles;
+        self.idct_active_cycles += o.idct_active_cycles;
+        self.sram_read_bits += o.sram_read_bits;
+        self.sram_write_bits += o.sram_write_bits;
+        self.dram_fmap_bits += o.dram_fmap_bits;
+        self.dram_weight_bits += o.dram_weight_bits;
+        self.stall_cycles += o.stall_cycles;
+    }
+
+    /// PE utilization = issued MACs / available MAC slots.
+    pub fn pe_utilization(&self) -> f64 {
+        if self.mac_slots == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.mac_slots as f64
+        }
+    }
+
+    /// Total DRAM traffic in bits.
+    pub fn dram_bits(&self) -> u64 {
+        self.dram_fmap_bits + self.dram_weight_bits
+    }
+
+    /// Achieved GOPS at a given clock (1 MAC = 2 ops).
+    pub fn gops(&self, clock_hz: f64) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let secs = self.cycles as f64 / clock_hz;
+        self.macs as f64 * 2.0 / secs / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Stats {
+            cycles: 10,
+            macs: 100,
+            ..Default::default()
+        };
+        let b = Stats {
+            cycles: 5,
+            macs: 50,
+            sram_read_bits: 8,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.cycles, 15);
+        assert_eq!(a.macs, 150);
+        assert_eq!(a.sram_read_bits, 8);
+    }
+
+    #[test]
+    fn utilization() {
+        let s = Stats {
+            macs: 288,
+            mac_slots: 576,
+            ..Default::default()
+        };
+        assert_eq!(s.pe_utilization(), 0.5);
+        assert_eq!(Stats::new().pe_utilization(), 0.0);
+    }
+
+    #[test]
+    fn gops_at_clock() {
+        let s = Stats {
+            cycles: 700_000_000,
+            macs: 288 * 700_000_000,
+            ..Default::default()
+        };
+        assert!((s.gops(700e6) - 403.2).abs() < 0.5);
+    }
+}

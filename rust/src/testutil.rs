@@ -1,0 +1,129 @@
+//! Test substrate: seeded PRNG + a tiny property-testing harness
+//! (proptest is unavailable offline; see DESIGN.md §4).
+
+/// xorshift64* PRNG — deterministic, dependency-free.
+#[derive(Debug, Clone)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    pub fn new(seed: u64) -> Self {
+        Prng {
+            state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.uniform() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt()
+            * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fill a f32 buffer with N(0, sigma).
+    pub fn fill_normal(&mut self, buf: &mut [f32], sigma: f32) {
+        for v in buf.iter_mut() {
+            *v = self.normal() as f32 * sigma;
+        }
+    }
+}
+
+/// Run a property over `cases` derived seeds; panics with the failing
+/// seed for reproduction. The poor-man's proptest shrink step is the
+/// seed printout (cases are independent).
+pub fn check_prop<F: FnMut(&mut Prng)>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B9));
+        let mut p = Prng::new(seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(&mut p)),
+        );
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (seed {seed:#x})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Prng::new(5);
+        let mut b = Prng::new(5);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut p = Prng::new(1);
+        for _ in 0..1000 {
+            let v = p.uniform();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut p = Prng::new(2);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut p = Prng::new(3);
+        for _ in 0..100 {
+            assert!(p.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn check_prop_runs_all_cases() {
+        let mut count = 0;
+        check_prop("counter", 17, |_| count += 1);
+        assert_eq!(count, 17);
+    }
+}

@@ -1,0 +1,74 @@
+//! Small shared utilities (JSON substrate, float helpers).
+
+pub mod json;
+
+/// Round-half-to-even, matching `jnp.round` so the rust codec is
+/// bit-compatible with the Pallas kernels and their oracles.
+#[inline]
+pub fn rint(x: f32) -> f32 {
+    x.round_ties_even()
+}
+
+/// Mean of an f64 iterator (0.0 on empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// Format a byte count as a human-readable string.
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rint_ties_to_even() {
+        assert_eq!(rint(0.5), 0.0);
+        assert_eq!(rint(1.5), 2.0);
+        assert_eq!(rint(2.5), 2.0);
+        assert_eq!(rint(-0.5), 0.0);
+        assert_eq!(rint(-1.5), -2.0);
+        assert_eq!(rint(1.4), 1.0);
+        assert_eq!(rint(1.6), 2.0);
+    }
+
+    #[test]
+    fn stats_basics() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[1.0, 3.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(100), "100 B");
+        assert_eq!(human_bytes(2048), "2.00 KB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MB");
+    }
+}

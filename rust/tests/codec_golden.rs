@@ -1,0 +1,125 @@
+//! Cross-language golden test: the rust codec must reproduce the
+//! numbers pinned by `python -m compile.golden` (which in turn are the
+//! pure-jnp oracle semantics the Pallas kernels are tested against).
+//! This is the contract that makes L1/L2/L3 one system.
+
+use fmc_accel::compress::{dct, quant, qtable};
+use fmc_accel::util::json::Json;
+
+fn golden() -> Json {
+    let text = include_str!("golden/codec_golden.json");
+    Json::parse(text).expect("golden json parses")
+}
+
+fn to_block(v: &Json) -> [f32; 64] {
+    let vals = v.f32_vec();
+    assert_eq!(vals.len(), 64);
+    let mut b = [0f32; 64];
+    b.copy_from_slice(&vals);
+    b
+}
+
+#[test]
+fn dct_matrix_matches_python() {
+    let g = golden();
+    let want = g.get("dct_matrix").f32_vec();
+    let c = dct::dct_matrix();
+    for k in 0..8 {
+        for n in 0..8 {
+            let diff = (c[k][n] - want[k * 8 + n]).abs();
+            assert!(diff < 1e-6, "C[{k}][{n}]: {diff}");
+        }
+    }
+}
+
+#[test]
+fn qtables_match_python() {
+    let g = golden();
+    for level in 0..4 {
+        let want = g.get("qtables").idx(level).f32_vec();
+        let got = qtable::qtable(level);
+        assert_eq!(&got[..], &want[..], "level {level}");
+    }
+}
+
+#[test]
+fn imax_matches() {
+    assert_eq!(golden().get("imax").as_f64(), Some(255.0));
+}
+
+#[test]
+fn dct_transform_matches_python() {
+    let g = golden();
+    for case in g.get("cases").as_arr().unwrap() {
+        let name = case.get("name").as_str().unwrap();
+        let input = to_block(case.get("input"));
+        let want = to_block(case.get("dct"));
+        let got = dct::dct2d(&input);
+        for i in 0..64 {
+            assert!(
+                (got[i] - want[i]).abs() < 2e-4,
+                "{name}[{i}]: rust {} python {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_codes_match_python_exactly() {
+    let g = golden();
+    for case in g.get("cases").as_arr().unwrap() {
+        let name = case.get("name").as_str().unwrap();
+        let input = to_block(case.get("input"));
+        let freq = dct::dct2d(&input);
+        let (q1, hdr) = quant::gemm_quantize(&freq);
+        for lv in case.get("levels").as_arr().unwrap() {
+            let level = lv.get("level").as_usize().unwrap();
+            let want_q2 = lv.get("q2").f32_vec();
+            let want_min = lv.get("fmin").as_f32().unwrap();
+            let want_max = lv.get("fmax").as_f32().unwrap();
+            assert!(
+                (hdr.fmin - want_min).abs() < 2e-4
+                    && (hdr.fmax - want_max).abs() < 2e-4,
+                "{name} level {level} header"
+            );
+            let q2 =
+                quant::qtable_quantize(&q1, &qtable::qtable(level), &hdr);
+            for i in 0..64 {
+                assert_eq!(
+                    q2[i] as f32, want_q2[i],
+                    "{name} level {level} idx {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn reconstruction_matches_python() {
+    let g = golden();
+    for case in g.get("cases").as_arr().unwrap() {
+        let name = case.get("name").as_str().unwrap();
+        let input = to_block(case.get("input"));
+        let freq = dct::dct2d(&input);
+        let (q1, hdr) = quant::gemm_quantize(&freq);
+        for lv in case.get("levels").as_arr().unwrap() {
+            let level = lv.get("level").as_usize().unwrap();
+            let want = to_block(lv.get("recon"));
+            let qt = qtable::qtable(level);
+            let q2 = quant::qtable_quantize(&q1, &qt, &hdr);
+            let q1p = quant::qtable_dequantize(&q2, &qt, &hdr);
+            let f = quant::gemm_dequantize(&q1p, &hdr);
+            let got = dct::idct2d(&f);
+            for i in 0..64 {
+                assert!(
+                    (got[i] - want[i]).abs() < 5e-4,
+                    "{name} level {level} idx {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Cross-module property tests: invariants that tie the codec, the
+//! scheduler and the simulator together (the L3 "coordinator
+//! invariants" suite — routing of bytes, batching of blocks, state of
+//! the buffer bank — exercised over randomized workloads).
+
+use fmc_accel::compress::encode::FlipPacker;
+use fmc_accel::compress::{codec, qtable::qtable};
+use fmc_accel::config::network::{Act, FusionLayer, LayerKind, Network, Pool};
+use fmc_accel::config::{models, AccelConfig};
+use fmc_accel::nn::Tensor3;
+use fmc_accel::sim::buffer::{BufferBank, MemConfig};
+use fmc_accel::sim::scheduler::{self, CompressionProfile};
+use fmc_accel::sim::Accelerator;
+use fmc_accel::testutil::{check_prop, Prng};
+
+fn rand_fmap(p: &mut Prng, cmax: usize, hw: usize) -> Tensor3 {
+    let c = 1 + p.below(cmax);
+    let h = 8 + p.below(hw);
+    let w = 8 + p.below(hw);
+    let mut t = Tensor3::zeros(c, h, w);
+    p.fill_normal(&mut t.data, 1.0);
+    t
+}
+
+#[test]
+fn codec_decode_is_exact_inverse_of_encode() {
+    // the *lossy* step is quantization; encode/decode of the quantized
+    // blocks must be lossless for any input
+    check_prop("encode/decode lossless", 25, |p| {
+        let x = rand_fmap(p, 6, 40);
+        let level = p.below(4);
+        let cf = codec::compress(&x, &qtable(level));
+        for b in &cf.blocks {
+            let q2 = b.decode();
+            let re = fmc_accel::compress::encode::EncodedBlock::encode(
+                &q2, b.header,
+            );
+            assert_eq!(re.bitmap, b.bitmap);
+            assert_eq!(re.values, b.values);
+        }
+    });
+}
+
+#[test]
+fn codec_roundtrip_is_idempotent() {
+    // compressing an already-roundtripped map must reproduce it within
+    // one quantization step (stability: no drift across layers)
+    check_prop("roundtrip idempotence", 10, |p| {
+        let x = rand_fmap(p, 4, 24);
+        let qt = qtable(2);
+        let once = codec::roundtrip(&x, &qt);
+        let twice = codec::roundtrip(&once, &qt);
+        let m1 = x.mse(&once);
+        let m2 = once.mse(&twice);
+        assert!(m2 <= m1 * 1.5 + 1e-6, "drift: {m1} -> {m2}");
+    });
+}
+
+#[test]
+fn compressed_bits_equal_sum_of_parts() {
+    check_prop("storage accounting", 15, |p| {
+        let x = rand_fmap(p, 4, 32);
+        let cf = codec::compress(&x, &qtable(1));
+        let parts: u64 = cf
+            .blocks
+            .iter()
+            .map(|b| 64 + 32 + 16 * b.nnz() as u64)
+            .sum();
+        assert_eq!(cf.compressed_bits(), parts);
+    });
+}
+
+#[test]
+fn flip_packer_conserves_words() {
+    check_prop("flip packer conservation", 15, |p| {
+        let x = rand_fmap(p, 4, 32);
+        let cf = codec::compress(&x, &qtable(p.below(4)));
+        let mut packer = FlipPacker::new();
+        for b in &cf.blocks {
+            packer.push(b);
+        }
+        assert_eq!(packer.total_words(), cf.nnz());
+        assert!(packer.utilization() <= 1.0 + 1e-12);
+    });
+}
+
+fn rand_network(p: &mut Prng) -> Network {
+    let mut layers = Vec::new();
+    let mut c = 1 + p.below(8);
+    let mut h = 32 + 8 * p.below(8);
+    let mut w = h;
+    for i in 0..(2 + p.below(6)) {
+        let cout = 4 * (1 + p.below(32));
+        let stride = if p.below(4) == 0 { 2 } else { 1 };
+        let k = [1usize, 3, 3, 3][p.below(4)];
+        let l = FusionLayer {
+            name: format!("l{i}"),
+            kind: LayerKind::Conv,
+            cin: c,
+            cout,
+            h,
+            w,
+            kernel: k,
+            stride,
+            padding: k / 2,
+            act: Act::Relu,
+            pool: Pool::None,
+            qlevel: Some(p.below(4)),
+        };
+        let (nc, nh, nw) = l.out_dims();
+        layers.push(l);
+        c = nc;
+        h = nh;
+        w = nw;
+        if h < 8 || w < 8 {
+            break;
+        }
+    }
+    Network {
+        name: "rand".into(),
+        layers,
+    }
+}
+
+#[test]
+fn scheduler_plans_are_consistent_with_program() {
+    // one plan per layer; spill only when the chosen bank can't hold
+    // the stored map; instruction stream has exactly one Conv per layer
+    check_prop("scheduler consistency", 20, |p| {
+        let net = rand_network(p);
+        net.validate().unwrap();
+        let cfg = AccelConfig::default();
+        let profiles: Vec<Option<CompressionProfile>> = net
+            .layers
+            .iter()
+            .map(|_| {
+                Some(CompressionProfile {
+                    ratio: 0.1 + p.uniform() * 0.9,
+                    nnz_density: p.uniform(),
+                })
+            })
+            .collect();
+        let (plans, queue) = scheduler::lower(&cfg, &net, &profiles);
+        assert_eq!(plans.len(), net.layers.len());
+        assert_eq!(queue.count_convs(), net.layers.len());
+        for plan in &plans {
+            let bank = BufferBank::new(&cfg, plan.mem);
+            let over_in = plan
+                .in_stored_bytes
+                .saturating_sub(bank.fmap_a() as u64);
+            assert_eq!(plan.spill_in_bytes, over_in);
+            let over_out = plan
+                .out_stored_bytes
+                .saturating_sub(bank.fmap_b() as u64);
+            assert_eq!(plan.spill_out_bytes, over_out);
+            assert!(plan.filter_groups >= 1);
+        }
+    });
+}
+
+#[test]
+fn simulator_conserves_macs_and_cycles() {
+    // total MACs equal the network's arithmetic regardless of the
+    // compression profile; per-layer cycles sum to the total
+    check_prop("simulator conservation", 12, |p| {
+        let net = rand_network(p);
+        let accel = Accelerator::new(AccelConfig::default());
+        let r = p.uniform();
+        let rep = accel.run_flat(
+            &net,
+            Some(CompressionProfile {
+                ratio: 0.2 + 0.6 * r,
+                nnz_density: r,
+            }),
+        );
+        assert_eq!(rep.stats.macs, net.total_macs());
+        let per_layer: u64 =
+            rep.layers.iter().map(|l| l.cycles).sum();
+        assert_eq!(per_layer, rep.stats.cycles);
+        assert!(rep.stats.pe_utilization() <= 1.0 + 1e-12);
+    });
+}
+
+#[test]
+fn better_compression_never_increases_traffic() {
+    // monotonicity: a smaller stored ratio can only shrink DRAM bytes
+    check_prop("traffic monotone in ratio", 10, |p| {
+        let net = models::vgg16_bn();
+        let accel = Accelerator::new(AccelConfig::default());
+        let a = 0.1 + p.uniform() * 0.4;
+        let b = a + p.uniform() * (1.0 - a);
+        let run = |r: f64| {
+            accel
+                .run_flat(
+                    &net,
+                    Some(CompressionProfile {
+                        ratio: r,
+                        nnz_density: r,
+                    }),
+                )
+                .dram_fmap_bytes()
+        };
+        assert!(run(a) <= run(b), "ratio {a} vs {b}");
+    });
+}
+
+#[test]
+fn all_mem_configs_preserve_total_sram() {
+    let cfg = AccelConfig::default();
+    for mc in MemConfig::enumerate() {
+        let bank = BufferBank::new(&cfg, mc);
+        // fixed parts + all four sub-banks, regardless of attachment
+        let total = bank.fmap_a() + bank.fmap_b() + bank.scratch();
+        assert_eq!(
+            total,
+            2 * cfg.fmap_buffer
+                + cfg.scratch_base
+                + (mc.subbanks_a + mc.subbanks_b + mc.subbanks_scratch)
+                    * 32
+                    * 1024
+        );
+    }
+}

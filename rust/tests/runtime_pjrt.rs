@@ -1,0 +1,145 @@
+//! PJRT runtime integration tests. Require `make artifacts`; each test
+//! skips (prints a notice) when artifacts are absent so `cargo test`
+//! stays green on a clean checkout.
+
+use fmc_accel::compress::{codec, dct, quant, qtable::qtable};
+use fmc_accel::data;
+use fmc_accel::runtime::Runtime;
+use fmc_accel::testutil::Prng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(r) => Some(r),
+        Err(_) => {
+            eprintln!("artifacts/ missing — run `make artifacts`; skipping");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_compress_matches_rust_codec() {
+    let Some(mut rt) = runtime() else { return };
+    let mut p = Prng::new(77);
+    let mut blocks = vec![0f32; 16 * 64];
+    p.fill_normal(&mut blocks, 2.0);
+    let qt = qtable(2);
+    let (q2, mn, mx) = rt.dct_compress(&blocks, &qt).unwrap();
+    let mut exact = 0;
+    for b in 0..16 {
+        let blk: [f32; 64] =
+            blocks[b * 64..(b + 1) * 64].try_into().unwrap();
+        let freq = dct::dct2d(&blk);
+        let (q1, hdr) = quant::gemm_quantize(&freq);
+        let want = quant::qtable_quantize(&q1, &qt, &hdr);
+        assert!((mn[b] - hdr.fmin).abs() < 1e-4);
+        assert!((mx[b] - hdr.fmax).abs() < 1e-4);
+        for i in 0..64 {
+            let diff = (q2[b * 64 + i] - want[i] as f32).abs();
+            assert!(diff <= 1.0, "block {b} idx {i}: diff {diff}");
+            if diff == 0.0 {
+                exact += 1;
+            }
+        }
+    }
+    // XLA einsum may differ at exact rounding boundaries only
+    assert!(exact >= 16 * 64 * 9 / 10, "{exact}/1024 exact");
+}
+
+#[test]
+fn pjrt_roundtrip_reconstruction_bounded() {
+    let Some(mut rt) = runtime() else { return };
+    let mut p = Prng::new(78);
+    let mut blocks = vec![0f32; 8 * 64];
+    p.fill_normal(&mut blocks, 1.0);
+    let qt = qtable(3);
+    let (q2, mn, mx) = rt.dct_compress(&blocks, &qt).unwrap();
+    let rec = rt.dct_decompress(&q2, &mn, &mx, &qt).unwrap();
+    // gentlest table: bounded distortion on unit-normal data
+    let max_err = rec
+        .iter()
+        .zip(blocks.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1.5, "max err {max_err}");
+}
+
+#[test]
+fn pjrt_classify_compressed_matches_labels() {
+    let Some(mut rt) = runtime() else { return };
+    let batch = data::shapes_batch(31, 4, 32);
+    let images: Vec<_> = batch.iter().map(|(i, _)| i.clone()).collect();
+    let res = rt.classify(&images, true).unwrap();
+    let correct = res
+        .iter()
+        .zip(batch.iter())
+        .filter(|((c, _), (_, l))| c == l)
+        .count();
+    assert!(correct >= 3, "{correct}/4 with compressed model");
+}
+
+#[test]
+fn pjrt_compressed_and_plain_models_agree() {
+    // The interlayer codec must not flip classifications vs the
+    // uncompressed model (the <1% accuracy-loss property, per batch).
+    let Some(mut rt) = runtime() else { return };
+    let batch = data::shapes_batch(32, 4, 32);
+    let images: Vec<_> = batch.iter().map(|(i, _)| i.clone()).collect();
+    let plain = rt.classify(&images, false).unwrap();
+    let comp = rt.classify(&images, true).unwrap();
+    let agree = plain
+        .iter()
+        .zip(comp.iter())
+        .filter(|((a, _), (b, _))| a == b)
+        .count();
+    assert!(agree >= 3, "{agree}/4 agreement");
+}
+
+#[test]
+fn pjrt_rejects_oversized_batch() {
+    let Some(mut rt) = runtime() else { return };
+    let batch = data::shapes_batch(33, 9, 32);
+    let images: Vec<_> = batch.iter().map(|(i, _)| i.clone()).collect();
+    assert!(rt.classify(&images, true).is_err());
+}
+
+#[test]
+fn pjrt_fusion_layer_matches_golden_model() {
+    // The L2 fusion-layer artifact (conv->BN->ReLU->pool->codec) must
+    // match the L3 golden pipeline built from nn:: + compress::.
+    use fmc_accel::nn::{self, Tensor3, Weights};
+
+    let Some(mut rt) = runtime() else { return };
+    let mut p = Prng::new(99);
+    let (cin, cout, hw) = (16usize, 32usize, 32usize);
+    let mut x = Tensor3::zeros(cin, hw, hw);
+    p.fill_normal(&mut x.data, 1.0);
+    let mut w = vec![0f32; cout * cin * 9];
+    p.fill_normal(&mut w, 0.1);
+    let mut scale = vec![0f32; cout];
+    let mut bias = vec![0f32; cout];
+    for i in 0..cout {
+        scale[i] = 0.5 + p.uniform() as f32;
+        bias[i] = p.normal() as f32 * 0.1;
+    }
+
+    let got = rt.fusion_layer(&x, &w, &scale, &bias).unwrap();
+
+    // golden: conv -> BN -> ReLU -> maxpool -> codec roundtrip @ Q1
+    let wt = Weights::from_vec(cout, cin, 3, w.clone());
+    let mut y = nn::conv2d(&x, &wt, 1, 1);
+    nn::batch_norm(&mut y, &scale, &bias);
+    nn::activate(&mut y, nn::Activation::Relu);
+    let y = nn::max_pool2x2(&y);
+    let want = codec::roundtrip(&y, &qtable(1));
+
+    assert_eq!((got.c, got.h, got.w), (want.c, want.h, want.w));
+    // lossy codec differs at rounding boundaries between the XLA and
+    // rust DCT accumulation orders; bound the disagreement instead
+    let scale_abs = want.max_abs().max(1.0);
+    let mut worst = 0f32;
+    for (a, b) in got.data.iter().zip(want.data.iter()) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst <= 0.15 * scale_abs, "worst {worst} of {scale_abs}");
+}
