@@ -1,0 +1,45 @@
+# fmc_accel build/verify entry points.
+#
+# `verify` is the CI gate: build, tests, and a quick smoke run of the
+# codec hot-path bench (which also regenerates BENCH_codec_hotpath.json).
+# fmt/clippy run first as advisory steps (`-` prefix): the seed tree
+# predates rustfmt enforcement, so style drift must not mask real
+# build/test failures.
+
+CARGO ?= cargo
+
+.PHONY: all build test fmt clippy smoke bench-codec golden verify
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# Quick smoke of the hot-path bench (does NOT rewrite the checked-in
+# BENCH_codec_hotpath.json baseline; use bench-codec for that).
+smoke:
+	FMC_BENCH_QUICK=1 $(CARGO) bench --bench codec_hotpath
+
+# Full codec hot-path benchmark.
+bench-codec:
+	$(CARGO) bench --bench codec_hotpath
+
+# Regenerate the cross-language golden vectors (needs python + jax).
+golden:
+	cd python && python -m compile.golden
+
+verify:
+	-$(MAKE) fmt
+	-$(MAKE) clippy
+	$(MAKE) build
+	$(MAKE) test
+	$(MAKE) smoke

@@ -1,14 +1,42 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
-//! DCT naive vs Gong-fast, whole-feature-map compress/decompress
-//! throughput, and the encode/pack stage.
+//! DCT naive vs Gong-fast, dense vs sparsity-gated IDCT, and the
+//! whole-feature-map compress/decompress throughput of the serial vs
+//! the thread-parallel (`FMC_THREADS`) fmap pipeline.
+//!
+//! Emits `BENCH_codec_hotpath.json` (name → mean ns + Melem/s) via
+//! `bench_util::BenchReport` so the perf trajectory is tracked across
+//! PRs. Set `FMC_BENCH_QUICK=1` for a fast smoke run (CI).
 
-use fmc_accel::bench_util::Bencher;
+use fmc_accel::bench_util::{BenchReport, Bencher};
 use fmc_accel::compress::{codec, dct, qtable::qtable};
 use fmc_accel::data::{natural_image, Smoothness};
 use fmc_accel::testutil::Prng;
 
+/// Zero out everything outside the top-left triangle (the typical
+/// post-quantization spectrum) and return the matching bitmap.
+fn sparsify(blk: &mut [f32; 64]) -> u64 {
+    let mut bm = 0u64;
+    for r in 0..8 {
+        for c in 0..8 {
+            let i = r * 8 + c;
+            if r + c >= 4 {
+                blk[i] = 0.0;
+            } else if blk[i] != 0.0 {
+                bm |= 1 << i;
+            }
+        }
+    }
+    bm
+}
+
 fn main() {
-    let b = Bencher::new(3, 20);
+    let quick = std::env::var("FMC_BENCH_QUICK").is_ok();
+    let b = if quick {
+        Bencher::new(1, 3)
+    } else {
+        Bencher::new(3, 20)
+    };
+    let mut report = BenchReport::new("codec_hotpath");
     let mut p = Prng::new(1);
     let mut blocks = vec![[0f32; 64]; 4096];
     for blk in blocks.iter_mut() {
@@ -29,7 +57,7 @@ fn main() {
         }
         acc
     });
-    let s3 = b.run("idct2d fast x4096", || {
+    let s3 = b.run("idct2d dense x4096", || {
         let mut acc = 0f32;
         for blk in &blocks {
             acc += dct::idct2d_fast(blk)[0];
@@ -37,31 +65,102 @@ fn main() {
         acc
     });
 
+    // Sparsity-gated inverse on ~15%-dense spectra (the common case
+    // the bitmap gating targets), against the dense inverse on the
+    // same masked blocks.
+    let mut masked = blocks.clone();
+    let bitmaps: Vec<u64> =
+        masked.iter_mut().map(sparsify).collect();
+    let s4 = b.run("idct2d dense, masked x4096", || {
+        let mut acc = 0f32;
+        for blk in &masked {
+            acc += dct::idct2d_fast(blk)[0];
+        }
+        acc
+    });
+    let s5 = b.run("idct2d gated, masked x4096", || {
+        let mut acc = 0f32;
+        for (blk, &bm) in masked.iter().zip(bitmaps.iter()) {
+            acc += dct::idct2d_sparse(blk, bm)[0];
+        }
+        acc
+    });
+
+    // Whole-feature-map pipeline, serial vs parallel.
     let fmap =
         natural_image(9, 32, 64, 64, Smoothness::Natural, true);
     let qt = qtable(1);
-    let s4 = b.run("compress 32x64x64 fmap", || {
+    let s6 = b.run("compress 32x64x64 serial", || {
         codec::compress(&fmap, &qt).compressed_bits()
     });
+    let s7 = b.run("compress 32x64x64 parallel", || {
+        codec::compress_par(&fmap, &qt).compressed_bits()
+    });
     let cf = codec::compress(&fmap, &qt);
-    let s5 = b.run("decompress 32x64x64 fmap", || {
+    assert_eq!(
+        cf.blocks,
+        codec::compress_par(&fmap, &qt).blocks,
+        "parallel compress must be bit-identical"
+    );
+    let s8 = b.run("decompress 32x64x64 serial", || {
         codec::decompress(&cf).data[0]
     });
+    let s9 = b.run("decompress 32x64x64 parallel", || {
+        codec::decompress_par(&cf).data[0]
+    });
 
-    for s in [&s1, &s2, &s3, &s4, &s5] {
+    let blk_elems = Some(4096u64 * 64);
+    let fmap_elems = Some((32 * 64 * 64) as u64);
+    for (s, elems) in [
+        (&s1, blk_elems),
+        (&s2, blk_elems),
+        (&s3, blk_elems),
+        (&s4, blk_elems),
+        (&s5, blk_elems),
+        (&s6, fmap_elems),
+        (&s7, fmap_elems),
+        (&s8, fmap_elems),
+        (&s9, fmap_elems),
+    ] {
         println!("{}", s.report());
+        report.push(s, elems);
     }
+
     let elems = (32 * 64 * 64) as f64;
+    let tput = |s: &fmc_accel::bench_util::Sample| {
+        elems / s.mean.as_secs_f64() / 1e6
+    };
+    println!();
     println!(
-        "\ncompress throughput : {:.1} Melem/s",
-        elems / s4.mean.as_secs_f64() / 1e6
+        "compress   serial/parallel : {:7.1} / {:7.1} Melem/s ({:.2}x)",
+        tput(&s6),
+        tput(&s7),
+        s6.mean.as_secs_f64() / s7.mean.as_secs_f64()
     );
     println!(
-        "decompress throughput: {:.1} Melem/s",
-        elems / s5.mean.as_secs_f64() / 1e6
+        "decompress serial/parallel : {:7.1} / {:7.1} Melem/s ({:.2}x)",
+        tput(&s8),
+        tput(&s9),
+        s8.mean.as_secs_f64() / s9.mean.as_secs_f64()
     );
     println!(
         "fast-DCT speedup over naive: {:.2}x",
         s1.mean.as_secs_f64() / s2.mean.as_secs_f64()
     );
+    println!(
+        "gated-IDCT speedup (masked): {:.2}x",
+        s4.mean.as_secs_f64() / s5.mean.as_secs_f64()
+    );
+    println!("codec worker threads       : {}", codec::codec_threads());
+
+    if quick {
+        // Smoke runs (1 warmup / 3 iters) are too noisy to serve as
+        // the cross-PR baseline; only full runs rewrite the file.
+        println!("quick mode: not rewriting BENCH_codec_hotpath.json");
+    } else {
+        match report.write() {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write bench json: {e}"),
+        }
+    }
 }

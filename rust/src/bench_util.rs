@@ -5,7 +5,11 @@
 //! each uses [`Bencher`] for timing and the table helpers to print the
 //! rows of the paper table/figure it regenerates.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Simple measured statistics of one benchmark.
 #[derive(Debug, Clone)]
@@ -131,6 +135,67 @@ impl Table {
 /// Percentage formatter used across the table benches.
 pub fn pct(x: f64) -> String {
     format!("{:.2}%", x * 100.0)
+}
+
+/// Machine-readable benchmark report: collects [`Sample`]s and writes
+/// `BENCH_<name>.json` (name → mean/min ns, optional throughput in
+/// Melem/s) so the perf trajectory is tracked across PRs. The file is
+/// written to the working directory, i.e. the package root under
+/// `cargo bench`.
+pub struct BenchReport {
+    bench: String,
+    entries: Vec<Json>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> Self {
+        BenchReport {
+            bench: bench.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record one sample; `elems` (elements processed per iteration)
+    /// adds a `melem_per_s` throughput field.
+    pub fn push(&mut self, s: &Sample, elems: Option<u64>) {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(s.name.clone()));
+        o.insert(
+            "mean_ns".to_string(),
+            Json::Num(s.mean.as_nanos() as f64),
+        );
+        o.insert(
+            "min_ns".to_string(),
+            Json::Num(s.min.as_nanos() as f64),
+        );
+        o.insert("iters".to_string(), Json::Num(s.iters as f64));
+        if let Some(n) = elems {
+            let secs = s.mean.as_secs_f64();
+            if n > 0 && secs > 0.0 {
+                o.insert(
+                    "melem_per_s".to_string(),
+                    Json::Num(n as f64 / secs / 1e6),
+                );
+            }
+        }
+        self.entries.push(Json::Obj(o));
+    }
+
+    /// Write `BENCH_<name>.json`; returns the path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = PathBuf::from(format!("BENCH_{}.json", self.bench));
+        let mut top = BTreeMap::new();
+        top.insert(
+            "bench".to_string(),
+            Json::Str(self.bench.clone()),
+        );
+        top.insert(
+            "entries".to_string(),
+            Json::Arr(self.entries.clone()),
+        );
+        std::fs::write(&path, format!("{}\n", Json::Obj(top)))?;
+        Ok(path)
+    }
 }
 
 #[cfg(test)]

@@ -3,13 +3,29 @@
 //! sparse encoding pipeline, and accounts storage exactly as the
 //! hardware does (index buffer bits + value bits + headers vs 16-bit
 //! originals). This is the L3 twin of the fused Pallas kernels.
+//!
+//! The hot path is a fused, allocation-free, per-tile kernel (see
+//! `rust/src/compress/README.md`):
+//!
+//! * extract → fast-DCT (in place) → two-step quantize → encode runs
+//!   on a reusable [`CodecScratch`] with zero heap allocation per
+//!   block ([`EncodedBlock`] stores its values inline);
+//! * decode is symmetric, reconstructs only the coefficients named by
+//!   the index bitmap (zero-coded coefficients are gated to exact
+//!   zero, mirroring the hardware's bitmap-gated IDCT multipliers)
+//!   and feeds the sparsity-gated inverse [`dct::idct2d_sparse_into`];
+//! * [`compress_par`] / [`decompress_par`] shard channels across a
+//!   `std::thread::scope` worker pool (`FMC_THREADS`, default =
+//!   available parallelism) and are bit-identical to the serial
+//!   [`compress`] / [`decompress`] — channels are independent.
 
 use super::dct;
 use super::encode::EncodedBlock;
 use super::quant::{
-    gemm_dequantize, gemm_quantize, qtable_dequantize, qtable_quantize,
+    gemm_dequantize, gemm_quantize_into, qtable_dequantize,
+    qtable_quantize_into,
 };
-use super::{Block, BLOCK};
+use super::{Block, BLOCK, IMAX};
 use crate::nn::Tensor3;
 
 /// Bits per original (uncompressed) activation: the accelerator stores
@@ -17,6 +33,11 @@ use crate::nn::Tensor3;
 pub const ORIG_BITS: u64 = 16;
 
 /// A compressed feature map: sparse blocks + original geometry.
+///
+/// Storage totals are accumulated once at compress time so the
+/// accessors are O(1) — the server's per-request accounting and the
+/// table benches call them per feature map, and the seed's per-call
+/// re-walk of every block showed up in profiles.
 #[derive(Debug, Clone)]
 pub struct CompressedFmap {
     pub blocks: Vec<EncodedBlock>,
@@ -25,6 +46,10 @@ pub struct CompressedFmap {
     pub w: usize,
     /// Q-table used (needed for decode).
     pub qtable: Block,
+    /// Cached `Σ blocks.compressed_bits()` (exact, set at compress).
+    bits: u64,
+    /// Cached `Σ blocks.nnz()` (exact, set at compress).
+    nnz: u64,
 }
 
 impl CompressedFmap {
@@ -34,8 +59,9 @@ impl CompressedFmap {
     }
 
     /// Total compressed size in bits (values + bitmaps + headers).
+    /// O(1): cached at compress time.
     pub fn compressed_bits(&self) -> u64 {
-        self.blocks.iter().map(|b| b.compressed_bits()).sum()
+        self.bits
     }
 
     /// Uncompressed size in bits at 16-bit fixed point.
@@ -48,65 +74,222 @@ impl CompressedFmap {
         self.compressed_bits() as f64 / self.original_bits() as f64
     }
 
-    /// Total non-zero coefficients (drives IDCT gating + SRAM traffic).
+    /// Total non-zero coefficients (drives IDCT gating + SRAM
+    /// traffic). O(1): cached at compress time.
     pub fn nnz(&self) -> u64 {
-        self.blocks.iter().map(|b| b.nnz() as u64).sum()
+        self.nnz
     }
 }
 
-/// Extract the 8×8 tile at (channel, row-frame `br`, col tile `bc`),
-/// zero-padding beyond the map edge.
-fn extract_block(x: &Tensor3, ch: usize, br: usize, bc: usize) -> Block {
-    let mut blk = [0f32; 64];
-    for r in 0..BLOCK {
-        let y = br * BLOCK + r;
-        if y >= x.h {
-            break;
-        }
-        for c in 0..BLOCK {
-            let xx = bc * BLOCK + c;
-            if xx >= x.w {
-                break;
-            }
-            blk[r * BLOCK + c] = x.get(ch, y, xx);
-        }
-    }
-    blk
+/// Reusable per-worker scratch for the fused tile kernel: one spatial/
+/// frequency block (the DCT runs in place), the q1 code block (reused
+/// as the decoder's coefficient buffer) and the q2 integer block. One
+/// instance per worker thread; no allocation per tile.
+#[derive(Clone)]
+pub struct CodecScratch {
+    tile: Block,
+    q1: Block,
+    q2: [i16; 64],
 }
 
-/// Write a decoded 8×8 tile back, cropping at the map edge.
-fn insert_block(x: &mut Tensor3, blk: &Block, ch: usize, br: usize,
-                bc: usize) {
-    for r in 0..BLOCK {
-        let y = br * BLOCK + r;
-        if y >= x.h {
-            break;
-        }
-        for c in 0..BLOCK {
-            let xx = bc * BLOCK + c;
-            if xx >= x.w {
-                break;
-            }
-            x.set(ch, y, xx, blk[r * BLOCK + c]);
+impl CodecScratch {
+    pub fn new() -> Self {
+        CodecScratch {
+            tile: [0f32; 64],
+            q1: [0f32; 64],
+            q2: [0i16; 64],
         }
     }
 }
 
-/// Compress a feature map with the given Q-table.
-pub fn compress(x: &Tensor3, qtable: &Block) -> CompressedFmap {
+impl Default for CodecScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Worker count for the parallel fmap paths: `FMC_THREADS` if set to a
+/// positive integer, else the machine's available parallelism.
+pub fn codec_threads() -> usize {
+    std::env::var("FMC_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Copy the 8×8 tile at (row-frame `br`, col tile `bc`) out of a
+/// channel plane, zero-padding beyond the map edge.
+#[inline]
+fn extract_tile(chan: &[f32], h: usize, w: usize, br: usize, bc: usize,
+                tile: &mut Block) {
+    tile.fill(0.0);
+    let rows = BLOCK.min(h - br * BLOCK);
+    let cols = BLOCK.min(w - bc * BLOCK);
+    for r in 0..rows {
+        let src = (br * BLOCK + r) * w + bc * BLOCK;
+        tile[r * BLOCK..r * BLOCK + cols]
+            .copy_from_slice(&chan[src..src + cols]);
+    }
+}
+
+/// Write a decoded 8×8 tile back into a channel plane, cropping at the
+/// map edge.
+#[inline]
+fn insert_tile(chan: &mut [f32], h: usize, w: usize, br: usize,
+               bc: usize, tile: &Block) {
+    let rows = BLOCK.min(h - br * BLOCK);
+    let cols = BLOCK.min(w - bc * BLOCK);
+    for r in 0..rows {
+        let dst = (br * BLOCK + r) * w + bc * BLOCK;
+        chan[dst..dst + cols]
+            .copy_from_slice(&tile[r * BLOCK..r * BLOCK + cols]);
+    }
+}
+
+/// Fused compress kernel for one channel plane: extract → in-place
+/// fast DCT → Eq.7 → Eq.8 → inline sparse encode, all on `scratch`.
+/// `out` must hold exactly `blocks_per_channel` entries.
+fn compress_channel_into(chan: &[f32], h: usize, w: usize, qt: &Block,
+                         out: &mut [EncodedBlock],
+                         scratch: &mut CodecScratch) {
+    let hb = h.div_ceil(BLOCK);
+    let wb = w.div_ceil(BLOCK);
+    debug_assert_eq!(out.len(), hb * wb);
+    let mut bi = 0;
+    for br in 0..hb {
+        for bc in 0..wb {
+            extract_tile(chan, h, w, br, bc, &mut scratch.tile);
+            dct::dct2d_fast_inplace(&mut scratch.tile);
+            let hdr = gemm_quantize_into(&scratch.tile, &mut scratch.q1);
+            qtable_quantize_into(&scratch.q1, qt, &hdr, &mut scratch.q2);
+            out[bi].encode_from(&scratch.q2, hdr);
+            bi += 1;
+        }
+    }
+}
+
+/// Fused decode kernel for one block: rebuild only the bitmap-named
+/// coefficients (Eq. 9 + Eq. 10 fused per value, bit-identical to the
+/// two-step dequantize at those positions), gate zero-coded
+/// coefficients to exact zero — the software twin of the hardware
+/// using the index bitmap as the IDCT multipliers' gate signal — and
+/// run the sparsity-gated inverse transform.
+///
+/// Gating is only valid when the block's zero-point is *interior*:
+/// a zero code then dequantizes to within `(0.5/IMAX)·span` of zero
+/// (the zp rounding residual the gate drops, same order as the
+/// hardware's own gating error). When the zero-point clamps — a block
+/// whose coefficients are all-positive or all-negative — a zero code
+/// dequantizes to ≈ fmin/fmax instead, so the kernel falls back to
+/// the dense two-step decode (bit-identical to the seed pipeline).
+#[inline]
+fn decode_tile(b: &EncodedBlock, qt: &Block, freq: &mut Block,
+               tile: &mut Block) {
+    let zp = b.header.zero_point();
+    let span = b.header.span();
+    if span > 0.0 && zp > 0.0 && zp < IMAX {
+        if b.bitmap == 0 {
+            tile.fill(0.0);
+            return;
+        }
+        freq.fill(0.0);
+        let vals = b.values();
+        let mut bm = b.bitmap;
+        let mut vi = 0;
+        while bm != 0 {
+            let i = bm.trailing_zeros() as usize;
+            let q1p = vals[vi] as f32 * qt[i] + zp;
+            freq[i] = q1p / IMAX * span + b.header.fmin;
+            vi += 1;
+            bm &= bm - 1;
+        }
+        dct::idct2d_sparse_into(freq, b.bitmap, tile);
+    } else {
+        // Clamped zero-point or degenerate span (where a zero code
+        // legitimately dequantizes to the zero-point value, not ≈ 0):
+        // dense decode, numerically identical to the two-step
+        // dequantize + dense inverse.
+        let q2 = b.decode();
+        let q1p = qtable_dequantize(&q2, qt, &b.header);
+        *tile = gemm_dequantize(&q1p, &b.header);
+        dct::idct2d_fast_inplace(tile);
+    }
+}
+
+/// Fused decompress kernel for one channel plane (symmetric to
+/// [`compress_channel_into`]).
+fn decompress_channel_into(blocks: &[EncodedBlock], qt: &Block,
+                           chan: &mut [f32], h: usize, w: usize,
+                           scratch: &mut CodecScratch) {
+    let hb = h.div_ceil(BLOCK);
+    let wb = w.div_ceil(BLOCK);
+    debug_assert_eq!(blocks.len(), hb * wb);
+    let mut bi = 0;
+    for br in 0..hb {
+        for bc in 0..wb {
+            let b = &blocks[bi];
+            bi += 1;
+            decode_tile(b, qt, &mut scratch.q1, &mut scratch.tile);
+            insert_tile(chan, h, w, br, bc, &scratch.tile);
+        }
+    }
+}
+
+/// Compress with an explicit worker count (1 = serial). The output is
+/// bit-identical for every worker count: channels are sharded
+/// contiguously and each block is produced by the same fused kernel.
+pub fn compress_with_threads(x: &Tensor3, qtable: &Block,
+                             threads: usize) -> CompressedFmap {
     let hb = x.h.div_ceil(BLOCK);
     let wb = x.w.div_ceil(BLOCK);
-    let mut blocks = Vec::with_capacity(x.c * hb * wb);
-    for ch in 0..x.c {
-        for br in 0..hb {
-            for bc in 0..wb {
-                let blk = extract_block(x, ch, br, bc);
-                let freq = dct::dct2d(&blk);
-                let (q1, hdr) = gemm_quantize(&freq);
-                let q2 = qtable_quantize(&q1, qtable, &hdr);
-                blocks.push(EncodedBlock::encode(&q2, hdr));
-            }
+    let bpc = hb * wb;
+    let mut blocks = vec![EncodedBlock::default(); x.c * bpc];
+    let threads = threads.clamp(1, x.c.max(1));
+    if threads == 1 || bpc == 0 {
+        let mut scratch = CodecScratch::new();
+        for ch in 0..x.c {
+            compress_channel_into(
+                x.channel(ch),
+                x.h,
+                x.w,
+                qtable,
+                &mut blocks[ch * bpc..(ch + 1) * bpc],
+                &mut scratch,
+            );
         }
+    } else {
+        let per = x.c.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (wi, chunk) in
+                blocks.chunks_mut(per * bpc).enumerate()
+            {
+                let first = wi * per;
+                s.spawn(move || {
+                    let mut scratch = CodecScratch::new();
+                    for (k, out) in chunk.chunks_mut(bpc).enumerate() {
+                        compress_channel_into(
+                            x.channel(first + k),
+                            x.h,
+                            x.w,
+                            qtable,
+                            out,
+                            &mut scratch,
+                        );
+                    }
+                });
+            }
+        });
+    }
+    let mut bits = 0u64;
+    let mut nnz = 0u64;
+    for b in &blocks {
+        bits += b.compressed_bits();
+        nnz += b.nnz() as u64;
     }
     CompressedFmap {
         blocks,
@@ -114,29 +297,81 @@ pub fn compress(x: &Tensor3, qtable: &Block) -> CompressedFmap {
         h: x.h,
         w: x.w,
         qtable: *qtable,
+        bits,
+        nnz,
     }
 }
 
-/// Decompress back to a dense (C, H, W) map.
-pub fn decompress(cf: &CompressedFmap) -> Tensor3 {
-    let hb = cf.h.div_ceil(BLOCK);
-    let wb = cf.w.div_ceil(BLOCK);
+/// Compress a feature map with the given Q-table (serial).
+pub fn compress(x: &Tensor3, qtable: &Block) -> CompressedFmap {
+    compress_with_threads(x, qtable, 1)
+}
+
+/// Compress with channels sharded across the worker pool; bit-identical
+/// to [`compress`].
+pub fn compress_par(x: &Tensor3, qtable: &Block) -> CompressedFmap {
+    compress_with_threads(x, qtable, codec_threads())
+}
+
+/// Decompress with an explicit worker count (1 = serial); the output
+/// is identical for every worker count.
+pub fn decompress_with_threads(cf: &CompressedFmap, threads: usize)
+                               -> Tensor3 {
+    let bpc = cf.blocks_per_channel();
+    let plane = cf.h * cf.w;
     let mut out = Tensor3::zeros(cf.c, cf.h, cf.w);
-    let mut bi = 0;
-    for ch in 0..cf.c {
-        for br in 0..hb {
-            for bc in 0..wb {
-                let b = &cf.blocks[bi];
-                bi += 1;
-                let q2 = b.decode();
-                let q1p = qtable_dequantize(&q2, &cf.qtable, &b.header);
-                let freq = gemm_dequantize(&q1p, &b.header);
-                let blk = dct::idct2d(&freq);
-                insert_block(&mut out, &blk, ch, br, bc);
-            }
+    let threads = threads.clamp(1, cf.c.max(1));
+    if threads == 1 || bpc == 0 || plane == 0 {
+        let mut scratch = CodecScratch::new();
+        for ch in 0..cf.c {
+            decompress_channel_into(
+                &cf.blocks[ch * bpc..(ch + 1) * bpc],
+                &cf.qtable,
+                out.channel_mut(ch),
+                cf.h,
+                cf.w,
+                &mut scratch,
+            );
         }
+    } else {
+        let per = cf.c.div_ceil(threads);
+        let (h, w) = (cf.h, cf.w);
+        std::thread::scope(|s| {
+            for (wi, chunk) in
+                out.data.chunks_mut(per * plane).enumerate()
+            {
+                let first = wi * per;
+                s.spawn(move || {
+                    let mut scratch = CodecScratch::new();
+                    for (k, chan) in
+                        chunk.chunks_mut(plane).enumerate()
+                    {
+                        let ch = first + k;
+                        decompress_channel_into(
+                            &cf.blocks[ch * bpc..(ch + 1) * bpc],
+                            &cf.qtable,
+                            chan,
+                            h,
+                            w,
+                            &mut scratch,
+                        );
+                    }
+                });
+            }
+        });
     }
     out
+}
+
+/// Decompress back to a dense (C, H, W) map (serial).
+pub fn decompress(cf: &CompressedFmap) -> Tensor3 {
+    decompress_with_threads(cf, 1)
+}
+
+/// Decompress with channels sharded across the worker pool; identical
+/// output to [`decompress`].
+pub fn decompress_par(cf: &CompressedFmap) -> Tensor3 {
+    decompress_with_threads(cf, codec_threads())
 }
 
 /// compress → decompress: what the next layer reads from the buffer.
@@ -144,9 +379,13 @@ pub fn roundtrip(x: &Tensor3, qtable: &Block) -> Tensor3 {
     decompress(&compress(x, qtable))
 }
 
-/// Reconstruction SNR (dB) of a codec roundtrip — the calibrator metric.
-pub fn roundtrip_snr_db(x: &Tensor3, qtable: &Block) -> f64 {
-    let y = roundtrip(x, qtable);
+/// Threaded [`roundtrip`] (identical output).
+pub fn roundtrip_par(x: &Tensor3, qtable: &Block) -> Tensor3 {
+    decompress_par(&compress_par(x, qtable))
+}
+
+/// Reconstruction SNR (dB) of `y` against the reference `x`.
+pub fn snr_db(x: &Tensor3, y: &Tensor3) -> f64 {
     let mut sig = 0f64;
     let mut err = 0f64;
     for (a, b) in x.data.iter().zip(y.data.iter()) {
@@ -159,6 +398,11 @@ pub fn roundtrip_snr_db(x: &Tensor3, qtable: &Block) -> f64 {
     } else {
         10.0 * (sig / err).log10()
     }
+}
+
+/// Reconstruction SNR (dB) of a codec roundtrip — the calibrator metric.
+pub fn roundtrip_snr_db(x: &Tensor3, qtable: &Block) -> f64 {
+    snr_db(x, &roundtrip(x, qtable))
 }
 
 #[cfg(test)]
@@ -245,5 +489,95 @@ mod tests {
         assert_eq!(cf.nnz(), 0);
         let y = decompress(&cf);
         assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cached_totals_match_block_walk() {
+        let x = rand_map(3, 20, 28, 6);
+        let cf = compress(&x, &qtable(1));
+        let bits: u64 =
+            cf.blocks.iter().map(|b| b.compressed_bits()).sum();
+        let nnz: u64 = cf.blocks.iter().map(|b| b.nnz() as u64).sum();
+        assert_eq!(cf.compressed_bits(), bits);
+        assert_eq!(cf.nnz(), nnz);
+    }
+
+    #[test]
+    fn parallel_paths_bit_identical() {
+        let x = rand_map(5, 17, 23, 7);
+        let qt = qtable(1);
+        let serial = compress(&x, &qt);
+        for threads in [2, 3, 8] {
+            let par = compress_with_threads(&x, &qt, threads);
+            assert_eq!(serial.blocks, par.blocks, "{threads} threads");
+            assert_eq!(serial.compressed_bits(), par.compressed_bits());
+            assert_eq!(serial.nnz(), par.nnz());
+        }
+        let dser = decompress(&serial);
+        for threads in [2, 3, 8] {
+            let dpar = decompress_with_threads(&serial, threads);
+            assert_eq!(dser.data, dpar.data, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn gated_decode_stays_within_zp_residual_of_dense() {
+        // The gated decoder drops only the zero-point rounding
+        // residual (≤ span/510 per zero-coded coefficient) relative
+        // to the seed's dense two-step decode; through the orthonormal
+        // inverse transform the per-element drift stays a small
+        // multiple of that. Blocks with a clamped zero-point take the
+        // dense fallback and must match exactly.
+        use crate::compress::dct;
+        use crate::compress::quant::{
+            gemm_dequantize, qtable_dequantize,
+        };
+
+        let x = rand_map(3, 27, 33, 9);
+        let qt = qtable(1);
+        let cf = compress(&x, &qt);
+        let y = decompress(&cf);
+        let hb = cf.h.div_ceil(BLOCK);
+        let wb = cf.w.div_ceil(BLOCK);
+        let mut bi = 0;
+        for ch in 0..cf.c {
+            for br in 0..hb {
+                for bc in 0..wb {
+                    let b = &cf.blocks[bi];
+                    bi += 1;
+                    let q2 = b.decode();
+                    let q1p =
+                        qtable_dequantize(&q2, &cf.qtable, &b.header);
+                    let freq = gemm_dequantize(&q1p, &b.header);
+                    let dense = dct::idct2d_fast(&freq);
+                    let zp = b.header.zero_point();
+                    let interior = b.header.span() > 0.0
+                        && zp > 0.0
+                        && zp < crate::compress::IMAX;
+                    let bound = if interior {
+                        // 64 coeffs × basis magnitude ≤ 1/4 × residual
+                        16.0 * 0.5 / 255.0 * b.header.span() + 1e-5
+                    } else {
+                        0.0 // dense fallback: exact
+                    };
+                    for r in 0..BLOCK {
+                        for c in 0..BLOCK {
+                            let (yy, xx) =
+                                (br * BLOCK + r, bc * BLOCK + c);
+                            if yy >= cf.h || xx >= cf.w {
+                                continue;
+                            }
+                            let got = y.get(ch, yy, xx);
+                            let want = dense[r * BLOCK + c];
+                            assert!(
+                                (got - want).abs() <= bound,
+                                "block {bi} ({r},{c}): {got} vs {want} \
+                                 (bound {bound})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 }

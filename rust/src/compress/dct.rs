@@ -181,31 +181,38 @@ pub fn idct1d_fast(z: &[f32; 8]) -> [f32; 8] {
     x
 }
 
-/// Forward 2-D DCT via the fast 1-D transform on rows then columns.
-pub fn dct2d_fast(x: &Block) -> Block {
-    let mut t = [0f32; 64];
+/// In-place forward 2-D DCT via the fast 1-D transform on rows then
+/// columns — the production codec path: works on a caller-provided
+/// block (no intermediate buffers beyond two stack 8-vectors), and is
+/// bit-identical to the out-of-place [`dct2d_fast`] (same op order).
+pub fn dct2d_fast_inplace(x: &mut Block) {
     for r in 0..8 {
         let row: [f32; 8] = x[r * 8..r * 8 + 8].try_into().unwrap();
         let out = dct1d_fast(&row);
-        t[r * 8..r * 8 + 8].copy_from_slice(&out);
+        x[r * 8..r * 8 + 8].copy_from_slice(&out);
     }
-    let mut z = [0f32; 64];
     for ccol in 0..8 {
         let mut col = [0f32; 8];
         for r in 0..8 {
-            col[r] = t[r * 8 + ccol];
+            col[r] = x[r * 8 + ccol];
         }
         let out = dct1d_fast(&col);
         for r in 0..8 {
-            z[r * 8 + ccol] = out[r];
+            x[r * 8 + ccol] = out[r];
         }
     }
+}
+
+/// Forward 2-D DCT via the fast 1-D transform on rows then columns.
+pub fn dct2d_fast(x: &Block) -> Block {
+    let mut z = *x;
+    dct2d_fast_inplace(&mut z);
     z
 }
 
-/// Inverse 2-D DCT via the fast 1-D transform on columns then rows.
-pub fn idct2d_fast(z: &Block) -> Block {
-    let mut t = [0f32; 64];
+/// In-place inverse 2-D DCT via the fast 1-D transform on columns then
+/// rows; bit-identical to [`idct2d_fast`] (same op order).
+pub fn idct2d_fast_inplace(z: &mut Block) {
     for ccol in 0..8 {
         let mut col = [0f32; 8];
         for r in 0..8 {
@@ -213,15 +220,114 @@ pub fn idct2d_fast(z: &Block) -> Block {
         }
         let out = idct1d_fast(&col);
         for r in 0..8 {
-            t[r * 8 + ccol] = out[r];
+            z[r * 8 + ccol] = out[r];
         }
     }
-    let mut x = [0f32; 64];
     for r in 0..8 {
-        let row: [f32; 8] = t[r * 8..r * 8 + 8].try_into().unwrap();
+        let row: [f32; 8] = z[r * 8..r * 8 + 8].try_into().unwrap();
         let out = idct1d_fast(&row);
-        x[r * 8..r * 8 + 8].copy_from_slice(&out);
+        z[r * 8..r * 8 + 8].copy_from_slice(&out);
     }
+}
+
+/// Inverse 2-D DCT via the fast 1-D transform on columns then rows.
+pub fn idct2d_fast(z: &Block) -> Block {
+    let mut x = *z;
+    idct2d_fast_inplace(&mut x);
+    x
+}
+
+/// 1-D inverse with per-input gating: input slot `i` participates only
+/// when bit `i` of `mask` is set. Callers must only clear bits whose
+/// inputs are exactly zero; the result is then value-identical
+/// (`f32 ==`, up to the sign of exact zeros) to [`idct1d_fast`],
+/// because every skipped term would have contributed `c * 0.0` in the
+/// same accumulation order.
+#[inline]
+fn idct1d_gated(z: &[f32; 8], mask: u8) -> [f32; 8] {
+    let ce = ce();
+    let co = co();
+    let mut s = [0f32; 4];
+    let mut d = [0f32; 4];
+    for k in 0..4 {
+        if mask & (1 << (2 * k)) != 0 {
+            let v = z[2 * k];
+            for n in 0..4 {
+                s[n] += ce[k][n] * v;
+            }
+        }
+        if mask & (1 << (2 * k + 1)) != 0 {
+            let v = z[2 * k + 1];
+            for n in 0..4 {
+                d[n] += co[k][n] * v;
+            }
+        }
+    }
+    let mut x = [0f32; 8];
+    for n in 0..4 {
+        x[n] = s[n] + d[n];
+        x[7 - n] = s[n] - d[n];
+    }
+    x
+}
+
+/// Sparsity-gated inverse 2-D DCT into a caller buffer: the software
+/// twin of the hardware's use of the index bitmap "as the gate signal
+/// of the multiplier in the IDCT module". Bit `r*8+c` of `bitmap` set
+/// ⇔ `z[r*8+c]` may be non-zero; cleared bits MUST correspond to
+/// exactly-zero coefficients (which is what the sparse decoder
+/// guarantees). All-zero blocks return immediately; all-zero columns
+/// are skipped wholesale; the remaining multiplies are gated per
+/// coefficient, so the cost scales with the non-zero count. Mirrors
+/// [`idct2d_fast`] stage for stage (columns then rows), so the output
+/// is value-identical (`f32 ==`) to the dense inverse.
+pub fn idct2d_sparse_into(z: &Block, bitmap: u64, out: &mut Block) {
+    if bitmap == 0 {
+        out.fill(0.0);
+        return;
+    }
+    // Per-column occupancy: col_rows[c] bit r ⇔ z[r*8+c] occupied;
+    // col_mask bit c ⇔ column c has any occupied row.
+    let mut col_rows = [0u8; 8];
+    let mut col_mask = 0u8;
+    for r in 0..8 {
+        let rowbits = ((bitmap >> (r * 8)) & 0xFF) as u8;
+        col_mask |= rowbits;
+        for (c, cr) in col_rows.iter_mut().enumerate() {
+            *cr |= ((rowbits >> c) & 1) << r;
+        }
+    }
+    // Stage 1 (columns), skipping empty ones: the dense transform of
+    // an exactly-zero column is exactly zero.
+    for c in 0..8 {
+        if col_rows[c] == 0 {
+            for r in 0..8 {
+                out[r * 8 + c] = 0.0;
+            }
+            continue;
+        }
+        let mut col = [0f32; 8];
+        for r in 0..8 {
+            col[r] = z[r * 8 + c];
+        }
+        let res = idct1d_gated(&col, col_rows[c]);
+        for r in 0..8 {
+            out[r * 8 + c] = res[r];
+        }
+    }
+    // Stage 2 (rows): a row entry can be non-zero only where its
+    // column survived stage 1, so gate on the column occupancy.
+    for r in 0..8 {
+        let row: [f32; 8] = out[r * 8..r * 8 + 8].try_into().unwrap();
+        let res = idct1d_gated(&row, col_mask);
+        out[r * 8..r * 8 + 8].copy_from_slice(&res);
+    }
+}
+
+/// Sparsity-gated inverse 2-D DCT (see [`idct2d_sparse_into`]).
+pub fn idct2d_sparse(z: &Block, bitmap: u64) -> Block {
+    let mut x = [0f32; 64];
+    idct2d_sparse_into(z, bitmap, &mut x);
     x
 }
 
@@ -319,5 +425,66 @@ mod tests {
     fn fast_saves_half_the_multiplies() {
         assert_eq!(MULS_NAIVE, 1024);
         assert_eq!(MULS_FAST, 512);
+    }
+
+    #[test]
+    fn inplace_variants_match_out_of_place() {
+        let mut p = Prng::new(21);
+        for _ in 0..20 {
+            let x = rand_block(&mut p);
+            let mut f = x;
+            dct2d_fast_inplace(&mut f);
+            assert_eq!(f, dct2d_fast(&x));
+            let mut i = x;
+            idct2d_fast_inplace(&mut i);
+            assert_eq!(i, idct2d_fast(&x));
+        }
+    }
+
+    /// Zero `z` wherever the mask bit is clear; returns the bitmap of
+    /// surviving (non-zero) coefficients.
+    fn mask_block(z: &mut Block, keep: u64) -> u64 {
+        let mut bm = 0u64;
+        for (i, v) in z.iter_mut().enumerate() {
+            if keep & (1 << i) == 0 {
+                *v = 0.0;
+            } else if *v != 0.0 {
+                bm |= 1 << i;
+            }
+        }
+        bm
+    }
+
+    #[test]
+    fn sparse_idct_matches_dense_on_random_masks() {
+        let mut p = Prng::new(22);
+        for _ in 0..100 {
+            let mut z = rand_block(&mut p);
+            let keep = p.next_u64() & p.next_u64(); // ~25% density
+            let bm = mask_block(&mut z, keep);
+            let dense = idct2d_fast(&z);
+            let sparse = idct2d_sparse(&z, bm);
+            assert_eq!(sparse, dense, "bitmap {bm:#018x}");
+        }
+    }
+
+    #[test]
+    fn sparse_idct_corner_cases() {
+        let mut p = Prng::new(23);
+        // all-zero block / empty bitmap
+        assert_eq!(idct2d_sparse(&[0f32; 64], 0), [0f32; 64]);
+        // dense bitmap = the plain fast inverse
+        let z = rand_block(&mut p);
+        assert_eq!(idct2d_sparse(&z, u64::MAX), idct2d_fast(&z));
+        // single DC coefficient
+        let mut dc = [0f32; 64];
+        dc[0] = 4.0;
+        assert_eq!(idct2d_sparse(&dc, 1), idct2d_fast(&dc));
+        // one full row / one full column
+        for keep in [0xFFu64, 0x0101_0101_0101_0101] {
+            let mut z = rand_block(&mut p);
+            let bm = mask_block(&mut z, keep);
+            assert_eq!(idct2d_sparse(&z, bm), idct2d_fast(&z));
+        }
     }
 }

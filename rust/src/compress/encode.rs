@@ -29,34 +29,70 @@ pub const INDEX_BITS: u64 = 64;
 pub const HEADER_BITS: u64 = 32;
 
 /// One sparse-encoded 8×8 block.
+///
+/// Storage is an inline `[i8; 64]` prefix + length rather than a
+/// per-block `Vec<i8>`: a block can never hold more than 64 non-zeros,
+/// so the inline array removes the per-block heap allocation from the
+/// codec hot path (encode is called once per 8×8 tile of every
+/// feature map) and keeps blocks contiguous in the fmap's block vec.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EncodedBlock {
     /// Index bitmap; bit (r*8+c) set ⇔ quantized value at (r,c) ≠ 0.
     pub bitmap: u64,
-    /// Non-zero values in row-major scan order, i8 each.
-    pub values: Vec<i8>,
     /// Inverse-quantization header.
     pub header: QuantHeader,
+    /// Non-zero values in row-major scan order; only `..len` is live
+    /// (the tail stays zeroed so derived `PartialEq` is prefix-exact).
+    values: [i8; 64],
+    /// Number of live values (= `bitmap.count_ones()`).
+    len: u8,
+}
+
+impl Default for EncodedBlock {
+    fn default() -> Self {
+        EncodedBlock {
+            bitmap: 0,
+            header: QuantHeader {
+                fmin: 0.0,
+                fmax: 0.0,
+            },
+            values: [0; 64],
+            len: 0,
+        }
+    }
 }
 
 impl EncodedBlock {
     /// Encode a quantized block (values must fit i8; all defined
     /// Q-tables guarantee |q2| ≤ 85).
     pub fn encode(q2: &[i16; 64], header: QuantHeader) -> Self {
+        let mut b = EncodedBlock::default();
+        b.encode_from(q2, header);
+        b
+    }
+
+    /// Re-encode in place (the fused codec kernel's allocation-free
+    /// path: blocks live in a pre-sized vec and are overwritten).
+    pub fn encode_from(&mut self, q2: &[i16; 64], header: QuantHeader) {
+        self.header = header;
+        self.values = [0; 64];
         let mut bitmap = 0u64;
-        let mut values = Vec::new();
+        let mut n = 0usize;
         for (i, &v) in q2.iter().enumerate() {
             if v != 0 {
                 bitmap |= 1u64 << i;
                 debug_assert!((-128..=127).contains(&v), "q2 overflow {v}");
-                values.push(v as i8);
+                self.values[n] = v as i8;
+                n += 1;
             }
         }
-        EncodedBlock {
-            bitmap,
-            values,
-            header,
-        }
+        self.bitmap = bitmap;
+        self.len = n as u8;
+    }
+
+    /// The packed non-zero values (row-major scan order).
+    pub fn values(&self) -> &[i8] {
+        &self.values[..self.len as usize]
     }
 
     /// Decode back to the dense quantized block.
@@ -69,13 +105,13 @@ impl EncodedBlock {
                 vi += 1;
             }
         }
-        debug_assert_eq!(vi, self.values.len());
+        debug_assert_eq!(vi, self.len as usize);
         q2
     }
 
     /// Number of non-zero coefficients.
     pub fn nnz(&self) -> usize {
-        self.values.len()
+        self.len as usize
     }
 
     /// Non-zeros in matrix row `r` (0..8).
@@ -85,7 +121,7 @@ impl EncodedBlock {
 
     /// Total storage cost in bits (bitmap + header + values).
     pub fn compressed_bits(&self) -> u64 {
-        INDEX_BITS + HEADER_BITS + VALUE_BITS * self.values.len() as u64
+        INDEX_BITS + HEADER_BITS + VALUE_BITS * self.len as u64
     }
 
     /// Per-coefficient multiplier gating mask for the IDCT module: the
@@ -190,6 +226,19 @@ mod tests {
         let e = EncodedBlock::encode(&q2, hdr());
         assert_eq!(e.nnz(), 4);
         assert_eq!(e.decode(), q2);
+    }
+
+    #[test]
+    fn encode_from_reuses_storage_cleanly() {
+        // Re-encoding a dense block then a sparse one must not leak
+        // stale values into the tail (PartialEq is prefix-exact).
+        let mut b = EncodedBlock::default();
+        b.encode_from(&[7i16; 64], hdr());
+        assert_eq!(b.nnz(), 64);
+        b.encode_from(&block_with(&[(5, -3)]), hdr());
+        assert_eq!(b.nnz(), 1);
+        assert_eq!(b.values(), &[-3i8][..]);
+        assert_eq!(b, EncodedBlock::encode(&block_with(&[(5, -3)]), hdr()));
     }
 
     #[test]

@@ -9,10 +9,13 @@
 //! decode  →  inverse Q-table (Eq.9)  →  inverse GEMM (Eq.10)  →  IDCT
 //! ```
 //!
-//! Submodules: [`dct`] (naive + Gong-fast transforms), [`qtable`],
-//! [`quant`], [`encode`] (bitmap + flip packing), [`codec`] (whole
-//! feature maps), [`baseline`] (RLE / CSR / COO / STC comparators),
-//! [`fixed`] (16-bit dynamic fixed point, 8-bit feature-wise quant).
+//! Submodules: [`dct`] (naive + Gong-fast transforms, in-place and
+//! sparsity-gated variants), [`qtable`], [`quant`], [`encode`]
+//! (bitmap + flip packing, inline-storage blocks), [`codec`] (whole
+//! feature maps: fused per-tile kernel, serial + thread-parallel
+//! entry points — see `README.md` in this directory), [`baseline`]
+//! (RLE / CSR / COO / STC comparators), [`fixed`] (16-bit dynamic
+//! fixed point, 8-bit feature-wise quant).
 
 pub mod baseline;
 pub mod codec;

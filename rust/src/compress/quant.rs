@@ -35,9 +35,11 @@ impl QuantHeader {
     }
 }
 
-/// Eq. 7: quantize DCT coefficients to q1 ∈ 0..=255 (returned as f32 to
-/// mirror the f32 kernel arithmetic). Degenerate blocks map to all-zero.
-pub fn gemm_quantize(freq: &Block) -> (Block, QuantHeader) {
+/// Eq. 7 into a caller buffer (the fused codec kernel's scratch):
+/// quantize DCT coefficients to q1 ∈ 0..=255 (as f32 to mirror the f32
+/// kernel arithmetic). Degenerate blocks map to all-zero. Bit-identical
+/// to [`gemm_quantize`].
+pub fn gemm_quantize_into(freq: &Block, q1: &mut Block) -> QuantHeader {
     let mut fmin = f32::INFINITY;
     let mut fmax = f32::NEG_INFINITY;
     for &v in freq.iter() {
@@ -46,20 +48,28 @@ pub fn gemm_quantize(freq: &Block) -> (Block, QuantHeader) {
     }
     let hdr = QuantHeader { fmin, fmax };
     let span = hdr.span();
-    let mut q1 = [0f32; 64];
     if span > 0.0 {
         for (q, &v) in q1.iter_mut().zip(freq.iter()) {
             *q = rint((v - fmin) / span * IMAX);
         }
+    } else {
+        q1.fill(0.0); // scratch may hold a previous block
     }
+    hdr
+}
+
+/// Eq. 7: quantize DCT coefficients to q1 ∈ 0..=255 (returned as f32 to
+/// mirror the f32 kernel arithmetic). Degenerate blocks map to all-zero.
+pub fn gemm_quantize(freq: &Block) -> (Block, QuantHeader) {
+    let mut q1 = [0f32; 64];
+    let hdr = gemm_quantize_into(freq, &mut q1);
     (q1, hdr)
 }
 
-/// Eq. 8 (+zp): `q2 = round((q1 - zp) / QT)`. |q2| ≤ 255 fits i16
-/// comfortably (i8 for every defined Q-table; i16 keeps the type safe
-/// for custom tables with entries < 3).
-pub fn qtable_quantize(q1: &Block, qt: &Block, hdr: &QuantHeader)
-                       -> [i16; 64] {
+/// Eq. 8 (+zp) into a caller buffer: `q2 = round((q1 - zp) / QT)`.
+/// Bit-identical to [`qtable_quantize`].
+pub fn qtable_quantize_into(q1: &Block, qt: &Block, hdr: &QuantHeader,
+                            q2: &mut [i16; 64]) {
     let zp = hdr.zero_point();
     // Two passes: the all-f32 divide/round loop auto-vectorizes
     // (vdivps+vroundps); interleaving the i16 casts defeats SIMD and
@@ -68,10 +78,18 @@ pub fn qtable_quantize(q1: &Block, qt: &Block, hdr: &QuantHeader)
     for i in 0..64 {
         tmp[i] = rint((q1[i] - zp) / qt[i]);
     }
-    let mut q2 = [0i16; 64];
     for i in 0..64 {
         q2[i] = tmp[i] as i16;
     }
+}
+
+/// Eq. 8 (+zp): `q2 = round((q1 - zp) / QT)`. |q2| ≤ 255 fits i16
+/// comfortably (i8 for every defined Q-table; i16 keeps the type safe
+/// for custom tables with entries < 3).
+pub fn qtable_quantize(q1: &Block, qt: &Block, hdr: &QuantHeader)
+                       -> [i16; 64] {
+    let mut q2 = [0i16; 64];
+    qtable_quantize_into(q1, qt, hdr, &mut q2);
     q2
 }
 

@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 use crate::config::{models, AccelConfig};
 use crate::coordinator::batcher::{next_batch, BatchPolicy};
 use crate::coordinator::metrics::Metrics;
+use crate::harness::profiles as harness_profiles;
 use crate::nn::Tensor3;
 use crate::runtime::Runtime;
 use crate::sim::scheduler::CompressionProfile;
@@ -45,8 +46,12 @@ pub struct ServerConfig {
     pub policy: BatchPolicy,
     /// Accelerator model for the per-request hardware accounting.
     pub accel: AccelConfig,
-    /// Compression profile applied in the hardware model (measured
-    /// ratio of the SmallCNN maps; None = uncompressed accounting).
+    /// Static override for the hardware model's compression profile.
+    /// `None` (the default) measures per-layer profiles at worker
+    /// startup by running the real threaded codec (`compress_par`)
+    /// over depth-representative activations — the
+    /// accounting then reflects what the served SmallCNN's interlayer
+    /// maps actually compress to, instead of a guessed constant.
     pub sim_profile: Option<CompressionProfile>,
 }
 
@@ -57,10 +62,7 @@ impl ServerConfig {
             compressed: true,
             policy: BatchPolicy::default(),
             accel: AccelConfig::default(),
-            sim_profile: Some(CompressionProfile {
-                ratio: 0.4,
-                nnz_density: 0.4,
-            }),
+            sim_profile: None,
         }
     }
 }
@@ -126,11 +128,25 @@ fn worker_loop(cfg: ServerConfig, rx: Receiver<Request>) -> Metrics {
     // same cycles/energy.
     let accel = Accelerator::new(cfg.accel.clone());
     let net = models::smallcnn();
-    let profiles: Vec<Option<CompressionProfile>> = net
-        .layers
-        .iter()
-        .map(|_| if cfg.compressed { cfg.sim_profile } else { None })
-        .collect();
+    let profiles: Vec<Option<CompressionProfile>> = if !cfg.compressed {
+        net.layers.iter().map(|_| None).collect()
+    } else if let Some(p) = cfg.sim_profile {
+        net.layers.iter().map(|_| Some(p)).collect()
+    } else {
+        // Measure with the real codec (threaded fmap pipeline): this
+        // is the accelerator-accounting path of the serving stream.
+        let sched = models::smallcnn()
+            .with_default_schedule(net.layers.len());
+        let measured = harness_profiles::profile_network(&sched, 11);
+        let prof = harness_profiles::to_sim_profiles(&measured);
+        eprintln!(
+            "worker: measured interlayer compression {:.1}% \
+             (codec, {} layers)",
+            harness_profiles::overall_ratio(&measured) * 100.0,
+            measured.iter().flatten().count(),
+        );
+        prof
+    };
     let hw = accel.run(&net, &profiles);
     let cycles_per_image = hw.stats.cycles;
     let energy_per_image = hw.energy.total_j();

@@ -51,9 +51,13 @@ pub fn calibrate_network(net: &Network, min_snr_db: f64, seed: u64)
             let mut ratio = [0f64; NUM_LEVELS];
             for level in 0..NUM_LEVELS {
                 let qt = qtable(level);
-                snr[level] = codec::roundtrip_snr_db(&fmap, &qt);
-                ratio[level] =
-                    codec::compress(&fmap, &qt).compression_ratio();
+                // One threaded compress per level feeds both metrics
+                // (the seed compressed every map twice, serially —
+                // calibration was the slowest step of the harness).
+                let cf = codec::compress_par(&fmap, &qt);
+                ratio[level] = cf.compression_ratio();
+                snr[level] =
+                    codec::snr_db(&fmap, &codec::decompress_par(&cf));
             }
             let chosen = calibrate_level(&snr, min_snr_db);
             LayerCalibration {

@@ -163,7 +163,7 @@ pub fn fig2_spectrum(seed: u64) -> Table {
                 }
             }
         }
-        let ratio = crate::compress::codec::compress(
+        let ratio = crate::compress::codec::compress_par(
             &fmap,
             &crate::compress::qtable::qtable(1),
         )

@@ -46,7 +46,9 @@ pub fn profile_layer(layer: &FusionLayer, layer_index: usize,
         smooth,
         relu_like,
     );
-    let cf = codec::compress(&fmap, &qtable(qlevel));
+    // Threaded codec: bit-identical to the serial path, so profiles
+    // stay deterministic given the seed.
+    let cf = codec::compress_par(&fmap, &qtable(qlevel));
     let ratio = cf.compression_ratio();
     let blocks = cf.blocks.len() as u64;
     let nnz_density = if blocks == 0 {

@@ -370,7 +370,7 @@ pub fn baseline_comparison(seed: u64) -> Table {
     ] {
         let fmap = natural_image(seed, 8, 56, 56, smooth, relu);
         let dct =
-            codec::compress(&fmap, &qtable(1)).compression_ratio();
+            codec::compress_par(&fmap, &qtable(1)).compression_ratio();
         t.row(&[
             name.to_string(),
             pct(dct),

@@ -245,8 +245,8 @@ fn compress_demo(args: &Args) -> i32 {
     let fmap = data::natural_image(
         seed, 8, 64, 64, data::Smoothness::Natural, true,
     );
-    let cf = codec::compress(&fmap, &qtable(level));
-    let rec = codec::decompress(&cf);
+    let cf = codec::compress_par(&fmap, &qtable(level));
+    let rec = codec::decompress_par(&cf);
     let snr = {
         let mut sig = 0f64;
         let mut err = 0f64;

@@ -60,6 +60,13 @@ impl Tensor3 {
         &self.data[ch * self.h * self.w..(ch + 1) * self.h * self.w]
     }
 
+    /// One channel as a mutable slice — the borrowed channel view the
+    /// codec's fused kernels write through (no per-channel copies).
+    pub fn channel_mut(&mut self, ch: usize) -> &mut [f32] {
+        let plane = self.h * self.w;
+        &mut self.data[ch * plane..(ch + 1) * plane]
+    }
+
     pub fn len(&self) -> usize {
         self.data.len()
     }
@@ -151,6 +158,15 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn from_vec_checks_shape() {
         Tensor3::from_vec(1, 2, 2, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn channel_views_alias_data() {
+        let mut t = Tensor3::zeros(2, 2, 3);
+        t.channel_mut(1)[4] = 9.0;
+        assert_eq!(t.channel(1)[4], 9.0);
+        assert_eq!(t.get(1, 1, 1), 9.0);
+        assert_eq!(t.channel(0), &[0.0; 6][..]);
     }
 
     #[test]

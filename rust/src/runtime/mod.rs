@@ -6,13 +6,18 @@
 //! reassigns ids (see /opt/xla-example/README.md). Executables are
 //! compiled once on the PJRT CPU client and cached; python never runs
 //! on this path.
+//!
+//! The XLA-backed implementation is gated behind the default-off
+//! `pjrt` cargo feature so the crate builds offline (the `xla` crate
+//! only exists in the PJRT-enabled image; see Cargo.toml). Without the
+//! feature, [`Runtime`] keeps the same API — manifest loading and the
+//! artifact metadata accessors work — but every execution entry point
+//! returns a clean error, which the server and CLI already surface.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context};
+use anyhow::Context;
 
-use crate::nn::Tensor3;
 use crate::util::json::Json;
 
 /// Artifact entry names emitted by aot.py.
@@ -22,18 +27,14 @@ pub const ENTRY_DCT_COMPRESS: &str = "dct_compress";
 pub const ENTRY_DCT_DECOMPRESS: &str = "dct_decompress";
 pub const ENTRY_FUSION_LAYER: &str = "fusion_layer";
 
-/// A loaded artifact bundle.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Json,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+/// Parsed `manifest.json` of an artifacts directory, with the `_meta`
+/// accessors shared by both runtime backends.
+pub(crate) struct Manifest {
+    json: Json,
 }
 
-impl Runtime {
-    /// Open an artifacts directory (expects `manifest.json`).
-    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
+impl Manifest {
+    pub(crate) fn open(dir: &Path) -> anyhow::Result<Manifest> {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| {
@@ -42,240 +43,60 @@ impl Runtime {
                     manifest_path.display()
                 )
             })?;
-        let manifest = Json::parse(&text)
-            .map_err(|e| anyhow!("manifest.json: {e}"))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            client,
-            dir,
-            manifest,
-            exes: HashMap::new(),
-        })
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        Ok(Manifest { json })
     }
 
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Raw manifest entry (only the real backend reads entry files).
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    pub(crate) fn get(&self, key: &str) -> &Json {
+        self.json.get(key)
     }
 
-    /// Batch size the model artifacts were lowered with.
-    pub fn model_batch(&self) -> usize {
-        self.manifest
+    pub(crate) fn model_batch(&self) -> usize {
+        self.json
             .get("_meta")
             .get("model_batch")
             .as_usize()
             .unwrap_or(4)
     }
 
-    /// Block count of the dct kernel artifacts.
-    pub fn dct_blocks(&self) -> usize {
-        self.manifest
+    pub(crate) fn dct_blocks(&self) -> usize {
+        self.json
             .get("_meta")
             .get("dct_blocks")
             .as_usize()
             .unwrap_or(1024)
     }
 
-    /// Number of classifier classes.
-    pub fn classes(&self) -> usize {
-        self.manifest
+    pub(crate) fn classes(&self) -> usize {
+        self.json
             .get("_meta")
             .get("classes")
             .as_usize()
             .unwrap_or(4)
     }
 
-    /// Per-layer calibrated Q-levels baked into the compressed model.
-    pub fn calibrated_qlevels(&self) -> Vec<usize> {
-        self.manifest
+    pub(crate) fn calibrated_qlevels(&self) -> Vec<usize> {
+        self.json
             .get("_meta")
             .get("calibrated_qlevels")
             .as_arr()
-            .map(|a| {
-                a.iter().filter_map(|v| v.as_usize()).collect()
-            })
+            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
             .unwrap_or_default()
     }
-
-    /// Compile (once) and return the executable for an entry.
-    fn entry(&mut self, name: &str)
-             -> anyhow::Result<&xla::PjRtLoadedExecutable> {
-        if !self.exes.contains_key(name) {
-            let file = self
-                .manifest
-                .get(name)
-                .get("file")
-                .as_str()
-                .ok_or_else(|| {
-                    anyhow!("manifest has no entry {name:?}")
-                })?
-                .to_string();
-            let path = self.dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().unwrap(),
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.exes.insert(name.to_string(), exe);
-        }
-        Ok(self.exes.get(name).unwrap())
-    }
-
-    /// Execute an entry on literal arguments; returns the flattened
-    /// output tuple (aot.py lowers with return_tuple=True).
-    pub fn exec(&mut self, name: &str, args: &[xla::Literal])
-                -> anyhow::Result<Vec<xla::Literal>> {
-        let exe = self.entry(name)?;
-        let result =
-            exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple()?)
-    }
-
-    /// Classify a batch of (1, 32, 32) images through the SmallCNN
-    /// artifact. `compressed` selects the interlayer-codec variant.
-    /// Returns (class, logits) per image.
-    pub fn classify(&mut self, images: &[Tensor3], compressed: bool)
-                    -> anyhow::Result<Vec<(usize, Vec<f32>)>> {
-        let batch = self.model_batch();
-        let classes = self.classes();
-        if images.is_empty() || images.len() > batch {
-            bail!("batch must be 1..={batch}, got {}", images.len());
-        }
-        let (c, h, w) = (images[0].c, images[0].h, images[0].w);
-        // pad to the lowered batch size
-        let mut flat = Vec::with_capacity(batch * c * h * w);
-        for img in images {
-            if (img.c, img.h, img.w) != (c, h, w) {
-                bail!("inconsistent image shapes in batch");
-            }
-            flat.extend_from_slice(&img.data);
-        }
-        flat.resize(batch * c * h * w, 0.0);
-        let lit = xla::Literal::vec1(&flat).reshape(&[
-            batch as i64,
-            c as i64,
-            h as i64,
-            w as i64,
-        ])?;
-        let entry = if compressed {
-            ENTRY_MODEL_COMP
-        } else {
-            ENTRY_MODEL
-        };
-        let out = self.exec(entry, &[lit])?;
-        let logits = out[0].to_vec::<f32>()?;
-        let mut res = Vec::with_capacity(images.len());
-        for i in 0..images.len() {
-            let row = &logits[i * classes..(i + 1) * classes];
-            let arg = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j)
-                .unwrap();
-            res.push((arg, row.to_vec()));
-        }
-        Ok(res)
-    }
-
-    /// Run the AOT-compiled L1 compress kernel on `n ≤ dct_blocks`
-    /// 8×8 blocks (row-major, n*64 floats). Returns (q2, fmin, fmax).
-    pub fn dct_compress(&mut self, blocks: &[f32], qtable: &[f32; 64])
-                        -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)>
-    {
-        let cap = self.dct_blocks();
-        let n = blocks.len() / 64;
-        if blocks.len() % 64 != 0 || n > cap {
-            bail!("blocks must be k*64 floats with k <= {cap}");
-        }
-        let mut padded = blocks.to_vec();
-        padded.resize(cap * 64, 0.0);
-        let b =
-            xla::Literal::vec1(&padded).reshape(&[cap as i64, 8, 8])?;
-        let qt = xla::Literal::vec1(&qtable[..]).reshape(&[8, 8])?;
-        let out = self.exec(ENTRY_DCT_COMPRESS, &[b, qt])?;
-        let q2 = out[0].to_vec::<f32>()?[..n * 64].to_vec();
-        let mn = out[1].to_vec::<f32>()?[..n].to_vec();
-        let mx = out[2].to_vec::<f32>()?[..n].to_vec();
-        Ok((q2, mn, mx))
-    }
-
-    /// Execute the parametric fusion-layer artifact:
-    /// conv3×3(pad 1) → BN → ReLU → max-pool2×2 → interlayer codec
-    /// roundtrip at Q-level 1, all inside the lowered JAX/Pallas graph.
-    /// Shapes are fixed at lowering time: x (16,32,32), w (32,16,3,3),
-    /// scale/bias (32,) → out (32,16,16).
-    pub fn fusion_layer(&mut self, x: &Tensor3, w: &[f32],
-                        scale: &[f32], bias: &[f32])
-                        -> anyhow::Result<Tensor3> {
-        let spec = self.manifest.get(ENTRY_FUSION_LAYER);
-        let xs = spec.get("args").idx(0).get("shape").f32_vec();
-        let ws = spec.get("args").idx(1).get("shape").f32_vec();
-        let os = spec.get("outputs").idx(0).get("shape").f32_vec();
-        let (cin, h, wd) =
-            (xs[0] as usize, xs[1] as usize, xs[2] as usize);
-        let cout = ws[0] as usize;
-        if (x.c, x.h, x.w) != (cin, h, wd) {
-            bail!("fusion_layer expects ({cin},{h},{wd})");
-        }
-        if w.len() != cout * cin * 9
-            || scale.len() != cout
-            || bias.len() != cout
-        {
-            bail!("fusion_layer weight shapes mismatch");
-        }
-        let out = self.exec(
-            ENTRY_FUSION_LAYER,
-            &[
-                xla::Literal::vec1(&x.data).reshape(&[
-                    cin as i64, h as i64, wd as i64,
-                ])?,
-                xla::Literal::vec1(w).reshape(&[
-                    cout as i64,
-                    cin as i64,
-                    3,
-                    3,
-                ])?,
-                xla::Literal::vec1(scale),
-                xla::Literal::vec1(bias),
-            ],
-        )?;
-        let data = out[0].to_vec::<f32>()?;
-        Ok(Tensor3::from_vec(
-            os[0] as usize,
-            os[1] as usize,
-            os[2] as usize,
-            data,
-        ))
-    }
-
-    /// Inverse of [`Self::dct_compress`].
-    pub fn dct_decompress(&mut self, q2: &[f32], fmin: &[f32],
-                          fmax: &[f32], qtable: &[f32; 64])
-                          -> anyhow::Result<Vec<f32>> {
-        let cap = self.dct_blocks();
-        let n = fmin.len();
-        if q2.len() != n * 64 || fmax.len() != n || n > cap {
-            bail!("inconsistent decompress args");
-        }
-        let mut q2p = q2.to_vec();
-        q2p.resize(cap * 64, 0.0);
-        let mut mn = fmin.to_vec();
-        mn.resize(cap, 0.0);
-        let mut mx = fmax.to_vec();
-        mx.resize(cap, 1.0);
-        let out = self.exec(
-            ENTRY_DCT_DECOMPRESS,
-            &[
-                xla::Literal::vec1(&q2p).reshape(&[cap as i64, 8, 8])?,
-                xla::Literal::vec1(&mn),
-                xla::Literal::vec1(&mx),
-                xla::Literal::vec1(&qtable[..]).reshape(&[8, 8])?,
-            ],
-        )?;
-        Ok(out[0].to_vec::<f32>()?[..n * 64].to_vec())
-    }
 }
+
+#[cfg(feature = "pjrt")]
+mod pjrt_backend;
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_backend;
+#[cfg(not(feature = "pjrt"))]
+pub use stub_backend::Runtime;
 
 /// Locate the artifacts directory: $FMC_ARTIFACTS or ./artifacts.
 pub fn default_artifacts_dir() -> PathBuf {

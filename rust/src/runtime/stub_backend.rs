@@ -1,0 +1,86 @@
+//! Offline stub backend (compiled when the `pjrt` feature is off).
+//!
+//! Keeps the full [`Runtime`] API so the coordinator, CLI and examples
+//! build and run without the `xla` crate: artifact discovery and the
+//! manifest metadata accessors behave identically to the real backend,
+//! while every execution entry point returns a clean error that the
+//! callers already surface (`serve`/`selftest` print it and exit
+//! non-zero). This is what keeps tier-1 `cargo build && cargo test`
+//! green in the offline environment.
+
+use std::path::Path;
+
+use anyhow::bail;
+
+use super::Manifest;
+use crate::nn::Tensor3;
+
+const DISABLED: &str = "fmc-accel was built without the `pjrt` \
+feature; rebuild with `--features pjrt` (and the xla path dependency, \
+see Cargo.toml) to execute artifacts";
+
+/// A loaded artifact bundle (metadata only; execution disabled).
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (expects `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let manifest = Manifest::open(dir.as_ref())?;
+        Ok(Runtime { manifest })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "disabled (built without the pjrt feature)".to_string()
+    }
+
+    /// Batch size the model artifacts were lowered with.
+    pub fn model_batch(&self) -> usize {
+        self.manifest.model_batch()
+    }
+
+    /// Block count of the dct kernel artifacts.
+    pub fn dct_blocks(&self) -> usize {
+        self.manifest.dct_blocks()
+    }
+
+    /// Number of classifier classes.
+    pub fn classes(&self) -> usize {
+        self.manifest.classes()
+    }
+
+    /// Per-layer calibrated Q-levels baked into the compressed model.
+    pub fn calibrated_qlevels(&self) -> Vec<usize> {
+        self.manifest.calibrated_qlevels()
+    }
+
+    /// Classify a batch of images — unavailable without `pjrt`.
+    pub fn classify(&mut self, _images: &[Tensor3], _compressed: bool)
+                    -> anyhow::Result<Vec<(usize, Vec<f32>)>> {
+        bail!("{DISABLED}");
+    }
+
+    /// Run the AOT compress kernel — unavailable without `pjrt`.
+    pub fn dct_compress(&mut self, _blocks: &[f32],
+                        _qtable: &[f32; 64])
+                        -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)>
+    {
+        bail!("{DISABLED}");
+    }
+
+    /// Run the fusion-layer artifact — unavailable without `pjrt`.
+    pub fn fusion_layer(&mut self, _x: &Tensor3, _w: &[f32],
+                        _scale: &[f32], _bias: &[f32])
+                        -> anyhow::Result<Tensor3> {
+        bail!("{DISABLED}");
+    }
+
+    /// Run the AOT decompress kernel — unavailable without `pjrt`.
+    pub fn dct_decompress(&mut self, _q2: &[f32], _fmin: &[f32],
+                          _fmax: &[f32], _qtable: &[f32; 64])
+                          -> anyhow::Result<Vec<f32>> {
+        bail!("{DISABLED}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Property tests for the parallel codec paths and the sparsity-gated
+//! inverse transform: `compress_par`/`decompress_par` must be
+//! bit-identical to the serial pipeline for any geometry and worker
+//! count, and `idct2d_sparse` must match `idct2d_fast` on any
+//! coefficient block whose masked-out entries are exactly zero.
+
+use fmc_accel::compress::{codec, dct, qtable::qtable};
+use fmc_accel::nn::Tensor3;
+use fmc_accel::testutil::{check_prop, Prng};
+
+fn rand_fmap(p: &mut Prng, cmax: usize, hw: usize) -> Tensor3 {
+    let c = 1 + p.below(cmax);
+    let h = 5 + p.below(hw);
+    let w = 5 + p.below(hw);
+    let mut t = Tensor3::zeros(c, h, w);
+    p.fill_normal(&mut t.data, 1.0);
+    t
+}
+
+#[test]
+fn compress_par_bit_identical_across_thread_counts() {
+    // Odd geometries (non-multiples of 8, fewer channels than
+    // workers) and thread counts 1/2/8: same blocks, same bitmaps,
+    // same headers, same cached totals.
+    check_prop("compress_par ≡ compress", 20, |p| {
+        let x = rand_fmap(p, 9, 40);
+        let qt = qtable(p.below(4));
+        let serial = codec::compress(&x, &qt);
+        for threads in [1usize, 2, 8] {
+            let par = codec::compress_with_threads(&x, &qt, threads);
+            assert_eq!(
+                serial.blocks.len(),
+                par.blocks.len(),
+                "block count @ {threads}"
+            );
+            // EncodedBlock's PartialEq covers bitmap, header, values.
+            assert_eq!(serial.blocks, par.blocks, "blocks @ {threads}");
+            assert_eq!(
+                serial.compressed_bits(),
+                par.compressed_bits(),
+                "bits @ {threads}"
+            );
+            assert_eq!(serial.nnz(), par.nnz(), "nnz @ {threads}");
+            assert_eq!(
+                serial.compression_ratio(),
+                par.compression_ratio()
+            );
+        }
+    });
+}
+
+#[test]
+fn decompress_par_bit_identical_across_thread_counts() {
+    check_prop("decompress_par ≡ decompress", 15, |p| {
+        let x = rand_fmap(p, 9, 40);
+        let cf = codec::compress(&x, &qtable(p.below(4)));
+        let serial = codec::decompress(&cf);
+        for threads in [1usize, 2, 8] {
+            let par = codec::decompress_with_threads(&cf, threads);
+            assert_eq!(serial.data, par.data, "@ {threads} threads");
+        }
+    });
+}
+
+#[test]
+fn par_entry_points_match_explicit_thread_counts() {
+    // The FMC_THREADS-driven entry points go through the same kernel.
+    let mut p = Prng::new(0xFEED);
+    let x = rand_fmap(&mut p, 6, 30);
+    let qt = qtable(1);
+    let serial = codec::compress(&x, &qt);
+    let par = codec::compress_par(&x, &qt);
+    assert_eq!(serial.blocks, par.blocks);
+    assert_eq!(
+        codec::decompress(&serial).data,
+        codec::decompress_par(&par).data
+    );
+    assert_eq!(
+        codec::roundtrip(&x, &qt).data,
+        codec::roundtrip_par(&x, &qt).data
+    );
+}
+
+#[test]
+fn idct_sparse_matches_fast_on_random_masks() {
+    check_prop("idct2d_sparse ≡ idct2d_fast", 50, |p| {
+        let mut z = [0f32; 64];
+        p.fill_normal(&mut z, 2.0);
+        // random density between ~6% and 100%
+        let mut keep = u64::MAX;
+        for _ in 0..p.below(5) {
+            keep &= p.next_u64();
+        }
+        let mut bm = 0u64;
+        for (i, v) in z.iter_mut().enumerate() {
+            if keep & (1 << i) == 0 {
+                *v = 0.0;
+            } else if *v != 0.0 {
+                bm |= 1 << i;
+            }
+        }
+        let dense = dct::idct2d_fast(&z);
+        let sparse = dct::idct2d_sparse(&z, bm);
+        assert_eq!(sparse, dense, "bitmap {bm:#018x}");
+    });
+}
+
+#[test]
+fn idct_sparse_corner_bitmaps() {
+    let mut p = Prng::new(31);
+    let mut z = [0f32; 64];
+    p.fill_normal(&mut z, 1.0);
+    // dense bitmap on a dense block
+    assert_eq!(dct::idct2d_sparse(&z, u64::MAX), dct::idct2d_fast(&z));
+    // all-zero block with empty bitmap
+    assert_eq!(dct::idct2d_sparse(&[0f32; 64], 0), [0f32; 64]);
+    // empty bitmap must win over stale coefficients per the contract:
+    // callers guarantee cleared bits are zero, so pass a zero block
+    let zeros = [0f32; 64];
+    assert_eq!(dct::idct2d_sparse(&zeros, 0), dct::idct2d_fast(&zeros));
+}

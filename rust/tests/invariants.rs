@@ -36,7 +36,7 @@ fn codec_decode_is_exact_inverse_of_encode() {
                 &q2, b.header,
             );
             assert_eq!(re.bitmap, b.bitmap);
-            assert_eq!(re.values, b.values);
+            assert_eq!(re.values(), b.values());
         }
     });
 }

@@ -1,6 +1,9 @@
-//! PJRT runtime integration tests. Require `make artifacts`; each test
-//! skips (prints a notice) when artifacts are absent so `cargo test`
-//! stays green on a clean checkout.
+//! PJRT runtime integration tests. Require the `pjrt` feature (the
+//! whole file is compiled out on the default stub build, where every
+//! execution entry point errors by design) plus `make artifacts`;
+//! each test skips (prints a notice) when artifacts are absent so
+//! `cargo test --features pjrt` stays green on a clean checkout.
+#![cfg(feature = "pjrt")]
 
 use fmc_accel::compress::{codec, dct, quant, qtable::qtable};
 use fmc_accel::data;

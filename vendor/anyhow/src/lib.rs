@@ -1,0 +1,182 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! crates.io is unreachable in this environment (DESIGN.md §4), so the
+//! error-handling subset the repo actually uses is provided in-repo as
+//! a path dependency with the same crate name and API shape:
+//!
+//! * [`Error`] — an opaque error carrying a context chain of messages;
+//!   like the real crate it deliberately does **not** implement
+//!   `std::error::Error`, which is what allows the blanket
+//!   `From<E: std::error::Error>` conversion behind `?`.
+//! * [`Result`] — `Result<T, Error>` with the error type defaulted.
+//! * [`anyhow!`] / [`bail!`] — formatted construction / early return.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on results and
+//!   options.
+//!
+//! Display follows the real crate's convention: `{}` prints the
+//! outermost message, `{:#}` prints the whole chain separated by `: `
+//! (the form the binaries use in their `eprintln!("{e:#}")` calls).
+
+use std::fmt;
+
+/// Opaque error: a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    #[must_use]
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (mirrors `Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug prints the full chain, like the real crate's report.
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for results and options.
+pub trait Context<T> {
+    /// Attach a context message to the error case.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-built context message to the error case.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error =
+            Result::<(), _>::Err(io_err()).context("reading x").unwrap_err();
+        assert_eq!(format!("{e}"), "reading x");
+        assert_eq!(format!("{e:#}"), "reading x: gone");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{:#}", f().unwrap_err()), "gone");
+    }
+
+    #[test]
+    fn bail_and_anyhow() {
+        fn f(n: usize) -> Result<usize> {
+            if n == 0 {
+                bail!("zero of {n}");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "zero of 0");
+        assert_eq!(format!("{}", anyhow!("x {}", 7)), "x 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| "missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+}
