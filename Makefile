@@ -8,7 +8,7 @@
 
 CARGO ?= cargo
 
-.PHONY: all build test fmt clippy smoke bench-codec golden verify
+.PHONY: all build test fmt clippy smoke bench-check bench-codec golden verify
 
 all: build
 
@@ -24,12 +24,31 @@ fmt:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
-# Quick smoke of the hot-path bench (does NOT rewrite the checked-in
-# BENCH_codec_hotpath.json baseline; use bench-codec for that).
+# Quick smoke of the hot-path bench. Does NOT rewrite the checked-in
+# BENCH_codec_hotpath.json baseline (use bench-codec for that); it
+# writes target/BENCH_codec_hotpath.smoke.json for the regression gate.
 smoke:
 	FMC_BENCH_QUICK=1 $(CARGO) bench --bench codec_hotpath
 
-# Full codec hot-path benchmark.
+# Bench-regression gate. Reuses the smoke json if a smoke run already
+# produced one (CI runs `make verify` first, which ends with smoke);
+# runs smoke itself otherwise. Two checks: the machine-independent
+# within-run invariant (pooled must not fall below the spawn-per-call
+# scoped baseline) and, when the checked-in baseline has entries AND
+# was measured on comparable hardware, a >25% absolute-throughput
+# drop (the tolerance absorbs smoke-run noise).
+# Always re-runs smoke so the gate measures the current build;
+# FMC_BENCH_REUSE=1 (set by CI right after `make verify` smoked the
+# same fresh checkout) reuses the existing json instead.
+bench-check:
+	@if [ -z "$(FMC_BENCH_REUSE)" ] \
+	  || [ ! -f target/BENCH_codec_hotpath.smoke.json ]; then \
+	  $(MAKE) smoke; fi
+	python3 tools/bench_compare.py BENCH_codec_hotpath.json \
+	  target/BENCH_codec_hotpath.smoke.json --tolerance 0.25 \
+	  --check-invariants --min-pool-ratio 0.5
+
+# Full codec hot-path benchmark (rewrites the checked-in baseline).
 bench-codec:
 	$(CARGO) bench --bench codec_hotpath
 

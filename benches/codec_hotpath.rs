@@ -1,15 +1,22 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
-//! DCT naive vs Gong-fast, dense vs sparsity-gated IDCT, and the
+//! DCT naive vs Gong-fast, dense vs sparsity-gated IDCT, the
 //! whole-feature-map compress/decompress throughput of the serial vs
-//! the thread-parallel (`FMC_THREADS`) fmap pipeline.
+//! the pooled (`FMC_THREADS`) fmap pipeline, and the many-small-fmap
+//! serving workload where the persistent executor pool amortizes the
+//! per-call `thread::scope` spawns the seed paid (`scoped` entries are
+//! that baseline, kept for the cross-PR comparison).
 //!
 //! Emits `BENCH_codec_hotpath.json` (name → mean ns + Melem/s) via
 //! `bench_util::BenchReport` so the perf trajectory is tracked across
-//! PRs. Set `FMC_BENCH_QUICK=1` for a fast smoke run (CI).
+//! PRs. Set `FMC_BENCH_QUICK=1` for a fast smoke run (CI): it writes
+//! `target/BENCH_codec_hotpath.smoke.json` instead of the baseline,
+//! which `tools/bench_compare.py` diffs against the checked-in file.
 
-use fmc_accel::bench_util::{BenchReport, Bencher};
+use fmc_accel::bench_util::{BenchReport, Bencher, Sample};
 use fmc_accel::compress::{codec, dct, qtable::qtable};
 use fmc_accel::data::{natural_image, Smoothness};
+use fmc_accel::exec;
+use fmc_accel::nn::Tensor3;
 use fmc_accel::testutil::Prng;
 
 /// Zero out everything outside the top-left triangle (the typical
@@ -86,7 +93,8 @@ fn main() {
         acc
     });
 
-    // Whole-feature-map pipeline, serial vs parallel.
+    // Whole-feature-map pipeline: serial vs the persistent pool
+    // ("parallel" = the production compress_par/decompress_par path).
     let fmap =
         natural_image(9, 32, 64, 64, Smoothness::Natural, true);
     let qt = qtable(1);
@@ -100,7 +108,7 @@ fn main() {
     assert_eq!(
         cf.blocks,
         codec::compress_par(&fmap, &qt).blocks,
-        "parallel compress must be bit-identical"
+        "pooled compress must be bit-identical"
     );
     let s8 = b.run("decompress 32x64x64 serial", || {
         codec::decompress(&cf).data[0]
@@ -109,8 +117,74 @@ fn main() {
         codec::decompress_par(&cf).data[0]
     });
 
+    // The serving-shaped workload: a stream of many *small* maps
+    // (profiling samples, calibration sweeps, per-request interlayer
+    // maps). Here the per-call `thread::scope` spawn the seed paid is
+    // the dominant cost — `scoped` is that baseline, `pooled` is the
+    // persistent-pool path that amortizes it.
+    let threads = exec::global().threads();
+    let small: Vec<Tensor3> = (0..64)
+        .map(|i| {
+            natural_image(
+                100 + i as u64,
+                8,
+                16,
+                16,
+                Smoothness::Natural,
+                true,
+            )
+        })
+        .collect();
+    let s10 = b.run("compress 64x(8x16x16) serial", || {
+        let mut acc = 0u64;
+        for m in &small {
+            acc += codec::compress(m, &qt).compressed_bits();
+        }
+        acc
+    });
+    let s11 = b.run("compress 64x(8x16x16) scoped", || {
+        let mut acc = 0u64;
+        for m in &small {
+            acc += codec::compress_scoped_threads(m, &qt, threads)
+                .compressed_bits();
+        }
+        acc
+    });
+    let s12 = b.run("compress 64x(8x16x16) pooled", || {
+        let mut acc = 0u64;
+        for m in &small {
+            acc += codec::compress_par(m, &qt).compressed_bits();
+        }
+        acc
+    });
+    let small_cf: Vec<_> =
+        small.iter().map(|m| codec::compress(m, &qt)).collect();
+    for (m, c) in small.iter().zip(small_cf.iter()) {
+        assert_eq!(
+            c.blocks,
+            codec::compress_par(m, &qt).blocks,
+            "pooled small-fmap compress must be bit-identical"
+        );
+    }
+    let s13 = b.run("decompress 64x(8x16x16) scoped", || {
+        let mut acc = 0f32;
+        for c in &small_cf {
+            acc += codec::decompress_scoped_threads(c, threads)
+                .data[0];
+        }
+        acc
+    });
+    let s14 = b.run("decompress 64x(8x16x16) pooled", || {
+        let mut acc = 0f32;
+        for c in &small_cf {
+            acc += codec::decompress_par(c).data[0];
+        }
+        acc
+    });
+
     let blk_elems = Some(4096u64 * 64);
     let fmap_elems = Some((32 * 64 * 64) as u64);
+    let small_elems = Some((64 * 8 * 16 * 16) as u64);
     for (s, elems) in [
         (&s1, blk_elems),
         (&s2, blk_elems),
@@ -121,42 +195,59 @@ fn main() {
         (&s7, fmap_elems),
         (&s8, fmap_elems),
         (&s9, fmap_elems),
+        (&s10, small_elems),
+        (&s11, small_elems),
+        (&s12, small_elems),
+        (&s13, small_elems),
+        (&s14, small_elems),
     ] {
         println!("{}", s.report());
         report.push(s, elems);
     }
 
-    let elems = (32 * 64 * 64) as f64;
-    let tput = |s: &fmc_accel::bench_util::Sample| {
-        elems / s.mean.as_secs_f64() / 1e6
+    let speedup = |base: &Sample, new: &Sample| {
+        base.mean.as_secs_f64() / new.mean.as_secs_f64()
     };
+    let elems = (32 * 64 * 64) as f64;
+    let tput = |s: &Sample| elems / s.mean.as_secs_f64() / 1e6;
     println!();
     println!(
-        "compress   serial/parallel : {:7.1} / {:7.1} Melem/s ({:.2}x)",
+        "compress   serial/pooled  : {:7.1} / {:7.1} Melem/s ({:.2}x)",
         tput(&s6),
         tput(&s7),
-        s6.mean.as_secs_f64() / s7.mean.as_secs_f64()
+        speedup(&s6, &s7)
     );
     println!(
-        "decompress serial/parallel : {:7.1} / {:7.1} Melem/s ({:.2}x)",
+        "decompress serial/pooled  : {:7.1} / {:7.1} Melem/s ({:.2}x)",
         tput(&s8),
         tput(&s9),
-        s8.mean.as_secs_f64() / s9.mean.as_secs_f64()
+        speedup(&s8, &s9)
+    );
+    println!(
+        "small fmaps: pooled vs scoped compress   {:.2}x, \
+         decompress {:.2}x (spawn amortization)",
+        speedup(&s11, &s12),
+        speedup(&s13, &s14)
     );
     println!(
         "fast-DCT speedup over naive: {:.2}x",
-        s1.mean.as_secs_f64() / s2.mean.as_secs_f64()
+        speedup(&s1, &s2)
     );
     println!(
         "gated-IDCT speedup (masked): {:.2}x",
-        s4.mean.as_secs_f64() / s5.mean.as_secs_f64()
+        speedup(&s4, &s5)
     );
-    println!("codec worker threads       : {}", codec::codec_threads());
+    println!("exec pool workers          : {threads}");
 
     if quick {
         // Smoke runs (1 warmup / 3 iters) are too noisy to serve as
-        // the cross-PR baseline; only full runs rewrite the file.
-        println!("quick mode: not rewriting BENCH_codec_hotpath.json");
+        // the cross-PR baseline; they write a side file that the CI
+        // regression gate diffs against the checked-in baseline.
+        match report.write_to("target/BENCH_codec_hotpath.smoke.json")
+        {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write smoke json: {e}"),
+        }
     } else {
         match report.write() {
             Ok(path) => println!("wrote {}", path.display()),

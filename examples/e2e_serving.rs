@@ -48,8 +48,11 @@ fn main() -> anyhow::Result<()> {
         profiles::overall_ratio(&prof) * 100.0
     );
 
-    // --- serve
-    let mut cfg = ServerConfig::new(default_artifacts_dir());
+    // --- serve (multi-worker: one batcher sharding batches across
+    //     FMC_WORKERS runtime workers, default 2)
+    let workers = fmc_accel::cli::env_usize("FMC_WORKERS", 2);
+    let mut cfg = ServerConfig::new(default_artifacts_dir())
+        .with_workers(workers);
     cfg.compressed = true;
     let server = InferenceServer::start(cfg)?;
     let workload = data::shapes_batch(2024, n, 32);
@@ -58,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     let rxs: Vec<_> = workload
         .iter()
         .map(|(img, _)| server.submit(img.clone()))
-        .collect();
+        .collect::<anyhow::Result<Vec<_>>>()?;
     let mut correct = 0usize;
     let mut sim_cycles = 0u64;
     let mut sim_energy = 0f64;
@@ -74,6 +77,7 @@ fn main() -> anyhow::Result<()> {
     let metrics = server.shutdown();
 
     println!("requests          : {n}");
+    println!("workers           : {workers}");
     println!("batches           : {}", metrics.batches);
     println!(
         "accuracy          : {:.1}%",

@@ -183,7 +183,21 @@ impl BenchReport {
 
     /// Write `BENCH_<name>.json`; returns the path written.
     pub fn write(&self) -> std::io::Result<PathBuf> {
-        let path = PathBuf::from(format!("BENCH_{}.json", self.bench));
+        self.write_to(format!("BENCH_{}.json", self.bench))
+    }
+
+    /// Write the report to an explicit path (parent directories are
+    /// created). The CI smoke run writes next to `target/` instead of
+    /// over the checked-in baseline, then diffs the two (see
+    /// `tools/bench_compare.py`).
+    pub fn write_to(&self, path: impl Into<PathBuf>)
+                    -> std::io::Result<PathBuf> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
         let mut top = BTreeMap::new();
         top.insert(
             "bench".to_string(),
@@ -235,5 +249,24 @@ mod tests {
     #[test]
     fn pct_format() {
         assert_eq!(pct(0.3063), "30.63%");
+    }
+
+    #[test]
+    fn report_write_to_creates_parent_dirs() {
+        let b = Bencher::new(0, 1);
+        let s = b.run("noop", || 1u32);
+        let mut r = BenchReport::new("writeto_test");
+        r.push(&s, Some(64));
+        let dir = std::env::temp_dir()
+            .join("fmc_bench_util_test")
+            .join("nested");
+        let path = dir.join("BENCH_writeto_test.json");
+        let written = r.write_to(&path).unwrap();
+        let text = std::fs::read_to_string(&written).unwrap();
+        assert!(text.contains("writeto_test"));
+        assert!(text.contains("melem_per_s"));
+        let _ = std::fs::remove_dir_all(
+            std::env::temp_dir().join("fmc_bench_util_test"),
+        );
     }
 }

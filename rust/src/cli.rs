@@ -73,6 +73,17 @@ impl Args {
     }
 }
 
+/// Positive-integer environment knob: `name` if set to a positive
+/// integer, else `default`. (`FMC_WORKERS` for the serve command's
+/// worker count, mirroring the executor pool's `FMC_THREADS`.)
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,6 +114,14 @@ mod tests {
         assert_eq!(a.opt_or("missing", "d"), "d");
         assert_eq!(a.opt_usize("n", 3), 3);
         assert_eq!(a.opt_f64("r", 0.5), 0.5);
+    }
+
+    #[test]
+    fn env_usize_parses_and_defaults() {
+        // unset → default; the positive-integer filter is shared with
+        // FMC_THREADS parsing, tested via the default path here to
+        // keep the test hermetic (no env mutation).
+        assert_eq!(env_usize("FMC_TEST_UNSET_KNOB_XYZ", 3), 3);
     }
 
     #[test]

@@ -14,10 +14,16 @@
 //!   the index bitmap (zero-coded coefficients are gated to exact
 //!   zero, mirroring the hardware's bitmap-gated IDCT multipliers)
 //!   and feeds the sparsity-gated inverse [`dct::idct2d_sparse_into`];
-//! * [`compress_par`] / [`decompress_par`] shard channels across a
-//!   `std::thread::scope` worker pool (`FMC_THREADS`, default =
-//!   available parallelism) and are bit-identical to the serial
-//!   [`compress`] / [`decompress`] — channels are independent.
+//! * [`compress_par`] / [`decompress_par`] shard channels over the
+//!   slots of the persistent [`crate::exec`] pool (`FMC_THREADS`,
+//!   default = available parallelism) and are bit-identical to the
+//!   serial [`compress`] / [`decompress`] — channels are independent
+//!   and the shard split depends only on the shard *count*, never on
+//!   which pool worker runs a shard. The seed's per-call
+//!   `std::thread::scope` spawn is kept only as the benchmark
+//!   baseline ([`compress_scoped_threads`] /
+//!   [`decompress_scoped_threads`]) so `BENCH_codec_hotpath.json`
+//!   records the spawn-amortization win on many small maps.
 
 use super::dct;
 use super::encode::EncodedBlock;
@@ -26,6 +32,7 @@ use super::quant::{
     qtable_quantize_into,
 };
 use super::{Block, BLOCK, IMAX};
+use crate::exec::ExecPool;
 use crate::nn::Tensor3;
 
 /// Bits per original (uncompressed) activation: the accelerator stores
@@ -109,17 +116,10 @@ impl Default for CodecScratch {
 }
 
 /// Worker count for the parallel fmap paths: `FMC_THREADS` if set to a
-/// positive integer, else the machine's available parallelism.
+/// positive integer, else the machine's available parallelism. (Alias
+/// of [`crate::exec::pool_threads`] — the pool owns the knob now.)
 pub fn codec_threads() -> usize {
-    std::env::var("FMC_THREADS")
-        .ok()
-        .and_then(|s| s.trim().parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        })
+    crate::exec::pool_threads()
 }
 
 /// Copy the 8×8 tile at (row-frame `br`, col tile `bc`) out of a
@@ -240,28 +240,116 @@ fn decompress_channel_into(blocks: &[EncodedBlock], qt: &Block,
     }
 }
 
-/// Compress with an explicit worker count (1 = serial). The output is
-/// bit-identical for every worker count: channels are sharded
-/// contiguously and each block is produced by the same fused kernel.
+/// Serial compress core shared by every entry point below.
+fn compress_serial_into(x: &Tensor3, qtable: &Block, bpc: usize,
+                        blocks: &mut [EncodedBlock]) {
+    let mut scratch = CodecScratch::new();
+    for ch in 0..x.c {
+        compress_channel_into(
+            x.channel(ch),
+            x.h,
+            x.w,
+            qtable,
+            &mut blocks[ch * bpc..(ch + 1) * bpc],
+            &mut scratch,
+        );
+    }
+}
+
+/// Assemble the [`CompressedFmap`] (cached totals) from filled blocks.
+fn finish_compress(x: &Tensor3, qtable: &Block,
+                   blocks: Vec<EncodedBlock>) -> CompressedFmap {
+    let mut bits = 0u64;
+    let mut nnz = 0u64;
+    for b in &blocks {
+        bits += b.compressed_bits();
+        nnz += b.nnz() as u64;
+    }
+    CompressedFmap {
+        blocks,
+        c: x.c,
+        h: x.h,
+        w: x.w,
+        qtable: *qtable,
+        bits,
+        nnz,
+    }
+}
+
+/// Compress with channel shards submitted to `pool` (`shards` = 1 is
+/// the inline serial path). The output is bit-identical for every
+/// shard count and pool size: channels are sharded contiguously by the
+/// shard *count* alone, and each block is produced by the same fused
+/// kernel regardless of which pool worker runs its shard.
+pub fn compress_sharded(x: &Tensor3, qtable: &Block, shards: usize,
+                        pool: &ExecPool) -> CompressedFmap {
+    let hb = x.h.div_ceil(BLOCK);
+    let wb = x.w.div_ceil(BLOCK);
+    let bpc = hb * wb;
+    let mut blocks = vec![EncodedBlock::default(); x.c * bpc];
+    let shards = shards.clamp(1, x.c.max(1));
+    if shards == 1 || bpc == 0 {
+        compress_serial_into(x, qtable, bpc, &mut blocks);
+    } else {
+        let per = x.c.div_ceil(shards);
+        pool.scope(|s| {
+            for (wi, chunk) in
+                blocks.chunks_mut(per * bpc).enumerate()
+            {
+                let first = wi * per;
+                s.submit(move || {
+                    let mut scratch = CodecScratch::new();
+                    for (k, out) in chunk.chunks_mut(bpc).enumerate() {
+                        compress_channel_into(
+                            x.channel(first + k),
+                            x.h,
+                            x.w,
+                            qtable,
+                            out,
+                            &mut scratch,
+                        );
+                    }
+                });
+            }
+        });
+    }
+    finish_compress(x, qtable, blocks)
+}
+
+/// Compress with an explicit shard count on the global pool (1 =
+/// serial); bit-identical to [`compress`] for every count. The
+/// serial case never touches the pool, so purely-serial processes
+/// (golden tests, single-map callers) spawn no worker threads.
 pub fn compress_with_threads(x: &Tensor3, qtable: &Block,
                              threads: usize) -> CompressedFmap {
+    if threads.clamp(1, x.c.max(1)) == 1 {
+        let bpc = x.h.div_ceil(BLOCK) * x.w.div_ceil(BLOCK);
+        let mut blocks = vec![EncodedBlock::default(); x.c * bpc];
+        compress_serial_into(x, qtable, bpc, &mut blocks);
+        return finish_compress(x, qtable, blocks);
+    }
+    compress_sharded(x, qtable, threads, crate::exec::global())
+}
+
+/// Compress sharded over all slots of an explicit pool.
+pub fn compress_with_pool(x: &Tensor3, qtable: &Block,
+                          pool: &ExecPool) -> CompressedFmap {
+    compress_sharded(x, qtable, pool.threads(), pool)
+}
+
+/// Spawn-per-call baseline: the seed's `std::thread::scope` sharding,
+/// kept (not wired to any production path) so the codec_hotpath bench
+/// can record the pool's spawn-amortization win on many small maps.
+/// Bit-identical to [`compress`].
+pub fn compress_scoped_threads(x: &Tensor3, qtable: &Block,
+                               threads: usize) -> CompressedFmap {
     let hb = x.h.div_ceil(BLOCK);
     let wb = x.w.div_ceil(BLOCK);
     let bpc = hb * wb;
     let mut blocks = vec![EncodedBlock::default(); x.c * bpc];
     let threads = threads.clamp(1, x.c.max(1));
     if threads == 1 || bpc == 0 {
-        let mut scratch = CodecScratch::new();
-        for ch in 0..x.c {
-            compress_channel_into(
-                x.channel(ch),
-                x.h,
-                x.w,
-                qtable,
-                &mut blocks[ch * bpc..(ch + 1) * bpc],
-                &mut scratch,
-            );
-        }
+        compress_serial_into(x, qtable, bpc, &mut blocks);
     } else {
         let per = x.c.div_ceil(threads);
         std::thread::scope(|s| {
@@ -285,21 +373,7 @@ pub fn compress_with_threads(x: &Tensor3, qtable: &Block,
             }
         });
     }
-    let mut bits = 0u64;
-    let mut nnz = 0u64;
-    for b in &blocks {
-        bits += b.compressed_bits();
-        nnz += b.nnz() as u64;
-    }
-    CompressedFmap {
-        blocks,
-        c: x.c,
-        h: x.h,
-        w: x.w,
-        qtable: *qtable,
-        bits,
-        nnz,
-    }
+    finish_compress(x, qtable, blocks)
 }
 
 /// Compress a feature map with the given Q-table (serial).
@@ -307,32 +381,98 @@ pub fn compress(x: &Tensor3, qtable: &Block) -> CompressedFmap {
     compress_with_threads(x, qtable, 1)
 }
 
-/// Compress with channels sharded across the worker pool; bit-identical
-/// to [`compress`].
+/// Compress with channels sharded over the persistent global pool;
+/// bit-identical to [`compress`].
 pub fn compress_par(x: &Tensor3, qtable: &Block) -> CompressedFmap {
-    compress_with_threads(x, qtable, codec_threads())
+    compress_with_pool(x, qtable, crate::exec::global())
 }
 
-/// Decompress with an explicit worker count (1 = serial); the output
-/// is identical for every worker count.
+/// Serial decompress core shared by every entry point below.
+fn decompress_serial_into(cf: &CompressedFmap, bpc: usize,
+                          out: &mut Tensor3) {
+    let mut scratch = CodecScratch::new();
+    for ch in 0..cf.c {
+        decompress_channel_into(
+            &cf.blocks[ch * bpc..(ch + 1) * bpc],
+            &cf.qtable,
+            out.channel_mut(ch),
+            cf.h,
+            cf.w,
+            &mut scratch,
+        );
+    }
+}
+
+/// Decompress with channel shards submitted to `pool` (`shards` = 1
+/// is the inline serial path); the output is identical for every
+/// shard count and pool size.
+pub fn decompress_sharded(cf: &CompressedFmap, shards: usize,
+                          pool: &ExecPool) -> Tensor3 {
+    let bpc = cf.blocks_per_channel();
+    let plane = cf.h * cf.w;
+    let mut out = Tensor3::zeros(cf.c, cf.h, cf.w);
+    let shards = shards.clamp(1, cf.c.max(1));
+    if shards == 1 || bpc == 0 || plane == 0 {
+        decompress_serial_into(cf, bpc, &mut out);
+    } else {
+        let per = cf.c.div_ceil(shards);
+        let (h, w) = (cf.h, cf.w);
+        pool.scope(|s| {
+            for (wi, chunk) in
+                out.data.chunks_mut(per * plane).enumerate()
+            {
+                let first = wi * per;
+                s.submit(move || {
+                    let mut scratch = CodecScratch::new();
+                    for (k, chan) in
+                        chunk.chunks_mut(plane).enumerate()
+                    {
+                        let ch = first + k;
+                        decompress_channel_into(
+                            &cf.blocks[ch * bpc..(ch + 1) * bpc],
+                            &cf.qtable,
+                            chan,
+                            h,
+                            w,
+                            &mut scratch,
+                        );
+                    }
+                });
+            }
+        });
+    }
+    out
+}
+
+/// Decompress with an explicit shard count on the global pool (1 =
+/// serial); identical output for every count. As with the compress
+/// side, the serial case never constructs the pool.
 pub fn decompress_with_threads(cf: &CompressedFmap, threads: usize)
                                -> Tensor3 {
+    if threads.clamp(1, cf.c.max(1)) == 1 {
+        let bpc = cf.blocks_per_channel();
+        let mut out = Tensor3::zeros(cf.c, cf.h, cf.w);
+        decompress_serial_into(cf, bpc, &mut out);
+        return out;
+    }
+    decompress_sharded(cf, threads, crate::exec::global())
+}
+
+/// Decompress sharded over all slots of an explicit pool.
+pub fn decompress_with_pool(cf: &CompressedFmap, pool: &ExecPool)
+                            -> Tensor3 {
+    decompress_sharded(cf, pool.threads(), pool)
+}
+
+/// Spawn-per-call baseline (see [`compress_scoped_threads`]).
+pub fn decompress_scoped_threads(cf: &CompressedFmap,
+                                 threads: usize) -> Tensor3 {
     let bpc = cf.blocks_per_channel();
     let plane = cf.h * cf.w;
     let mut out = Tensor3::zeros(cf.c, cf.h, cf.w);
     let threads = threads.clamp(1, cf.c.max(1));
     if threads == 1 || bpc == 0 || plane == 0 {
-        let mut scratch = CodecScratch::new();
-        for ch in 0..cf.c {
-            decompress_channel_into(
-                &cf.blocks[ch * bpc..(ch + 1) * bpc],
-                &cf.qtable,
-                out.channel_mut(ch),
-                cf.h,
-                cf.w,
-                &mut scratch,
-            );
-        }
+        decompress_serial_into(cf, bpc, &mut out);
     } else {
         let per = cf.c.div_ceil(threads);
         let (h, w) = (cf.h, cf.w);
@@ -368,10 +508,10 @@ pub fn decompress(cf: &CompressedFmap) -> Tensor3 {
     decompress_with_threads(cf, 1)
 }
 
-/// Decompress with channels sharded across the worker pool; identical
-/// output to [`decompress`].
+/// Decompress with channels sharded over the persistent global pool;
+/// identical output to [`decompress`].
 pub fn decompress_par(cf: &CompressedFmap) -> Tensor3 {
-    decompress_with_threads(cf, codec_threads())
+    decompress_with_pool(cf, crate::exec::global())
 }
 
 /// compress → decompress: what the next layer reads from the buffer.
@@ -518,6 +658,28 @@ mod tests {
             let dpar = decompress_with_threads(&serial, threads);
             assert_eq!(dser.data, dpar.data, "{threads} threads");
         }
+    }
+
+    #[test]
+    fn pooled_and_scoped_paths_bit_identical() {
+        use crate::exec::ExecPool;
+        let x = rand_map(6, 21, 19, 11);
+        let qt = qtable(2);
+        let serial = compress(&x, &qt);
+        let dser = decompress(&serial);
+        for pool_size in [1usize, 2, 5] {
+            let pool = ExecPool::new(pool_size);
+            let par = compress_with_pool(&x, &qt, &pool);
+            assert_eq!(serial.blocks, par.blocks, "pool {pool_size}");
+            let dpar = decompress_with_pool(&par, &pool);
+            assert_eq!(dser.data, dpar.data, "pool {pool_size}");
+        }
+        let scoped = compress_scoped_threads(&x, &qt, 3);
+        assert_eq!(serial.blocks, scoped.blocks);
+        assert_eq!(
+            dser.data,
+            decompress_scoped_threads(&scoped, 3).data
+        );
     }
 
     #[test]

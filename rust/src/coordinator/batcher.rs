@@ -24,16 +24,35 @@ impl Default for BatchPolicy {
     }
 }
 
+/// What one batching poll produced. Distinguishing [`Idle`] from
+/// [`Closed`] is what lets a dispatch loop keep *every* arrival —
+/// including one landing during an idle window — on the batching
+/// policy, instead of falling back to a raw `recv` that bypasses the
+/// linger (the seed server's single-request escape hatch).
+///
+/// [`Idle`]: BatchOutcome::Idle
+/// [`Closed`]: BatchOutcome::Closed
+#[derive(Debug)]
+pub enum BatchOutcome<T> {
+    /// At least one request, batched under the policy.
+    Batch(Vec<T>),
+    /// `idle_timeout` elapsed with nothing pending; poll again.
+    Idle,
+    /// The channel is closed and drained; stop polling.
+    Closed,
+}
+
 /// Collect the next batch from a channel. Blocks for the first item
 /// (until `idle_timeout`), then lingers up to `policy.linger` filling
-/// the batch. Returns None when the channel is closed and drained, or
-/// on idle timeout with nothing pending.
-pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy,
-                     idle_timeout: Duration) -> Option<Vec<T>> {
+/// the batch.
+pub fn poll_batch<T>(rx: &Receiver<T>, policy: BatchPolicy,
+                     idle_timeout: Duration) -> BatchOutcome<T> {
     let first = match rx.recv_timeout(idle_timeout) {
         Ok(v) => v,
-        Err(RecvTimeoutError::Timeout) => return None,
-        Err(RecvTimeoutError::Disconnected) => return None,
+        Err(RecvTimeoutError::Timeout) => return BatchOutcome::Idle,
+        Err(RecvTimeoutError::Disconnected) => {
+            return BatchOutcome::Closed
+        }
     };
     let mut batch = vec![first];
     let deadline = Instant::now() + policy.linger;
@@ -47,7 +66,18 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy,
             Err(_) => break,
         }
     }
-    Some(batch)
+    BatchOutcome::Batch(batch)
+}
+
+/// [`poll_batch`] collapsed to an `Option` for callers that treat
+/// idle and closed alike. Returns None when the channel is closed and
+/// drained, or on idle timeout with nothing pending.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy,
+                     idle_timeout: Duration) -> Option<Vec<T>> {
+    match poll_batch(rx, policy, idle_timeout) {
+        BatchOutcome::Batch(b) => Some(b),
+        BatchOutcome::Idle | BatchOutcome::Closed => None,
+    }
 }
 
 #[cfg(test)]
@@ -106,5 +136,36 @@ mod tests {
             Duration::from_millis(1)
         )
         .is_none());
+    }
+
+    #[test]
+    fn poll_distinguishes_idle_from_closed() {
+        let (tx, rx) = channel::<u32>();
+        match poll_batch(
+            &rx,
+            BatchPolicy::default(),
+            Duration::from_millis(1),
+        ) {
+            BatchOutcome::Idle => {}
+            other => panic!("expected Idle, got {other:?}"),
+        }
+        tx.send(7).unwrap();
+        match poll_batch(
+            &rx,
+            BatchPolicy::default(),
+            Duration::from_millis(1),
+        ) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![7]),
+            other => panic!("expected Batch, got {other:?}"),
+        }
+        drop(tx);
+        match poll_batch(
+            &rx,
+            BatchPolicy::default(),
+            Duration::from_millis(1),
+        ) {
+            BatchOutcome::Closed => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
     }
 }

@@ -3,14 +3,20 @@
 //! The paper's system is an edge inference engine; the coordinator is
 //! the host-side stack a deployment would wrap it with: a request
 //! queue, a [`batcher`] matching the artifact batch size (the paper's
-//! dataflow computes 4 output maps in parallel for exactly this kind of
-//! batching economy), a worker thread owning the PJRT [`crate::runtime`]
-//! (executables are not Sync), and [`metrics`]. Built on std threads +
+//! dataflow computes 4 output maps in parallel for exactly this kind
+//! of batching economy), a multi-worker [`server`] — one batcher
+//! thread sharding batches round-robin across N workers, each owning
+//! its own PJRT [`crate::runtime`] (executables are not Sync) and its
+//! own [`metrics`], merged at shutdown. Built on std threads +
 //! channels — tokio is unavailable offline (DESIGN.md §4).
 
 pub mod batcher;
 pub mod metrics;
 pub mod server;
 
+pub use batcher::{BatchOutcome, BatchPolicy};
 pub use metrics::Metrics;
-pub use server::{InferenceServer, Request, Response, ServerConfig};
+pub use server::{
+    EngineFactory, InferenceEngine, InferenceServer, Request,
+    Response, ServerConfig,
+};

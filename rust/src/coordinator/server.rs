@@ -1,20 +1,56 @@
-//! The inference server: a worker thread owning the PJRT runtime,
-//! fed by a request channel through the dynamic batcher; every batch
-//! is also accounted on the simulated accelerator so each response
-//! carries the hardware cost it *would* incur on the 403-GOPS ASIC.
+//! The inference server: one batcher thread feeding N persistent
+//! runtime workers — the host-side mirror of the paper folding
+//! compression, decompression and CNN acceleration into a single
+//! computing stream.
+//!
+//! Topology:
+//!
+//! ```text
+//!   clients ── submit ──> [request channel]
+//!                              │  fmc-batcher: poll_batch (policy)
+//!                              ▼
+//!                    batch-level round-robin shard
+//!                    │            │            │
+//!               fmc-worker-0  fmc-worker-1 … fmc-worker-N-1
+//!               (own Runtime, (PJRT executables are not Sync,
+//!                own Metrics)  so each worker owns its engine)
+//! ```
+//!
+//! * the batcher owns the batching policy end to end — an arrival
+//!   during an idle window goes through the same
+//!   [`poll_batch`] linger as any other, so it still coalesces
+//!   (the seed handled that case with a raw `recv` that produced
+//!   singleton batches);
+//! * batches shard across workers round-robin. Engine panics are
+//!   contained per batch (the batch errors, the worker and its
+//!   accumulated metrics survive, queued batches still get served);
+//!   if a worker thread dies anyway, the batcher drops it from
+//!   rotation and re-dispatches the batch whose send failed to a
+//!   survivor;
+//! * every worker keeps its own [`Metrics`]; [`InferenceServer::shutdown`]
+//!   merges them (plus the batcher's own error counters) via
+//!   [`Metrics::merge`];
+//! * the per-request simulated-hardware accounting (cycles/energy on
+//!   the 403-GOPS ASIC) is computed once per server, not once per
+//!   worker — the served geometry is static.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::{models, AccelConfig};
-use crate::coordinator::batcher::{next_batch, BatchPolicy};
+use crate::coordinator::batcher::{poll_batch, BatchOutcome, BatchPolicy};
 use crate::coordinator::metrics::Metrics;
 use crate::harness::profiles as harness_profiles;
 use crate::nn::Tensor3;
 use crate::runtime::Runtime;
 use crate::sim::scheduler::CompressionProfile;
 use crate::sim::Accelerator;
+
+/// How long the batcher sleeps in `poll_batch` before re-polling when
+/// no requests are pending (also the shutdown-detection latency).
+const IDLE_POLL: Duration = Duration::from_millis(200);
 
 /// One classification request.
 pub struct Request {
@@ -37,6 +73,52 @@ pub struct Response {
     pub sim_energy_j: f64,
 }
 
+/// What a serving worker runs batches on. The production engine wraps
+/// the PJRT [`Runtime`]; tests inject synthetic engines so the
+/// multi-worker pipeline is exercisable without artifacts (see
+/// `rust/tests/server_stress.rs`).
+///
+/// Deliberately **not** `Send`: each engine is constructed *on* its
+/// worker thread (by the [`EngineFactory`]) and never crosses
+/// threads, so runtimes whose executables are neither `Sync` nor
+/// `Send` still work.
+pub trait InferenceEngine {
+    /// Largest batch the engine accepts (clamps the batching policy;
+    /// the smallest worker cap wins across the pool).
+    fn max_batch(&self) -> usize;
+
+    /// Classify a batch: one `(class, logits)` per input image.
+    fn infer(&mut self, images: &[Tensor3])
+             -> anyhow::Result<Vec<(usize, Vec<f32>)>>;
+}
+
+/// Builds one engine per worker; called with the worker index on that
+/// worker's own thread at startup (so the engine never has to be
+/// `Send`). The factory itself is shared across worker spawns, hence
+/// `Send + Sync`.
+pub type EngineFactory = Arc<
+    dyn Fn(usize) -> anyhow::Result<Box<dyn InferenceEngine>>
+        + Send
+        + Sync,
+>;
+
+/// The production engine: a PJRT runtime executing the AOT artifacts.
+struct RuntimeEngine {
+    runtime: Runtime,
+    compressed: bool,
+}
+
+impl InferenceEngine for RuntimeEngine {
+    fn max_batch(&self) -> usize {
+        self.runtime.model_batch()
+    }
+
+    fn infer(&mut self, images: &[Tensor3])
+             -> anyhow::Result<Vec<(usize, Vec<f32>)>> {
+        self.runtime.classify(images, self.compressed)
+    }
+}
+
 /// Server configuration.
 #[derive(Clone)]
 pub struct ServerConfig {
@@ -44,14 +126,17 @@ pub struct ServerConfig {
     /// Use the interlayer-compressed model artifact.
     pub compressed: bool,
     pub policy: BatchPolicy,
+    /// Runtime workers fed by the batcher (`FMC_WORKERS` is the CLI's
+    /// source for this; clamped to ≥ 1).
+    pub workers: usize,
     /// Accelerator model for the per-request hardware accounting.
     pub accel: AccelConfig,
     /// Static override for the hardware model's compression profile.
-    /// `None` (the default) measures per-layer profiles at worker
-    /// startup by running the real threaded codec (`compress_par`)
-    /// over depth-representative activations — the
-    /// accounting then reflects what the served SmallCNN's interlayer
-    /// maps actually compress to, instead of a guessed constant.
+    /// `None` (the default) measures per-layer profiles at server
+    /// startup by running the real pooled codec (`compress_par`) over
+    /// depth-representative activations — the accounting then reflects
+    /// what the served SmallCNN's interlayer maps actually compress
+    /// to, instead of a guessed constant.
     pub sim_profile: Option<CompressionProfile>,
 }
 
@@ -61,71 +146,91 @@ impl ServerConfig {
             artifacts_dir: artifacts_dir.into(),
             compressed: true,
             policy: BatchPolicy::default(),
+            workers: 1,
             accel: AccelConfig::default(),
             sim_profile: None,
         }
+    }
+
+    /// Builder-style worker count.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
     }
 }
 
 /// Handle to the running server.
 pub struct InferenceServer {
     tx: Sender<Request>,
-    worker: Option<JoinHandle<Metrics>>,
+    batcher: Option<JoinHandle<Metrics>>,
 }
 
 impl InferenceServer {
-    /// Start the worker thread (compiles artifacts on first batch).
+    /// Start the batcher + runtime workers (each worker opens its own
+    /// runtime on its own thread; artifacts compile on first batch).
     pub fn start(cfg: ServerConfig) -> anyhow::Result<Self> {
+        let dir = cfg.artifacts_dir.clone();
+        let compressed = cfg.compressed;
+        let factory: EngineFactory = Arc::new(move |_worker| {
+            let runtime = Runtime::open(&dir)?;
+            Ok(Box::new(RuntimeEngine {
+                runtime,
+                compressed,
+            }) as Box<dyn InferenceEngine>)
+        });
+        Self::start_with_engines(cfg, factory)
+    }
+
+    /// Start with an explicit engine factory (tests, alternative
+    /// backends). `cfg.artifacts_dir` is ignored by this entry point.
+    pub fn start_with_engines(cfg: ServerConfig,
+                              factory: EngineFactory)
+                              -> anyhow::Result<Self> {
         let (tx, rx) = channel::<Request>();
-        let worker = std::thread::Builder::new()
-            .name("fmc-worker".into())
-            .spawn(move || worker_loop(cfg, rx))?;
+        let batcher = std::thread::Builder::new()
+            .name("fmc-batcher".into())
+            .spawn(move || batcher_loop(cfg, factory, rx))?;
         Ok(InferenceServer {
             tx,
-            worker: Some(worker),
+            batcher: Some(batcher),
         })
     }
 
-    /// Submit an image; returns a receiver for the response.
+    /// Submit an image; returns a receiver for the response, or an
+    /// error if the server has shut down (the seed silently dropped
+    /// such requests and the caller hung on a channel that would
+    /// never answer).
     pub fn submit(&self, image: Tensor3)
-                  -> std::sync::mpsc::Receiver<Response> {
+                  -> anyhow::Result<Receiver<Response>> {
         let (rtx, rrx) = channel();
-        let _ = self.tx.send(Request {
-            image,
-            resp: rtx,
-            submitted: Instant::now(),
-        });
-        rrx
+        self.tx
+            .send(Request {
+                image,
+                resp: rtx,
+                submitted: Instant::now(),
+            })
+            .map_err(|_| {
+                anyhow::anyhow!(
+                    "inference server is shut down (request not queued)"
+                )
+            })?;
+        Ok(rrx)
     }
 
-    /// Close the queue and join the worker, returning its metrics.
+    /// Close the queue, join the batcher and all workers, and return
+    /// the merged per-worker metrics.
     pub fn shutdown(mut self) -> Metrics {
         drop(self.tx);
-        self.worker
+        self.batcher
             .take()
             .map(|w| w.join().unwrap_or_default())
             .unwrap_or_default()
     }
 }
 
-fn worker_loop(cfg: ServerConfig, rx: Receiver<Request>) -> Metrics {
-    let mut metrics = Metrics::new();
-    let mut runtime = match Runtime::open(&cfg.artifacts_dir) {
-        Ok(r) => r,
-        Err(e) => {
-            eprintln!("worker: {e:#}");
-            metrics.errors += 1;
-            return metrics;
-        }
-    };
-    let batch_cap = runtime.model_batch();
-    let policy = BatchPolicy {
-        max_batch: cfg.policy.max_batch.min(batch_cap),
-        ..cfg.policy
-    };
-    // Pre-compute the per-batch hardware cost on the simulator once:
-    // the SmallCNN geometry is static, so every full batch costs the
-    // same cycles/energy.
+/// Per-request simulated-hardware cost of the served model, computed
+/// once per server: (cycles, joules) per image.
+fn sim_costs(cfg: &ServerConfig) -> (u64, f64) {
     let accel = Accelerator::new(cfg.accel.clone());
     let net = models::smallcnn();
     let profiles: Vec<Option<CompressionProfile>> = if !cfg.compressed {
@@ -133,14 +238,14 @@ fn worker_loop(cfg: ServerConfig, rx: Receiver<Request>) -> Metrics {
     } else if let Some(p) = cfg.sim_profile {
         net.layers.iter().map(|_| Some(p)).collect()
     } else {
-        // Measure with the real codec (threaded fmap pipeline): this
-        // is the accelerator-accounting path of the serving stream.
+        // Measure with the real codec (pooled fmap pipeline): this is
+        // the accelerator-accounting path of the serving stream.
         let sched = models::smallcnn()
             .with_default_schedule(net.layers.len());
         let measured = harness_profiles::profile_network(&sched, 11);
         let prof = harness_profiles::to_sim_profiles(&measured);
         eprintln!(
-            "worker: measured interlayer compression {:.1}% \
+            "batcher: measured interlayer compression {:.1}% \
              (codec, {} layers)",
             harness_profiles::overall_ratio(&measured) * 100.0,
             measured.iter().flatten().count(),
@@ -148,33 +253,158 @@ fn worker_loop(cfg: ServerConfig, rx: Receiver<Request>) -> Metrics {
         prof
     };
     let hw = accel.run(&net, &profiles);
-    let cycles_per_image = hw.stats.cycles;
-    let energy_per_image = hw.energy.total_j();
+    (hw.stats.cycles, hw.energy.total_j())
+}
 
-    loop {
-        let Some(batch) =
-            next_batch(&rx, policy, Duration::from_millis(200))
-        else {
-            // idle poll: exit only when the channel is closed
-            match rx.recv() {
-                Ok(first) => {
-                    handle_batch(
-                        vec![first],
-                        &mut runtime,
-                        &cfg,
-                        &mut metrics,
-                        cycles_per_image,
-                        energy_per_image,
-                    );
-                    continue;
-                }
-                Err(_) => break,
+/// The batcher thread: builds the worker pool, owns the batching
+/// policy, shards batches round-robin, merges worker metrics at
+/// shutdown.
+fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
+                rx: Receiver<Request>) -> Metrics {
+    let mut metrics = Metrics::new();
+    let (cycles_per_image, energy_per_image) = sim_costs(&cfg);
+
+    // Spawn the workers; each constructs its engine on its own thread
+    // and reports its batch cap (or the construction error) back.
+    let n_workers = cfg.workers.max(1);
+    type Ready = anyhow::Result<usize>;
+    let mut spawned: Vec<(usize, Sender<Vec<Request>>,
+                          Receiver<Ready>, JoinHandle<Metrics>)> =
+        Vec::new();
+    for wi in 0..n_workers {
+        let (btx, brx) = channel::<Vec<Request>>();
+        let (ready_tx, ready_rx) = channel::<Ready>();
+        let factory = Arc::clone(&factory);
+        match std::thread::Builder::new()
+            .name(format!("fmc-worker-{wi}"))
+            .spawn(move || {
+                worker_loop(
+                    wi,
+                    factory,
+                    brx,
+                    ready_tx,
+                    cycles_per_image,
+                    energy_per_image,
+                )
+            }) {
+            Ok(h) => spawned.push((wi, btx, ready_rx, h)),
+            Err(e) => {
+                eprintln!("worker {wi}: spawn failed: {e}");
+                metrics.errors += 1;
             }
-        };
+        }
+    }
+
+    // Collect readiness; only workers with a live engine join the
+    // dispatch rotation. The smallest engine cap clamps the policy.
+    let mut senders: Vec<Sender<Vec<Request>>> = Vec::new();
+    let mut handles: Vec<JoinHandle<Metrics>> = Vec::new();
+    let mut engine_cap = usize::MAX;
+    for (wi, btx, ready_rx, h) in spawned {
+        match ready_rx.recv() {
+            Ok(Ok(cap)) => {
+                engine_cap = engine_cap.min(cap);
+                senders.push(btx);
+                handles.push(h);
+            }
+            Ok(Err(e)) => {
+                eprintln!("worker {wi}: {e:#}");
+                metrics.errors += 1;
+                metrics.merge(&h.join().unwrap_or_default());
+            }
+            Err(_) => {
+                eprintln!("worker {wi}: died during engine startup");
+                metrics.errors += 1;
+                metrics.merge(&h.join().unwrap_or_default());
+            }
+        }
+    }
+    if senders.is_empty() {
+        // No live worker: exit now. Dropping `rx` makes subsequent
+        // submits fail fast, and already-queued requests error out
+        // through their dropped response senders (no hangs).
+        eprintln!("server: no live workers; shutting down");
+        return metrics;
+    }
+
+    let policy = BatchPolicy {
+        max_batch: cfg.policy.max_batch.min(engine_cap),
+        ..cfg.policy
+    };
+
+    let mut rr = 0usize; // round-robin cursor over live workers
+    loop {
+        match poll_batch(&rx, policy, IDLE_POLL) {
+            // Idle window elapsed with nothing pending: poll again.
+            // The next arrival goes through poll_batch's linger like
+            // any other, so it still coalesces into a batch (the
+            // seed's raw-`recv` fallback produced singleton batches
+            // here).
+            BatchOutcome::Idle => continue,
+            BatchOutcome::Closed => break,
+            BatchOutcome::Batch(mut batch) => loop {
+                if senders.is_empty() {
+                    // Every worker died mid-flight: fail the batch
+                    // (dropping the responders errors each client's
+                    // receiver).
+                    metrics.errors += batch.len() as u64;
+                    break;
+                }
+                let i = rr % senders.len();
+                match senders[i].send(batch) {
+                    Ok(()) => {
+                        rr += 1;
+                        break;
+                    }
+                    Err(send_back) => {
+                        // Worker died (panicked engine): drop it from
+                        // rotation and re-dispatch to a survivor.
+                        batch = send_back.0;
+                        senders.remove(i);
+                    }
+                }
+            },
+        }
+    }
+
+    // Close worker queues, join, and merge their metrics. A worker
+    // that died (panic outside the per-batch containment) loses its
+    // accumulated counts — record at least the loss itself.
+    drop(senders);
+    for h in handles {
+        match h.join() {
+            Ok(m) => metrics.merge(&m),
+            Err(_) => metrics.errors += 1,
+        }
+    }
+    metrics
+}
+
+/// One runtime worker: constructs its engine on this thread (reports
+/// the batch cap — or the error — through `ready`), then drains
+/// batches until the batcher closes the channel. The engine never
+/// crosses a thread boundary.
+fn worker_loop(wi: usize, factory: EngineFactory,
+               rx: Receiver<Vec<Request>>,
+               ready: Sender<anyhow::Result<usize>>,
+               cycles_per_image: u64, energy_per_image: f64)
+               -> Metrics {
+    let mut metrics = Metrics::new();
+    let mut engine = match (*factory)(wi) {
+        Ok(engine) => {
+            let _ = ready.send(Ok(engine.max_batch().max(1)));
+            engine
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return metrics;
+        }
+    };
+    drop(ready);
+    while let Ok(batch) = rx.recv() {
         handle_batch(
             batch,
-            &mut runtime,
-            &cfg,
+            engine.as_mut(),
             &mut metrics,
             cycles_per_image,
             energy_per_image,
@@ -183,20 +413,41 @@ fn worker_loop(cfg: ServerConfig, rx: Receiver<Request>) -> Metrics {
     metrics
 }
 
-fn handle_batch(batch: Vec<Request>, runtime: &mut Runtime,
-                cfg: &ServerConfig, metrics: &mut Metrics,
-                cycles_per_image: u64, energy_per_image: f64) {
+fn handle_batch(batch: Vec<Request>, engine: &mut dyn InferenceEngine,
+                metrics: &mut Metrics, cycles_per_image: u64,
+                energy_per_image: f64) {
     metrics.batches += 1;
-    let images: Vec<Tensor3> =
-        batch.iter().map(|r| r.image.clone()).collect();
-    match runtime.classify(&images, cfg.compressed) {
-        Ok(results) => {
-            for (req, (class, logits)) in
-                batch.into_iter().zip(results)
+    // Split each request into its image and its response metadata —
+    // the engine borrows the images in place (no per-request clone of
+    // the pixel buffers).
+    let (meta, images): (Vec<(Sender<Response>, Instant)>,
+                         Vec<Tensor3>) = batch
+        .into_iter()
+        .map(|r| ((r.resp, r.submitted), r.image))
+        .unzip();
+    // Contain engine panics to the batch: the batch errors out, but
+    // the worker — and the metrics it has accumulated — survive, and
+    // batches already queued on this worker still get served.
+    let result = std::panic::catch_unwind(
+        std::panic::AssertUnwindSafe(|| engine.infer(&images)),
+    );
+    match result {
+        Ok(Ok(results)) => {
+            if results.len() != meta.len() {
+                eprintln!(
+                    "engine returned {} results for a batch of {}",
+                    results.len(),
+                    meta.len()
+                );
+                metrics.errors += meta.len() as u64;
+                return;
+            }
+            for ((resp, submitted), (class, logits)) in
+                meta.into_iter().zip(results)
             {
-                let latency = req.submitted.elapsed();
+                let latency = submitted.elapsed();
                 metrics.observe(latency);
-                let _ = req.resp.send(Response {
+                let _ = resp.send(Response {
                     class,
                     logits,
                     latency,
@@ -205,9 +456,15 @@ fn handle_batch(batch: Vec<Request>, runtime: &mut Runtime,
                 });
             }
         }
-        Err(e) => {
+        Ok(Err(e)) => {
             eprintln!("batch failed: {e:#}");
-            metrics.errors += batch.len() as u64;
+            metrics.errors += meta.len() as u64;
+        }
+        Err(_) => {
+            eprintln!(
+                "batch failed: engine panicked (worker continues)"
+            );
+            metrics.errors += meta.len() as u64;
         }
     }
 }

@@ -1,0 +1,23 @@
+//! Shared persistent executor pool — the host-side answer to the
+//! paper's "one computing stream": compression, decompression, and
+//! serving all draw workers from a single fixed pool instead of
+//! paying a `thread::scope` spawn per feature map.
+//!
+//! * [`ExecPool`] — fixed worker set + shared injector queue with
+//!   scoped `submit`/join (callers may borrow stack data, crossbeam
+//!   style); the joining thread *helps* drain its own scope's queued
+//!   jobs, so small pools never deadlock and a scope is never slower
+//!   than inline.
+//! * [`global`] — the process-wide pool, lazily sized by
+//!   [`pool_threads`] (`FMC_THREADS`, default = available
+//!   parallelism). The codec's `compress_par`/`decompress_par`, the
+//!   calibrator, the profiler, and the benches all shard onto it.
+//!
+//! Sharding stays deterministic: a scope's result depends only on how
+//! work was *split*, never on which worker ran a shard — that is what
+//! keeps the pooled codec bit-identical to the serial one (see
+//! `rust/tests/codec_par.rs`).
+
+mod pool;
+
+pub use pool::{global, pool_threads, ExecPool, Scope};

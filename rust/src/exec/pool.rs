@@ -1,0 +1,465 @@
+//! The persistent executor pool: a fixed set of worker threads fed by
+//! one shared injector queue, with crossbeam-style *scoped* submission
+//! so tasks may borrow stack data.
+//!
+//! Design notes (work-stealing-lite):
+//!
+//! * one `Mutex<VecDeque<Job>>` injector instead of per-worker deques —
+//!   at the codec's task granularity (a shard of channels, ~10⁵ f32
+//!   ops) the lock is uncontended noise, and a single queue keeps the
+//!   pool trivially fair;
+//! * the thread that opened a [`Scope`] *helps*: while joining it
+//!   pops and runs its own scope's queued jobs instead of blocking
+//!   (jobs are tagged by scope, so a joiner never stalls behind a
+//!   foreign scope's shard), so a pool is never slower than the
+//!   caller doing the work itself, concurrent scopes cannot
+//!   deadlock, and even a zero-worker pool completes every scope
+//!   (useful for tests);
+//! * scoped lifetimes follow crossbeam's model: [`Scope::submit`]
+//!   accepts `FnOnce() + Send + 'env` closures, the `'env` borrows are
+//!   kept alive by the borrow on [`ExecPool::scope`]'s caller frame,
+//!   and `scope` does not return until every submitted job has run —
+//!   which is what makes the (internal) lifetime erasure sound.
+//!
+//! Panic policy: a panicking job is caught on the worker so the pool
+//! survives; the panic is re-raised on the thread that joins the scope
+//! (mirroring `std::thread::scope`).
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A type-erased unit of work queued on the pool, tagged with the
+/// identity of the scope that submitted it (the `Arc<ScopeState>`
+/// address — unique while the scope is alive) so a joining thread can
+/// help with *its own* jobs without adopting another scope's work.
+struct Job {
+    tag: usize,
+    run: Box<dyn FnOnce() + Send + 'static>,
+}
+
+struct Injector {
+    queue: Mutex<InjectorState>,
+    /// Signalled when a job is pushed or shutdown begins.
+    work: Condvar,
+}
+
+struct InjectorState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+impl Injector {
+    fn push(&self, job: Job) {
+        let mut st = self.queue.lock().unwrap();
+        st.jobs.push_back(job);
+        drop(st);
+        self.work.notify_one();
+    }
+
+    /// Non-blocking pop of this scope's next job (the helping
+    /// joiner's entry point). Popping only same-tag jobs keeps a
+    /// scope's completion independent of other scopes' shard sizes —
+    /// a joiner that adopted a foreign job could stall its own
+    /// done-in-microseconds scope behind someone else's large shard.
+    fn try_pop_tagged(&self, tag: usize) -> Option<Job> {
+        let mut st = self.queue.lock().unwrap();
+        let idx = st.jobs.iter().position(|j| j.tag == tag)?;
+        st.jobs.remove(idx)
+    }
+
+    /// Blocking pop for workers; `None` means shut down and drained.
+    fn pop(&self) -> Option<Job> {
+        let mut st = self.queue.lock().unwrap();
+        loop {
+            if let Some(job) = st.jobs.pop_front() {
+                return Some(job);
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.work.wait(st).unwrap();
+        }
+    }
+}
+
+/// Per-scope completion tracker: outstanding job count + the first
+/// caught panic payload (re-raised at the scope boundary with its
+/// original message, like joining a panicked thread). Jobs notify
+/// `done` as they retire.
+struct ScopeState {
+    lock: Mutex<ScopeProgress>,
+    done: Condvar,
+}
+
+struct ScopeProgress {
+    pending: usize,
+    payload: Option<Box<dyn std::any::Any + Send + 'static>>,
+}
+
+impl ScopeState {
+    fn new() -> Self {
+        ScopeState {
+            lock: Mutex::new(ScopeProgress {
+                pending: 0,
+                payload: None,
+            }),
+            done: Condvar::new(),
+        }
+    }
+}
+
+/// A fixed, persistent pool of worker threads. Create once (or use
+/// [`global`]), submit scoped work forever — the `thread::scope`
+/// spawn cost the seed paid per feature map is paid once per process.
+pub struct ExecPool {
+    injector: Arc<Injector>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ExecPool {
+    /// Spawn a pool with `threads` workers (0 is allowed: every scope
+    /// is then executed by its joining caller).
+    pub fn new(threads: usize) -> Self {
+        let injector = Arc::new(Injector {
+            queue: Mutex::new(InjectorState {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let inj = Arc::clone(&injector);
+                std::thread::Builder::new()
+                    .name(format!("fmc-exec-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = inj.pop() {
+                            (job.run)();
+                        }
+                    })
+                    .expect("spawning exec pool worker")
+            })
+            .collect();
+        ExecPool {
+            injector,
+            workers,
+            threads,
+        }
+    }
+
+    /// Worker count the pool was built with (the natural shard count
+    /// for data-parallel callers; ≥ 1 even for a zero-worker pool so
+    /// `chunks(n)` arithmetic stays valid).
+    pub fn threads(&self) -> usize {
+        self.threads.max(1)
+    }
+
+    /// Run `f` with a [`Scope`] on which borrowed work can be
+    /// submitted; returns once every submitted job has completed.
+    /// Panics from jobs (or from `f` itself) propagate to the caller
+    /// after the scope has fully quiesced.
+    pub fn scope<'env, R>(
+        &self,
+        f: impl FnOnce(&Scope<'env>) -> R,
+    ) -> R {
+        let scope = Scope {
+            injector: Arc::clone(&self.injector),
+            state: Arc::new(ScopeState::new()),
+            _env: PhantomData,
+        };
+        let result =
+            std::panic::catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        let job_payload = scope.join_helping();
+        match result {
+            Err(payload) => std::panic::resume_unwind(payload),
+            Ok(value) => {
+                if let Some(payload) = job_payload {
+                    // Re-raise the first job panic with its original
+                    // payload so the real message reaches the caller.
+                    std::panic::resume_unwind(payload);
+                }
+                value
+            }
+        }
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.injector.queue.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.injector.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Handle for submitting borrowed work to a pool within one
+/// [`ExecPool::scope`] call; all submissions are joined before
+/// `scope` returns.
+pub struct Scope<'env> {
+    injector: Arc<Injector>,
+    state: Arc<ScopeState>,
+    /// Invariant over `'env` (crossbeam's trick): keeps the borrows
+    /// captured by submitted closures pinned for the whole scope.
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> Scope<'env> {
+    /// Queue a job that may borrow `'env` data. The job runs on a pool
+    /// worker — or on the scope's own thread while it joins.
+    pub fn submit<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.state.lock.lock().unwrap().pending += 1;
+        let state = Arc::clone(&self.state);
+        let job: Box<dyn FnOnce() + Send + 'env> =
+            Box::new(move || {
+                let result = std::panic::catch_unwind(
+                    AssertUnwindSafe(f),
+                );
+                let mut st = state.lock.lock().unwrap();
+                st.pending -= 1;
+                if let Err(payload) = result {
+                    // Keep the first payload; later ones are dropped
+                    // (same first-wins rule as std's scoped threads).
+                    if st.payload.is_none() {
+                        st.payload = Some(payload);
+                    }
+                }
+                drop(st);
+                state.done.notify_all();
+            });
+        // SAFETY: the erased closure only borrows `'env` data, and
+        // `ExecPool::scope` blocks (`join_helping`) until `pending`
+        // reaches zero before returning — no job outlives the frame
+        // that owns its borrows. Same contract as crossbeam::scope.
+        let run = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'env>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(job)
+        };
+        self.injector.push(Job {
+            tag: self.tag(),
+            run,
+        });
+    }
+
+    /// This scope's job tag: the `ScopeState` allocation address,
+    /// unique among live scopes.
+    fn tag(&self) -> usize {
+        Arc::as_ptr(&self.state) as usize
+    }
+
+    /// Drain-and-wait: run queued jobs on this thread while any of
+    /// the scope's jobs are outstanding. Returns the first job panic
+    /// payload, if any.
+    fn join_helping(&self)
+                    -> Option<Box<dyn std::any::Any + Send + 'static>>
+    {
+        loop {
+            {
+                let mut st = self.state.lock.lock().unwrap();
+                if st.pending == 0 {
+                    return st.payload.take();
+                }
+            }
+            // Help with *this scope's* queued jobs only: adopting a
+            // foreign job could stall our microseconds-from-done
+            // scope behind another scope's large shard.
+            if let Some(job) = self.injector.try_pop_tagged(self.tag())
+            {
+                (job.run)();
+                continue;
+            }
+            // None of ours queued but some still in flight on
+            // workers: wait for a completion signal. The timeout
+            // re-arms the loop defensively.
+            let mut st = self.state.lock.lock().unwrap();
+            if st.pending == 0 {
+                return st.payload.take();
+            }
+            let (mut st, _) = self
+                .state
+                .done
+                .wait_timeout(st, Duration::from_millis(1))
+                .unwrap();
+            if st.pending == 0 {
+                return st.payload.take();
+            }
+        }
+    }
+}
+
+/// Pool worker count: `FMC_THREADS` if set to a positive integer,
+/// else the machine's available parallelism. (The same knob the codec
+/// has used since the threaded pipeline landed; the pool inherits it,
+/// and the parsing is shared with `FMC_WORKERS` via
+/// [`crate::cli::env_usize`].)
+pub fn pool_threads() -> usize {
+    crate::cli::env_usize(
+        "FMC_THREADS",
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    )
+}
+
+/// The process-wide persistent pool, sized by [`pool_threads`] on
+/// first use. Everything host-side (codec sharding, calibration,
+/// profiling, benches) funnels through this instance so spawn cost is
+/// paid exactly once.
+pub fn global() -> &'static ExecPool {
+    static POOL: OnceLock<ExecPool> = OnceLock::new();
+    POOL.get_or_init(|| ExecPool::new(pool_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scope_runs_all_jobs() {
+        let pool = ExecPool::new(3);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..64 {
+                s.submit(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn jobs_borrow_and_mutate_disjoint_slices() {
+        let pool = ExecPool::new(2);
+        let mut data = vec![0u64; 100];
+        pool.scope(|s| {
+            for (i, chunk) in data.chunks_mut(17).enumerate() {
+                s.submit(move || {
+                    for v in chunk.iter_mut() {
+                        *v = i as u64 + 1;
+                    }
+                });
+            }
+        });
+        assert!(data.iter().all(|&v| v >= 1));
+        assert_eq!(data[0], 1);
+        assert_eq!(data[99], 100usize.div_ceil(17) as u64);
+    }
+
+    #[test]
+    fn zero_worker_pool_completes_via_helping_joiner() {
+        let pool = ExecPool::new(0);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..8 {
+                s.submit(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+        assert_eq!(pool.threads(), 1); // shard-count floor
+    }
+
+    #[test]
+    fn sequential_scopes_reuse_the_same_workers() {
+        let pool = ExecPool::new(2);
+        for round in 0..10 {
+            let counter = AtomicUsize::new(0);
+            pool.scope(|s| {
+                for _ in 0..round + 1 {
+                    s.submit(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), round + 1);
+        }
+    }
+
+    #[test]
+    fn concurrent_scopes_from_many_threads() {
+        let pool = ExecPool::new(4);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|ts| {
+            for _ in 0..6 {
+                ts.spawn(|| {
+                    pool.scope(|s| {
+                        for _ in 0..25 {
+                            s.submit(|| {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 6 * 25);
+    }
+
+    #[test]
+    fn scope_returns_closure_value() {
+        let pool = ExecPool::new(1);
+        let v = pool.scope(|s| {
+            s.submit(|| {});
+            42
+        });
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn job_panic_propagates_after_quiesce() {
+        let pool = ExecPool::new(2);
+        let ran = AtomicUsize::new(0);
+        let result =
+            std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.scope(|s| {
+                    s.submit(|| panic!("boom"));
+                    s.submit(|| {
+                        ran.fetch_add(1, Ordering::Relaxed);
+                    });
+                });
+            }));
+        // The original payload is re-raised, not a generic message.
+        let payload = result.unwrap_err();
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // The sibling job still completed before the panic surfaced,
+        // and the pool survives for later scopes.
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            s.submit(|| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn global_pool_is_persistent_and_sized() {
+        let p1 = global() as *const ExecPool;
+        let p2 = global() as *const ExecPool;
+        assert_eq!(p1, p2);
+        assert!(global().threads() >= 1);
+    }
+
+    #[test]
+    fn pool_threads_floor_is_one() {
+        assert!(pool_threads() >= 1);
+    }
+}

@@ -10,6 +10,7 @@ use crate::compress::qtable::{calibrate_level, qtable, NUM_LEVELS};
 use crate::compress::{codec, BLOCK};
 use crate::config::Network;
 use crate::data::{natural_image, Smoothness};
+use crate::exec::ExecPool;
 use crate::harness::profiles::SAMPLE_CHANNELS;
 
 /// Calibration result for one layer.
@@ -27,9 +28,25 @@ pub struct LayerCalibration {
     pub compress: bool,
 }
 
-/// Calibrate every layer of a network against a minimum SNR floor.
+/// Calibrate every layer of a network against a minimum SNR floor,
+/// on the persistent global executor pool.
 pub fn calibrate_network(net: &Network, min_snr_db: f64, seed: u64)
                          -> Vec<LayerCalibration> {
+    calibrate_network_with_pool(
+        net,
+        min_snr_db,
+        seed,
+        crate::exec::global(),
+    )
+}
+
+/// Calibrate on an explicit pool. The Q-level sweep compresses every
+/// sampled map 4× per layer — exactly the many-small-fmap workload the
+/// persistent pool amortizes (the seed paid a `thread::scope` spawn
+/// for each of those compresses).
+pub fn calibrate_network_with_pool(net: &Network, min_snr_db: f64,
+                                   seed: u64, pool: &ExecPool)
+                                   -> Vec<LayerCalibration> {
     let dw = net.has_depthwise();
     net.layers
         .iter()
@@ -51,13 +68,15 @@ pub fn calibrate_network(net: &Network, min_snr_db: f64, seed: u64)
             let mut ratio = [0f64; NUM_LEVELS];
             for level in 0..NUM_LEVELS {
                 let qt = qtable(level);
-                // One threaded compress per level feeds both metrics
+                // One pooled compress per level feeds both metrics
                 // (the seed compressed every map twice, serially —
                 // calibration was the slowest step of the harness).
-                let cf = codec::compress_par(&fmap, &qt);
+                let cf = codec::compress_with_pool(&fmap, &qt, pool);
                 ratio[level] = cf.compression_ratio();
-                snr[level] =
-                    codec::snr_db(&fmap, &codec::decompress_par(&cf));
+                snr[level] = codec::snr_db(
+                    &fmap,
+                    &codec::decompress_with_pool(&cf, pool),
+                );
             }
             let chosen = calibrate_level(&snr, min_snr_db);
             LayerCalibration {
@@ -165,6 +184,25 @@ mod tests {
         let net = apply_calibration(net, &cal);
         for (l, c) in net.layers.iter().zip(cal.iter()) {
             assert_eq!(l.qlevel.is_some(), c.compress);
+        }
+    }
+
+    #[test]
+    fn pooled_calibration_is_pool_size_invariant() {
+        // Bit-identical pooled codec ⇒ identical calibration
+        // decisions for any pool (including size 1).
+        let net = models::smallcnn();
+        let base = calibrate_network(&net, 12.0, 3);
+        for pool_size in [1usize, 3] {
+            let pool = crate::exec::ExecPool::new(pool_size);
+            let got =
+                calibrate_network_with_pool(&net, 12.0, 3, &pool);
+            for (a, b) in base.iter().zip(got.iter()) {
+                assert_eq!(a.chosen, b.chosen, "{}", a.layer);
+                assert_eq!(a.snr_db, b.snr_db, "{}", a.layer);
+                assert_eq!(a.ratio, b.ratio, "{}", a.layer);
+                assert_eq!(a.compress, b.compress, "{}", a.layer);
+            }
         }
     }
 

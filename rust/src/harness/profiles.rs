@@ -6,6 +6,7 @@
 use crate::compress::{codec, qtable::qtable, BLOCK};
 use crate::config::{FusionLayer, Network};
 use crate::data::{natural_image, Smoothness};
+use crate::exec::ExecPool;
 use crate::sim::scheduler::CompressionProfile;
 
 /// Measured compression of one layer's output.
@@ -24,12 +25,30 @@ pub struct LayerProfile {
 /// channels, so sampling caps the profiling cost on 400-channel maps.
 pub const SAMPLE_CHANNELS: usize = 8;
 
-/// Profile one layer's *output* feature map at a given Q-level.
-/// `depthwise_net` marks MobileNet-style architectures whose maps
-/// decorrelate early (see `Smoothness::for_layer_arch`).
+/// Profile one layer's *output* feature map at a given Q-level, on
+/// the persistent global executor pool. `depthwise_net` marks
+/// MobileNet-style architectures whose maps decorrelate early (see
+/// `Smoothness::for_layer_arch`).
 pub fn profile_layer(layer: &FusionLayer, layer_index: usize,
                      qlevel: usize, seed: u64,
                      depthwise_net: bool) -> LayerProfile {
+    profile_layer_with_pool(
+        layer,
+        layer_index,
+        qlevel,
+        seed,
+        depthwise_net,
+        crate::exec::global(),
+    )
+}
+
+/// [`profile_layer`] on an explicit pool — the sampled maps are small
+/// (≤ [`SAMPLE_CHANNELS`] channels), so profiling is exactly the
+/// many-small-fmap workload the persistent pool amortizes.
+pub fn profile_layer_with_pool(layer: &FusionLayer,
+                               layer_index: usize, qlevel: usize,
+                               seed: u64, depthwise_net: bool,
+                               pool: &ExecPool) -> LayerProfile {
     let (c, h, w) = layer.out_dims();
     let relu_like = layer.act.sparsifying();
     let smooth = Smoothness::for_layer_arch(
@@ -46,9 +65,9 @@ pub fn profile_layer(layer: &FusionLayer, layer_index: usize,
         smooth,
         relu_like,
     );
-    // Threaded codec: bit-identical to the serial path, so profiles
-    // stay deterministic given the seed.
-    let cf = codec::compress_par(&fmap, &qtable(qlevel));
+    // Pooled codec: bit-identical to the serial path, so profiles
+    // stay deterministic given the seed (and pool-size invariant).
+    let cf = codec::compress_with_pool(&fmap, &qtable(qlevel), pool);
     let ratio = cf.compression_ratio();
     let blocks = cf.blocks.len() as u64;
     let nnz_density = if blocks == 0 {
@@ -67,16 +86,26 @@ pub fn profile_layer(layer: &FusionLayer, layer_index: usize,
 }
 
 /// Profile a network with its assigned per-layer schedule
-/// (`layer.qlevel`); unscheduled layers return None (stored raw).
+/// (`layer.qlevel`) on the persistent global pool; unscheduled layers
+/// return None (stored raw).
 pub fn profile_network(net: &Network, seed: u64)
                        -> Vec<Option<LayerProfile>> {
+    profile_network_with_pool(net, seed, crate::exec::global())
+}
+
+/// [`profile_network`] on an explicit pool.
+pub fn profile_network_with_pool(net: &Network, seed: u64,
+                                 pool: &ExecPool)
+                                 -> Vec<Option<LayerProfile>> {
     let dw = net.has_depthwise();
     net.layers
         .iter()
         .enumerate()
         .map(|(i, l)| {
             l.qlevel
-                .map(|q| profile_layer(l, i, q, seed, dw))
+                .map(|q| {
+                    profile_layer_with_pool(l, i, q, seed, dw, pool)
+                })
                 // Bypass: when measured compression does not pay
                 // (small/dense maps where padding + index overhead
                 // exceed the zero savings), the hardware turns the
@@ -179,6 +208,22 @@ mod tests {
         for (x, y) in a.iter().zip(b.iter()) {
             assert_eq!(x.map(|p| p.stored_bytes),
                        y.map(|p| p.stored_bytes));
+        }
+    }
+
+    #[test]
+    fn pool_size_invariant_profiles() {
+        let net = models::smallcnn().with_default_schedule(3);
+        let base = profile_network(&net, 5);
+        for pool_size in [1usize, 4] {
+            let pool = crate::exec::ExecPool::new(pool_size);
+            let got = profile_network_with_pool(&net, 5, &pool);
+            for (x, y) in base.iter().zip(got.iter()) {
+                assert_eq!(x.map(|p| p.stored_bytes),
+                           y.map(|p| p.stored_bytes));
+                assert_eq!(x.map(|p| p.nnz_density),
+                           y.map(|p| p.nnz_density));
+            }
         }
     }
 }

@@ -23,8 +23,10 @@
 //!   area/energy model behind Tables I/II/V and Figs 14/15.
 //! * [`runtime`] — PJRT CPU client executing the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) from the rust hot path.
+//! * [`exec`] — the persistent executor pool every host-side parallel
+//!   path shards onto (codec, calibration, profiling, benches).
 //! * [`coordinator`] — the inference server: request queue, batcher,
-//!   ping-pong layer pipeline, worker threads, metrics.
+//!   multi-worker runtime pool with batch-level sharding, metrics.
 //! * [`harness`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 //!
@@ -38,6 +40,7 @@ pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod harness;
 pub mod nn;
 pub mod runtime;

@@ -7,7 +7,8 @@
 //!            [--no-compress] [--layers N] [--seed S]
 //!   calibrate --network N [--floor SNR_DB] [--seed S] [--json]
 //!   compress-demo [--seed S] [--level L]
-//!   serve    --requests N [--no-compress] [--artifacts DIR]
+//!   serve    --requests N [--workers W] [--no-compress]
+//!            [--artifacts DIR]
 //!   selftest [--artifacts DIR]
 
 use fmc_accel::bench_util::{pct, Table};
@@ -266,11 +267,15 @@ fn compress_demo(args: &Args) -> i32 {
 
 fn serve(args: &Args) -> i32 {
     let n = args.opt_usize("requests", 64);
+    let workers = args.opt_usize(
+        "workers",
+        fmc_accel::cli::env_usize("FMC_WORKERS", 1),
+    );
     let dir = args
         .opt("artifacts")
         .map(Into::into)
         .unwrap_or_else(default_artifacts_dir);
-    let mut cfg = ServerConfig::new(dir);
+    let mut cfg = ServerConfig::new(dir).with_workers(workers);
     cfg.compressed = !args.flag("no-compress");
     let server = match InferenceServer::start(cfg) {
         Ok(s) => s,
@@ -281,10 +286,16 @@ fn serve(args: &Args) -> i32 {
     };
     let images = data::shapes_batch(7, n, 32);
     let mut correct = 0usize;
-    let rxs: Vec<_> = images
-        .iter()
-        .map(|(img, _)| server.submit(img.clone()))
-        .collect();
+    let mut rxs = Vec::with_capacity(n);
+    for (img, _) in images.iter() {
+        match server.submit(img.clone()) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => {
+                eprintln!("submit: {e:#}");
+                return 1;
+            }
+        }
+    }
     for ((_, label), rx) in images.iter().zip(rxs) {
         match rx.recv() {
             Ok(resp) => {
@@ -299,6 +310,7 @@ fn serve(args: &Args) -> i32 {
         }
     }
     let metrics = server.shutdown();
+    println!("workers   : {workers}");
     println!("requests  : {}", metrics.requests);
     println!("batches   : {}", metrics.batches);
     println!("accuracy  : {:.1}%", correct as f64 / n as f64 * 100.0);

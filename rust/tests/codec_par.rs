@@ -1,10 +1,13 @@
 //! Property tests for the parallel codec paths and the sparsity-gated
 //! inverse transform: `compress_par`/`decompress_par` must be
-//! bit-identical to the serial pipeline for any geometry and worker
-//! count, and `idct2d_sparse` must match `idct2d_fast` on any
-//! coefficient block whose masked-out entries are exactly zero.
+//! bit-identical to the serial pipeline for any geometry, shard
+//! count, and executor-pool size (including 1), the retained
+//! spawn-per-call `*_scoped_threads` baseline must match too, and
+//! `idct2d_sparse` must match `idct2d_fast` on any coefficient block
+//! whose masked-out entries are exactly zero.
 
 use fmc_accel::compress::{codec, dct, qtable::qtable};
+use fmc_accel::exec::ExecPool;
 use fmc_accel::nn::Tensor3;
 use fmc_accel::testutil::{check_prop, Prng};
 
@@ -58,6 +61,67 @@ fn decompress_par_bit_identical_across_thread_counts() {
         for threads in [1usize, 2, 8] {
             let par = codec::decompress_with_threads(&cf, threads);
             assert_eq!(serial.data, par.data, "@ {threads} threads");
+        }
+    });
+}
+
+#[test]
+fn pooled_paths_bit_identical_across_pool_sizes() {
+    // The persistent-pool path must be bit-identical to serial for
+    // every pool size (including 1, where scope jobs run on the
+    // joining caller) and every shard count — shard splits depend
+    // only on the count, never on which worker runs a shard.
+    check_prop("compress/decompress on explicit pools", 10, |p| {
+        let x = rand_fmap(p, 9, 40);
+        let qt = qtable(p.below(4));
+        let serial = codec::compress(&x, &qt);
+        let dser = codec::decompress(&serial);
+        for pool_size in [1usize, 2, 4] {
+            let pool = ExecPool::new(pool_size);
+            let par = codec::compress_with_pool(&x, &qt, &pool);
+            assert_eq!(
+                serial.blocks, par.blocks,
+                "compress blocks @ pool {pool_size}"
+            );
+            assert_eq!(serial.compressed_bits(), par.compressed_bits());
+            assert_eq!(serial.nnz(), par.nnz());
+            let dpar = codec::decompress_with_pool(&par, &pool);
+            assert_eq!(
+                dser.data, dpar.data,
+                "decompress @ pool {pool_size}"
+            );
+            // Shard count decoupled from pool size: oversharding a
+            // small pool must not change a single bit either.
+            let over = codec::compress_sharded(&x, &qt, 7, &pool);
+            assert_eq!(
+                serial.blocks, over.blocks,
+                "compress @ 7 shards on pool {pool_size}"
+            );
+            let dover = codec::decompress_sharded(&over, 7, &pool);
+            assert_eq!(dser.data, dover.data);
+        }
+    });
+}
+
+#[test]
+fn scoped_baseline_bit_identical_to_pooled() {
+    // The retained spawn-per-call `thread::scope` baseline (what the
+    // seed shipped, kept for the bench comparison) and the pooled
+    // production path must agree exactly.
+    check_prop("scoped ≡ pooled", 10, |p| {
+        let x = rand_fmap(p, 9, 40);
+        let qt = qtable(p.below(4));
+        let pooled = codec::compress_par(&x, &qt);
+        for threads in [2usize, 5] {
+            let scoped =
+                codec::compress_scoped_threads(&x, &qt, threads);
+            assert_eq!(pooled.blocks, scoped.blocks, "@ {threads}");
+            assert_eq!(
+                codec::decompress_par(&pooled).data,
+                codec::decompress_scoped_threads(&scoped, threads)
+                    .data,
+                "decompress @ {threads}"
+            );
         }
     });
 }

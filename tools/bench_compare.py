@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare a fresh codec_hotpath run against
+the checked-in baseline.
+
+Usage:
+    python3 tools/bench_compare.py BASELINE.json FRESH.json \
+        [--tolerance 0.25]
+
+Both files follow the bench_util::BenchReport schema:
+    {"bench": "...", "entries": [{"name", "mean_ns", "min_ns",
+                                  "iters", "melem_per_s"?}, ...]}
+
+For every entry name present in BOTH files that carries a
+``melem_per_s`` throughput, the fresh throughput must not fall more
+than ``tolerance`` (fraction) below the baseline. Entries that exist
+on only one side are reported but never fail the gate (bench sets
+evolve across PRs). An empty baseline (the schema placeholder checked
+in before the first full toolchain run) passes trivially.
+
+Because absolute Melem/s depends on the machine, the baseline diff is
+only meaningful when baseline and fresh ran on comparable hardware
+(e.g. both local, or a CI-regenerated baseline). ``--check-invariants``
+adds machine-independent *within-run* checks on the FRESH file: the
+pooled many-small-fmap paths must not be slower than the spawn-per-call
+scoped baseline by more than ``--min-pool-ratio`` — the regression the
+persistent executor pool exists to prevent, gateable on any runner.
+
+Exit code 0 = pass, 1 = regression, 2 = usage/file error.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_entries(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot read {path}: {e}",
+              file=sys.stderr)
+        sys.exit(2)
+    entries = doc.get("entries", [])
+    return {e["name"]: e for e in entries if "name" in e}
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="codec bench regression gate")
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional throughput drop "
+                         "(default 0.25 = 25%%)")
+    ap.add_argument("--check-invariants", action="store_true",
+                    help="also check machine-independent within-run "
+                         "ratios on FRESH (pooled vs scoped)")
+    ap.add_argument("--min-pool-ratio", type=float, default=0.75,
+                    help="minimum pooled/scoped throughput ratio for "
+                         "--check-invariants (default 0.75)")
+    args = ap.parse_args()
+
+    base = load_entries(args.baseline)
+    fresh = load_entries(args.fresh)
+
+    if args.check_invariants:
+        bad = 0
+        for stage in ("compress", "decompress"):
+            scoped = fresh.get(f"{stage} 64x(8x16x16) scoped")
+            pooled = fresh.get(f"{stage} 64x(8x16x16) pooled")
+            if not scoped or not pooled:
+                print(f"  [invariant ] {stage}: entries missing, "
+                      "skipped")
+                continue
+            s, p = scoped["melem_per_s"], pooled["melem_per_s"]
+            ratio = p / s if s else float("inf")
+            ok = ratio >= args.min_pool_ratio
+            print(f"  [{'ok' if ok else 'REGRESSION':10}] {stage} "
+                  f"pooled/scoped {ratio:.2f}x "
+                  f"(floor {args.min_pool_ratio:.2f}x)")
+            if not ok:
+                bad += 1
+        if bad:
+            print("bench_compare: pooled small-fmap path regressed "
+                  "below the scoped spawn-per-call baseline",
+                  file=sys.stderr)
+            return 1
+
+    if not base:
+        print(f"bench_compare: baseline {args.baseline} has no "
+              "entries (pre-toolchain placeholder); skipping gate")
+        return 0
+
+    regressions = []
+    compared = 0
+    for name, b in sorted(base.items()):
+        f = fresh.get(name)
+        if f is None:
+            print(f"  [only-baseline] {name}")
+            continue
+        b_tput = b.get("melem_per_s")
+        f_tput = f.get("melem_per_s")
+        if b_tput is None or f_tput is None:
+            continue
+        compared += 1
+        floor = b_tput * (1.0 - args.tolerance)
+        delta = (f_tput - b_tput) / b_tput * 100.0
+        status = "ok" if f_tput >= floor else "REGRESSION"
+        print(f"  [{status:10}] {name:36} "
+              f"{b_tput:10.1f} -> {f_tput:10.1f} Melem/s "
+              f"({delta:+6.1f}%)")
+        if f_tput < floor:
+            regressions.append((name, b_tput, f_tput))
+    for name in sorted(set(fresh) - set(base)):
+        print(f"  [only-fresh   ] {name}")
+
+    if compared == 0:
+        print("bench_compare: no overlapping throughput entries; "
+              "nothing to gate")
+        return 0
+    if regressions:
+        print(f"bench_compare: {len(regressions)} entr"
+              f"{'y' if len(regressions) == 1 else 'ies'} regressed "
+              f"more than {args.tolerance * 100:.0f}%:",
+              file=sys.stderr)
+        for name, b_tput, f_tput in regressions:
+            print(f"  {name}: {b_tput:.1f} -> {f_tput:.1f} Melem/s",
+                  file=sys.stderr)
+        return 1
+    print(f"bench_compare: {compared} entries within "
+          f"{args.tolerance * 100:.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
