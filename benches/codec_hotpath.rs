@@ -13,7 +13,7 @@
 //! which `tools/bench_compare.py` diffs against the checked-in file.
 
 use fmc_accel::bench_util::{BenchReport, Bencher, Sample};
-use fmc_accel::compress::{codec, dct, qtable::qtable};
+use fmc_accel::compress::{bitstream, codec, dct, qtable::qtable};
 use fmc_accel::data::{natural_image, Smoothness};
 use fmc_accel::exec;
 use fmc_accel::nn::Tensor3;
@@ -117,6 +117,41 @@ fn main() {
         codec::decompress_par(&cf).data[0]
     });
 
+    // Wire format: sealing the compressed map into its packed
+    // streams and opening it back — the serving cache's hot path.
+    // The serial seal reuses one preallocated stream set
+    // (`seal_into`), as the cache refresh does.
+    let mut seal_scratch = bitstream::FmapBitstream::empty();
+    let s15 = b.run("seal 32x64x64 serial", || {
+        bitstream::seal_into(&cf, &mut seal_scratch);
+        seal_scratch.stream_bytes()
+    });
+    let s16 = b.run("seal 32x64x64 pooled", || {
+        bitstream::seal_par(&cf).stream_bytes()
+    });
+    let sealed = bitstream::seal(&cf);
+    assert_eq!(
+        sealed,
+        bitstream::seal_par(&cf),
+        "pooled seal must be bit-identical"
+    );
+    assert_eq!(
+        8 * sealed.stream_bytes(),
+        cf.compressed_bits(),
+        "stream length must equal the storage counter"
+    );
+    let s17 = b.run("open 32x64x64 serial", || {
+        bitstream::open(&sealed).nnz()
+    });
+    let s18 = b.run("open 32x64x64 pooled", || {
+        bitstream::open_par(&sealed).nnz()
+    });
+    assert_eq!(
+        bitstream::open(&sealed).blocks,
+        cf.blocks,
+        "open(seal) must be bit-identical"
+    );
+
     // The serving-shaped workload: a stream of many *small* maps
     // (profiling samples, calibration sweeps, per-request interlayer
     // maps). Here the per-call `thread::scope` spawn the seed paid is
@@ -195,6 +230,10 @@ fn main() {
         (&s7, fmap_elems),
         (&s8, fmap_elems),
         (&s9, fmap_elems),
+        (&s15, fmap_elems),
+        (&s16, fmap_elems),
+        (&s17, fmap_elems),
+        (&s18, fmap_elems),
         (&s10, small_elems),
         (&s11, small_elems),
         (&s12, small_elems),
@@ -228,6 +267,13 @@ fn main() {
          decompress {:.2}x (spawn amortization)",
         speedup(&s11, &s12),
         speedup(&s13, &s14)
+    );
+    println!(
+        "seal/open  serial         : {:7.1} / {:7.1} Melem/s \
+         (seal is {:.1}x cheaper than compress)",
+        tput(&s15),
+        tput(&s17),
+        speedup(&s6, &s15)
     );
     println!(
         "fast-DCT speedup over naive: {:.2}x",

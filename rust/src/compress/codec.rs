@@ -2,7 +2,12 @@
 //! (zero-padded row frames), runs the DCT + two-step quantization +
 //! sparse encoding pipeline, and accounts storage exactly as the
 //! hardware does (index buffer bits + value bits + headers vs 16-bit
-//! originals). This is the L3 twin of the fused Pallas kernels.
+//! originals). This is the L3 twin of the fused Pallas kernels, with
+//! one deliberate hardware-faithful divergence: block extrema are
+//! snapped onto the 32-bit wire grid (16-bit dynamic-fixed-point,
+//! [`super::bitstream::snap_header`]) before quantization, so the
+//! whole Eq. 7–10 pipeline runs off the stored header and sealing a
+//! map to its packed bitstream is lossless.
 //!
 //! The hot path is a fused, allocation-free, per-tile kernel (see
 //! `rust/src/compress/README.md`):
@@ -25,11 +30,12 @@
 //!   [`decompress_scoped_threads`]) so `BENCH_codec_hotpath.json`
 //!   records the spawn-amortization win on many small maps.
 
+use super::bitstream::snap_header;
 use super::dct;
 use super::encode::EncodedBlock;
 use super::quant::{
-    gemm_dequantize, gemm_quantize_into, qtable_dequantize,
-    qtable_quantize_into,
+    block_extrema, gemm_dequantize, gemm_quantize_with_into,
+    qtable_dequantize, qtable_quantize_into,
 };
 use super::{Block, BLOCK, IMAX};
 use crate::exec::ExecPool;
@@ -60,6 +66,27 @@ pub struct CompressedFmap {
 }
 
 impl CompressedFmap {
+    /// Assemble from already-encoded blocks, recomputing the cached
+    /// storage totals — the `bitstream::open` reconstruction path.
+    pub fn from_blocks(blocks: Vec<EncodedBlock>, c: usize, h: usize,
+                       w: usize, qtable: Block) -> CompressedFmap {
+        let mut bits = 0u64;
+        let mut nnz = 0u64;
+        for b in &blocks {
+            bits += b.compressed_bits();
+            nnz += b.nnz() as u64;
+        }
+        CompressedFmap {
+            blocks,
+            c,
+            h,
+            w,
+            qtable,
+            bits,
+            nnz,
+        }
+    }
+
     /// Blocks per channel (padded row frames × padded column tiles).
     pub fn blocks_per_channel(&self) -> usize {
         self.h.div_ceil(BLOCK) * self.w.div_ceil(BLOCK)
@@ -165,7 +192,14 @@ fn compress_channel_into(chan: &[f32], h: usize, w: usize, qt: &Block,
         for bc in 0..wb {
             extract_tile(chan, h, w, br, bc, &mut scratch.tile);
             dct::dct2d_fast_inplace(&mut scratch.tile);
-            let hdr = gemm_quantize_into(&scratch.tile, &mut scratch.q1);
+            // Snap the extrema onto the 32-bit wire grid *before* the
+            // Eq. 7 affine map: the hardware only ever has the 16-bit
+            // dynamic-fixed-point extrema it stores (§III-B), so the
+            // q1 codes, the zero-point and the decoder all run off the
+            // same snapped values (a zero coefficient encodes to code
+            // zero exactly) and sealing the block is lossless.
+            let hdr = snap_header(block_extrema(&scratch.tile));
+            gemm_quantize_with_into(&scratch.tile, &hdr, &mut scratch.q1);
             qtable_quantize_into(&scratch.q1, qt, &hdr, &mut scratch.q2);
             out[bi].encode_from(&scratch.q2, hdr);
             bi += 1;
@@ -259,21 +293,7 @@ fn compress_serial_into(x: &Tensor3, qtable: &Block, bpc: usize,
 /// Assemble the [`CompressedFmap`] (cached totals) from filled blocks.
 fn finish_compress(x: &Tensor3, qtable: &Block,
                    blocks: Vec<EncodedBlock>) -> CompressedFmap {
-    let mut bits = 0u64;
-    let mut nnz = 0u64;
-    for b in &blocks {
-        bits += b.compressed_bits();
-        nnz += b.nnz() as u64;
-    }
-    CompressedFmap {
-        blocks,
-        c: x.c,
-        h: x.h,
-        w: x.w,
-        qtable: *qtable,
-        bits,
-        nnz,
-    }
+    CompressedFmap::from_blocks(blocks, x.c, x.h, x.w, *qtable)
 }
 
 /// Compress with channel shards submitted to `pool` (`shards` = 1 is
@@ -620,6 +640,33 @@ mod tests {
         let snrs: Vec<f64> =
             (0..4).map(|l| roundtrip_snr_db(&x, &qtable(l))).collect();
         assert!(snrs[3] > snrs[0], "{snrs:?}");
+    }
+
+    #[test]
+    fn sub_grid_span_blocks_stay_safe() {
+        // A tile whose DCT extrema lie within one wire-header grid
+        // step: fmin/fmax may snap to the same point. The kernel must
+        // emit valid (possibly all-zero) codes — quantizing against
+        // the *raw* extrema here used to spread q1 over 0..=255 and
+        // overflow i8 at aggressive tables — and decode must
+        // reconstruct the near-constant spectrum closely.
+        // index 2 carries the smallest Q-table entry at level 3 —
+        // the position where raw-extrema quantization overflowed i8
+        let mut freq = [100.0f32; 64];
+        freq[2] = 100.01;
+        let tile = dct::idct2d_fast(&freq);
+        let mut x = Tensor3::zeros(1, 8, 8);
+        x.channel_mut(0).copy_from_slice(&tile);
+        for level in 0..4 {
+            let cf = compress(&x, &qtable(level));
+            let y = decompress(&cf);
+            for (a, b) in x.data.iter().zip(y.data.iter()) {
+                assert!(
+                    (a - b).abs() < 1.0,
+                    "level {level}: {a} vs {b}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! leave SRAM 7 vacant when SRAM 0 overflows. The hardware therefore
 //! **flips every odd block vertically** so block *n+1*'s row 7 shares
 //! SRAM 0's stream with block *n*'s row 0, levelling the occupancy —
-//! modelled bit-exactly by [`FlipPacker`].
+//! modelled bit-exactly by [`FlipPacker`], and *materialized* by the
+//! production seal path ([`super::bitstream`]), whose 8 value-lane
+//! streams follow exactly this layout (property-tested against the
+//! packer model in `bitstream::tests` and `rust/tests/codec_par.rs`).
 
 use super::quant::QuantHeader;
 
@@ -119,7 +122,15 @@ impl EncodedBlock {
         ((self.bitmap >> (r * 8)) & 0xFF).count_ones() as usize
     }
 
-    /// Total storage cost in bits (bitmap + header + values).
+    /// Total storage cost in bits, **defined** as 8 × the block's
+    /// serialized stream length in the packed wire format
+    /// ([`super::bitstream`]): 8 index-buffer bytes (the 64-bit
+    /// bitmap) + 4 header bytes (packed 32-bit extrema) + one 16-bit
+    /// SRAM word per non-zero. Every component is byte-aligned by
+    /// construction, so no inter-block padding exists and the counter
+    /// below is exact — regression-tested against
+    /// `FmapBitstream::stream_bytes()` on the golden fmap in
+    /// `rust/tests/codec_golden.rs`.
     pub fn compressed_bits(&self) -> u64 {
         INDEX_BITS + HEADER_BITS + VALUE_BITS * self.len as u64
     }

@@ -93,6 +93,31 @@ pub fn code_lengths(freqs: &[u64]) -> Vec<u32> {
     lengths
 }
 
+/// Canonical code assignment from code lengths (symbols sorted by
+/// `(length, symbol)`, codes increase within a length and shift left
+/// across lengths — the standard canonical construction, so a decoder
+/// needs only the length table). Returns `(code, length)` per symbol;
+/// zero-length symbols get `(0, 0)`. Used by the wire-format
+/// [`HuffmanCodec`](super::bitstream::HuffmanCodec) to emit an actual
+/// packed bitstream rather than just a bit count.
+pub fn canonical_codes(lengths: &[u32]) -> Vec<(u64, u32)> {
+    let mut syms: Vec<usize> =
+        (0..lengths.len()).filter(|&i| lengths[i] > 0).collect();
+    syms.sort_by_key(|&i| (lengths[i], i));
+    let mut codes = vec![(0u64, 0u32); lengths.len()];
+    let mut code = 0u64;
+    let mut prev_len = 0u32;
+    for &s in &syms {
+        let l = lengths[s];
+        assert!(l <= 56, "codeword too long for the bit packer");
+        code <<= l - prev_len;
+        codes[s] = (code, l);
+        code += 1;
+        prev_len = l;
+    }
+    codes
+}
+
 /// Result of Huffman-coding a stream of quantized blocks.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HuffmanCost {
@@ -220,6 +245,38 @@ mod tests {
         assert!(kraft <= 1.0 + 1e-9, "kraft {kraft}");
         // more frequent symbols get shorter codes
         assert!(lens[0] <= lens[7]);
+    }
+
+    #[test]
+    fn canonical_codes_are_prefix_free() {
+        let freqs = vec![50u64, 20, 10, 5, 5, 5, 3, 2, 0, 1];
+        let lens = code_lengths(&freqs);
+        let codes = canonical_codes(&lens);
+        for (i, &(ca, la)) in codes.iter().enumerate() {
+            if la == 0 {
+                assert_eq!(lens[i], 0);
+                continue;
+            }
+            assert_eq!(la, lens[i]);
+            for (j, &(cb, lb)) in codes.iter().enumerate() {
+                if i == j || lb == 0 {
+                    continue;
+                }
+                // neither code is a prefix of the other
+                let (short, long, sc, lc) = if la <= lb {
+                    (la, lb, ca, cb)
+                } else {
+                    (lb, la, cb, ca)
+                };
+                assert!(
+                    (lc >> (long - short)) != sc || la == lb,
+                    "prefix clash {i}/{j}"
+                );
+                if la == lb {
+                    assert_ne!(ca, cb, "duplicate code {i}/{j}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -13,11 +13,14 @@
 //! sparsity-gated variants), [`qtable`], [`quant`], [`encode`]
 //! (bitmap + flip packing, inline-storage blocks), [`codec`] (whole
 //! feature maps: fused per-tile kernel, serial + thread-parallel
-//! entry points — see `README.md` in this directory), [`baseline`]
-//! (RLE / CSR / COO / STC comparators), [`fixed`] (16-bit dynamic
-//! fixed point, 8-bit feature-wise quant).
+//! entry points — see `README.md` in this directory), [`bitstream`]
+//! (the packed wire format: sealed index/header/value streams behind
+//! the [`bitstream::FmapCodec`] trait), [`baseline`] (RLE / CSR /
+//! COO / STC comparators), [`fixed`] (16-bit dynamic fixed point,
+//! 8-bit feature-wise quant).
 
 pub mod baseline;
+pub mod bitstream;
 pub mod codec;
 pub mod dct;
 pub mod encode;

@@ -35,26 +35,45 @@ impl QuantHeader {
     }
 }
 
-/// Eq. 7 into a caller buffer (the fused codec kernel's scratch):
-/// quantize DCT coefficients to q1 ∈ 0..=255 (as f32 to mirror the f32
-/// kernel arithmetic). Degenerate blocks map to all-zero. Bit-identical
-/// to [`gemm_quantize`].
-pub fn gemm_quantize_into(freq: &Block, q1: &mut Block) -> QuantHeader {
+/// Min/max extrema of a coefficient block — the raw Eq. 7 header
+/// (before any wire-grid snapping).
+pub fn block_extrema(freq: &Block) -> QuantHeader {
     let mut fmin = f32::INFINITY;
     let mut fmax = f32::NEG_INFINITY;
     for &v in freq.iter() {
         fmin = fmin.min(v);
         fmax = fmax.max(v);
     }
-    let hdr = QuantHeader { fmin, fmax };
+    QuantHeader { fmin, fmax }
+}
+
+/// Eq. 7 against a *given* header (the codec passes the wire-snapped
+/// extrema here so encoder, stored stream, and decoder all share one
+/// affine map): quantize to q1 ∈ 0..=255, clamping to the code range
+/// — a coefficient may sit slightly outside a snapped `[fmin, fmax]`.
+/// With `hdr = block_extrema(freq)` this is bit-identical to
+/// [`gemm_quantize_into`] (the raw extrema put the rails exactly at 0
+/// and [`IMAX`], so the clamp never engages).
+pub fn gemm_quantize_with_into(freq: &Block, hdr: &QuantHeader,
+                               q1: &mut Block) {
     let span = hdr.span();
     if span > 0.0 {
         for (q, &v) in q1.iter_mut().zip(freq.iter()) {
-            *q = rint((v - fmin) / span * IMAX);
+            *q = rint((v - hdr.fmin) / span * IMAX)
+                .clamp(0.0, IMAX);
         }
     } else {
         q1.fill(0.0); // scratch may hold a previous block
     }
+}
+
+/// Eq. 7 into a caller buffer (the fused codec kernel's scratch):
+/// quantize DCT coefficients to q1 ∈ 0..=255 (as f32 to mirror the f32
+/// kernel arithmetic). Degenerate blocks map to all-zero. Bit-identical
+/// to [`gemm_quantize`].
+pub fn gemm_quantize_into(freq: &Block, q1: &mut Block) -> QuantHeader {
+    let hdr = block_extrema(freq);
+    gemm_quantize_with_into(freq, &hdr, q1);
     hdr
 }
 
@@ -186,6 +205,39 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn quantize_with_own_extrema_matches_plain() {
+        let mut p = Prng::new(9);
+        for _ in 0..10 {
+            let f = rand_freq(&mut p);
+            let (q1, hdr) = gemm_quantize(&f);
+            let hdr2 = block_extrema(&f);
+            assert_eq!(hdr, hdr2);
+            let mut q1b = [0f32; 64];
+            gemm_quantize_with_into(&f, &hdr2, &mut q1b);
+            assert_eq!(q1, q1b);
+        }
+    }
+
+    #[test]
+    fn quantize_with_narrow_header_clamps_to_code_range() {
+        // Coefficients outside the given header (a snapped header can
+        // be narrower than the raw extrema) must clamp to the rails,
+        // never overflow the 8-bit code range.
+        let mut f = [0f32; 64];
+        f[0] = 10.0;
+        f[1] = -10.0;
+        let hdr = QuantHeader {
+            fmin: -1.0,
+            fmax: 1.0,
+        };
+        let mut q1 = [0f32; 64];
+        gemm_quantize_with_into(&f, &hdr, &mut q1);
+        assert_eq!(q1[0], IMAX);
+        assert_eq!(q1[1], 0.0);
+        assert!(q1.iter().all(|&v| (0.0..=IMAX).contains(&v)));
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Interlayer bitstream cache: sealed [`FmapBitstream`]s held between
+//! layers and requests, keyed by layer identity, evicted
+//! least-recently-used against a configurable byte budget.
+//!
+//! The serving pipeline's hardware accounting derives each layer's
+//! [`CompressionProfile`](crate::sim::scheduler::CompressionProfile)
+//! from a sealed sample stream. Sealing means compressing the
+//! representative activations and packing the wire streams — work
+//! worth doing once, not once per server start (rolling restarts,
+//! multi-tenant coordinators sharing one cache) or once per layer
+//! re-profile. A hit returns the sealed bytes directly; the profile
+//! is then re-derived from the stream alone, so cache-hit responses
+//! are byte-for-byte equal to cache-miss responses (tested in
+//! `rust/tests/server_stress.rs`).
+//!
+//! Accounting is by `FmapBitstream::stream_bytes()` — the same
+//! measured wire sizes the rest of the system budgets with.
+
+use std::sync::Arc;
+
+use crate::compress::bitstream::FmapBitstream;
+
+/// Counters + occupancy snapshot of an [`InterlayerCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Sealed stream bytes currently held.
+    pub bytes_held: u64,
+    pub entries: usize,
+    pub budget_bytes: u64,
+}
+
+/// LRU cache of sealed bitstreams with a byte budget. Entries are
+/// `Arc`-shared: a hit hands out a reference-counted handle, never a
+/// copy of the streams.
+pub struct InterlayerCache {
+    budget: u64,
+    /// LRU order: front = coldest, back = most recently used.
+    held: Vec<(String, Arc<FmapBitstream>, u64)>,
+    bytes_held: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl InterlayerCache {
+    pub fn new(budget_bytes: u64) -> Self {
+        InterlayerCache {
+            budget: budget_bytes,
+            held: Vec::new(),
+            bytes_held: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up a sealed stream. A hit refreshes the entry's recency
+    /// and returns a shared handle (no stream bytes are copied); a
+    /// lookup failure counts as a miss — callers seal outside any
+    /// lock and [`Self::insert_arc`] the result.
+    pub fn get(&mut self, key: &str) -> Option<Arc<FmapBitstream>> {
+        if let Some(i) =
+            self.held.iter().position(|(k, _, _)| k == key)
+        {
+            self.hits += 1;
+            let entry = self.held.remove(i);
+            self.held.push(entry);
+            Some(Arc::clone(&self.held.last().unwrap().1))
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// [`Self::get`], sealing and caching on a miss. Convenient when
+    /// the caller holds the lock anyway; concurrent sharers should
+    /// prefer get → seal unlocked → insert. An entry whose stream
+    /// alone exceeds the budget is returned but not retained.
+    pub fn get_or_seal<F: FnOnce() -> FmapBitstream>(
+        &mut self, key: &str, seal: F,
+    ) -> Arc<FmapBitstream> {
+        if let Some(bs) = self.get(key) {
+            return bs;
+        }
+        let bs = Arc::new(seal());
+        self.insert_arc(key.to_string(), Arc::clone(&bs));
+        bs
+    }
+
+    /// Insert (replacing any same-key entry), then evict coldest
+    /// entries until the byte budget holds.
+    pub fn insert(&mut self, key: String, bs: FmapBitstream) {
+        self.insert_arc(key, Arc::new(bs));
+    }
+
+    /// [`Self::insert`] for an already-shared stream.
+    pub fn insert_arc(&mut self, key: String,
+                      bs: Arc<FmapBitstream>) {
+        if let Some(i) =
+            self.held.iter().position(|(k, _, _)| *k == key)
+        {
+            let (_, _, b) = self.held.remove(i);
+            self.bytes_held -= b;
+        }
+        let bytes = bs.stream_bytes();
+        self.held.push((key, bs, bytes));
+        self.bytes_held += bytes;
+        while self.bytes_held > self.budget && !self.held.is_empty() {
+            let (_, _, b) = self.held.remove(0);
+            self.bytes_held -= b;
+            self.evictions += 1;
+        }
+    }
+
+    /// Sealed stream bytes currently held.
+    pub fn bytes_held(&self) -> u64 {
+        self.bytes_held
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            bytes_held: self.bytes_held,
+            entries: self.held.len(),
+            budget_bytes: self.budget,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A stream with `n` value bytes in lane 0 (stream_bytes = n).
+    fn stream_of(n: usize) -> FmapBitstream {
+        let mut bs = FmapBitstream::empty();
+        bs.lanes[0] = vec![0u8; n];
+        bs
+    }
+
+    #[test]
+    fn hit_returns_the_sealed_bytes_without_resealing() {
+        let mut c = InterlayerCache::new(1024);
+        let mut seals = 0;
+        let a = c.get_or_seal("k", || {
+            seals += 1;
+            stream_of(10)
+        });
+        let b = c.get_or_seal("k", || {
+            seals += 1;
+            stream_of(99) // must NOT be called
+        });
+        assert_eq!(seals, 1);
+        assert_eq!(a, b);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_held, 10);
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_to_budget() {
+        let mut c = InterlayerCache::new(25);
+        c.insert("a".into(), stream_of(10));
+        c.insert("b".into(), stream_of(10));
+        // touch "a" so "b" is the coldest
+        c.get_or_seal("a", || unreachable!("a is cached"));
+        c.insert("c".into(), stream_of(10));
+        let s = c.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.bytes_held, 20);
+        assert_eq!(s.evictions, 1);
+        // "b" was evicted, "a" and "c" survive
+        let mut resealed = false;
+        c.get_or_seal("b", || {
+            resealed = true;
+            stream_of(10)
+        });
+        assert!(resealed);
+        c.get_or_seal("a", || unreachable!("a still cached"));
+    }
+
+    #[test]
+    fn over_budget_entry_is_not_retained() {
+        let mut c = InterlayerCache::new(5);
+        let bs = c.get_or_seal("big", || stream_of(100));
+        assert_eq!(bs.stream_bytes(), 100);
+        let s = c.stats();
+        assert_eq!(s.entries, 0);
+        assert_eq!(s.bytes_held, 0);
+        assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn reinsert_replaces_bytes() {
+        let mut c = InterlayerCache::new(100);
+        c.insert("k".into(), stream_of(40));
+        c.insert("k".into(), stream_of(10));
+        let s = c.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.bytes_held, 10);
+    }
+}

@@ -11,6 +11,11 @@ pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
     pub errors: u64,
+    /// Interlayer bitstream-cache hits attributable to this server
+    /// (sealed streams reused instead of recompressed).
+    pub cache_hits: u64,
+    /// Interlayer bitstream-cache misses (streams sealed fresh).
+    pub cache_misses: u64,
     sum_us: u64,
     max_us: u64,
 }
@@ -36,6 +41,8 @@ impl Metrics {
             requests: 0,
             batches: 0,
             errors: 0,
+            cache_hits: 0,
+            cache_misses: 0,
             sum_us: 0,
             max_us: 0,
         }
@@ -95,6 +102,8 @@ impl Metrics {
         self.requests += o.requests;
         self.batches += o.batches;
         self.errors += o.errors;
+        self.cache_hits += o.cache_hits;
+        self.cache_misses += o.cache_misses;
         self.sum_us += o.sum_us;
         self.max_us = self.max_us.max(o.max_us);
     }
@@ -133,9 +142,13 @@ mod tests {
         a.observe(Duration::from_micros(10));
         b.observe(Duration::from_micros(20));
         b.batches = 3;
+        b.cache_hits = 2;
+        b.cache_misses = 1;
         a.merge(&b);
         assert_eq!(a.requests, 2);
         assert_eq!(a.batches, 3);
+        assert_eq!(a.cache_hits, 2);
+        assert_eq!(a.cache_misses, 1);
     }
 
     #[test]

@@ -11,10 +11,12 @@
 //! channels — tokio is unavailable offline (DESIGN.md §4).
 
 pub mod batcher;
+pub mod cache;
 pub mod metrics;
 pub mod server;
 
 pub use batcher::{BatchOutcome, BatchPolicy};
+pub use cache::{CacheStats, InterlayerCache};
 pub use metrics::Metrics;
 pub use server::{
     EngineFactory, InferenceEngine, InferenceServer, Request,

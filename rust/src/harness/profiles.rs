@@ -1,29 +1,126 @@
 //! Per-layer compression profiling: run the real codec over synthetic
 //! activations whose smoothness follows the layer's depth (paper
-//! Fig. 2), producing the [`CompressionProfile`]s the simulator and the
-//! Table II/III/IV benches consume.
+//! Fig. 2), **seal the result to the packed wire format**, and derive
+//! the [`CompressionProfile`]s the simulator and the Table II/III/IV
+//! benches consume from the sealed stream's byte counts — measured
+//! sizes are the accounting source of truth (ROADMAP §Performance),
+//! the analytic ratio rides along for drift visibility.
 
-use crate::compress::{codec, qtable::qtable, BLOCK};
+use crate::compress::bitstream::{self, FmapBitstream};
+use crate::compress::{codec, qtable::qtable};
 use crate::config::{FusionLayer, Network};
 use crate::data::{natural_image, Smoothness};
 use crate::exec::ExecPool;
-use crate::sim::scheduler::CompressionProfile;
+use crate::sim::scheduler::{CompressionProfile, StreamMeasure};
 
-/// Measured compression of one layer's output.
-#[derive(Debug, Clone, Copy)]
+/// Measured compression of one layer's output. All byte counts are
+/// full-map numbers (sample extrapolated over unsampled channels).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LayerProfile {
     pub ratio: f64,
     pub nnz_density: f64,
     /// Raw output bytes (16-bit).
     pub raw_bytes: u64,
-    /// Stored (compressed) bytes.
+    /// Stored (sealed) bytes: `data_bytes + index_bytes`.
     pub stored_bytes: u64,
+    /// Measured header + value-lane stream bytes.
+    pub data_bytes: u64,
+    /// Measured index-bitmap stream bytes.
+    pub index_bytes: u64,
     pub qlevel: usize,
+}
+
+impl LayerProfile {
+    /// The hardware bypass rule (§VI-A), shared by every consumer
+    /// (harness schedules and the serving coordinator): compression
+    /// pays only when the measured wire ratio is below 1.0 —
+    /// otherwise the layer is stored raw and the DCT modules are
+    /// clock-gated off.
+    pub fn pays(&self) -> bool {
+        self.ratio < 1.0
+    }
 }
 
 /// Channels sampled per layer: statistics converge fast across
 /// channels, so sampling caps the profiling cost on 400-channel maps.
 pub const SAMPLE_CHANNELS: usize = 8;
+
+/// Compress + seal one layer's sampled output map on an explicit
+/// pool: the bitstream a profile is derived from, and what the
+/// coordinator's interlayer cache stores between layers/requests.
+pub fn seal_layer_sample_with_pool(layer: &FusionLayer,
+                                   layer_index: usize, qlevel: usize,
+                                   seed: u64, depthwise_net: bool,
+                                   pool: &ExecPool) -> FmapBitstream {
+    let (c, h, w) = layer.out_dims();
+    let relu_like = layer.act.sparsifying();
+    let smooth = Smoothness::for_layer_arch(
+        layer_index,
+        !relu_like,
+        depthwise_net,
+    );
+    let sample_c = c.min(SAMPLE_CHANNELS);
+    let fmap = natural_image(
+        seed ^ (layer_index as u64) << 8,
+        sample_c,
+        h,
+        w,
+        smooth,
+        relu_like,
+    );
+    // Pooled codec + pooled seal: bit-identical to the serial paths,
+    // so sealed streams stay deterministic given the seed (and
+    // pool-size invariant).
+    let cf = codec::compress_with_pool(&fmap, &qtable(qlevel), pool);
+    bitstream::seal_with_pool(&cf, pool)
+}
+
+/// [`seal_layer_sample_with_pool`] on the persistent global pool.
+pub fn seal_layer_sample(layer: &FusionLayer, layer_index: usize,
+                         qlevel: usize, seed: u64,
+                         depthwise_net: bool) -> FmapBitstream {
+    seal_layer_sample_with_pool(
+        layer,
+        layer_index,
+        qlevel,
+        seed,
+        depthwise_net,
+        crate::exec::global(),
+    )
+}
+
+/// Derive a [`LayerProfile`] from an already-sealed sample stream —
+/// the interlayer cache's hit path: no recompression, the measured
+/// byte counts come straight off the wire. Extrapolates the sampled
+/// channels to the layer's full channel count.
+pub fn profile_from_bitstream(layer: &FusionLayer,
+                              bs: &FmapBitstream, qlevel: usize)
+                              -> LayerProfile {
+    let (c, _, _) = layer.out_dims();
+    let sample_c = bs.c.max(1);
+    let blocks = bs.blocks() as u64;
+    let nnz = bs.value_bytes() / 2;
+    let ratio = bs.wire_ratio();
+    let nnz_density = if blocks == 0 {
+        0.0
+    } else {
+        nnz as f64 / (blocks * 64) as f64
+    };
+    let scale = |b: u64| -> u64 {
+        (b as f64 * c as f64 / sample_c as f64).ceil() as u64
+    };
+    let data_bytes = scale(bs.header_bytes() + bs.value_bytes());
+    let index_bytes = scale(bs.index_bytes());
+    LayerProfile {
+        ratio,
+        nnz_density,
+        raw_bytes: layer.out_fmap_bytes(),
+        stored_bytes: data_bytes + index_bytes,
+        data_bytes,
+        index_bytes,
+        qlevel,
+    }
+}
 
 /// Profile one layer's *output* feature map at a given Q-level, on
 /// the persistent global executor pool. `depthwise_net` marks
@@ -44,45 +141,21 @@ pub fn profile_layer(layer: &FusionLayer, layer_index: usize,
 
 /// [`profile_layer`] on an explicit pool — the sampled maps are small
 /// (≤ [`SAMPLE_CHANNELS`] channels), so profiling is exactly the
-/// many-small-fmap workload the persistent pool amortizes.
+/// many-small-fmap workload the persistent pool amortizes. The
+/// profile is measured off the sealed wire stream.
 pub fn profile_layer_with_pool(layer: &FusionLayer,
                                layer_index: usize, qlevel: usize,
                                seed: u64, depthwise_net: bool,
                                pool: &ExecPool) -> LayerProfile {
-    let (c, h, w) = layer.out_dims();
-    let relu_like = layer.act.sparsifying();
-    let smooth = Smoothness::for_layer_arch(
+    let bs = seal_layer_sample_with_pool(
+        layer,
         layer_index,
-        !relu_like,
-        depthwise_net,
-    );
-    let sample_c = c.min(SAMPLE_CHANNELS);
-    let fmap = natural_image(
-        seed ^ (layer_index as u64) << 8,
-        sample_c,
-        h,
-        w,
-        smooth,
-        relu_like,
-    );
-    // Pooled codec: bit-identical to the serial path, so profiles
-    // stay deterministic given the seed (and pool-size invariant).
-    let cf = codec::compress_with_pool(&fmap, &qtable(qlevel), pool);
-    let ratio = cf.compression_ratio();
-    let blocks = cf.blocks.len() as u64;
-    let nnz_density = if blocks == 0 {
-        0.0
-    } else {
-        cf.nnz() as f64 / (blocks * (BLOCK * BLOCK) as u64) as f64
-    };
-    let raw = layer.out_fmap_bytes();
-    LayerProfile {
-        ratio,
-        nnz_density,
-        raw_bytes: raw,
-        stored_bytes: (raw as f64 * ratio).ceil() as u64,
         qlevel,
-    }
+        seed,
+        depthwise_net,
+        pool,
+    );
+    profile_from_bitstream(layer, &bs, qlevel)
 }
 
 /// Profile a network with its assigned per-layer schedule
@@ -110,12 +183,13 @@ pub fn profile_network_with_pool(net: &Network, seed: u64,
                 // (small/dense maps where padding + index overhead
                 // exceed the zero savings), the hardware turns the
                 // DCT modules off and stores raw (§VI-A).
-                .filter(|p| p.ratio < 1.0)
+                .filter(|p| p.pays())
         })
         .collect()
 }
 
-/// Convert to the simulator's profile type.
+/// Convert to the simulator's profile type, carrying the measured
+/// stream footprint so the scheduler accounts real wire bytes.
 pub fn to_sim_profiles(profiles: &[Option<LayerProfile>])
                        -> Vec<Option<CompressionProfile>> {
     profiles
@@ -124,6 +198,10 @@ pub fn to_sim_profiles(profiles: &[Option<LayerProfile>])
             p.map(|p| CompressionProfile {
                 ratio: p.ratio,
                 nnz_density: p.nnz_density,
+                stream: Some(StreamMeasure {
+                    data_bytes: p.data_bytes,
+                    index_bytes: p.index_bytes,
+                }),
             })
         })
         .collect()
@@ -224,6 +302,32 @@ mod tests {
                 assert_eq!(x.map(|p| p.nnz_density),
                            y.map(|p| p.nnz_density));
             }
+        }
+    }
+
+    #[test]
+    fn profile_measures_the_sealed_stream() {
+        // The profile must be derivable from the sealed sample alone
+        // (the interlayer cache's hit path) and agree with the
+        // analytic ratio within extrapolation rounding.
+        let net = models::vgg16_bn().with_default_schedule(4);
+        let dw = net.has_depthwise();
+        for (i, l) in net.layers.iter().enumerate().take(4) {
+            let q = l.qlevel.unwrap();
+            let bs = seal_layer_sample(l, i, q, 9, dw);
+            let p = profile_from_bitstream(l, &bs, q);
+            assert_eq!(p, profile_layer(l, i, q, 9, dw));
+            assert_eq!(p.stored_bytes, p.data_bytes + p.index_bytes);
+            // measured bytes vs analytic ratio: same wire format, so
+            // drift is only the per-stream ceil of the extrapolation
+            let analytic = (p.raw_bytes as f64 * p.ratio).ceil();
+            let drift =
+                (p.stored_bytes as f64 - analytic).abs();
+            assert!(
+                drift <= 2.0,
+                "layer {i}: measured {} vs analytic {analytic}",
+                p.stored_bytes
+            );
         }
     }
 }

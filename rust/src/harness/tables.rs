@@ -142,6 +142,10 @@ pub struct CompressionTable {
     /// per network: first-10 ratios
     pub first10: Vec<Vec<f64>>,
     pub overall: Vec<f64>,
+    /// Per network, the full measured layer profiles the ratios were
+    /// derived from — exposed so companions (the wire-drift table)
+    /// don't recompress what this pass already profiled.
+    pub profiles: Vec<Vec<Option<profiles::LayerProfile>>>,
 }
 
 pub fn table3(seed: u64) -> CompressionTable {
@@ -149,6 +153,7 @@ pub fn table3(seed: u64) -> CompressionTable {
     let mut networks = Vec::new();
     let mut first10 = Vec::new();
     let mut overall = Vec::new();
+    let mut per_net_profiles = Vec::new();
     for net in nets {
         let net = net.with_paper_schedule();
         let prof = profiles::profile_network(&net, seed);
@@ -161,11 +166,13 @@ pub fn table3(seed: u64) -> CompressionTable {
         overall.push(overall_ratio(&prof));
         networks.push(net.name.clone());
         first10.push(f10);
+        per_net_profiles.push(prof);
     }
     CompressionTable {
         networks,
         first10,
         overall,
+        profiles: per_net_profiles,
     }
 }
 
@@ -382,6 +389,46 @@ pub fn baseline_comparison(seed: u64) -> Table {
     t
 }
 
+/// Wire-format drift companion (printed next to Table III): for each
+/// profiled layer, the analytic compression ratio beside the
+/// *measured* sealed-stream bytes, so divergence between the ratio
+/// model and the packed wire format is visible the moment either
+/// changes. With the bitmap scheme the two agree to extrapolation
+/// rounding — a non-zero drift column is the regression signal.
+/// Takes already-computed profiles so callers don't recompress what
+/// they just profiled.
+pub fn wire_drift_table(
+    net: &Network, prof: &[Option<profiles::LayerProfile>],
+) -> Table {
+    let mut t = Table::new(&[
+        "Layer",
+        "Raw",
+        "Analytic ratio",
+        "Wire bytes (data+index)",
+        "Wire ratio",
+        "Drift",
+    ]);
+    for (l, p) in net.layers.iter().zip(prof.iter()) {
+        let Some(p) = p else { continue };
+        let wire_ratio = p.stored_bytes as f64 / p.raw_bytes as f64;
+        let drift = wire_ratio - p.ratio;
+        t.row(&[
+            l.name.clone(),
+            crate::util::human_bytes(p.raw_bytes),
+            pct(p.ratio),
+            format!(
+                "{} ({} + {})",
+                crate::util::human_bytes(p.stored_bytes),
+                crate::util::human_bytes(p.data_bytes),
+                crate::util::human_bytes(p.index_bytes),
+            ),
+            pct(wire_ratio),
+            format!("{:+.4}%", drift * 100.0),
+        ]);
+    }
+    t
+}
+
 /// Networks used by the quickstart CLI.
 pub fn network_by_name(name: &str) -> Option<Network> {
     let n = match name.to_lowercase().as_str() {
@@ -461,6 +508,25 @@ mod tests {
         let ours = rows.last().unwrap();
         assert!(ours.name.contains("This Work"));
         assert!(ours.gops > 50.0 && ours.gops < 403.2);
+    }
+
+    #[test]
+    fn wire_drift_is_negligible_for_the_bitmap_scheme() {
+        // The sealed stream *is* what compressed_bits counts, so the
+        // only drift is extrapolation rounding. A visible drift here
+        // means the wire format and the accounting diverged.
+        let net = models::vgg16_bn().with_paper_schedule();
+        let prof = profiles::profile_network(&net, 3);
+        for p in prof.iter().flatten() {
+            let wire = p.stored_bytes as f64 / p.raw_bytes as f64;
+            assert!(
+                (wire - p.ratio).abs() < 1e-5,
+                "wire {wire} vs analytic {}",
+                p.ratio
+            );
+        }
+        let t = wire_drift_table(&net, &prof);
+        assert!(t.rows_len() >= 10);
     }
 
     #[test]

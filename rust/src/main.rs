@@ -8,14 +8,16 @@
 //!   calibrate --network N [--floor SNR_DB] [--seed S] [--json]
 //!   compress-demo [--seed S] [--level L]
 //!   serve    --requests N [--workers W] [--no-compress]
-//!            [--artifacts DIR]
+//!            [--artifacts DIR] [--cache-budget BYTES]
 //!   selftest [--artifacts DIR]
 
 use fmc_accel::bench_util::{pct, Table};
 use fmc_accel::cli::Args;
 use fmc_accel::compress::{codec, qtable::qtable};
-use fmc_accel::config::AccelConfig;
-use fmc_accel::coordinator::{InferenceServer, ServerConfig};
+use fmc_accel::config::{models, AccelConfig};
+use fmc_accel::coordinator::{
+    InferenceServer, InterlayerCache, ServerConfig,
+};
 use fmc_accel::data;
 use fmc_accel::harness::{figs, profiles, tables};
 use fmc_accel::runtime::{default_artifacts_dir, Runtime};
@@ -60,7 +62,20 @@ fn report(args: &Args) -> i32 {
     }
     if all || what == "table3" {
         println!("\n== Table III: layer-by-layer compression ratio ==");
-        tables::table3_table(&tables::table3(seed)).print();
+        let c3 = tables::table3(seed);
+        tables::table3_table(&c3).print();
+        // Wire-drift companion reuses the profiles table3 measured —
+        // no second compress+seal pass over VGG.
+        let vgg = models::vgg16_bn().with_paper_schedule();
+        if let Some(i) =
+            c3.networks.iter().position(|n| n.contains("VGG"))
+        {
+            println!(
+                "\n-- wire-format drift (VGG-16-BN): measured \
+                 sealed bytes vs analytic ratio --"
+            );
+            tables::wire_drift_table(&vgg, &c3.profiles[i]).print();
+        }
     }
     if all || what == "table4" {
         println!("\n== Table IV: vs DAC'20 STC-like baseline ==");
@@ -275,7 +290,17 @@ fn serve(args: &Args) -> i32 {
         .opt("artifacts")
         .map(Into::into)
         .unwrap_or_else(default_artifacts_dir);
-    let mut cfg = ServerConfig::new(dir).with_workers(workers);
+    // Interlayer bitstream cache: sealed sample streams reused
+    // across the server's profiling passes; budget in bytes via
+    // --cache-budget.
+    let cache = std::sync::Arc::new(std::sync::Mutex::new(
+        InterlayerCache::new(
+            args.opt_usize("cache-budget", 8 * 1024 * 1024) as u64,
+        ),
+    ));
+    let mut cfg = ServerConfig::new(dir)
+        .with_workers(workers)
+        .with_cache(cache.clone());
     cfg.compressed = !args.flag("no-compress");
     let server = match InferenceServer::start(cfg) {
         Ok(s) => s,
@@ -317,6 +342,14 @@ fn serve(args: &Args) -> i32 {
     println!("mean lat  : {:.2} ms", metrics.mean_latency_us() / 1e3);
     println!("p99 lat   : {:.2} ms",
              metrics.quantile_us(0.99) as f64 / 1e3);
+    let cs = cache.lock().unwrap().stats();
+    println!(
+        "bs cache  : {} hits, {} misses, {} held in {} entries",
+        metrics.cache_hits,
+        metrics.cache_misses,
+        human_bytes(cs.bytes_held),
+        cs.entries
+    );
     if metrics.errors > 0 {
         eprintln!("errors    : {}", metrics.errors);
         return 1;

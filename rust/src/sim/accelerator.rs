@@ -181,9 +181,22 @@ impl Accelerator {
                         stats.dct_ccm_ops += t.ccm_ops;
                     }
                     stats.sram_write_bits += bytes * 8;
+                    // Stored size taken from a measured sealed
+                    // stream: count it toward the wire-format share
+                    // of the accounting. `bytes` is the whole stream
+                    // (values + headers + index bitmaps).
+                    if let Some(p) = cur {
+                        if *compressed && p.out_measured {
+                            stats.fmap_wire_bits += *bytes * 8;
+                        }
+                    }
                 }
                 Instr::SpillOut { bytes } => {
-                    dma.add_fmap(*bytes);
+                    if cur.map(|p| p.out_measured).unwrap_or(false) {
+                        dma.add_fmap_measured(*bytes);
+                    } else {
+                        dma.add_fmap(*bytes);
+                    }
                     stats.dram_fmap_bits += bytes * 8;
                 }
                 Instr::SwapBuffers => {
@@ -192,7 +205,11 @@ impl Accelerator {
                     let refetch = plan.spill_in_bytes
                         * plan.filter_groups;
                     if refetch > 0 {
-                        dma.add_fmap(refetch);
+                        if plan.in_measured {
+                            dma.add_fmap_measured(refetch);
+                        } else {
+                            dma.add_fmap(refetch);
+                        }
                         stats.dram_fmap_bits += refetch * 8;
                     }
                     // DCT/IDCT pipeline with the PE array; DMA overlaps
@@ -281,10 +298,7 @@ mod tests {
     }
 
     fn flat(r: f64) -> Option<CompressionProfile> {
-        Some(CompressionProfile {
-            ratio: r,
-            nnz_density: r,
-        })
+        Some(CompressionProfile::analytic(r, r))
     }
 
     #[test]
@@ -369,6 +383,44 @@ mod tests {
             let rep = accel().run_flat(&net, flat(0.65));
             assert!(rep.fps() > 20.0, "{} fps {}", net.name, rep.fps());
         }
+    }
+
+    #[test]
+    fn measured_profiles_feed_wire_accounting() {
+        use crate::sim::scheduler::StreamMeasure;
+        let net = models::vgg16_bn();
+        // Every layer profiled with a measured sealed stream at ~30%
+        // of raw: the wire share of the stored/spill accounting must
+        // be total, and the analytic run must book none of it.
+        let profiles: Vec<Option<CompressionProfile>> = net
+            .layers
+            .iter()
+            .map(|l| {
+                let raw = l.out_fmap_bytes();
+                Some(CompressionProfile {
+                    ratio: 0.3,
+                    nnz_density: 0.3,
+                    stream: Some(StreamMeasure {
+                        data_bytes: raw * 28 / 100,
+                        index_bytes: raw * 2 / 100,
+                    }),
+                })
+            })
+            .collect();
+        let rep = accel().run(&net, &profiles);
+        assert!(rep.stats.fmap_wire_bits > 0);
+        // Only the raw layer-0 input (its initial load and its spill
+        // re-fetches) is unmeasured; every stored interlayer stream
+        // books against sealed bytes.
+        assert!(rep.dma.measured_fmap_bytes > 0);
+        assert!(
+            rep.dma.measured_fmap_bytes < rep.dma.fmap_bytes,
+            "layer-0 raw input must stay unmeasured"
+        );
+        assert!(rep.dma.measured_fraction() > 0.5);
+        let analytic = accel().run_flat(&net, flat(0.3));
+        assert_eq!(analytic.stats.fmap_wire_bits, 0);
+        assert_eq!(analytic.dma.measured_fmap_bytes, 0);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 use crate::config::accel::KB;
 use crate::config::AccelConfig;
+use crate::sim::scheduler::StreamMeasure;
 
 /// Where each 32 KB sub-bank is attached for one layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,6 +100,19 @@ impl BufferBank {
         data_bytes <= self.fmap_b() && index_bytes <= self.index_half()
     }
 
+    /// [`Self::input_fits`] from a measured sealed-stream footprint:
+    /// header + value-lane bytes occupy the fmap buffer, the index
+    /// bitmap stream occupies the index-buffer half — the bytes the
+    /// wire format actually serialized, not the ratio model.
+    pub fn input_fits_measured(&self, m: &StreamMeasure) -> bool {
+        self.input_fits(m.data_bytes as usize, m.index_bytes as usize)
+    }
+
+    /// [`Self::output_fits`] from a measured sealed-stream footprint.
+    pub fn output_fits_measured(&self, m: &StreamMeasure) -> bool {
+        self.output_fits(m.data_bytes as usize, m.index_bytes as usize)
+    }
+
     /// Rows of partial sums the scratch pad can hold for a given tile
     /// width and filter parallelism (16-bit psums).
     pub fn psum_rows(&self, w_out: usize, filters: usize) -> usize {
@@ -150,6 +164,25 @@ mod tests {
         assert!(b.input_fits(128 * KB, 16 * KB));
         assert!(!b.input_fits(129 * KB, 16 * KB));
         assert!(!b.input_fits(64 * KB, 17 * KB));
+    }
+
+    #[test]
+    fn measured_footprint_checks_both_memories() {
+        let b = bank(0, 0, 4);
+        assert!(b.input_fits_measured(&StreamMeasure {
+            data_bytes: 128 * KB as u64,
+            index_bytes: 16 * KB as u64,
+        }));
+        // value/header bytes overflow the fmap buffer
+        assert!(!b.input_fits_measured(&StreamMeasure {
+            data_bytes: 129 * KB as u64,
+            index_bytes: 16 * KB as u64,
+        }));
+        // index stream overflows its buffer half on its own
+        assert!(!b.output_fits_measured(&StreamMeasure {
+            data_bytes: 64 * KB as u64,
+            index_bytes: 17 * KB as u64,
+        }));
     }
 
     #[test]

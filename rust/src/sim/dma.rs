@@ -11,6 +11,11 @@ pub struct DmaTraffic {
     pub fmap_bytes: u64,
     /// Weight bytes moved (DRAM → chip only; weights are read-only).
     pub weight_bytes: u64,
+    /// Portion of `fmap_bytes` whose sizes came from measured sealed
+    /// bitstreams (`FmapBitstream::stream_bytes`) rather than the
+    /// ratio-arithmetic fallback — the wire-format share of the
+    /// accounting, surfaced so model-vs-wire drift stays visible.
+    pub measured_fmap_bytes: u64,
 }
 
 impl DmaTraffic {
@@ -36,6 +41,24 @@ impl DmaTraffic {
         self.fmap_bytes += bytes;
     }
 
+    /// Feature-map traffic whose size is a measured sealed-stream
+    /// byte count (profiled layers); counted in `fmap_bytes` *and*
+    /// in the `measured_fmap_bytes` subtotal.
+    pub fn add_fmap_measured(&mut self, bytes: u64) {
+        self.fmap_bytes += bytes;
+        self.measured_fmap_bytes += bytes;
+    }
+
+    /// Fraction of feature-map traffic accounted from measured wire
+    /// streams (1.0 = every profiled byte was a sealed byte).
+    pub fn measured_fraction(&self) -> f64 {
+        if self.fmap_bytes == 0 {
+            0.0
+        } else {
+            self.measured_fmap_bytes as f64 / self.fmap_bytes as f64
+        }
+    }
+
     pub fn add_weights(&mut self, bytes: u64) {
         self.weight_bytes += bytes;
     }
@@ -51,6 +74,7 @@ mod tests {
         let t = DmaTraffic {
             fmap_bytes: 3_850_000_000,
             weight_bytes: 1_000,
+            ..Default::default()
         };
         assert!((t.transfer_secs(&cfg) - 1.0).abs() < 1e-3);
     }
@@ -61,6 +85,7 @@ mod tests {
         let t = DmaTraffic {
             fmap_bytes: 1_000_000,
             weight_bytes: 0,
+            ..Default::default()
         };
         let j = t.dram_energy_j(&cfg);
         assert!((j - 1e6 * 8.0 * 70e-12).abs() < 1e-12);
@@ -72,5 +97,16 @@ mod tests {
         t.add_fmap(10);
         t.add_weights(5);
         assert_eq!(t.total_bytes(), 15);
+    }
+
+    #[test]
+    fn measured_subtotal_tracks_wire_traffic() {
+        let mut t = DmaTraffic::default();
+        t.add_fmap(30);
+        t.add_fmap_measured(10);
+        assert_eq!(t.fmap_bytes, 40);
+        assert_eq!(t.measured_fmap_bytes, 10);
+        assert_eq!(t.measured_fraction(), 0.25);
+        assert_eq!(DmaTraffic::default().measured_fraction(), 0.0);
     }
 }

@@ -28,6 +28,10 @@ pub struct Stats {
     pub dram_fmap_bits: u64,
     /// Bits moved from DRAM (weights).
     pub dram_weight_bits: u64,
+    /// Bits of stored interlayer maps whose sizes came from measured
+    /// sealed bitstreams (`FmapBitstream::stream_bytes`) rather than
+    /// the ratio model — the wire-format share of the accounting.
+    pub fmap_wire_bits: u64,
     /// Cycles the PE array stalled waiting on DCT/IDCT or DMA.
     pub stall_cycles: u64,
 }
@@ -51,6 +55,7 @@ impl Stats {
         self.sram_write_bits += o.sram_write_bits;
         self.dram_fmap_bits += o.dram_fmap_bits;
         self.dram_weight_bits += o.dram_weight_bits;
+        self.fmap_wire_bits += o.fmap_wire_bits;
         self.stall_cycles += o.stall_cycles;
     }
 

@@ -3,7 +3,8 @@
 //! pure-jnp oracle semantics the Pallas kernels are tested against).
 //! This is the contract that makes L1/L2/L3 one system.
 
-use fmc_accel::compress::{dct, quant, qtable};
+use fmc_accel::compress::{bitstream, codec, dct, quant, qtable};
+use fmc_accel::nn::Tensor3;
 use fmc_accel::util::json::Json;
 
 fn golden() -> Json {
@@ -93,6 +94,48 @@ fn quantized_codes_match_python_exactly() {
                 );
             }
         }
+    }
+}
+
+/// The golden feature map: every pinned 8×8 input block as one
+/// channel of a (cases, 8, 8) tensor.
+fn golden_fmap() -> Tensor3 {
+    let g = golden();
+    let cases = g.get("cases").as_arr().unwrap();
+    let mut t = Tensor3::zeros(cases.len(), 8, 8);
+    for (ch, case) in cases.iter().enumerate() {
+        let input = to_block(case.get("input"));
+        t.channel_mut(ch).copy_from_slice(&input);
+    }
+    t
+}
+
+#[test]
+fn compressed_bits_equals_serialized_stream_length() {
+    // Satellite regression: `compressed_bits()` is *defined* as 8 ×
+    // the serialized stream length. On the golden fmap the legacy
+    // arithmetic counter (64-bit bitmap + 32-bit header + one 16-bit
+    // word per non-zero) and the measured byte length of the sealed
+    // streams must agree exactly, at every Q-level.
+    let x = golden_fmap();
+    for level in 0..4 {
+        let cf = codec::compress(&x, &qtable::qtable(level));
+        let legacy: u64 = cf
+            .blocks
+            .iter()
+            .map(|b| 64 + 32 + 16 * b.nnz() as u64)
+            .sum();
+        assert_eq!(cf.compressed_bits(), legacy, "level {level}");
+        let sealed = bitstream::seal(&cf);
+        assert_eq!(
+            8 * sealed.stream_bytes(),
+            legacy,
+            "level {level}: wire bytes vs legacy counter"
+        );
+        // per-stream breakdown is exact too
+        assert_eq!(sealed.index_bytes(), 8 * cf.blocks.len() as u64);
+        assert_eq!(sealed.header_bytes(), 4 * cf.blocks.len() as u64);
+        assert_eq!(sealed.value_bytes(), 2 * cf.nnz());
     }
 }
 

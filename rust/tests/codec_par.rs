@@ -6,6 +6,9 @@
 //! `idct2d_sparse` must match `idct2d_fast` on any coefficient block
 //! whose masked-out entries are exactly zero.
 
+use fmc_accel::compress::bitstream;
+use fmc_accel::compress::codec::CompressedFmap;
+use fmc_accel::compress::encode::FlipPacker;
 use fmc_accel::compress::{codec, dct, qtable::qtable};
 use fmc_accel::exec::ExecPool;
 use fmc_accel::nn::Tensor3;
@@ -142,6 +145,110 @@ fn par_entry_points_match_explicit_thread_counts() {
     assert_eq!(
         codec::roundtrip(&x, &qt).data,
         codec::roundtrip_par(&x, &qt).data
+    );
+}
+
+fn assert_same_fmap(a: &CompressedFmap, b: &CompressedFmap) {
+    assert_eq!(a.blocks, b.blocks);
+    assert_eq!((a.c, a.h, a.w), (b.c, b.h, b.w));
+    assert_eq!(a.qtable, b.qtable);
+    assert_eq!(a.compressed_bits(), b.compressed_bits());
+    assert_eq!(a.nnz(), b.nnz());
+}
+
+#[test]
+fn seal_open_roundtrip_bit_identical_across_pools() {
+    // The wire format must reproduce the in-memory codec exactly —
+    // same blocks, bitmaps, headers, cached totals — for every shard
+    // count and pool size (including 1), and every sharded seal must
+    // produce byte-identical streams.
+    check_prop("seal/open ≡ id over shards × pools", 10, |p| {
+        let x = rand_fmap(p, 9, 40);
+        let cf = codec::compress(&x, &qtable(p.below(4)));
+        let sealed = bitstream::seal(&cf);
+        assert_eq!(
+            8 * sealed.stream_bytes(),
+            cf.compressed_bits(),
+            "serialized length vs storage counter"
+        );
+        assert_same_fmap(&bitstream::open(&sealed), &cf);
+        for pool_size in [1usize, 2, 4] {
+            let pool = ExecPool::new(pool_size);
+            for shards in [1usize, 2, 7] {
+                let s2 = bitstream::seal_sharded(&cf, shards, &pool);
+                assert_eq!(
+                    sealed, s2,
+                    "seal @ {shards} shards on pool {pool_size}"
+                );
+                let o2 = bitstream::open_sharded(&s2, shards, &pool);
+                assert_same_fmap(&o2, &cf);
+            }
+        }
+    });
+}
+
+#[test]
+fn sealed_lanes_follow_the_flip_packer_and_stay_level() {
+    // Satellite: FlipPacker drives the production stored layout.
+    // The sealed value lanes must match the packer model word for
+    // word, and flip packing must never utilize the 8 SRAM lanes
+    // worse than unflipped packing (it exists to level them).
+    check_prop("flip-packed lanes level", 10, |p| {
+        let x = rand_fmap(p, 6, 40);
+        let cf = codec::compress(&x, &qtable(p.below(4)));
+        let flip = bitstream::seal(&cf);
+        let mut model = FlipPacker::new();
+        for b in &cf.blocks {
+            model.push(b);
+        }
+        for l in 0..8 {
+            assert_eq!(
+                flip.lane_bytes()[l],
+                2 * model.row_occupancy[l],
+                "lane {l} vs FlipPacker"
+            );
+        }
+        let noflip = bitstream::seal_unflipped(&cf);
+        assert_eq!(flip.value_bytes(), noflip.value_bytes());
+        // Quantized DCT spectra are top-heavy, so flipping levels the
+        // lanes (small slack absorbs near-symmetric random blocks).
+        assert!(
+            flip.lane_utilization() >= noflip.lane_utilization() - 0.02,
+            "flip {} < noflip {}",
+            flip.lane_utilization(),
+            noflip.lane_utilization()
+        );
+        // both layouts reconstruct the same map
+        assert_same_fmap(&bitstream::open(&noflip), &cf);
+    });
+}
+
+#[test]
+fn flip_levels_top_heavy_spectra_strictly() {
+    // On natural (top-heavy) spectra the flip is a strict win, as in
+    // Fig. 5: deterministic smooth map, strictly better utilization.
+    let mut x = Tensor3::zeros(4, 32, 32);
+    for ch in 0..4 {
+        for r in 0..32 {
+            for c in 0..32 {
+                x.set(
+                    ch,
+                    r,
+                    c,
+                    ((r + ch) as f32 * 0.15).sin()
+                        + c as f32 * 0.02,
+                );
+            }
+        }
+    }
+    let cf = codec::compress(&x, &qtable(1));
+    let flip = bitstream::seal(&cf);
+    let noflip = bitstream::seal_unflipped(&cf);
+    assert!(
+        flip.lane_utilization() > noflip.lane_utilization(),
+        "flip {} vs noflip {}",
+        flip.lane_utilization(),
+        noflip.lane_utilization()
     );
 }
 

@@ -134,10 +134,10 @@ fn scheduler_plans_are_consistent_with_program() {
             .layers
             .iter()
             .map(|_| {
-                Some(CompressionProfile {
-                    ratio: 0.1 + p.uniform() * 0.9,
-                    nnz_density: p.uniform(),
-                })
+                Some(CompressionProfile::analytic(
+                    0.1 + p.uniform() * 0.9,
+                    p.uniform(),
+                ))
             })
             .collect();
         let (plans, queue) = scheduler::lower(&cfg, &net, &profiles);
@@ -168,10 +168,7 @@ fn simulator_conserves_macs_and_cycles() {
         let r = p.uniform();
         let rep = accel.run_flat(
             &net,
-            Some(CompressionProfile {
-                ratio: 0.2 + 0.6 * r,
-                nnz_density: r,
-            }),
+            Some(CompressionProfile::analytic(0.2 + 0.6 * r, r)),
         );
         assert_eq!(rep.stats.macs, net.total_macs());
         let per_layer: u64 =
@@ -193,10 +190,7 @@ fn better_compression_never_increases_traffic() {
             accel
                 .run_flat(
                     &net,
-                    Some(CompressionProfile {
-                        ratio: r,
-                        nnz_density: r,
-                    }),
+                    Some(CompressionProfile::analytic(r, r)),
                 )
                 .dram_fmap_bytes()
         };

@@ -10,12 +10,12 @@
 //! skips the codec profiling pass.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use fmc_accel::coordinator::{
     BatchPolicy, EngineFactory, InferenceEngine, InferenceServer,
-    ServerConfig,
+    InterlayerCache, Metrics, ServerConfig,
 };
 use fmc_accel::nn::Tensor3;
 use fmc_accel::sim::scheduler::CompressionProfile;
@@ -210,6 +210,80 @@ fn idle_arrivals_still_coalesce() {
     }
     panic!(
         "post-idle bursts never coalesced into one batch in 3 runs"
+    );
+}
+
+/// One server run with measured (sealed-stream) hardware accounting
+/// through a shared interlayer bitstream cache; returns the response
+/// payloads relevant to accounting plus the shutdown metrics.
+fn run_accounted_server(
+    cache: Arc<Mutex<InterlayerCache>>,
+) -> (Vec<(usize, u64, f64)>, Metrics) {
+    let factory: EngineFactory = Arc::new(|_: usize| {
+        Ok(Box::new(TagEngine {
+            cap: 4,
+            images: Arc::new(AtomicUsize::new(0)),
+            batches: Arc::new(AtomicUsize::new(0)),
+        }) as Box<dyn InferenceEngine>)
+    });
+    let mut cfg =
+        ServerConfig::new("/nonexistent-artifacts-not-used")
+            .with_workers(1)
+            .with_cache(cache);
+    cfg.policy = BatchPolicy {
+        max_batch: 4,
+        linger: Duration::from_millis(2),
+    };
+    cfg.compressed = true;
+    cfg.sim_profile = None; // measure through the sealed streams
+    let server =
+        InferenceServer::start_with_engines(cfg, factory).unwrap();
+    let rxs: Vec<_> = (0..4)
+        .map(|i| server.submit(tagged_image(i)).unwrap())
+        .collect();
+    let resps = rxs
+        .into_iter()
+        .map(|rx| {
+            let r = rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("accounted response");
+            (r.class, r.sim_cycles, r.sim_energy_j)
+        })
+        .collect();
+    (resps, server.shutdown())
+}
+
+#[test]
+fn cache_hit_responses_equal_cache_miss_responses() {
+    // Satellite: the interlayer bitstream cache must be semantically
+    // invisible — a server whose profiling pass *hits* the cache
+    // (sealed streams reused, no recompression) answers with exactly
+    // the same classes and simulated-hardware accounting as the
+    // server that sealed everything from scratch.
+    let cache = Arc::new(Mutex::new(InterlayerCache::new(
+        64 * 1024 * 1024,
+    )));
+    let (miss_resps, miss_metrics) =
+        run_accounted_server(cache.clone());
+    let after_miss = cache.lock().unwrap().stats();
+    assert!(after_miss.misses > 0, "first run must seal streams");
+    assert_eq!(after_miss.hits, 0);
+    assert!(after_miss.bytes_held > 0, "streams retained");
+    assert!(miss_metrics.cache_misses > 0);
+    assert_eq!(miss_metrics.cache_hits, 0);
+
+    let (hit_resps, hit_metrics) =
+        run_accounted_server(cache.clone());
+    let after_hit = cache.lock().unwrap().stats();
+    assert_eq!(
+        after_hit.misses, after_miss.misses,
+        "hit path must not reseal"
+    );
+    assert!(hit_metrics.cache_hits > 0);
+    assert_eq!(hit_metrics.cache_misses, 0);
+    assert_eq!(
+        miss_resps, hit_resps,
+        "cache-hit responses must equal cache-miss responses"
     );
 }
 

@@ -66,6 +66,25 @@ def main():
 
     if args.check_invariants:
         bad = 0
+        # The wire-format cost must stay tracked: a fresh run that
+        # silently drops the seal/open entries would hide the packed
+        # bitstream layer from the perf trajectory.
+        wire_missing = [
+            n
+            for n in (
+                "seal 32x64x64 serial",
+                "open 32x64x64 serial",
+            )
+            if n not in fresh
+        ]
+        if wire_missing:
+            for n in wire_missing:
+                print(f"  [REGRESSION] wire-format entry missing: "
+                      f"{n}")
+            bad += len(wire_missing)
+        else:
+            print("  [ok        ] wire-format seal/open entries "
+                  "present")
         for stage in ("compress", "decompress"):
             scoped = fresh.get(f"{stage} 64x(8x16x16) scoped")
             pooled = fresh.get(f"{stage} 64x(8x16x16) pooled")
@@ -82,8 +101,9 @@ def main():
             if not ok:
                 bad += 1
         if bad:
-            print("bench_compare: pooled small-fmap path regressed "
-                  "below the scoped spawn-per-call baseline",
+            print("bench_compare: within-run invariants failed "
+                  "(pooled-vs-scoped floor and/or missing wire-format "
+                  "entries)",
                   file=sys.stderr)
             return 1
 
