@@ -14,7 +14,8 @@
 
 use fmc_accel::bench_util::{pct, Bencher, Table};
 use fmc_accel::compress::bitstream::{
-    self, ablation_codecs, BitmapCodec, FmapCodec, HuffmanCodec,
+    self, ablation_codecs, BitmapCodec, BitmapIndexCodec, FmapCodec,
+    HuffmanCodec,
 };
 use fmc_accel::compress::huffman::huffman_cost;
 use fmc_accel::compress::{codec, qtable::qtable};
@@ -66,6 +67,31 @@ fn main() {
          per block (8 SRAMs in parallel); Huffman: bit-serial symbol \
          decode per feature map (the paper's hardware objection)."
     );
+
+    // The ROADMAP's measurable index-stream trade-off: entropy-code
+    // (RLE) the 64-bit bitmaps, identical value/header streams.
+    println!(
+        "\n-- index-stream trade-off: flat bitmaps vs RLE-coded --"
+    );
+    for (name, s, relu) in [
+        ("early Q1", Smoothness::Natural, true),
+        ("deep Q1", Smoothness::Abstract, false),
+    ] {
+        let fmap = natural_image(23, 8, 64, 64, s, relu);
+        let cf = codec::compress(&fmap, &qtable(1));
+        let flat = BitmapCodec.seal(&cf);
+        let rle = BitmapIndexCodec.seal(&cf);
+        println!(
+            "  {name:8}: index {} B -> {} B  (whole stream \
+             {:+.1}%; O(1) block fetch lost, runs must expand)",
+            flat.index_bytes(),
+            rle.index_bytes(),
+            (rle.stream_bytes() as f64
+                / flat.stream_bytes() as f64
+                - 1.0)
+                * 100.0,
+        );
+    }
 
     let fmap = natural_image(22, 8, 64, 64, Smoothness::Natural, true);
     let cf = codec::compress(&fmap, &qtable(1));

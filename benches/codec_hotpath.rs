@@ -14,6 +14,9 @@
 
 use fmc_accel::bench_util::{BenchReport, Bencher, Sample};
 use fmc_accel::compress::{bitstream, codec, dct, qtable::qtable};
+use fmc_accel::coordinator::transport::{
+    DenseTransport, InterlayerTransport, SealedTransport,
+};
 use fmc_accel::data::{natural_image, Smoothness};
 use fmc_accel::exec;
 use fmc_accel::nn::Tensor3;
@@ -152,6 +155,36 @@ fn main() {
         "open(seal) must be bit-identical"
     );
 
+    // The interlayer hand-off itself (ISSUE 5): what one pipeline
+    // stage pays to ship a compressed map to the next. "ship dense"
+    // is the old currency — eagerly decompress at the producer and
+    // move dense pixels; "ship sealed" keeps the sealed stream in
+    // flight (seal → ship → open-on-demand at the consumer).
+    let pool = exec::global();
+    let s19 = b.run("ship dense 32x64x64", || {
+        DenseTransport
+            .ship_compressed(&cf, 1, pool)
+            .open_with_pool(pool)
+            .data[0]
+    });
+    let s20 = b.run("ship sealed 32x64x64", || {
+        SealedTransport
+            .ship_compressed(&cf, 1, pool)
+            .open_with_pool(pool)
+            .data[0]
+    });
+    assert_eq!(
+        DenseTransport
+            .ship_compressed(&cf, 1, pool)
+            .open_with_pool(pool)
+            .data,
+        SealedTransport
+            .ship_compressed(&cf, 1, pool)
+            .open_with_pool(pool)
+            .data,
+        "sealed transport must be bit-identical to dense"
+    );
+
     // The serving-shaped workload: a stream of many *small* maps
     // (profiling samples, calibration sweeps, per-request interlayer
     // maps). Here the per-call `thread::scope` spawn the seed paid is
@@ -234,6 +267,8 @@ fn main() {
         (&s16, fmap_elems),
         (&s17, fmap_elems),
         (&s18, fmap_elems),
+        (&s19, fmap_elems),
+        (&s20, fmap_elems),
         (&s10, small_elems),
         (&s11, small_elems),
         (&s12, small_elems),
@@ -274,6 +309,13 @@ fn main() {
         tput(&s15),
         tput(&s17),
         speedup(&s6, &s15)
+    );
+    println!(
+        "interlayer ship dense/sealed: {:7.1} / {:7.1} Melem/s \
+         ({:.2}x)",
+        tput(&s19),
+        tput(&s20),
+        speedup(&s19, &s20)
     );
     println!(
         "fast-DCT speedup over naive: {:.2}x",

@@ -47,9 +47,12 @@
 //!
 //! [`FmapCodec`] abstracts the scheme so the `ablation_encoding`
 //! bench measures *real bytes* for every comparator: [`BitmapCodec`]
-//! (ours), [`RleCodec`] (zig-zag zero-run pairs) and [`HuffmanCodec`]
-//! (zig-zag + canonical Huffman with an actual packed bitstream — the
-//! encoding the paper rejected for its bit-serial decode).
+//! (ours), [`BitmapIndexCodec`] (ours with the index bitmaps
+//! RLE-entropy-coded — the ROADMAP's measurable index-stream
+//! trade-off), [`RleCodec`] (zig-zag zero-run pairs) and
+//! [`HuffmanCodec`] (zig-zag + canonical Huffman with an actual
+//! packed bitstream — the encoding the paper rejected for its
+//! bit-serial decode).
 
 use std::collections::HashMap;
 
@@ -73,6 +76,7 @@ pub const VALUE_WIRE_BYTES: usize = (VALUE_BITS / 8) as usize;
 /// Scheme tags carried by sealed streams.
 pub const SCHEME_BITMAP: &str = "bitmap";
 pub const SCHEME_BITMAP_NOFLIP: &str = "bitmap-noflip";
+pub const SCHEME_BITMAP_RLE_INDEX: &str = "bitmap+rle-index";
 pub const SCHEME_RLE: &str = "rle";
 pub const SCHEME_HUFFMAN: &str = "huffman";
 
@@ -149,7 +153,10 @@ pub struct FmapBitstream {
     /// Q-table (layer-config register state, not bytes).
     pub qtable: Block,
     /// Index-buffer stream: 8 bytes (LE u64 bitmap) per block.
-    /// Empty for schemes without an index bitmap.
+    /// Empty for schemes without an index bitmap. Exception: under
+    /// [`SCHEME_BITMAP_RLE_INDEX`] this field holds the RLE-coded
+    /// byte stream (variable length) and must be opened through
+    /// [`BitmapIndexCodec::open`], not the free [`open`].
     pub index: Vec<u8>,
     /// Header stream: 4 bytes (LE packed u32) per block.
     pub headers: Vec<u8>,
@@ -487,19 +494,27 @@ fn seal_impl(
     }
 }
 
-/// Core open (inverse of [`seal_impl`]).
-fn open_impl(
-    bs: &FmapBitstream, shards: usize, pool: Option<&ExecPool>,
-) -> CompressedFmap {
-    let flip = match bs.scheme {
+/// Flip mode of a bitmap-family scheme tag.
+fn bitmap_flip(scheme: &str) -> bool {
+    match scheme {
         SCHEME_BITMAP => true,
         SCHEME_BITMAP_NOFLIP => false,
         other => panic!("open: {other:?} is not a bitmap stream"),
-    };
+    }
+}
+
+/// Core open (inverse of [`seal_impl`]). `index` is the flat
+/// 8-byte-per-block bitmap stream — normally `bs.index`, but the
+/// RLE-index scheme passes its decoded stream here so opening never
+/// has to clone the header/lane buffers.
+fn open_impl(
+    bs: &FmapBitstream, index: &[u8], flip: bool, shards: usize,
+    pool: Option<&ExecPool>,
+) -> CompressedFmap {
     let bpc = bs.h.div_ceil(BLOCK) * bs.w.div_ceil(BLOCK);
     let nblocks = bs.blocks();
     assert_eq!(nblocks, bs.c * bpc, "stream/geometry mismatch");
-    assert_eq!(bs.index.len(), nblocks * INDEX_WIRE_BYTES);
+    assert_eq!(index.len(), nblocks * INDEX_WIRE_BYTES);
     let mut blocks = vec![EncodedBlock::default(); nblocks];
     if nblocks == 0 {
         return CompressedFmap::from_blocks(
@@ -508,8 +523,7 @@ fn open_impl(
     }
     let shards = shards.clamp(1, bs.c.max(1));
     let per_blocks = bs.c.div_ceil(shards) * bpc;
-    let bitmaps = bs
-        .index
+    let bitmaps = index
         .chunks_exact(INDEX_WIRE_BYTES)
         .map(|c| u64::from_le_bytes(c.try_into().unwrap()));
     let sizes = shard_lane_sizes(bitmaps, per_blocks, flip);
@@ -523,7 +537,7 @@ fn open_impl(
     let mut tasks = Vec::with_capacity(sizes.len());
     for (s, ((bchunk, ichunk), hchunk)) in blocks
         .chunks_mut(per_blocks)
-        .zip(bs.index.chunks(per_blocks * INDEX_WIRE_BYTES))
+        .zip(index.chunks(per_blocks * INDEX_WIRE_BYTES))
         .zip(bs.headers.chunks(per_blocks * HEADER_WIRE_BYTES))
         .enumerate()
     {
@@ -606,7 +620,7 @@ pub fn seal_unflipped(cf: &CompressedFmap) -> FmapBitstream {
 
 /// Open a bitmap stream (serial; never touches the pool).
 pub fn open(bs: &FmapBitstream) -> CompressedFmap {
-    open_impl(bs, 1, None)
+    open_impl(bs, &bs.index, bitmap_flip(bs.scheme), 1, None)
 }
 
 /// Open with channel shards on `pool`; identical output for every
@@ -614,10 +628,11 @@ pub fn open(bs: &FmapBitstream) -> CompressedFmap {
 pub fn open_sharded(
     bs: &FmapBitstream, shards: usize, pool: &ExecPool,
 ) -> CompressedFmap {
+    let flip = bitmap_flip(bs.scheme);
     if shards.clamp(1, bs.c.max(1)) == 1 {
-        open_impl(bs, 1, None)
+        open_impl(bs, &bs.index, flip, 1, None)
     } else {
-        open_impl(bs, shards, Some(pool))
+        open_impl(bs, &bs.index, flip, shards, Some(pool))
     }
 }
 
@@ -648,6 +663,79 @@ impl FmapCodec for BitmapCodec {
 
     fn open(&self, bs: &FmapBitstream) -> CompressedFmap {
         open_par(bs)
+    }
+}
+
+// --- entropy-coded index bitmaps (ROADMAP "wire format next steps") --
+
+/// Byte-wise run-length coding of the index stream: `[byte, run]`
+/// pairs, run ∈ 1..=255. Quantized spectra are top-heavy, so the
+/// high-frequency rows of most bitmaps are all-zero bytes — long
+/// 0x00 runs the pairs collapse. Worst case (no two adjacent bytes
+/// equal) doubles the stream, which is exactly the trade-off the
+/// ablation is meant to measure.
+fn rle_encode_bytes(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < src.len() {
+        let b = src[i];
+        let mut run = 1usize;
+        while i + run < src.len() && src[i + run] == b && run < 255 {
+            run += 1;
+        }
+        out.push(b);
+        out.push(run as u8);
+        i += run;
+    }
+    out
+}
+
+/// Inverse of [`rle_encode_bytes`]; `expect` is the decoded length
+/// the stream geometry demands.
+fn rle_decode_bytes(src: &[u8], expect: usize) -> Vec<u8> {
+    assert_eq!(src.len() % 2, 0, "odd rle index stream");
+    let mut out = Vec::with_capacity(expect);
+    for pair in src.chunks_exact(2) {
+        out.extend(std::iter::repeat(pair[0]).take(pair[1] as usize));
+    }
+    assert_eq!(out.len(), expect, "corrupt rle index stream");
+    out
+}
+
+/// The bitmap scheme with an **entropy-coded index stream**: value
+/// lanes and headers identical to [`BitmapCodec`], but the per-block
+/// 64-bit bitmaps are RLE-coded on the wire. This is the ROADMAP's
+/// "entropy-code the index bitmaps" option behind the same
+/// [`FmapCodec`] trait, so `ablation_encoding` reports the measured
+/// index-stream trade-off: fewer index bytes on sparse maps, at the
+/// cost of the O(1) bitmap fetch the paper's decoder relies on (a
+/// run must be expanded before the block's lane offsets are known).
+pub struct BitmapIndexCodec;
+
+impl FmapCodec for BitmapIndexCodec {
+    fn name(&self) -> &'static str {
+        SCHEME_BITMAP_RLE_INDEX
+    }
+
+    fn seal(&self, cf: &CompressedFmap) -> FmapBitstream {
+        let mut bs = seal(cf);
+        bs.scheme = SCHEME_BITMAP_RLE_INDEX;
+        bs.index = rle_encode_bytes(&bs.index);
+        bs
+    }
+
+    fn open(&self, bs: &FmapBitstream) -> CompressedFmap {
+        assert_eq!(
+            bs.scheme, SCHEME_BITMAP_RLE_INDEX,
+            "not an rle-index bitmap stream"
+        );
+        // Decode only the index stream; the header/lane buffers are
+        // read in place (no clone of the value payload).
+        let index = rle_decode_bytes(
+            &bs.index,
+            bs.blocks() * INDEX_WIRE_BYTES,
+        );
+        open_impl(bs, &index, true, 1, None)
     }
 }
 
@@ -967,10 +1055,12 @@ impl FmapCodec for HuffmanCodec {
     }
 }
 
-/// The ablation panel: ours + the two baseline comparators.
+/// The ablation panel: ours, ours with an entropy-coded index
+/// stream, and the two baseline comparators.
 pub fn ablation_codecs() -> Vec<Box<dyn FmapCodec>> {
     vec![
         Box::new(BitmapCodec),
+        Box::new(BitmapIndexCodec),
         Box::new(RleCodec),
         Box::new(HuffmanCodec),
     ]
@@ -1122,6 +1212,72 @@ mod tests {
         assert_eq!(bs.value_bytes(), 0);
         assert_eq!(bs.blocks(), 1);
         assert_same_fmap(&open(&bs), &cf);
+    }
+
+    #[test]
+    fn rle_index_codec_roundtrips_and_shrinks_sparse_indices() {
+        // Top-heavy spectra leave the high-frequency rows of most
+        // bitmaps zero — long 0x00 runs the RLE collapses. The coded
+        // index must decode back bit-identically and, on a smooth
+        // map, be strictly smaller than the flat 8 B/block stream.
+        // A near-planar map: each 8×8 tile quantizes to a handful of
+        // low-order coefficients, so bitmap bytes 2..=7 are zero and
+        // the RLE collapses the runs.
+        let mut x = Tensor3::zeros(3, 32, 32);
+        for ch in 0..3 {
+            for r in 0..32 {
+                for c in 0..32 {
+                    x.set(
+                        ch,
+                        r,
+                        c,
+                        r as f32 * 0.03 + c as f32 * 0.02
+                            + ch as f32 * 0.4,
+                    );
+                }
+            }
+        }
+        let cf = codec::compress(&x, &qtable(1));
+        let flat = seal(&cf);
+        let coded = BitmapIndexCodec.seal(&cf);
+        assert_eq!(coded.scheme, SCHEME_BITMAP_RLE_INDEX);
+        assert_same_fmap(&BitmapIndexCodec.open(&coded), &cf);
+        // values + headers untouched; only the index stream changes
+        assert_eq!(coded.lanes, flat.lanes);
+        assert_eq!(coded.headers, flat.headers);
+        assert!(
+            coded.index_bytes() < flat.index_bytes(),
+            "rle index {} vs flat {}",
+            coded.index_bytes(),
+            flat.index_bytes()
+        );
+    }
+
+    #[test]
+    fn rle_index_roundtrips_on_random_maps() {
+        // Noisy maps may *expand* the index (the trade-off the
+        // ablation measures) — the roundtrip must still be exact.
+        let mut p = Prng::new(15);
+        for _ in 0..3 {
+            let x = rand_fmap(&mut p, 5, 25);
+            let cf = codec::compress(&x, &qtable(p.below(4)));
+            let coded = BitmapIndexCodec.seal(&cf);
+            assert_same_fmap(&BitmapIndexCodec.open(&coded), &cf);
+        }
+    }
+
+    #[test]
+    fn rle_bytes_roundtrip_edge_cases() {
+        for src in [
+            vec![],
+            vec![0u8; 1000],           // one value, runs > 255
+            vec![1, 2, 3, 4, 5],       // no runs at all
+            vec![7u8; 255],            // exactly one max run
+            vec![0, 0, 1, 1, 1, 0, 9], // mixed
+        ] {
+            let enc = rle_encode_bytes(&src);
+            assert_eq!(rle_decode_bytes(&enc, src.len()), src);
+        }
     }
 
     #[test]

@@ -15,9 +15,11 @@
 //! feature maps: fused per-tile kernel, serial + thread-parallel
 //! entry points — see `README.md` in this directory), [`bitstream`]
 //! (the packed wire format: sealed index/header/value streams behind
-//! the [`bitstream::FmapCodec`] trait), [`baseline`] (RLE / CSR /
-//! COO / STC comparators), [`fixed`] (16-bit dynamic fixed point,
-//! 8-bit feature-wise quant).
+//! the [`bitstream::FmapCodec`] trait), [`sealed`] (the
+//! [`sealed::SealedFmap`] transport handle — the compressed-domain
+//! pipeline currency), [`baseline`] (RLE / CSR / COO / STC
+//! comparators), [`fixed`] (16-bit dynamic fixed point, 8-bit
+//! feature-wise quant).
 
 pub mod baseline;
 pub mod bitstream;
@@ -28,6 +30,7 @@ pub mod fixed;
 pub mod huffman;
 pub mod qtable;
 pub mod quant;
+pub mod sealed;
 
 /// One 8×8 spatial/frequency block, row-major.
 pub type Block = [f32; 64];

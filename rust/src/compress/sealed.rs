@@ -1,0 +1,296 @@
+//! The pipeline currency of the compressed-domain dataflow: a
+//! [`SealedFmap`] is the *handle* a feature map travels by between
+//! pipeline stages — the serialized wire streams plus the shape/layer
+//! metadata a consumer needs to open it, never the dense pixels.
+//!
+//! The paper's accelerator folds compression, decompression and
+//! compute into one stream so dense interlayer maps never sit in a
+//! buffer (§III, Fig. 2). The host-side mirror is that the batcher,
+//! the workers, the interlayer cache and the profiler all pass
+//! `SealedFmap`s around; decompression happens lazily, at the engine
+//! boundary, through [`SealedFmap::open_with_pool`].
+//!
+//! Two payload forms exist, mirroring the hardware's §VI-A bypass:
+//!
+//! * **Coded** — a packed [`FmapBitstream`] (index + header + value
+//!   streams), `Arc`-shared so shipping a sealed map between threads
+//!   or keeping it in the [`InterlayerCache`] never copies stream
+//!   bytes. Opening runs `open` + `decompress` on the executor pool
+//!   (each shard owns a [`CodecScratch`]) and is bit-identical for
+//!   every shard count and pool size, like the codec itself.
+//! * **Raw** — the lossless f32 byte stream of a map the pipeline
+//!   does *not* compress: network-input images (the scheduler always
+//!   fetches layer 0 raw from DRAM) and bypass layers whose
+//!   compression would not pay. `open(seal_raw(t)) == t` bitwise.
+//!
+//! [`InterlayerCache`]: ../../coordinator/cache/struct.InterlayerCache.html
+//! [`CodecScratch`]: super::codec::CodecScratch
+
+use std::sync::Arc;
+
+use super::bitstream::{self, FmapBitstream};
+use super::codec::{self, CompressedFmap};
+use crate::exec::ExecPool;
+use crate::nn::Tensor3;
+
+/// Payload of a sealed map: the raw lossless stream (bypass/layer-0
+/// maps) or the packed interlayer bitstream.
+#[derive(Debug, Clone, PartialEq)]
+enum Payload {
+    /// The tensor's own f32 buffer *is* the raw stream (one 4-byte
+    /// little-endian word per activation) — held as-is so sealing a
+    /// raw map costs zero copies on the dispatch hot path.
+    Raw(Tensor3),
+    Coded(Arc<FmapBitstream>),
+}
+
+/// A feature map sealed for transport: stream bytes + the metadata a
+/// consumer needs to open it. This is the interlayer currency — see
+/// the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SealedFmap {
+    /// Producing pipeline stage / layer index (None = network input).
+    pub layer: Option<usize>,
+    /// Q-level the producer compressed at (None for raw payloads).
+    pub qlevel: Option<usize>,
+    payload: Payload,
+}
+
+impl SealedFmap {
+    /// Seal a map the pipeline does not compress: the lossless f32
+    /// stream. `open` reproduces the tensor bit for bit.
+    pub fn seal_raw(t: &Tensor3) -> SealedFmap {
+        Self::seal_raw_owned(t.clone())
+    }
+
+    /// [`Self::seal_raw`] taking ownership — zero copies: the
+    /// tensor's buffer becomes the sealed stream (what the batcher's
+    /// dispatch path uses).
+    pub fn seal_raw_owned(t: Tensor3) -> SealedFmap {
+        SealedFmap {
+            layer: None,
+            qlevel: None,
+            payload: Payload::Raw(t),
+        }
+    }
+
+    /// Seal a compressed map into the packed wire format, sharding
+    /// over `pool` (bit-identical to the serial seal for every pool
+    /// size; the streams a hardware producer would write).
+    pub fn seal_fmap_with_pool(cf: &CompressedFmap, qlevel: usize,
+                               pool: &ExecPool) -> SealedFmap {
+        SealedFmap {
+            layer: None,
+            qlevel: Some(qlevel),
+            payload: Payload::Coded(Arc::new(
+                bitstream::seal_with_pool(cf, pool),
+            )),
+        }
+    }
+
+    /// Serial [`Self::seal_fmap_with_pool`] (never touches a pool).
+    pub fn seal_fmap(cf: &CompressedFmap, qlevel: usize) -> SealedFmap {
+        SealedFmap {
+            layer: None,
+            qlevel: Some(qlevel),
+            payload: Payload::Coded(Arc::new(bitstream::seal(cf))),
+        }
+    }
+
+    /// Wrap an already-sealed stream (e.g. one held by the interlayer
+    /// cache) without copying its bytes.
+    pub fn from_bitstream(bs: Arc<FmapBitstream>) -> SealedFmap {
+        SealedFmap {
+            layer: None,
+            qlevel: None,
+            payload: Payload::Coded(bs),
+        }
+    }
+
+    /// Tag the producing layer (builder style).
+    pub fn with_layer(mut self, layer: usize) -> SealedFmap {
+        self.layer = Some(layer);
+        self
+    }
+
+    /// Tag the Q-level (builder style; raw payloads keep `None`).
+    pub fn with_qlevel(mut self, qlevel: usize) -> SealedFmap {
+        self.qlevel = Some(qlevel);
+        self
+    }
+
+    /// Original geometry `(c, h, w)` of the map.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        match &self.payload {
+            Payload::Raw(t) => (t.c, t.h, t.w),
+            Payload::Coded(bs) => (bs.c, bs.h, bs.w),
+        }
+    }
+
+    /// Is the payload a packed interlayer bitstream (vs raw bytes)?
+    pub fn is_coded(&self) -> bool {
+        matches!(self.payload, Payload::Coded(_))
+    }
+
+    /// The sealed stream, when coded.
+    pub fn bitstream(&self) -> Option<&Arc<FmapBitstream>> {
+        match &self.payload {
+            Payload::Coded(bs) => Some(bs),
+            Payload::Raw { .. } => None,
+        }
+    }
+
+    /// Total in-flight stream bytes (what a transport actually moves;
+    /// the same number the interlayer cache budgets for coded maps).
+    /// Raw payloads count 4 bytes per f32 word.
+    pub fn stream_bytes(&self) -> u64 {
+        match &self.payload {
+            Payload::Raw(t) => (t.data.len() * 4) as u64,
+            Payload::Coded(bs) => bs.stream_bytes(),
+        }
+    }
+
+    /// Header + value stream bytes (the fmap-buffer share); for raw
+    /// payloads, the whole stream.
+    pub fn data_bytes(&self) -> u64 {
+        match &self.payload {
+            Payload::Raw(t) => (t.data.len() * 4) as u64,
+            Payload::Coded(bs) => bs.header_bytes() + bs.value_bytes(),
+        }
+    }
+
+    /// Index-bitmap stream bytes (the index-buffer share; 0 for raw).
+    pub fn index_bytes(&self) -> u64 {
+        match &self.payload {
+            Payload::Raw { .. } => 0,
+            Payload::Coded(bs) => bs.index_bytes(),
+        }
+    }
+
+    /// Open to a dense map, sharding decode over `pool` — the lazy,
+    /// engine-boundary decompression of the compressed-domain
+    /// dataflow. Bit-identical for every pool size: raw payloads
+    /// reconstruct exactly, coded payloads produce exactly
+    /// `decompress(open(stream))`, which equals the producer's
+    /// in-memory map decoded (`open∘seal ≡ id`).
+    pub fn open_with_pool(&self, pool: &ExecPool) -> Tensor3 {
+        match &self.payload {
+            Payload::Raw(t) => t.clone(),
+            Payload::Coded(bs) => codec::decompress_with_pool(
+                &bitstream::open_with_pool(bs, pool),
+                pool,
+            ),
+        }
+    }
+
+    /// Consuming [`Self::open_with_pool`]: raw payloads hand back
+    /// their buffer with zero copies (the engine-boundary open of a
+    /// shipped envelope).
+    pub fn into_dense_with_pool(self, pool: &ExecPool) -> Tensor3 {
+        match self.payload {
+            Payload::Raw(t) => t,
+            Payload::Coded(bs) => codec::decompress_with_pool(
+                &bitstream::open_with_pool(&bs, pool),
+                pool,
+            ),
+        }
+    }
+
+    /// Serial [`Self::open_with_pool`] (never touches a pool).
+    pub fn open(&self) -> Tensor3 {
+        match &self.payload {
+            Payload::Raw(t) => t.clone(),
+            Payload::Coded(bs) => {
+                codec::decompress(&bitstream::open(bs))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::qtable::qtable;
+    use crate::testutil::Prng;
+
+    fn rand_fmap(seed: u64, c: usize, h: usize, w: usize) -> Tensor3 {
+        let mut p = Prng::new(seed);
+        let mut t = Tensor3::zeros(c, h, w);
+        p.fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    #[test]
+    fn raw_seal_is_lossless_bitwise() {
+        let x = rand_fmap(3, 4, 19, 23);
+        let sf = SealedFmap::seal_raw(&x);
+        assert!(!sf.is_coded());
+        assert_eq!(sf.shape(), (4, 19, 23));
+        assert_eq!(sf.stream_bytes(), (4 * 19 * 23 * 4) as u64);
+        assert_eq!(sf.index_bytes(), 0);
+        let y = sf.open();
+        assert_eq!(x.data, y.data);
+        assert_eq!((x.c, x.h, x.w), (y.c, y.h, y.w));
+    }
+
+    #[test]
+    fn coded_seal_opens_to_the_decoded_map_for_every_pool_size() {
+        let x = rand_fmap(5, 5, 21, 17);
+        let cf = codec::compress(&x, &qtable(1));
+        let dense = codec::decompress(&cf);
+        let serial = SealedFmap::seal_fmap(&cf, 1);
+        assert!(serial.is_coded());
+        assert_eq!(serial.qlevel, Some(1));
+        assert_eq!(serial.open().data, dense.data);
+        for pool_size in [1usize, 2, 4] {
+            let pool = ExecPool::new(pool_size);
+            let sf = SealedFmap::seal_fmap_with_pool(&cf, 1, &pool);
+            // pooled seal is bit-identical to the serial seal, so the
+            // handles compare equal stream for stream
+            assert_eq!(sf, serial, "pool {pool_size}");
+            assert_eq!(
+                sf.open_with_pool(&pool).data,
+                dense.data,
+                "open @ pool {pool_size}"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_accounting_matches_the_bitstream() {
+        let x = rand_fmap(7, 3, 33, 29);
+        let cf = codec::compress(&x, &qtable(2));
+        let sf = SealedFmap::seal_fmap(&cf, 2);
+        let bs = sf.bitstream().unwrap();
+        assert_eq!(sf.stream_bytes(), bs.stream_bytes());
+        assert_eq!(
+            sf.data_bytes(),
+            bs.header_bytes() + bs.value_bytes()
+        );
+        assert_eq!(sf.index_bytes(), bs.index_bytes());
+        assert_eq!(8 * sf.stream_bytes(), cf.compressed_bits());
+    }
+
+    #[test]
+    fn metadata_tags_ride_along() {
+        let x = rand_fmap(9, 2, 8, 8);
+        let cf = codec::compress(&x, &qtable(0));
+        let sf = SealedFmap::from_bitstream(Arc::new(
+            bitstream::seal(&cf),
+        ))
+        .with_layer(4)
+        .with_qlevel(0);
+        assert_eq!(sf.layer, Some(4));
+        assert_eq!(sf.qlevel, Some(0));
+        assert_eq!(sf.shape(), (2, 8, 8));
+    }
+
+    #[test]
+    fn shared_bitstream_is_not_copied() {
+        let x = rand_fmap(11, 2, 16, 16);
+        let cf = codec::compress(&x, &qtable(1));
+        let bs = Arc::new(bitstream::seal(&cf));
+        let sf = SealedFmap::from_bitstream(Arc::clone(&bs));
+        assert!(Arc::ptr_eq(sf.bitstream().unwrap(), &bs));
+    }
+}

@@ -120,6 +120,14 @@ impl InterlayerCache {
         self.bytes_held
     }
 
+    /// Recount the held bytes from the entries themselves — the
+    /// ground truth the O(1) `bytes_held` counter must track through
+    /// any interleaving of inserts, hits and evictions (checked by
+    /// the concurrency stress tests).
+    pub fn recounted_bytes(&self) -> u64 {
+        self.held.iter().map(|(_, _, b)| *b).sum()
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits,
@@ -204,5 +212,37 @@ mod tests {
         let s = c.stats();
         assert_eq!(s.entries, 1);
         assert_eq!(s.bytes_held, 10);
+        assert_eq!(c.recounted_bytes(), 10);
+    }
+
+    #[test]
+    fn byte_accounting_exact_through_eviction_storms() {
+        // Satellite: the O(1) byte counter must equal the recounted
+        // entry sum after arbitrary insert/hit/evict interleavings,
+        // and never exceed the budget after any insert that fits.
+        let mut c = InterlayerCache::new(256);
+        for i in 0..400usize {
+            let key = format!("k{}", i % 37);
+            let size = 16 + (i * 31) % 120;
+            match i % 3 {
+                0 => c.insert(key, stream_of(size)),
+                1 => {
+                    let _ = c.get(&key);
+                }
+                _ => {
+                    let _ = c.get_or_seal(&key, || stream_of(size));
+                }
+            }
+            assert_eq!(
+                c.bytes_held(),
+                c.recounted_bytes(),
+                "after op {i}"
+            );
+            assert!(
+                c.bytes_held() <= 256 || c.stats().entries == 0,
+                "over budget with entries after op {i}"
+            );
+        }
+        assert!(c.stats().evictions > 0, "storm must have evicted");
     }
 }

@@ -16,6 +16,12 @@ pub struct Metrics {
     pub cache_hits: u64,
     /// Interlayer bitstream-cache misses (streams sealed fresh).
     pub cache_misses: u64,
+    /// Sealed envelopes received by workers (the compressed-domain
+    /// transport currency; dense envelopes are not counted).
+    pub sealed_shipments: u64,
+    /// Total sealed stream bytes that crossed the batcher→worker
+    /// seam (what the transport actually moved).
+    pub sealed_stream_bytes: u64,
     sum_us: u64,
     max_us: u64,
 }
@@ -43,6 +49,8 @@ impl Metrics {
             errors: 0,
             cache_hits: 0,
             cache_misses: 0,
+            sealed_shipments: 0,
+            sealed_stream_bytes: 0,
             sum_us: 0,
             max_us: 0,
         }
@@ -104,6 +112,8 @@ impl Metrics {
         self.errors += o.errors;
         self.cache_hits += o.cache_hits;
         self.cache_misses += o.cache_misses;
+        self.sealed_shipments += o.sealed_shipments;
+        self.sealed_stream_bytes += o.sealed_stream_bytes;
         self.sum_us += o.sum_us;
         self.max_us = self.max_us.max(o.max_us);
     }
@@ -144,11 +154,15 @@ mod tests {
         b.batches = 3;
         b.cache_hits = 2;
         b.cache_misses = 1;
+        b.sealed_shipments = 5;
+        b.sealed_stream_bytes = 640;
         a.merge(&b);
         assert_eq!(a.requests, 2);
         assert_eq!(a.batches, 3);
         assert_eq!(a.cache_hits, 2);
         assert_eq!(a.cache_misses, 1);
+        assert_eq!(a.sealed_shipments, 5);
+        assert_eq!(a.sealed_stream_bytes, 640);
     }
 
     #[test]

@@ -9,11 +9,19 @@
 //! its own PJRT [`crate::runtime`] (executables are not Sync) and its
 //! own [`metrics`], merged at shutdown. Built on std threads +
 //! channels — tokio is unavailable offline (DESIGN.md §4).
+//!
+//! The currency between pipeline stages is decided by the
+//! [`transport`] seam: under the default [`SealedTransport`], the
+//! batcher hands workers sealed [`crate::compress::sealed::SealedFmap`]
+//! envelopes and dense pixels only materialize at the engine boundary
+//! (open-on-demand) — the host-side twin of the paper's
+//! compressed-domain interlayer dataflow.
 
 pub mod batcher;
 pub mod cache;
 pub mod metrics;
 pub mod server;
+pub mod transport;
 
 pub use batcher::{BatchOutcome, BatchPolicy};
 pub use cache::{CacheStats, InterlayerCache};
@@ -21,4 +29,8 @@ pub use metrics::Metrics;
 pub use server::{
     EngineFactory, InferenceEngine, InferenceServer, Request,
     Response, ServerConfig,
+};
+pub use transport::{
+    transport_by_name, DenseTransport, EngineStage, FmapEnvelope,
+    InterlayerTransport, SealedTransport, StageMeasure, StagedEngine,
 };

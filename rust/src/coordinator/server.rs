@@ -21,6 +21,13 @@
 //!   [`poll_batch`] linger as any other, so it still coalesces
 //!   (the seed handled that case with a raw `recv` that produced
 //!   singleton batches);
+//! * the batcher→worker currency is the [`FmapEnvelope`] produced by
+//!   the configured [`InterlayerTransport`]: under the default
+//!   [`SealedTransport`], workers receive sealed streams and dense
+//!   pixels only materialize at the engine boundary (open-on-demand
+//!   on the executor pool) — bit-identical to the dense reference
+//!   transport for every worker count and shard count
+//!   (`rust/tests/server_stress.rs`);
 //! * batches shard across workers round-robin. Engine panics are
 //!   contained per batch (the batch errors, the worker and its
 //!   accumulated metrics survive, queued batches still get served);
@@ -39,10 +46,14 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::compress::sealed::SealedFmap;
 use crate::config::{models, AccelConfig, Network};
 use crate::coordinator::batcher::{poll_batch, BatchOutcome, BatchPolicy};
 use crate::coordinator::cache::InterlayerCache;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::transport::{
+    FmapEnvelope, InterlayerTransport, SealedTransport,
+};
 use crate::harness::profiles as harness_profiles;
 use crate::nn::Tensor3;
 use crate::runtime::Runtime;
@@ -53,11 +64,22 @@ use crate::sim::Accelerator;
 /// no requests are pending (also the shutdown-detection latency).
 const IDLE_POLL: Duration = Duration::from_millis(200);
 
-/// One classification request.
+/// One classification request as submitted by a client (dense pixels;
+/// the batcher packages it for transport before dispatch).
 pub struct Request {
     pub image: Tensor3,
     pub resp: Sender<Response>,
     pub submitted: Instant,
+}
+
+/// A request as it travels batcher → worker: the image packaged by
+/// the configured [`InterlayerTransport`]. Under the sealed transport
+/// the pixel buffer is gone — only the sealed stream crosses the
+/// seam, and the worker opens it at the engine boundary.
+struct ShippedRequest {
+    input: FmapEnvelope,
+    resp: Sender<Response>,
+    submitted: Instant,
 }
 
 /// Response with host + simulated-hardware accounting.
@@ -147,6 +169,12 @@ pub struct ServerConfig {
     /// or several servers in one process). `None` builds a private
     /// cache sized by `cache_budget_bytes`.
     pub cache: Option<Arc<Mutex<InterlayerCache>>>,
+    /// The batcher→worker / stage→stage currency. Default: sealed
+    /// streams ([`SealedTransport`]); [`DenseTransport`] is the
+    /// bit-identical dense reference.
+    ///
+    /// [`DenseTransport`]: crate::coordinator::transport::DenseTransport
+    pub transport: Arc<dyn InterlayerTransport>,
 }
 
 impl ServerConfig {
@@ -160,6 +188,7 @@ impl ServerConfig {
             sim_profile: None,
             cache_budget_bytes: 8 * 1024 * 1024,
             cache: None,
+            transport: Arc::new(SealedTransport),
         }
     }
 
@@ -174,6 +203,14 @@ impl ServerConfig {
         mut self, cache: Arc<Mutex<InterlayerCache>>,
     ) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Builder-style interlayer transport.
+    pub fn with_transport(
+        mut self, transport: Arc<dyn InterlayerTransport>,
+    ) -> Self {
+        self.transport = transport;
         self
     }
 }
@@ -277,28 +314,35 @@ fn measured_profiles_via_cache(
                 // passes on the mutex. A same-key race just seals
                 // the same deterministic stream twice; the second
                 // insert replaces the first.
-                let bs = match cache.lock().unwrap().get(&key) {
+                // Either way the stream travels as the pipeline
+                // currency: a SealedFmap handle (shared Arc, no
+                // stream bytes copied), tagged with its producer.
+                let sf = match cache.lock().unwrap().get(&key) {
                     Some(bs) => {
                         hits += 1;
-                        bs
+                        SealedFmap::from_bitstream(bs)
                     }
                     None => {
                         misses += 1;
-                        let bs = Arc::new(
-                            harness_profiles::seal_layer_sample(
+                        let sf =
+                            harness_profiles::sealed_layer_sample(
                                 l, i, q, seed, dw,
-                            ),
+                            );
+                        cache.lock().unwrap().insert_arc(
+                            key,
+                            Arc::clone(sf.bitstream().expect(
+                                "sample streams are coded",
+                            )),
                         );
-                        cache
-                            .lock()
-                            .unwrap()
-                            .insert_arc(key, Arc::clone(&bs));
-                        bs
+                        sf
                     }
-                };
-                let p = harness_profiles::profile_from_bitstream(
-                    l, &bs, q,
-                );
+                }
+                .with_layer(i)
+                .with_qlevel(q);
+                let p = harness_profiles::profile_from_sealed(
+                    l, &sf, q,
+                )
+                .expect("cached sample streams are coded");
                 // Bypass: compression that does not pay stores raw.
                 if p.pays() {
                     Some(p)
@@ -347,6 +391,16 @@ fn sim_costs(
         prof
     };
     let hw = accel.run(&net, &profiles);
+    if cfg.compressed && cfg.sim_profile.is_none() {
+        // Every scheduled layer was profiled off sealed streams, so
+        // the wire-measured share of the profiled fmap accounting is
+        // total (raw-by-design traffic like the layer-0 input is
+        // excluded from the fraction's denominator by definition).
+        eprintln!(
+            "batcher: wire-measured accounting fraction {:.2}",
+            hw.dma.measured_fraction()
+        );
+    }
     (hw.stats.cycles, hw.energy.total_j())
 }
 
@@ -370,11 +424,11 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
     // and reports its batch cap (or the construction error) back.
     let n_workers = cfg.workers.max(1);
     type Ready = anyhow::Result<usize>;
-    let mut spawned: Vec<(usize, Sender<Vec<Request>>,
+    let mut spawned: Vec<(usize, Sender<Vec<ShippedRequest>>,
                           Receiver<Ready>, JoinHandle<Metrics>)> =
         Vec::new();
     for wi in 0..n_workers {
-        let (btx, brx) = channel::<Vec<Request>>();
+        let (btx, brx) = channel::<Vec<ShippedRequest>>();
         let (ready_tx, ready_rx) = channel::<Ready>();
         let factory = Arc::clone(&factory);
         match std::thread::Builder::new()
@@ -399,7 +453,7 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
 
     // Collect readiness; only workers with a live engine join the
     // dispatch rotation. The smallest engine cap clamps the policy.
-    let mut senders: Vec<Sender<Vec<Request>>> = Vec::new();
+    let mut senders: Vec<Sender<Vec<ShippedRequest>>> = Vec::new();
     let mut handles: Vec<JoinHandle<Metrics>> = Vec::new();
     let mut engine_cap = usize::MAX;
     for (wi, btx, ready_rx, h) in spawned {
@@ -444,28 +498,44 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
             // here).
             BatchOutcome::Idle => continue,
             BatchOutcome::Closed => break,
-            BatchOutcome::Batch(mut batch) => loop {
-                if senders.is_empty() {
-                    // Every worker died mid-flight: fail the batch
-                    // (dropping the responders errors each client's
-                    // receiver).
-                    metrics.errors += batch.len() as u64;
-                    break;
-                }
-                let i = rr % senders.len();
-                match senders[i].send(batch) {
-                    Ok(()) => {
-                        rr += 1;
+            BatchOutcome::Batch(batch) => {
+                // The interlayer-transport seam: the batcher packages
+                // every request through the configured transport, so
+                // the batch crosses to its worker as sealed streams
+                // (or dense maps under the reference transport) —
+                // dense pixels stop being the dispatch currency.
+                let mut batch: Vec<ShippedRequest> = batch
+                    .into_iter()
+                    .map(|r| ShippedRequest {
+                        input: cfg.transport.ship_raw(r.image),
+                        resp: r.resp,
+                        submitted: r.submitted,
+                    })
+                    .collect();
+                loop {
+                    if senders.is_empty() {
+                        // Every worker died mid-flight: fail the
+                        // batch (dropping the responders errors each
+                        // client's receiver).
+                        metrics.errors += batch.len() as u64;
                         break;
                     }
-                    Err(send_back) => {
-                        // Worker died (panicked engine): drop it from
-                        // rotation and re-dispatch to a survivor.
-                        batch = send_back.0;
-                        senders.remove(i);
+                    let i = rr % senders.len();
+                    match senders[i].send(batch) {
+                        Ok(()) => {
+                            rr += 1;
+                            break;
+                        }
+                        Err(send_back) => {
+                            // Worker died (panicked engine): drop it
+                            // from rotation and re-dispatch to a
+                            // survivor.
+                            batch = send_back.0;
+                            senders.remove(i);
+                        }
                     }
                 }
-            },
+            }
         }
     }
 
@@ -487,7 +557,7 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
 /// batches until the batcher closes the channel. The engine never
 /// crosses a thread boundary.
 fn worker_loop(wi: usize, factory: EngineFactory,
-               rx: Receiver<Vec<Request>>,
+               rx: Receiver<Vec<ShippedRequest>>,
                ready: Sender<anyhow::Result<usize>>,
                cycles_per_image: u64, energy_per_image: f64)
                -> Metrics {
@@ -515,18 +585,28 @@ fn worker_loop(wi: usize, factory: EngineFactory,
     metrics
 }
 
-fn handle_batch(batch: Vec<Request>, engine: &mut dyn InferenceEngine,
+fn handle_batch(batch: Vec<ShippedRequest>,
+                engine: &mut dyn InferenceEngine,
                 metrics: &mut Metrics, cycles_per_image: u64,
                 energy_per_image: f64) {
     metrics.batches += 1;
-    // Split each request into its image and its response metadata —
-    // the engine borrows the images in place (no per-request clone of
-    // the pixel buffers).
-    let (meta, images): (Vec<(Sender<Response>, Instant)>,
-                         Vec<Tensor3>) = batch
-        .into_iter()
-        .map(|r| ((r.resp, r.submitted), r.image))
-        .unzip();
+    // Open each envelope at the engine boundary — the lazy,
+    // on-demand decode of the compressed-domain dataflow: sealed
+    // inputs stay sealed until the engine needs dense pixels, and
+    // the decode shards over the persistent executor pool (per-shard
+    // `CodecScratch`, bit-identical for every pool size).
+    let pool = crate::exec::global();
+    let mut meta: Vec<(Sender<Response>, Instant)> =
+        Vec::with_capacity(batch.len());
+    let mut images: Vec<Tensor3> = Vec::with_capacity(batch.len());
+    for r in batch {
+        if r.input.is_sealed() {
+            metrics.sealed_shipments += 1;
+            metrics.sealed_stream_bytes += r.input.stream_bytes();
+        }
+        meta.push((r.resp, r.submitted));
+        images.push(r.input.open_with_pool(pool));
+    }
     // Contain engine panics to the batch: the batch errors out, but
     // the worker — and the metrics it has accumulated — survive, and
     // batches already queued on this worker still get served.

@@ -1,0 +1,503 @@
+//! The interlayer-transport seam: *how* feature maps travel between
+//! pipeline stages (batcher → worker, engine stage → engine stage).
+//!
+//! The paper's accelerator never parks a dense interlayer map in a
+//! buffer — the computing stream fuses compression, decompression and
+//! compute, so the storage/transport form **is** the compressed
+//! stream (§III, Fig. 2). [`InterlayerTransport`] makes that a
+//! swappable decision on the host:
+//!
+//! * [`SealedTransport`] (production): maps travel as
+//!   [`SealedFmap`]s — raw lossless streams for uncompressed-domain
+//!   maps (request images, bypass layers), packed bitstreams for
+//!   compressed interlayer maps. Decompression happens lazily at the
+//!   consumer's engine boundary ([`FmapEnvelope::open_with_pool`]).
+//! * [`DenseTransport`] (reference): the pre-refactor currency —
+//!   eagerly decompress at the producer and move dense pixels.
+//!
+//! Both transports are **bit-identical** end to end: `open∘seal ≡ id`
+//! on coded streams and raw seals are lossless, so every consumer
+//! observes exactly the same tensors under either transport (property
+//! and stress tested in `rust/tests/server_stress.rs` and
+//! `rust/tests/codec_par.rs`). That is what lets the sealed currency
+//! be the default without perturbing a single response bit.
+//!
+//! [`StagedEngine`] materializes the multi-stage dataflow: a chain of
+//! [`EngineStage`]s whose interlayer maps are shipped through the
+//! transport, recording the **in-flight** per-stage [`StageMeasure`]s
+//! (real wire byte counts off the shipped streams). Those measures
+//! convert straight into the scheduler's
+//! [`CompressionProfile`]/[`StreamMeasure`] inputs
+//! ([`in_flight_profiles`]) — the sim consumes what the pipeline
+//! actually shipped, with no re-seal.
+
+use std::sync::{Arc, Mutex};
+
+use crate::compress::bitstream::INDEX_WIRE_BYTES;
+use crate::compress::codec::{self, CompressedFmap};
+use crate::compress::qtable::qtable;
+use crate::compress::sealed::SealedFmap;
+use crate::coordinator::server::InferenceEngine;
+use crate::exec::ExecPool;
+use crate::nn::Tensor3;
+use crate::sim::scheduler::{CompressionProfile, StreamMeasure};
+
+/// A feature map in flight between pipeline stages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FmapEnvelope {
+    /// Dense pixels (the reference currency).
+    Dense(Tensor3),
+    /// Sealed streams (the compressed-domain currency).
+    Sealed(SealedFmap),
+}
+
+impl FmapEnvelope {
+    pub fn is_sealed(&self) -> bool {
+        matches!(self, FmapEnvelope::Sealed(_))
+    }
+
+    /// Bytes this envelope moves between stages: the sealed stream
+    /// length, or the host f32 footprint of a dense map.
+    pub fn stream_bytes(&self) -> u64 {
+        match self {
+            FmapEnvelope::Dense(t) => (t.data.len() * 4) as u64,
+            FmapEnvelope::Sealed(s) => s.stream_bytes(),
+        }
+    }
+
+    /// Open to dense pixels at the consumer boundary — the lazy,
+    /// on-demand decode of the compressed-domain dataflow. Dense
+    /// envelopes (and raw sealed payloads) are a move; coded sealed
+    /// envelopes decode over `pool` (bit-identical for every pool
+    /// size).
+    pub fn open_with_pool(self, pool: &ExecPool) -> Tensor3 {
+        match self {
+            FmapEnvelope::Dense(t) => t,
+            FmapEnvelope::Sealed(s) => s.into_dense_with_pool(pool),
+        }
+    }
+}
+
+/// The transport decision: what representation interlayer maps take
+/// while they travel. Implementations must be bit-identical to one
+/// another — the transport may never change what a consumer decodes.
+pub trait InterlayerTransport: Send + Sync {
+    /// Tag for CLI/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Package an uncompressed-domain map (request images, bypass
+    /// layers — the maps the hardware stores raw).
+    fn ship_raw(&self, t: Tensor3) -> FmapEnvelope;
+
+    /// Package a compressed interlayer map for the next stage.
+    fn ship_compressed(&self, cf: &CompressedFmap, qlevel: usize,
+                       pool: &ExecPool) -> FmapEnvelope;
+}
+
+/// Reference transport: eagerly decompress at the producer and move
+/// dense pixels (the pre-refactor currency, kept for the equivalence
+/// property and as the bench baseline).
+pub struct DenseTransport;
+
+impl InterlayerTransport for DenseTransport {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn ship_raw(&self, t: Tensor3) -> FmapEnvelope {
+        FmapEnvelope::Dense(t)
+    }
+
+    fn ship_compressed(&self, cf: &CompressedFmap, _qlevel: usize,
+                       pool: &ExecPool) -> FmapEnvelope {
+        FmapEnvelope::Dense(codec::decompress_with_pool(cf, pool))
+    }
+}
+
+/// Production transport: sealed bitstreams are the pipeline currency;
+/// dense pixels exist only inside a stage.
+pub struct SealedTransport;
+
+impl InterlayerTransport for SealedTransport {
+    fn name(&self) -> &'static str {
+        "sealed"
+    }
+
+    fn ship_raw(&self, t: Tensor3) -> FmapEnvelope {
+        FmapEnvelope::Sealed(SealedFmap::seal_raw_owned(t))
+    }
+
+    fn ship_compressed(&self, cf: &CompressedFmap, qlevel: usize,
+                       pool: &ExecPool) -> FmapEnvelope {
+        FmapEnvelope::Sealed(SealedFmap::seal_fmap_with_pool(
+            cf, qlevel, pool,
+        ))
+    }
+}
+
+/// CLI lookup: `dense` | `sealed`.
+pub fn transport_by_name(
+    name: &str,
+) -> Option<Arc<dyn InterlayerTransport>> {
+    match name {
+        "dense" => Some(Arc::new(DenseTransport)),
+        "sealed" => Some(Arc::new(SealedTransport)),
+        _ => None,
+    }
+}
+
+// --- in-flight wire measurement ---------------------------------------
+
+/// Accumulated wire measurement of one pipeline stage's shipped
+/// output streams. Every field is an integer accumulator (sums and
+/// maxima), so the result is independent of the order concurrent
+/// workers record in — determinism survives multi-worker serving.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StageMeasure {
+    /// Feature maps recorded.
+    pub maps: u64,
+    /// Σ original 16-bit bytes.
+    pub raw_bytes: u64,
+    /// Σ header + value stream bytes shipped.
+    pub data_bytes: u64,
+    /// Σ index-bitmap stream bytes shipped.
+    pub index_bytes: u64,
+    /// Largest single-map header+value stream (capacity planning).
+    pub max_data_bytes: u64,
+    /// Largest single-map index stream.
+    pub max_index_bytes: u64,
+    /// Σ non-zero coefficients.
+    pub nnz: u64,
+    /// Σ coefficient slots (64 per block).
+    pub coeffs: u64,
+}
+
+impl StageMeasure {
+    /// Record one shipped map. Sealed envelopes contribute their real
+    /// wire bytes; dense envelopes contribute the wire-equal
+    /// arithmetic (`compressed_bits() ≡ 8 ×` stream length), so both
+    /// transports measure identically.
+    pub fn record(&mut self, cf: &CompressedFmap,
+                  env: &FmapEnvelope) {
+        let (data, index) = match env {
+            FmapEnvelope::Sealed(s) if s.is_coded() => {
+                (s.data_bytes(), s.index_bytes())
+            }
+            _ => {
+                let index =
+                    (cf.blocks.len() * INDEX_WIRE_BYTES) as u64;
+                (cf.compressed_bits() / 8 - index, index)
+            }
+        };
+        self.maps += 1;
+        self.raw_bytes += cf.original_bits() / 8;
+        self.data_bytes += data;
+        self.index_bytes += index;
+        self.max_data_bytes = self.max_data_bytes.max(data);
+        self.max_index_bytes = self.max_index_bytes.max(index);
+        self.nnz += cf.nnz();
+        self.coeffs += cf.blocks.len() as u64 * 64;
+    }
+
+    /// Measured wire ratio over every recorded map.
+    pub fn ratio(&self) -> f64 {
+        if self.raw_bytes == 0 {
+            1.0
+        } else {
+            (self.data_bytes + self.index_bytes) as f64
+                / self.raw_bytes as f64
+        }
+    }
+
+    /// Non-zero coefficient density (IDCT gating).
+    pub fn nnz_density(&self) -> f64 {
+        if self.coeffs == 0 {
+            0.0
+        } else {
+            self.nnz as f64 / self.coeffs as f64
+        }
+    }
+
+    /// Convert to the scheduler's profile type. The per-map *peak*
+    /// stream feeds the [`StreamMeasure`]: buffer fitting and spill
+    /// planning want the worst map this stage actually shipped.
+    pub fn profile(&self) -> CompressionProfile {
+        CompressionProfile {
+            ratio: self.ratio(),
+            nnz_density: self.nnz_density(),
+            stream: Some(StreamMeasure {
+                data_bytes: self.max_data_bytes,
+                index_bytes: self.max_index_bytes,
+            }),
+        }
+    }
+}
+
+/// Shared per-stage measures a fleet of [`StagedEngine`]s records
+/// into (one slot per stage; `None` = stage ships raw / never ran).
+pub type InFlightMeasures = Arc<Mutex<Vec<Option<StageMeasure>>>>;
+
+/// Fresh measure block for a pipeline of `stages` stages.
+pub fn new_in_flight(stages: usize) -> InFlightMeasures {
+    Arc::new(Mutex::new(vec![None; stages]))
+}
+
+/// The scheduler-ready view of the in-flight measures: per-stage
+/// [`CompressionProfile`]s carrying the real shipped
+/// [`StreamMeasure`]s — no re-seal, the sim consumes what the
+/// pipeline moved.
+pub fn in_flight_profiles(
+    m: &InFlightMeasures,
+) -> Vec<Option<CompressionProfile>> {
+    m.lock()
+        .unwrap()
+        .iter()
+        .map(|s| s.map(|s| s.profile()))
+        .collect()
+}
+
+// --- the staged engine pipeline ---------------------------------------
+
+/// One stage of a host-side staged inference pipeline: dense compute
+/// from an input map to an output map. The final stage's output is
+/// read as logits. What travels *between* stages is decided by the
+/// [`InterlayerTransport`], not the stage.
+pub trait EngineStage: Send {
+    /// Q-level this stage's output is compressed at before shipping
+    /// to the next stage; `None` = bypass (ship raw, as the hardware
+    /// stores layers whose compression does not pay).
+    fn out_qlevel(&self) -> Option<usize>;
+
+    /// The stage's dense compute.
+    fn run(&mut self, input: &Tensor3) -> anyhow::Result<Tensor3>;
+}
+
+/// An [`InferenceEngine`] built from a chain of [`EngineStage`]s
+/// whose interlayer maps travel through an [`InterlayerTransport`]:
+/// each stage's output is compressed (per its Q-level), shipped as an
+/// envelope — a sealed bitstream under [`SealedTransport`] — and
+/// opened lazily at the next stage's boundary. Per-stage wire
+/// measures are recorded in flight.
+pub struct StagedEngine {
+    stages: Vec<Box<dyn EngineStage>>,
+    transport: Arc<dyn InterlayerTransport>,
+    measures: InFlightMeasures,
+    max_batch: usize,
+}
+
+impl StagedEngine {
+    /// `measures` must have one slot per stage (see
+    /// [`new_in_flight`]); share it across workers to accumulate a
+    /// fleet-wide measurement.
+    pub fn new(stages: Vec<Box<dyn EngineStage>>,
+               transport: Arc<dyn InterlayerTransport>,
+               measures: InFlightMeasures, max_batch: usize)
+               -> StagedEngine {
+        assert!(!stages.is_empty(), "staged engine needs stages");
+        assert_eq!(
+            measures.lock().unwrap().len(),
+            stages.len(),
+            "one measure slot per stage"
+        );
+        StagedEngine {
+            stages,
+            transport,
+            measures,
+            max_batch: max_batch.max(1),
+        }
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl InferenceEngine for StagedEngine {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn infer(&mut self, images: &[Tensor3])
+             -> anyhow::Result<Vec<(usize, Vec<f32>)>> {
+        let pool = crate::exec::global();
+        let n_stages = self.stages.len();
+        let mut out = Vec::with_capacity(images.len());
+        for img in images {
+            // Stage 0 reads the request image in place (no clone —
+            // the worker already owns the opened batch).
+            let mut cur = self.stages[0].run(img)?;
+            for si in 1..n_stages {
+                // Ship stage si-1's output through the transport and
+                // open it lazily at stage si's boundary.
+                let input = match self.stages[si - 1].out_qlevel() {
+                    // Bypass: ship raw through the same transport
+                    // (lossless either way; moves the buffer).
+                    None => self
+                        .transport
+                        .ship_raw(cur)
+                        .open_with_pool(pool),
+                    Some(q) => {
+                        let cf = codec::compress_with_pool(
+                            &cur,
+                            &qtable(q),
+                            pool,
+                        );
+                        let env = self
+                            .transport
+                            .ship_compressed(&cf, q, pool);
+                        self.measures.lock().unwrap()[si - 1]
+                            .get_or_insert_with(StageMeasure::default)
+                            .record(&cf, &env);
+                        env.open_with_pool(pool)
+                    }
+                };
+                cur = self.stages[si].run(&input)?;
+            }
+            // The final stage's output is the logits; move its
+            // buffer out instead of copying it.
+            let logits = cur.data;
+            out.push((argmax(&logits), logits));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prng;
+
+    fn rand_map(seed: u64, c: usize, h: usize, w: usize) -> Tensor3 {
+        let mut p = Prng::new(seed);
+        let mut t = Tensor3::zeros(c, h, w);
+        p.fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    #[test]
+    fn transports_are_bit_identical_on_raw_maps() {
+        let x = rand_map(1, 3, 17, 21);
+        let pool = ExecPool::new(2);
+        let d = DenseTransport
+            .ship_raw(x.clone())
+            .open_with_pool(&pool);
+        let s = SealedTransport
+            .ship_raw(x.clone())
+            .open_with_pool(&pool);
+        assert_eq!(d.data, x.data);
+        assert_eq!(s.data, x.data);
+    }
+
+    #[test]
+    fn transports_are_bit_identical_on_compressed_maps() {
+        let x = rand_map(2, 4, 30, 26);
+        let cf = codec::compress(&x, &qtable(1));
+        for pool_size in [1usize, 2, 4] {
+            let pool = ExecPool::new(pool_size);
+            let d = DenseTransport
+                .ship_compressed(&cf, 1, &pool)
+                .open_with_pool(&pool);
+            let s = SealedTransport
+                .ship_compressed(&cf, 1, &pool)
+                .open_with_pool(&pool);
+            assert_eq!(d.data, s.data, "pool {pool_size}");
+            assert_eq!(d.data, codec::decompress(&cf).data);
+        }
+    }
+
+    #[test]
+    fn sealed_envelope_moves_stream_bytes_not_pixels() {
+        let x = rand_map(3, 4, 32, 32);
+        let cf = codec::compress(&x, &qtable(1));
+        let pool = ExecPool::new(1);
+        let env = SealedTransport.ship_compressed(&cf, 1, &pool);
+        assert!(env.is_sealed());
+        assert_eq!(env.stream_bytes() * 8, cf.compressed_bits());
+        let dense = DenseTransport.ship_compressed(&cf, 1, &pool);
+        assert!(!dense.is_sealed());
+        assert_eq!(
+            dense.stream_bytes(),
+            (x.data.len() * 4) as u64
+        );
+        // the point of the refactor: the sealed hand-off is smaller
+        assert!(env.stream_bytes() < dense.stream_bytes());
+    }
+
+    #[test]
+    fn stage_measure_identical_under_both_transports() {
+        let x = rand_map(4, 3, 24, 24);
+        let cf = codec::compress(&x, &qtable(1));
+        let pool = ExecPool::new(2);
+        let mut md = StageMeasure::default();
+        md.record(&cf, &DenseTransport.ship_compressed(&cf, 1, &pool));
+        let mut ms = StageMeasure::default();
+        ms.record(&cf, &SealedTransport.ship_compressed(&cf, 1, &pool));
+        assert_eq!(md, ms, "wire-equal arithmetic vs measured bytes");
+        assert_eq!(
+            (ms.data_bytes + ms.index_bytes) * 8,
+            cf.compressed_bits()
+        );
+        assert!(ms.ratio() > 0.0 && ms.ratio() <= 1.5);
+        let prof = ms.profile();
+        let stream = prof.stream.unwrap();
+        assert_eq!(stream.data_bytes, ms.max_data_bytes);
+        assert_eq!(stream.index_bytes, ms.max_index_bytes);
+    }
+
+    #[test]
+    fn stage_measure_accumulation_is_order_independent() {
+        let a = codec::compress(&rand_map(5, 2, 16, 16), &qtable(1));
+        let b = codec::compress(&rand_map(6, 2, 16, 16), &qtable(1));
+        let pool = ExecPool::new(1);
+        let ea = SealedTransport.ship_compressed(&a, 1, &pool);
+        let eb = SealedTransport.ship_compressed(&b, 1, &pool);
+        let mut fwd = StageMeasure::default();
+        fwd.record(&a, &ea);
+        fwd.record(&b, &eb);
+        let mut rev = StageMeasure::default();
+        rev.record(&b, &eb);
+        rev.record(&a, &ea);
+        assert_eq!(fwd, rev);
+        assert_eq!(fwd.maps, 2);
+    }
+
+    fn staged(
+        transport: Arc<dyn InterlayerTransport>,
+    ) -> (StagedEngine, InFlightMeasures) {
+        use crate::testutil::stages::{LogitStage, SmoothStage};
+        let measures = new_in_flight(2);
+        let engine = StagedEngine::new(
+            vec![Box::new(SmoothStage), Box::new(LogitStage)],
+            transport,
+            Arc::clone(&measures),
+            4,
+        );
+        (engine, measures)
+    }
+
+    #[test]
+    fn staged_engine_identical_under_both_transports() {
+        let images: Vec<Tensor3> =
+            (0..3).map(|i| rand_map(20 + i, 1, 8, 8)).collect();
+        let (mut de, _) = staged(Arc::new(DenseTransport));
+        let (mut se, measures) = staged(Arc::new(SealedTransport));
+        let d = de.infer(&images).unwrap();
+        let s = se.infer(&images).unwrap();
+        assert_eq!(d, s, "sealed interlayer hand-off changed bits");
+        // in-flight measures recorded for the compressed stage only
+        let profs = in_flight_profiles(&measures);
+        assert!(profs[0].is_some());
+        assert!(profs[1].is_none(), "last stage ships no fmap");
+        let m = measures.lock().unwrap()[0].unwrap();
+        assert_eq!(m.maps, images.len() as u64);
+        assert!(m.data_bytes > 0 && m.index_bytes > 0);
+        let p = profs[0].unwrap();
+        assert!(p.stream.is_some(), "real StreamMeasure, no re-seal");
+    }
+}

@@ -6,7 +6,10 @@
 //! sizes are the accounting source of truth (ROADMAP §Performance),
 //! the analytic ratio rides along for drift visibility.
 
+use std::sync::Arc;
+
 use crate::compress::bitstream::{self, FmapBitstream};
+use crate::compress::sealed::SealedFmap;
 use crate::compress::{codec, qtable::qtable};
 use crate::config::{FusionLayer, Network};
 use crate::data::{natural_image, Smoothness};
@@ -87,6 +90,33 @@ pub fn seal_layer_sample(layer: &FusionLayer, layer_index: usize,
         depthwise_net,
         crate::exec::global(),
     )
+}
+
+/// [`seal_layer_sample`] wrapped into the pipeline currency: a
+/// [`SealedFmap`] handle tagged with the producing layer and Q-level
+/// — the form the coordinator ships and caches between stages.
+pub fn sealed_layer_sample(layer: &FusionLayer, layer_index: usize,
+                           qlevel: usize, seed: u64,
+                           depthwise_net: bool) -> SealedFmap {
+    SealedFmap::from_bitstream(Arc::new(seal_layer_sample(
+        layer,
+        layer_index,
+        qlevel,
+        seed,
+        depthwise_net,
+    )))
+    .with_layer(layer_index)
+    .with_qlevel(qlevel)
+}
+
+/// Derive the profile straight from a sealed handle — no dense
+/// round-trip, the byte counts come off the wire streams. `None`
+/// when the handle carries a raw (bypass) payload, which has no
+/// compression profile by definition.
+pub fn profile_from_sealed(layer: &FusionLayer, sf: &SealedFmap,
+                           qlevel: usize) -> Option<LayerProfile> {
+    sf.bitstream()
+        .map(|bs| profile_from_bitstream(layer, bs, qlevel))
 }
 
 /// Derive a [`LayerProfile`] from an already-sealed sample stream —
@@ -303,6 +333,24 @@ mod tests {
                            y.map(|p| p.nnz_density));
             }
         }
+    }
+
+    #[test]
+    fn sealed_handle_profiles_without_a_dense_roundtrip() {
+        let net = models::smallcnn().with_default_schedule(3);
+        let dw = net.has_depthwise();
+        let l = &net.layers[0];
+        let q = l.qlevel.unwrap();
+        let sf = sealed_layer_sample(l, 0, q, 7, dw);
+        assert_eq!(sf.layer, Some(0));
+        assert_eq!(sf.qlevel, Some(q));
+        let p = profile_from_sealed(l, &sf, q).unwrap();
+        assert_eq!(p, profile_layer(l, 0, q, 7, dw));
+        // raw (bypass) handles carry no compression profile
+        let raw = crate::compress::sealed::SealedFmap::seal_raw(
+            &crate::nn::Tensor3::zeros(1, 4, 4),
+        );
+        assert!(profile_from_sealed(l, &raw, q).is_none());
     }
 
     #[test]

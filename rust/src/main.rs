@@ -9,6 +9,7 @@
 //!   compress-demo [--seed S] [--level L]
 //!   serve    --requests N [--workers W] [--no-compress]
 //!            [--artifacts DIR] [--cache-budget BYTES]
+//!            [--transport sealed|dense]
 //!   selftest [--artifacts DIR]
 
 use fmc_accel::bench_util::{pct, Table};
@@ -16,7 +17,7 @@ use fmc_accel::cli::Args;
 use fmc_accel::compress::{codec, qtable::qtable};
 use fmc_accel::config::{models, AccelConfig};
 use fmc_accel::coordinator::{
-    InferenceServer, InterlayerCache, ServerConfig,
+    transport_by_name, InferenceServer, InterlayerCache, ServerConfig,
 };
 use fmc_accel::data;
 use fmc_accel::harness::{figs, profiles, tables};
@@ -298,9 +299,19 @@ fn serve(args: &Args) -> i32 {
             args.opt_usize("cache-budget", 8 * 1024 * 1024) as u64,
         ),
     ));
+    // Interlayer currency: sealed bitstreams by default; --transport
+    // dense keeps the bit-identical dense reference path.
+    let transport_name = args.opt_or("transport", "sealed");
+    let Some(transport) = transport_by_name(transport_name) else {
+        eprintln!(
+            "unknown transport {transport_name:?} (sealed|dense)"
+        );
+        return 2;
+    };
     let mut cfg = ServerConfig::new(dir)
         .with_workers(workers)
-        .with_cache(cache.clone());
+        .with_cache(cache.clone())
+        .with_transport(transport);
     cfg.compressed = !args.flag("no-compress");
     let server = match InferenceServer::start(cfg) {
         Ok(s) => s,
@@ -349,6 +360,11 @@ fn serve(args: &Args) -> i32 {
         metrics.cache_misses,
         human_bytes(cs.bytes_held),
         cs.entries
+    );
+    println!(
+        "transport : {transport_name} ({} sealed shipments, {})",
+        metrics.sealed_shipments,
+        human_bytes(metrics.sealed_stream_bytes)
     );
     if metrics.errors > 0 {
         eprintln!("errors    : {}", metrics.errors);

@@ -41,8 +41,14 @@ impl MemConfig {
         v
     }
 
+    /// A legal configuration attaches **exactly** the four 32 KB
+    /// sub-banks (the two 64 KB configurable memories always exist in
+    /// silicon — a sub-bank cannot be attached to nothing). This is
+    /// the invariant [`Self::enumerate`] generates by construction;
+    /// it used to accept slack splits (`<= 4`) that no enumeration
+    /// ever produced and no hardware could realize.
     pub fn valid(&self) -> bool {
-        self.subbanks_a + self.subbanks_b + self.subbanks_scratch <= 4
+        self.subbanks_a + self.subbanks_b + self.subbanks_scratch == 4
     }
 }
 
@@ -58,7 +64,11 @@ pub struct BufferBank {
 
 impl BufferBank {
     pub fn new(accel: &AccelConfig, cfg: MemConfig) -> Self {
-        assert!(cfg.valid(), "over-subscribed sub-banks: {cfg:?}");
+        assert!(
+            cfg.valid(),
+            "invalid sub-bank split (all 4 sub-banks must be \
+             attached): {cfg:?}"
+        );
         BufferBank {
             cfg,
             fmap_base: accel.fmap_buffer,
@@ -137,25 +147,38 @@ mod tests {
 
     #[test]
     fn paper_size_ranges() {
-        // scratch 64..192 KB, each fmap 128..192 KB
-        assert_eq!(bank(0, 0, 0).scratch(), 64 * KB);
+        // scratch 64..192 KB, each fmap 128..192 KB — probed with
+        // full splits only (all 4 sub-banks always attach somewhere)
+        assert_eq!(bank(2, 2, 0).scratch(), 64 * KB);
         assert_eq!(bank(0, 0, 4).scratch(), 192 * KB);
-        assert_eq!(bank(0, 0, 0).fmap_a(), 128 * KB);
-        assert_eq!(bank(2, 0, 0).fmap_a(), 192 * KB);
-        assert_eq!(bank(0, 2, 0).fmap_b(), 192 * KB);
+        assert_eq!(bank(0, 2, 2).fmap_a(), 128 * KB);
+        assert_eq!(bank(2, 0, 2).fmap_a(), 192 * KB);
+        assert_eq!(bank(0, 2, 2).fmap_b(), 192 * KB);
     }
 
     #[test]
     fn enumerate_covers_all_splits() {
         let all = MemConfig::enumerate();
-        assert_eq!(all.len(), 15); // C(4+2,2) compositions of <=4 into 3
+        assert_eq!(all.len(), 15); // C(4+2,2) compositions of 4 into 3
         assert!(all.iter().all(|c| c.valid()));
+        // every enumerated split attaches all four sub-banks — the
+        // invariant `valid()` now pins (satellite)
+        assert!(all.iter().all(|c| {
+            c.subbanks_a + c.subbanks_b + c.subbanks_scratch == 4
+        }));
     }
 
     #[test]
-    #[should_panic(expected = "over-subscribed")]
+    #[should_panic(expected = "sub-bank split")]
     fn rejects_oversubscription() {
         bank(3, 2, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sub-bank split")]
+    fn rejects_slack_split() {
+        // sum < 4: a sub-bank attached to nothing is not realizable
+        bank(1, 1, 1);
     }
 
     #[test]
@@ -187,7 +210,7 @@ mod tests {
 
     #[test]
     fn psum_rows_scale_with_scratch() {
-        let small = bank(0, 0, 0).psum_rows(224, 4);
+        let small = bank(2, 2, 0).psum_rows(224, 4);
         let big = bank(0, 0, 4).psum_rows(224, 4);
         assert_eq!(small, 64 * KB / (224 * 4 * 2));
         assert_eq!(big, 192 * KB / (224 * 4 * 2));

@@ -16,6 +16,12 @@ pub struct DmaTraffic {
     /// ratio-arithmetic fallback — the wire-format share of the
     /// accounting, surfaced so model-vs-wire drift stays visible.
     pub measured_fmap_bytes: u64,
+    /// Portion of `fmap_bytes` that is raw **by design** — maps the
+    /// pipeline never compresses (the layer-0 network input, layers
+    /// with no compression profile). Raw-by-design traffic has no
+    /// wire stream to measure, so it is excluded from
+    /// [`Self::measured_fraction`]'s denominator.
+    pub raw_fmap_bytes: u64,
 }
 
 impl DmaTraffic {
@@ -49,13 +55,30 @@ impl DmaTraffic {
         self.measured_fmap_bytes += bytes;
     }
 
-    /// Fraction of feature-map traffic accounted from measured wire
-    /// streams (1.0 = every profiled byte was a sealed byte).
+    /// Traffic for maps stored raw by design (no profile exists, so
+    /// there is nothing to measure — e.g. the network input image).
+    pub fn add_fmap_raw(&mut self, bytes: u64) {
+        self.fmap_bytes += bytes;
+        self.raw_fmap_bytes += bytes;
+    }
+
+    /// Fraction of the **profiled** feature-map traffic accounted
+    /// from measured wire streams: 1.0 = every profiled byte was a
+    /// sealed byte. Raw-by-design traffic is excluded from the
+    /// denominator (it has no stream to measure); a run whose
+    /// profiled maps generate no DRAM traffic at all is vacuously
+    /// fully measured (1.0), while a run with no fmap traffic
+    /// whatsoever reports 0.0.
     pub fn measured_fraction(&self) -> f64 {
-        if self.fmap_bytes == 0 {
-            0.0
+        let profiled = self.fmap_bytes - self.raw_fmap_bytes;
+        if profiled == 0 {
+            if self.fmap_bytes == 0 {
+                0.0
+            } else {
+                1.0
+            }
         } else {
-            self.measured_fmap_bytes as f64 / self.fmap_bytes as f64
+            self.measured_fmap_bytes as f64 / profiled as f64
         }
     }
 
@@ -102,11 +125,27 @@ mod tests {
     #[test]
     fn measured_subtotal_tracks_wire_traffic() {
         let mut t = DmaTraffic::default();
-        t.add_fmap(30);
+        t.add_fmap(30); // profiled, analytic fallback
         t.add_fmap_measured(10);
         assert_eq!(t.fmap_bytes, 40);
         assert_eq!(t.measured_fmap_bytes, 10);
         assert_eq!(t.measured_fraction(), 0.25);
         assert_eq!(DmaTraffic::default().measured_fraction(), 0.0);
+    }
+
+    #[test]
+    fn raw_by_design_traffic_is_outside_the_fraction() {
+        let mut t = DmaTraffic::default();
+        t.add_fmap_raw(100); // layer-0 input: nothing to measure
+        assert_eq!(t.fmap_bytes, 100);
+        assert_eq!(t.raw_fmap_bytes, 100);
+        // vacuously fully measured: no profiled traffic exists
+        assert_eq!(t.measured_fraction(), 1.0);
+        t.add_fmap_measured(50);
+        assert_eq!(t.fmap_bytes, 150);
+        // every profiled byte was a sealed byte
+        assert_eq!(t.measured_fraction(), 1.0);
+        t.add_fmap(50); // an analytic (unmeasured) profiled layer
+        assert_eq!(t.measured_fraction(), 0.5);
     }
 }

@@ -58,6 +58,65 @@ impl Prng {
     }
 }
 
+/// Deterministic toy [`EngineStage`]s shared by the transport unit
+/// tests and the serving stress tests — both layers must exercise the
+/// *same* staged pipeline for the sealed-equals-dense claims to be
+/// comparable, so the stages live here rather than being duplicated.
+///
+/// [`EngineStage`]: crate::coordinator::transport::EngineStage
+pub mod stages {
+    use crate::coordinator::transport::EngineStage;
+    use crate::nn::Tensor3;
+
+    /// Stage 0: expand the input into a smooth 2×16×16 feature map
+    /// (compressed at Q1 before shipping). The output depends on the
+    /// input's first value, so any transport-induced bit drift in
+    /// what reaches this stage surfaces downstream.
+    pub struct SmoothStage;
+
+    impl EngineStage for SmoothStage {
+        fn out_qlevel(&self) -> Option<usize> {
+            Some(1)
+        }
+
+        fn run(&mut self, input: &Tensor3)
+               -> anyhow::Result<Tensor3> {
+            let mut out = Tensor3::zeros(2, 16, 16);
+            let bias = input.data[0];
+            for ch in 0..2 {
+                for r in 0..16 {
+                    for c in 0..16 {
+                        let v = ((r + c + ch) as f32 * 0.21).sin()
+                            + bias * 1e-3;
+                        out.set(ch, r, c, v);
+                    }
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    /// Final stage: fold the feature map into 7 logits (ships raw —
+    /// the bypass path). Sensitive to every input value, so a single
+    /// flipped bit in the shipped interlayer map changes the logits.
+    pub struct LogitStage;
+
+    impl EngineStage for LogitStage {
+        fn out_qlevel(&self) -> Option<usize> {
+            None
+        }
+
+        fn run(&mut self, input: &Tensor3)
+               -> anyhow::Result<Tensor3> {
+            let mut out = Tensor3::zeros(1, 1, 7);
+            for (i, &v) in input.data.iter().enumerate() {
+                out.data[i % 7] += v * ((i % 13) as f32 - 6.0);
+            }
+            Ok(out)
+        }
+    }
+}
+
 /// Run a property over `cases` derived seeds; panics with the failing
 /// seed for reproduction. The poor-man's proptest shrink step is the
 /// seed printout (cases are independent).

@@ -9,6 +9,7 @@
 use fmc_accel::compress::bitstream;
 use fmc_accel::compress::codec::CompressedFmap;
 use fmc_accel::compress::encode::FlipPacker;
+use fmc_accel::compress::sealed::SealedFmap;
 use fmc_accel::compress::{codec, dct, qtable::qtable};
 use fmc_accel::exec::ExecPool;
 use fmc_accel::nn::Tensor3;
@@ -183,6 +184,48 @@ fn seal_open_roundtrip_bit_identical_across_pools() {
                 let o2 = bitstream::open_sharded(&s2, shards, &pool);
                 assert_same_fmap(&o2, &cf);
             }
+        }
+    });
+}
+
+#[test]
+fn sealed_fmap_currency_bit_identical_across_shards_and_pools() {
+    // The pipeline currency (ISSUE 5): a SealedFmap handle must open
+    // to exactly the map the producer sealed — raw payloads bitwise,
+    // coded payloads equal to the in-memory decode — for every pool
+    // size, and the pooled seal must equal the serial one stream for
+    // stream.
+    check_prop("SealedFmap open ≡ decode over pools", 8, |p| {
+        let x = rand_fmap(p, 8, 36);
+        let q = p.below(4);
+        let cf = codec::compress(&x, &qtable(q));
+        let dense = codec::decompress(&cf);
+
+        let raw = SealedFmap::seal_raw(&x);
+        assert_eq!(raw.open().data, x.data, "raw seal lossless");
+
+        let serial = SealedFmap::seal_fmap(&cf, q);
+        assert_eq!(serial.open().data, dense.data);
+        assert_eq!(
+            8 * serial.stream_bytes(),
+            cf.compressed_bits(),
+            "handle accounts the sealed stream exactly"
+        );
+        for pool_size in [1usize, 2, 4] {
+            let pool = ExecPool::new(pool_size);
+            let pooled =
+                SealedFmap::seal_fmap_with_pool(&cf, q, &pool);
+            assert_eq!(pooled, serial, "seal @ pool {pool_size}");
+            assert_eq!(
+                pooled.open_with_pool(&pool).data,
+                dense.data,
+                "open @ pool {pool_size}"
+            );
+            assert_eq!(
+                raw.open_with_pool(&pool).data,
+                x.data,
+                "raw open @ pool {pool_size}"
+            );
         }
     });
 }

@@ -74,6 +74,11 @@ def main():
             for n in (
                 "seal 32x64x64 serial",
                 "open 32x64x64 serial",
+                # sealed-transport hand-off entries: the cost of
+                # shipping an interlayer map sealed vs dense must stay
+                # on the perf trajectory (ISSUE 5 satellite)
+                "ship dense 32x64x64",
+                "ship sealed 32x64x64",
             )
             if n not in fresh
         ]
@@ -83,8 +88,8 @@ def main():
                       f"{n}")
             bad += len(wire_missing)
         else:
-            print("  [ok        ] wire-format seal/open entries "
-                  "present")
+            print("  [ok        ] wire-format seal/open and "
+                  "sealed-transport entries present")
         for stage in ("compress", "decompress"):
             scoped = fresh.get(f"{stage} 64x(8x16x16) scoped")
             pooled = fresh.get(f"{stage} 64x(8x16x16) pooled")
