@@ -27,8 +27,18 @@ clippy:
 # Quick smoke of the hot-path bench. Does NOT rewrite the checked-in
 # BENCH_codec_hotpath.json baseline (use bench-codec for that); it
 # writes target/BENCH_codec_hotpath.smoke.json for the regression gate.
+# Then a short multi-worker serve on the offline synthetic engine,
+# dumping the telemetry stats + Chrome trace into target/, and a shape
+# check of the stats JSON (stage keys present, per-stage latency sums
+# bounded by end-to-end).
 smoke:
 	FMC_BENCH_QUICK=1 $(CARGO) bench --bench codec_hotpath
+	$(CARGO) run --release --bin fmc-accel -- serve \
+	  --engine synthetic --requests 48 --workers 3 \
+	  --stats-json target/serve_stats.json \
+	  --trace-out target/serve_trace.json
+	python3 tools/bench_compare.py \
+	  --check-stats target/serve_stats.json
 
 # Bench-regression gate. Reuses the smoke json if a smoke run already
 # produced one (CI runs `make verify` first, which ends with smoke);

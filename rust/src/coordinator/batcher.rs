@@ -45,6 +45,12 @@ pub enum BatchOutcome<T> {
 /// Collect the next batch from a channel. Blocks for the first item
 /// (until `idle_timeout`), then lingers up to `policy.linger` filling
 /// the batch.
+///
+/// The moment a `Batch` is returned is the server's *batch-formed*
+/// telemetry seam: the dispatch loop stamps
+/// [`Stage::BatchFormed`](crate::obs::span::Stage::BatchFormed) on
+/// every member right here, so the enqueue→batch seam measures queue
+/// wait plus linger and nothing else.
 pub fn poll_batch<T>(rx: &Receiver<T>, policy: BatchPolicy,
                      idle_timeout: Duration) -> BatchOutcome<T> {
     let first = match rx.recv_timeout(idle_timeout) {

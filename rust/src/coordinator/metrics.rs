@@ -1,13 +1,131 @@
-//! Serving metrics: request counters + latency distribution.
+//! Serving metrics: request counters + latency distributions.
+//!
+//! The latency side is a reusable fixed-boundary [`Histogram`] used
+//! six times per [`Metrics`] block: once end-to-end and once per
+//! pipeline seam (see [`crate::obs::span::SEAMS`]). Because every
+//! span's seam intervals partition its end-to-end interval exactly,
+//! the per-seam histogram `sum_us` values can never add up past the
+//! end-to-end `sum_us` — the consistency check enforced by
+//! `tools/bench_compare.py --check-stats` and the stress tests.
 
 use std::time::Duration;
 
-/// Fixed-boundary latency histogram + counters.
+use crate::obs::span::{Span, SEAM_KEYS};
+
+/// Number of per-seam stage histograms carried by [`Metrics`].
+pub const N_SEAMS: usize = SEAM_KEYS.len();
+
+/// Histogram bucket upper bounds (µs): 100µs .. 10s, roughly ×2 per
+/// bucket. Shared by the end-to-end and per-stage histograms so their
+/// quantiles are directly comparable.
+const BOUNDS_US: [u64; 15] = [
+    100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000,
+    100_000, 250_000, 500_000, 1_000_000, 2_500_000, 10_000_000,
+];
+
+const N_BUCKETS: usize = BOUNDS_US.len() + 1;
+
+/// Fixed-boundary latency histogram: counts per bucket plus exact
+/// count/sum/max, merge-able by plain bucket addition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Histogram {
+    buckets: [u64; N_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: [0; N_BUCKETS],
+            count: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+
+    pub fn observe_us(&mut self, us: u64) {
+        let idx = BOUNDS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(BOUNDS_US.len());
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate from the histogram: the upper bound of the
+    /// bucket holding the q-th observation, clamped to the observed
+    /// maximum. The clamp matters: without it a single 150µs
+    /// observation lands in the (100, 250] bucket and p50 would read
+    /// as 250µs — an estimate above every value ever observed.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (self.count as f64 * q).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let bound = BOUNDS_US
+                    .get(i)
+                    .copied()
+                    .unwrap_or(self.max_us);
+                return bound.min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Merge another histogram (bucket-wise addition).
+    pub fn merge(&mut self, o: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(o.buckets.iter()) {
+            *a += b;
+        }
+        self.count += o.count;
+        self.sum_us += o.sum_us;
+        self.max_us = self.max_us.max(o.max_us);
+    }
+}
+
+/// Per-server (or per-worker, pre-merge) serving counters and latency
+/// distributions.
 #[derive(Debug, Clone)]
 pub struct Metrics {
-    /// Histogram bucket upper bounds (µs).
-    bounds_us: Vec<u64>,
-    buckets: Vec<u64>,
+    /// End-to-end (enqueue → reply) latency distribution.
+    latency: Histogram,
+    /// One histogram per pipeline seam, index-aligned with
+    /// [`SEAM_KEYS`].
+    stages: [Histogram; N_SEAMS],
     pub requests: u64,
     pub batches: u64,
     pub errors: u64,
@@ -22,8 +140,6 @@ pub struct Metrics {
     /// Total sealed stream bytes that crossed the batcher→worker
     /// seam (what the transport actually moved).
     pub sealed_stream_bytes: u64,
-    sum_us: u64,
-    max_us: u64,
 }
 
 impl Default for Metrics {
@@ -34,16 +150,9 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Self {
-        // 100µs .. ~10s, roughly ×2 per bucket
-        let bounds_us = vec![
-            100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000,
-            50_000, 100_000, 250_000, 500_000, 1_000_000, 2_500_000,
-            10_000_000,
-        ];
-        let n = bounds_us.len() + 1;
         Metrics {
-            bounds_us,
-            buckets: vec![0; n],
+            latency: Histogram::new(),
+            stages: [Histogram::new(); N_SEAMS],
             requests: 0,
             batches: 0,
             errors: 0,
@@ -51,61 +160,62 @@ impl Metrics {
             cache_misses: 0,
             sealed_shipments: 0,
             sealed_stream_bytes: 0,
-            sum_us: 0,
-            max_us: 0,
         }
     }
 
+    /// Record one end-to-end latency (no per-stage attribution).
     pub fn observe(&mut self, latency: Duration) {
-        let us = latency.as_micros() as u64;
-        let idx = self
-            .bounds_us
-            .iter()
-            .position(|&b| us <= b)
-            .unwrap_or(self.bounds_us.len());
-        self.buckets[idx] += 1;
+        self.latency.observe_us(latency.as_micros() as u64);
         self.requests += 1;
-        self.sum_us += us;
-        self.max_us = self.max_us.max(us);
+    }
+
+    /// Record a completed request span: end-to-end latency plus every
+    /// stamped seam interval into its stage histogram.
+    pub fn observe_span(&mut self, span: &Span) {
+        if let Some(total) = span.total_us() {
+            self.latency.observe_us(total);
+            self.requests += 1;
+        }
+        for (i, h) in self.stages.iter_mut().enumerate() {
+            if let Some(d) = span.seam_us(i) {
+                h.observe_us(d);
+            }
+        }
+    }
+
+    /// End-to-end latency distribution.
+    pub fn latency_hist(&self) -> &Histogram {
+        &self.latency
+    }
+
+    /// Stage histogram for seam `i` (index into [`SEAM_KEYS`]).
+    pub fn stage_hist(&self, i: usize) -> &Histogram {
+        &self.stages[i]
+    }
+
+    /// All stage histograms, index-aligned with [`SEAM_KEYS`].
+    pub fn stage_hists(&self) -> &[Histogram] {
+        &self.stages
     }
 
     pub fn mean_latency_us(&self) -> f64 {
-        if self.requests == 0 {
-            0.0
-        } else {
-            self.sum_us as f64 / self.requests as f64
-        }
+        self.latency.mean_us()
     }
 
     pub fn max_latency_us(&self) -> u64 {
-        self.max_us
+        self.latency.max_us()
     }
 
-    /// Latency quantile from the histogram (upper-bound estimate).
+    /// End-to-end latency quantile (see [`Histogram::quantile_us`]).
     pub fn quantile_us(&self, q: f64) -> u64 {
-        let total: u64 = self.buckets.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (total as f64 * q).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return self
-                    .bounds_us
-                    .get(i)
-                    .copied()
-                    .unwrap_or(self.max_us);
-            }
-        }
-        self.max_us
+        self.latency.quantile_us(q)
     }
 
     /// Merge another metrics block.
     pub fn merge(&mut self, o: &Metrics) {
-        for (a, b) in self.buckets.iter_mut().zip(o.buckets.iter()) {
-            *a += b;
+        self.latency.merge(&o.latency);
+        for (a, b) in self.stages.iter_mut().zip(o.stages.iter()) {
+            a.merge(b);
         }
         self.requests += o.requests;
         self.batches += o.batches;
@@ -114,14 +224,13 @@ impl Metrics {
         self.cache_misses += o.cache_misses;
         self.sealed_shipments += o.sealed_shipments;
         self.sealed_stream_bytes += o.sealed_stream_bytes;
-        self.sum_us += o.sum_us;
-        self.max_us = self.max_us.max(o.max_us);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::span::Stage;
 
     #[test]
     fn observe_and_mean() {
@@ -142,7 +251,35 @@ mod tests {
         let p50 = m.quantile_us(0.5);
         let p99 = m.quantile_us(0.99);
         assert!(p50 <= p99, "{p50} {p99}");
-        assert!(p99 <= m.max_latency_us().max(p99));
+        assert!(p99 <= m.max_latency_us());
+    }
+
+    #[test]
+    fn quantile_clamped_to_observed_max() {
+        // Regression: a single 150µs observation falls in the
+        // (100, 250] bucket; the estimate must report 150, not the
+        // 250µs bucket bound.
+        let mut m = Metrics::new();
+        m.observe(Duration::from_micros(150));
+        assert_eq!(m.quantile_us(0.5), 150);
+        assert_eq!(m.quantile_us(0.99), 150);
+        assert_eq!(m.max_latency_us(), 150);
+    }
+
+    #[test]
+    fn quantile_never_exceeds_max_across_distributions() {
+        let mut m = Metrics::new();
+        for us in [120, 180, 230, 260, 900, 1_700] {
+            m.observe(Duration::from_micros(us));
+        }
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert!(
+                m.quantile_us(q) <= m.max_latency_us(),
+                "q={q}: {} > max {}",
+                m.quantile_us(q),
+                m.max_latency_us()
+            );
+        }
     }
 
     #[test]
@@ -166,7 +303,82 @@ mod tests {
     }
 
     #[test]
+    fn merged_quantiles_match_union_of_observations() {
+        // Two disjoint per-worker distributions merged must report
+        // exactly what one block observing the union reports — merge
+        // is bucket addition, so this is an identity, and the test
+        // pins it.
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        let mut union = Metrics::new();
+        for i in 1..=50u64 {
+            let d = Duration::from_micros(i * 100);
+            a.observe(d);
+            union.observe(d);
+        }
+        for i in 1..=50u64 {
+            let d = Duration::from_micros(1_000_000 + i * 1_000);
+            b.observe(d);
+            union.observe(d);
+        }
+        a.merge(&b);
+        assert_eq!(a.requests, union.requests);
+        assert_eq!(a.mean_latency_us(), union.mean_latency_us());
+        assert_eq!(a.max_latency_us(), union.max_latency_us());
+        for q in [0.1, 0.5, 0.9, 0.95, 0.99] {
+            assert_eq!(
+                a.quantile_us(q),
+                union.quantile_us(q),
+                "q={q}"
+            );
+        }
+    }
+
+    #[test]
     fn empty_quantile_zero() {
         assert_eq!(Metrics::new().quantile_us(0.99), 0);
+    }
+
+    fn synthetic_span(t0: u64, step: u64) -> Span {
+        let mut s = Span::unstamped(0);
+        for (i, st) in Stage::ALL.iter().enumerate() {
+            s.stamp_at(*st, t0 + step * i as u64);
+        }
+        s
+    }
+
+    #[test]
+    fn observe_span_fills_stage_histograms() {
+        let mut m = Metrics::new();
+        m.observe_span(&synthetic_span(1_000, 200));
+        m.observe_span(&synthetic_span(5_000, 300));
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.latency_hist().count(), 2);
+        assert_eq!(m.latency_hist().sum_us(), 1_000 + 1_500);
+        for i in 0..N_SEAMS {
+            assert_eq!(m.stage_hist(i).count(), 2);
+            assert_eq!(m.stage_hist(i).sum_us(), 500);
+        }
+        // The seam identity: per-stage sums equal (so never exceed)
+        // the end-to-end sum.
+        let stage_sum: u64 =
+            m.stage_hists().iter().map(|h| h.sum_us()).sum();
+        assert_eq!(stage_sum, m.latency_hist().sum_us());
+    }
+
+    #[test]
+    fn observe_span_ignores_incomplete_total() {
+        let mut m = Metrics::new();
+        let mut s = Span::unstamped(0);
+        s.stamp_at(Stage::Enqueue, 100);
+        s.stamp_at(Stage::BatchFormed, 250);
+        m.observe_span(&s);
+        // No Reply stamp: no end-to-end observation, but the stamped
+        // seam still lands in its stage histogram.
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.latency_hist().count(), 0);
+        assert_eq!(m.stage_hist(0).count(), 1);
+        assert_eq!(m.stage_hist(0).sum_us(), 150);
+        assert_eq!(m.stage_hist(1).count(), 0);
     }
 }

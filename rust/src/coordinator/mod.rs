@@ -16,6 +16,10 @@
 //! envelopes and dense pixels only materialize at the engine boundary
 //! (open-on-demand) — the host-side twin of the paper's
 //! compressed-domain interlayer dataflow.
+//!
+//! Every request carries a telemetry span ([`crate::obs`]) stamped at
+//! each seam; [`InferenceServer::shutdown_telemetry`] returns the
+//! run's merged [`crate::obs::TelemetrySnapshot`].
 
 pub mod batcher;
 pub mod cache;
@@ -25,7 +29,7 @@ pub mod transport;
 
 pub use batcher::{BatchOutcome, BatchPolicy};
 pub use cache::{CacheStats, InterlayerCache};
-pub use metrics::Metrics;
+pub use metrics::{Histogram, Metrics};
 pub use server::{
     EngineFactory, InferenceEngine, InferenceServer, Request,
     Response, ServerConfig,

@@ -34,9 +34,17 @@
 //!   if a worker thread dies anyway, the batcher drops it from
 //!   rotation and re-dispatches the batch whose send failed to a
 //!   survivor;
-//! * every worker keeps its own [`Metrics`]; [`InferenceServer::shutdown`]
-//!   merges them (plus the batcher's own error counters) via
-//!   [`Metrics::merge`];
+//! * every worker keeps its own [`Metrics`] *and* its own
+//!   [`SpanRing`]; [`InferenceServer::shutdown`] merges the metrics
+//!   (plus the batcher's own error counters) via [`Metrics::merge`],
+//!   and [`InferenceServer::shutdown_telemetry`] returns the full
+//!   [`TelemetrySnapshot`] — merged metrics, every worker's span
+//!   ring, cache/DMA/pool counters;
+//! * telemetry observes, never reorders: every request carries a
+//!   [`Span`] (stamped at enqueue / batch-formed / shipped / opened /
+//!   engine-exec / reply) instead of a bare `submitted: Instant`, and
+//!   nothing in the pipeline branches on it — the sealed≡dense and
+//!   pooled≡serial bit-identity invariants are untouched;
 //! * the per-request simulated-hardware accounting (cycles/energy on
 //!   the 403-GOPS ASIC) is computed once per server, not once per
 //!   worker — the served geometry is static.
@@ -44,7 +52,7 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::compress::sealed::SealedFmap;
 use crate::config::{models, AccelConfig, Network};
@@ -56,7 +64,11 @@ use crate::coordinator::transport::{
 };
 use crate::harness::profiles as harness_profiles;
 use crate::nn::Tensor3;
+use crate::obs::ring::{SpanRing, DEFAULT_SPAN_RING_CAP};
+use crate::obs::snapshot::TelemetrySnapshot;
+use crate::obs::span::{Span, Stage};
 use crate::runtime::Runtime;
+use crate::sim::dma::DmaTraffic;
 use crate::sim::scheduler::CompressionProfile;
 use crate::sim::Accelerator;
 
@@ -65,21 +77,24 @@ use crate::sim::Accelerator;
 const IDLE_POLL: Duration = Duration::from_millis(200);
 
 /// One classification request as submitted by a client (dense pixels;
-/// the batcher packages it for transport before dispatch).
+/// the batcher packages it for transport before dispatch). Carries
+/// its telemetry [`Span`] — [`Stage::Enqueue`] stamped at submit.
 pub struct Request {
     pub image: Tensor3,
     pub resp: Sender<Response>,
-    pub submitted: Instant,
+    pub span: Span,
 }
 
 /// A request as it travels batcher → worker: the image packaged by
 /// the configured [`InterlayerTransport`]. Under the sealed transport
 /// the pixel buffer is gone — only the sealed stream crosses the
-/// seam, and the worker opens it at the engine boundary.
+/// seam, and the worker opens it at the engine boundary. The span
+/// arrives with [`Stage::BatchFormed`] and [`Stage::Shipped`]
+/// stamped by the batcher.
 struct ShippedRequest {
     input: FmapEnvelope,
     resp: Sender<Response>,
-    submitted: Instant,
+    span: Span,
 }
 
 /// Response with host + simulated-hardware accounting.
@@ -87,13 +102,15 @@ struct ShippedRequest {
 pub struct Response {
     pub class: usize,
     pub logits: Vec<f32>,
-    /// End-to-end host latency.
+    /// End-to-end host latency (the span's enqueue → reply interval).
     pub latency: Duration,
     /// Cycles this request's share of the batch would cost on the
     /// simulated accelerator.
     pub sim_cycles: u64,
     /// Simulated core energy share (J).
     pub sim_energy_j: f64,
+    /// The request's completed telemetry span (every seam stamped).
+    pub span: Span,
 }
 
 /// What a serving worker runs batches on. The production engine wraps
@@ -175,6 +192,10 @@ pub struct ServerConfig {
     ///
     /// [`DenseTransport`]: crate::coordinator::transport::DenseTransport
     pub transport: Arc<dyn InterlayerTransport>,
+    /// Capacity of each worker's completed-span ring buffer. When a
+    /// run outgrows it, the oldest spans are evicted (and counted as
+    /// dropped); histograms still see every request.
+    pub span_ring_cap: usize,
 }
 
 impl ServerConfig {
@@ -189,6 +210,7 @@ impl ServerConfig {
             cache_budget_bytes: 8 * 1024 * 1024,
             cache: None,
             transport: Arc::new(SealedTransport),
+            span_ring_cap: DEFAULT_SPAN_RING_CAP,
         }
     }
 
@@ -213,12 +235,18 @@ impl ServerConfig {
         self.transport = transport;
         self
     }
+
+    /// Builder-style per-worker span-ring capacity.
+    pub fn with_span_ring_cap(mut self, cap: usize) -> Self {
+        self.span_ring_cap = cap;
+        self
+    }
 }
 
 /// Handle to the running server.
 pub struct InferenceServer {
     tx: Sender<Request>,
-    batcher: Option<JoinHandle<Metrics>>,
+    batcher: Option<JoinHandle<TelemetrySnapshot>>,
 }
 
 impl InferenceServer {
@@ -263,7 +291,7 @@ impl InferenceServer {
             .send(Request {
                 image,
                 resp: rtx,
-                submitted: Instant::now(),
+                span: Span::begin(),
             })
             .map_err(|_| {
                 anyhow::anyhow!(
@@ -275,7 +303,14 @@ impl InferenceServer {
 
     /// Close the queue, join the batcher and all workers, and return
     /// the merged per-worker metrics.
-    pub fn shutdown(mut self) -> Metrics {
+    pub fn shutdown(self) -> Metrics {
+        self.shutdown_telemetry().metrics
+    }
+
+    /// Close the queue, join everything, and return the full
+    /// telemetry snapshot: merged metrics, every worker's span ring,
+    /// cache / DMA / executor-pool counters.
+    pub fn shutdown_telemetry(mut self) -> TelemetrySnapshot {
         drop(self.tx);
         self.batcher
             .take()
@@ -356,13 +391,14 @@ fn measured_profiles_via_cache(
 }
 
 /// Per-request simulated-hardware cost of the served model, computed
-/// once per server: (cycles, joules) per image. Sealed streams are
-/// fetched through the interlayer cache; this pass's hit/miss counts
-/// land in `metrics`.
+/// once per server: (cycles, joules) per image, plus the profiling
+/// pass's off-chip traffic split for the telemetry snapshot. Sealed
+/// streams are fetched through the interlayer cache; this pass's
+/// hit/miss counts land in `metrics`.
 fn sim_costs(
     cfg: &ServerConfig, cache: &Mutex<InterlayerCache>,
     metrics: &mut Metrics,
-) -> (u64, f64) {
+) -> (u64, f64, DmaTraffic) {
     let accel = Accelerator::new(cfg.accel.clone());
     let net = models::smallcnn();
     let profiles: Vec<Option<CompressionProfile>> = if !cfg.compressed {
@@ -401,14 +437,18 @@ fn sim_costs(
             hw.dma.measured_fraction()
         );
     }
-    (hw.stats.cycles, hw.energy.total_j())
+    (hw.stats.cycles, hw.energy.total_j(), hw.dma)
 }
 
+/// A worker thread's report at join: its metrics block plus its
+/// completed-span ring.
+type WorkerReport = (Metrics, SpanRing);
+
 /// The batcher thread: builds the worker pool, owns the batching
-/// policy, shards batches round-robin, merges worker metrics at
-/// shutdown.
+/// policy, shards batches round-robin, merges worker metrics and
+/// span rings into the run's [`TelemetrySnapshot`] at shutdown.
 fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
-                rx: Receiver<Request>) -> Metrics {
+                rx: Receiver<Request>) -> TelemetrySnapshot {
     let mut metrics = Metrics::new();
     // Interlayer bitstream cache: injected (shared across servers /
     // restarts) or private, sized by the configured byte budget.
@@ -417,15 +457,30 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
             cfg.cache_budget_bytes,
         )))
     });
-    let (cycles_per_image, energy_per_image) =
+    let (cycles_per_image, energy_per_image, dma) =
         sim_costs(&cfg, &cache, &mut metrics);
+
+    let snapshot = |metrics: Metrics,
+                    rings: Vec<SpanRing>,
+                    workers: usize| {
+        TelemetrySnapshot {
+            metrics,
+            spans: rings,
+            cache: Some(cache.lock().unwrap().stats()),
+            dma: Some(dma),
+            pool: crate::exec::global().stats(),
+            workers,
+            transport: cfg.transport.name().to_string(),
+        }
+    };
 
     // Spawn the workers; each constructs its engine on its own thread
     // and reports its batch cap (or the construction error) back.
     let n_workers = cfg.workers.max(1);
+    let ring_cap = cfg.span_ring_cap;
     type Ready = anyhow::Result<usize>;
     let mut spawned: Vec<(usize, Sender<Vec<ShippedRequest>>,
-                          Receiver<Ready>, JoinHandle<Metrics>)> =
+                          Receiver<Ready>, JoinHandle<WorkerReport>)> =
         Vec::new();
     for wi in 0..n_workers {
         let (btx, brx) = channel::<Vec<ShippedRequest>>();
@@ -441,6 +496,7 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
                     ready_tx,
                     cycles_per_image,
                     energy_per_image,
+                    ring_cap,
                 )
             }) {
             Ok(h) => spawned.push((wi, btx, ready_rx, h)),
@@ -454,7 +510,7 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
     // Collect readiness; only workers with a live engine join the
     // dispatch rotation. The smallest engine cap clamps the policy.
     let mut senders: Vec<Sender<Vec<ShippedRequest>>> = Vec::new();
-    let mut handles: Vec<JoinHandle<Metrics>> = Vec::new();
+    let mut handles: Vec<JoinHandle<WorkerReport>> = Vec::new();
     let mut engine_cap = usize::MAX;
     for (wi, btx, ready_rx, h) in spawned {
         match ready_rx.recv() {
@@ -466,12 +522,14 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
             Ok(Err(e)) => {
                 eprintln!("worker {wi}: {e:#}");
                 metrics.errors += 1;
-                metrics.merge(&h.join().unwrap_or_default());
+                let (m, _) = h.join().unwrap_or_default();
+                metrics.merge(&m);
             }
             Err(_) => {
                 eprintln!("worker {wi}: died during engine startup");
                 metrics.errors += 1;
-                metrics.merge(&h.join().unwrap_or_default());
+                let (m, _) = h.join().unwrap_or_default();
+                metrics.merge(&m);
             }
         }
     }
@@ -480,7 +538,7 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
         // submits fail fast, and already-queued requests error out
         // through their dropped response senders (no hangs).
         eprintln!("server: no live workers; shutting down");
-        return metrics;
+        return snapshot(metrics, Vec::new(), 0);
     }
 
     let policy = BatchPolicy {
@@ -504,12 +562,22 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
                 // the batch crosses to its worker as sealed streams
                 // (or dense maps under the reference transport) —
                 // dense pixels stop being the dispatch currency.
+                // Telemetry brackets the packaging: BatchFormed when
+                // the policy closed the batch, Shipped once the
+                // envelope exists, so the batch→ship seam is the
+                // transport's own cost.
                 let mut batch: Vec<ShippedRequest> = batch
                     .into_iter()
-                    .map(|r| ShippedRequest {
-                        input: cfg.transport.ship_raw(r.image),
-                        resp: r.resp,
-                        submitted: r.submitted,
+                    .map(|r| {
+                        let Request {
+                            image,
+                            resp,
+                            mut span,
+                        } = r;
+                        span.stamp(Stage::BatchFormed);
+                        let input = cfg.transport.ship_raw(image);
+                        span.stamp(Stage::Shipped);
+                        ShippedRequest { input, resp, span }
                     })
                     .collect();
                 loop {
@@ -539,29 +607,39 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
         }
     }
 
-    // Close worker queues, join, and merge their metrics. A worker
-    // that died (panic outside the per-batch containment) loses its
-    // accumulated counts — record at least the loss itself.
+    // Close worker queues, join, and merge their metrics + span
+    // rings. A worker that died (panic outside the per-batch
+    // containment) loses its accumulated counts — record at least
+    // the loss itself.
     drop(senders);
+    let mut rings: Vec<SpanRing> = Vec::new();
+    let n_live = handles.len();
     for h in handles {
         match h.join() {
-            Ok(m) => metrics.merge(&m),
+            Ok((m, ring)) => {
+                metrics.merge(&m);
+                rings.push(ring);
+            }
             Err(_) => metrics.errors += 1,
         }
     }
-    metrics
+    snapshot(metrics, rings, n_live)
 }
 
 /// One runtime worker: constructs its engine on this thread (reports
 /// the batch cap — or the error — through `ready`), then drains
 /// batches until the batcher closes the channel. The engine never
-/// crosses a thread boundary.
+/// crosses a thread boundary. Returns its metrics block and its
+/// completed-span ring — both worker-owned for the whole run, so
+/// recording telemetry takes no locks.
 fn worker_loop(wi: usize, factory: EngineFactory,
                rx: Receiver<Vec<ShippedRequest>>,
                ready: Sender<anyhow::Result<usize>>,
-               cycles_per_image: u64, energy_per_image: f64)
-               -> Metrics {
+               cycles_per_image: u64, energy_per_image: f64,
+               span_ring_cap: usize)
+               -> WorkerReport {
     let mut metrics = Metrics::new();
+    let mut spans = SpanRing::new(span_ring_cap);
     let mut engine = match (*factory)(wi) {
         Ok(engine) => {
             let _ = ready.send(Ok(engine.max_batch().max(1)));
@@ -569,7 +647,7 @@ fn worker_loop(wi: usize, factory: EngineFactory,
         }
         Err(e) => {
             let _ = ready.send(Err(e));
-            return metrics;
+            return (metrics, spans);
         }
     };
     drop(ready);
@@ -578,34 +656,43 @@ fn worker_loop(wi: usize, factory: EngineFactory,
             batch,
             engine.as_mut(),
             &mut metrics,
+            &mut spans,
+            wi,
             cycles_per_image,
             energy_per_image,
         );
     }
-    metrics
+    (metrics, spans)
 }
 
 fn handle_batch(batch: Vec<ShippedRequest>,
                 engine: &mut dyn InferenceEngine,
-                metrics: &mut Metrics, cycles_per_image: u64,
+                metrics: &mut Metrics, spans: &mut SpanRing,
+                wi: usize, cycles_per_image: u64,
                 energy_per_image: f64) {
     metrics.batches += 1;
     // Open each envelope at the engine boundary — the lazy,
     // on-demand decode of the compressed-domain dataflow: sealed
     // inputs stay sealed until the engine needs dense pixels, and
     // the decode shards over the persistent executor pool (per-shard
-    // `CodecScratch`, bit-identical for every pool size).
+    // `CodecScratch`, bit-identical for every pool size). Each
+    // request's Opened stamp lands right after its own decode, so
+    // the ship→open seam prices the envelope-opening work.
     let pool = crate::exec::global();
-    let mut meta: Vec<(Sender<Response>, Instant)> =
+    let mut meta: Vec<(Sender<Response>, Span)> =
         Vec::with_capacity(batch.len());
     let mut images: Vec<Tensor3> = Vec::with_capacity(batch.len());
-    for r in batch {
+    for (lane, r) in batch.into_iter().enumerate() {
         if r.input.is_sealed() {
             metrics.sealed_shipments += 1;
             metrics.sealed_stream_bytes += r.input.stream_bytes();
         }
-        meta.push((r.resp, r.submitted));
+        let mut span = r.span;
+        span.worker = wi as u32;
+        span.lane = lane as u32;
         images.push(r.input.open_with_pool(pool));
+        span.stamp(Stage::Opened);
+        meta.push((r.resp, span));
     }
     // Contain engine panics to the batch: the batch errors out, but
     // the worker — and the metrics it has accumulated — survive, and
@@ -624,17 +711,25 @@ fn handle_batch(batch: Vec<ShippedRequest>,
                 metrics.errors += meta.len() as u64;
                 return;
             }
-            for ((resp, submitted), (class, logits)) in
+            // The whole batch executed as one engine call: stamp
+            // EngineExec on every span now, then Reply per send.
+            for (_, span) in meta.iter_mut() {
+                span.stamp(Stage::EngineExec);
+            }
+            for ((resp, mut span), (class, logits)) in
                 meta.into_iter().zip(results)
             {
-                let latency = submitted.elapsed();
-                metrics.observe(latency);
+                span.stamp(Stage::Reply);
+                let latency = span.total().unwrap_or_default();
+                metrics.observe_span(&span);
+                spans.push(span);
                 let _ = resp.send(Response {
                     class,
                     logits,
                     latency,
                     sim_cycles: cycles_per_image,
                     sim_energy_j: energy_per_image,
+                    span,
                 });
             }
         }

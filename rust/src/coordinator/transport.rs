@@ -76,6 +76,20 @@ impl FmapEnvelope {
             FmapEnvelope::Sealed(s) => s.into_dense_with_pool(pool),
         }
     }
+
+    /// Telemetry tag for what representation this envelope holds:
+    /// dense pixels, a sealed raw payload, or a sealed coded
+    /// bitstream. Observational only — nothing in the pipeline
+    /// branches on it.
+    pub fn payload_kind(&self) -> &'static str {
+        match self {
+            FmapEnvelope::Dense(_) => "dense",
+            FmapEnvelope::Sealed(s) if s.is_coded() => {
+                "sealed-coded"
+            }
+            FmapEnvelope::Sealed(_) => "sealed-raw",
+        }
+    }
 }
 
 /// The transport decision: what representation interlayer maps take
@@ -378,6 +392,27 @@ mod tests {
         let mut t = Tensor3::zeros(c, h, w);
         p.fill_normal(&mut t.data, 1.0);
         t
+    }
+
+    #[test]
+    fn payload_kind_tags_each_representation() {
+        let x = rand_map(5, 2, 9, 11);
+        assert_eq!(
+            DenseTransport.ship_raw(x.clone()).payload_kind(),
+            "dense"
+        );
+        assert_eq!(
+            SealedTransport.ship_raw(x.clone()).payload_kind(),
+            "sealed-raw"
+        );
+        let cf = codec::compress(&x, &qtable(1));
+        let pool = ExecPool::new(1);
+        assert_eq!(
+            SealedTransport
+                .ship_compressed(&cf, 1, &pool)
+                .payload_kind(),
+            "sealed-coded"
+        );
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //! work was *split*, never on which worker ran a shard — that is what
 //! keeps the pooled codec bit-identical to the serial one (see
 //! `rust/tests/codec_par.rs`).
+//!
+//! The pool also keeps lifetime counters ([`PoolStats`], via
+//! [`ExecPool::stats`]) — submitted/executed/helped jobs and the
+//! injector queue high-water — which feed the serving telemetry
+//! snapshot (`crate::obs`).
 
 mod pool;
 
-pub use pool::{global, pool_threads, ExecPool, Scope};
+pub use pool::{global, pool_threads, ExecPool, PoolStats, Scope};

@@ -24,13 +24,38 @@
 //! Panic policy: a panicking job is caught on the worker so the pool
 //! survives; the panic is re-raised on the thread that joins the scope
 //! (mirroring `std::thread::scope`).
+//!
+//! Accounting: the pool keeps lifetime counters ([`PoolStats`], read
+//! via [`ExecPool::stats`]) — jobs submitted, jobs executed (counted
+//! in the job wrapper *before* the scope's pending count drops, so
+//! after any scope joins `submitted == executed` is exact, not racy),
+//! jobs the joining thread helped with, and the injector queue's
+//! high-water depth. All relaxed atomics or updates under the
+//! already-held queue lock: nothing new contends on the hot path.
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
+
+/// Lifetime counters of one [`ExecPool`] (see [`ExecPool::stats`]).
+/// After every scope that submitted work has joined,
+/// `jobs_submitted == jobs_executed`; a panicked job still counts as
+/// executed (it retired). `jobs_helped` is the subset of executions
+/// run inline by joining threads rather than pool workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Worker threads the pool was built with (may be 0).
+    pub threads: usize,
+    pub jobs_submitted: u64,
+    pub jobs_executed: u64,
+    pub jobs_helped: u64,
+    /// Deepest the injector queue ever got.
+    pub queue_highwater: usize,
+}
 
 /// A type-erased unit of work queued on the pool, tagged with the
 /// identity of the scope that submitted it (the `Arc<ScopeState>`
@@ -45,17 +70,24 @@ struct Injector {
     queue: Mutex<InjectorState>,
     /// Signalled when a job is pushed or shutdown begins.
     work: Condvar,
+    submitted: AtomicU64,
+    executed: AtomicU64,
+    helped: AtomicU64,
 }
 
 struct InjectorState {
     jobs: VecDeque<Job>,
     shutdown: bool,
+    /// Deepest `jobs` ever got (updated under this lock on push).
+    highwater: usize,
 }
 
 impl Injector {
     fn push(&self, job: Job) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
         let mut st = self.queue.lock().unwrap();
         st.jobs.push_back(job);
+        st.highwater = st.highwater.max(st.jobs.len());
         drop(st);
         self.work.notify_one();
     }
@@ -129,8 +161,12 @@ impl ExecPool {
             queue: Mutex::new(InjectorState {
                 jobs: VecDeque::new(),
                 shutdown: false,
+                highwater: 0,
             }),
             work: Condvar::new(),
+            submitted: AtomicU64::new(0),
+            executed: AtomicU64::new(0),
+            helped: AtomicU64::new(0),
         });
         let workers = (0..threads)
             .map(|i| {
@@ -157,6 +193,23 @@ impl ExecPool {
     /// `chunks(n)` arithmetic stays valid).
     pub fn threads(&self) -> usize {
         self.threads.max(1)
+    }
+
+    /// Lifetime accounting snapshot. Cheap: three relaxed loads plus
+    /// one uncontended lock for the queue high-water mark.
+    pub fn stats(&self) -> PoolStats {
+        let highwater =
+            self.injector.queue.lock().unwrap().highwater;
+        PoolStats {
+            threads: self.threads,
+            jobs_submitted:
+                self.injector.submitted.load(Ordering::Relaxed),
+            jobs_executed:
+                self.injector.executed.load(Ordering::Relaxed),
+            jobs_helped:
+                self.injector.helped.load(Ordering::Relaxed),
+            queue_highwater: highwater,
+        }
     }
 
     /// Run `f` with a [`Scope`] on which borrowed work can be
@@ -222,11 +275,17 @@ impl<'env> Scope<'env> {
     {
         self.state.lock.lock().unwrap().pending += 1;
         let state = Arc::clone(&self.state);
+        let inj = Arc::clone(&self.injector);
         let job: Box<dyn FnOnce() + Send + 'env> =
             Box::new(move || {
                 let result = std::panic::catch_unwind(
                     AssertUnwindSafe(f),
                 );
+                // Count execution before pending drops: any thread
+                // that observes the scope quiesced (via this same
+                // lock) also observes the increment, so
+                // submitted == executed holds exactly after a join.
+                inj.executed.fetch_add(1, Ordering::Relaxed);
                 let mut st = state.lock.lock().unwrap();
                 st.pending -= 1;
                 if let Err(payload) = result {
@@ -280,6 +339,7 @@ impl<'env> Scope<'env> {
             if let Some(job) = self.injector.try_pop_tagged(self.tag())
             {
                 (job.run)();
+                self.injector.helped.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
             // None of ours queued but some still in flight on
@@ -448,6 +508,51 @@ mod tests {
             });
         });
         assert_eq!(counter.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn stats_account_every_job_after_join() {
+        for threads in [0, 1, 3] {
+            let pool = ExecPool::new(threads);
+            pool.scope(|s| {
+                for _ in 0..40 {
+                    s.submit(|| {});
+                }
+            });
+            pool.scope(|s| {
+                for _ in 0..24 {
+                    s.submit(|| {});
+                }
+            });
+            let st = pool.stats();
+            assert_eq!(st.threads, threads);
+            assert_eq!(st.jobs_submitted, 64, "threads={threads}");
+            assert_eq!(st.jobs_executed, 64, "threads={threads}");
+            assert!(st.jobs_helped <= st.jobs_executed);
+            // Pushes happen before any pop, so the queue was at
+            // least one deep at some point.
+            assert!(st.queue_highwater >= 1);
+            if threads == 0 {
+                // No workers: every job ran on the joining thread.
+                assert_eq!(st.jobs_helped, 64);
+            }
+        }
+    }
+
+    #[test]
+    fn panicked_jobs_still_count_as_executed() {
+        let pool = ExecPool::new(2);
+        let result =
+            std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.scope(|s| {
+                    s.submit(|| panic!("counted anyway"));
+                    s.submit(|| {});
+                });
+            }));
+        assert!(result.is_err());
+        let st = pool.stats();
+        assert_eq!(st.jobs_submitted, 2);
+        assert_eq!(st.jobs_executed, 2);
     }
 
     #[test]

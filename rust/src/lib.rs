@@ -27,6 +27,9 @@
 //!   path shards onto (codec, calibration, profiling, benches).
 //! * [`coordinator`] — the inference server: request queue, batcher,
 //!   multi-worker runtime pool with batch-level sharding, metrics.
+//! * [`obs`] — pipeline telemetry: per-request stage spans, per-worker
+//!   span rings, the unified [`obs::TelemetrySnapshot`], and Chrome
+//!   trace-event export.
 //! * [`harness`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 //!
@@ -43,6 +46,7 @@ pub mod data;
 pub mod exec;
 pub mod harness;
 pub mod nn;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod testutil;

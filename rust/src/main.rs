@@ -9,7 +9,9 @@
 //!   compress-demo [--seed S] [--level L]
 //!   serve    --requests N [--workers W] [--no-compress]
 //!            [--artifacts DIR] [--cache-budget BYTES]
-//!            [--transport sealed|dense]
+//!            [--transport sealed|dense] [--engine runtime|synthetic]
+//!            [--span-ring-cap N]
+//!            [--stats-json PATH] [--trace-out PATH]
 //!   selftest [--artifacts DIR]
 
 use fmc_accel::bench_util::{pct, Table};
@@ -17,10 +19,12 @@ use fmc_accel::cli::Args;
 use fmc_accel::compress::{codec, qtable::qtable};
 use fmc_accel::config::{models, AccelConfig};
 use fmc_accel::coordinator::{
-    transport_by_name, InferenceServer, InterlayerCache, ServerConfig,
+    transport_by_name, EngineFactory, InferenceEngine,
+    InferenceServer, InterlayerCache, ServerConfig, StagedEngine,
 };
 use fmc_accel::data;
 use fmc_accel::harness::{figs, profiles, tables};
+use fmc_accel::obs;
 use fmc_accel::runtime::{default_artifacts_dir, Runtime};
 use fmc_accel::sim::Accelerator;
 use fmc_accel::util::human_bytes;
@@ -308,12 +312,47 @@ fn serve(args: &Args) -> i32 {
         );
         return 2;
     };
+    let engine_kind = args.opt_or("engine", "runtime").to_string();
     let mut cfg = ServerConfig::new(dir)
         .with_workers(workers)
         .with_cache(cache.clone())
         .with_transport(transport);
     cfg.compressed = !args.flag("no-compress");
-    let server = match InferenceServer::start(cfg) {
+    cfg.span_ring_cap =
+        args.opt_usize("span-ring-cap", cfg.span_ring_cap);
+    let ring_cap = cfg.span_ring_cap;
+    let started = match engine_kind.as_str() {
+        "runtime" => InferenceServer::start(cfg),
+        // Offline two-stage engine over the same transport seam: lets
+        // serve (and `make smoke`) exercise the full telemetry path
+        // without the PJRT artifacts.
+        "synthetic" => {
+            use fmc_accel::coordinator::transport::new_in_flight;
+            use fmc_accel::testutil::stages::{
+                LogitStage, SmoothStage,
+            };
+            let t = std::sync::Arc::clone(&cfg.transport);
+            let measures = new_in_flight(2);
+            let factory: EngineFactory =
+                std::sync::Arc::new(move |_worker| {
+                    Ok(Box::new(StagedEngine::new(
+                        vec![
+                            Box::new(SmoothStage),
+                            Box::new(LogitStage),
+                        ],
+                        std::sync::Arc::clone(&t),
+                        std::sync::Arc::clone(&measures),
+                        4,
+                    )) as Box<dyn InferenceEngine>)
+                });
+            InferenceServer::start_with_engines(cfg, factory)
+        }
+        other => {
+            eprintln!("unknown engine {other:?} (runtime|synthetic)");
+            return 2;
+        }
+    };
+    let server = match started {
         Ok(s) => s,
         Err(e) => {
             eprintln!("serve: {e:#}");
@@ -345,19 +384,50 @@ fn serve(args: &Args) -> i32 {
             }
         }
     }
-    let metrics = server.shutdown();
+    let snap = server.shutdown_telemetry();
+    let metrics = &snap.metrics;
     println!("workers   : {workers}");
+    println!("engine    : {engine_kind}");
     println!("requests  : {}", metrics.requests);
     println!("batches   : {}", metrics.batches);
-    println!("accuracy  : {:.1}%", correct as f64 / n as f64 * 100.0);
-    println!("mean lat  : {:.2} ms", metrics.mean_latency_us() / 1e3);
-    println!("p99 lat   : {:.2} ms",
-             metrics.quantile_us(0.99) as f64 / 1e3);
+    if engine_kind == "synthetic" {
+        println!("accuracy  : n/a (synthetic engine)");
+    } else {
+        println!(
+            "accuracy  : {:.1}%",
+            correct as f64 / n.max(1) as f64 * 100.0
+        );
+    }
+    println!(
+        "latency   : mean {:.2} ms | p50 {:.2} | p95 {:.2} | p99 {:.2} | max {:.2}",
+        metrics.mean_latency_us() / 1e3,
+        metrics.quantile_us(0.50) as f64 / 1e3,
+        metrics.quantile_us(0.95) as f64 / 1e3,
+        metrics.quantile_us(0.99) as f64 / 1e3,
+        metrics.max_latency_us() as f64 / 1e3,
+    );
+    let mut st =
+        Table::new(&["Stage", "count", "mean us", "p95 us", "p99 us"]);
+    for (i, key) in obs::SEAM_KEYS.iter().enumerate() {
+        let h = metrics.stage_hist(i);
+        if h.count() == 0 {
+            continue;
+        }
+        st.row(&[
+            (*key).to_string(),
+            h.count().to_string(),
+            format!("{:.1}", h.mean_us()),
+            h.quantile_us(0.95).to_string(),
+            h.quantile_us(0.99).to_string(),
+        ]);
+    }
+    st.print();
     let cs = cache.lock().unwrap().stats();
     println!(
-        "bs cache  : {} hits, {} misses, {} held in {} entries",
+        "bs cache  : {} hits, {} misses ({:.0}% hit), {} held in {} entries",
         metrics.cache_hits,
         metrics.cache_misses,
+        snap.cache_hit_rate() * 100.0,
         human_bytes(cs.bytes_held),
         cs.entries
     );
@@ -366,6 +436,40 @@ fn serve(args: &Args) -> i32 {
         metrics.sealed_shipments,
         human_bytes(metrics.sealed_stream_bytes)
     );
+    println!(
+        "pool      : {} threads | {} submitted / {} executed / {} helped | queue hw {}",
+        snap.pool.threads,
+        snap.pool.jobs_submitted,
+        snap.pool.jobs_executed,
+        snap.pool.jobs_helped,
+        snap.pool.queue_highwater
+    );
+    println!(
+        "spans     : {} recorded, {} dropped (ring cap {ring_cap})",
+        snap.spans_recorded(),
+        snap.spans_dropped()
+    );
+    if let Some(path) = args.opt("stats-json") {
+        if let Err(e) =
+            snap.write_json(std::path::Path::new(path))
+        {
+            eprintln!("stats-json: {e:#}");
+            return 1;
+        }
+        println!("stats json: {path}");
+    }
+    if let Some(path) = args.opt("trace-out") {
+        if let Err(e) = obs::write_chrome_trace(
+            std::path::Path::new(path),
+            &snap.spans,
+        ) {
+            eprintln!("trace-out: {e:#}");
+            return 1;
+        }
+        println!(
+            "trace     : {path} (chrome://tracing or ui.perfetto.dev)"
+        );
+    }
     if metrics.errors > 0 {
         eprintln!("errors    : {}", metrics.errors);
         return 1;

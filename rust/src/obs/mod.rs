@@ -1,0 +1,30 @@
+//! Observability: low-overhead telemetry for the serving pipeline.
+//!
+//! Three layers, built bottom-up:
+//!
+//! * [`span`] — per-request [`Span`]s stamped at every pipeline seam
+//!   (enqueue → batch → ship → open → exec → reply), microseconds on
+//!   one process-wide monotonic epoch;
+//! * [`ring`] — per-worker fixed-capacity [`SpanRing`]s (worker-owned,
+//!   no locks on the hot path; overflow drops oldest and counts);
+//! * [`snapshot`] / [`trace`] — the merge-able [`TelemetrySnapshot`]
+//!   rendered as the `serve` summary and `--stats-json`, and Chrome
+//!   `trace_events` export for `--trace-out`
+//!   (chrome://tracing / Perfetto).
+//!
+//! Telemetry observes, never reorders: spans carry no payload and no
+//! pipeline decision reads them, so the sealed≡dense and
+//! pooled≡serial bit-identity invariants hold with telemetry enabled
+//! (re-asserted in `rust/tests/server_stress.rs`). See
+//! `docs/observability.md` for the seam map, the stats JSON schema,
+//! and the overhead budget.
+
+pub mod ring;
+pub mod snapshot;
+pub mod span;
+pub mod trace;
+
+pub use ring::{SpanRing, DEFAULT_SPAN_RING_CAP};
+pub use snapshot::{TelemetrySnapshot, STATS_SCHEMA_VERSION};
+pub use span::{now_us, Span, Stage, N_STAGES, SEAMS, SEAM_KEYS};
+pub use trace::{chrome_trace, write_chrome_trace, SEAM_NAMES};

@@ -1,0 +1,136 @@
+//! Per-worker span ring buffers.
+//!
+//! Each worker thread owns its [`SpanRing`] by `&mut` for the whole
+//! serve run and hands it back when the thread joins — the same
+//! ownership pattern as the per-worker `Metrics`. That makes the hot
+//! path genuinely lock-free: recording a completed span is a bounds
+//! check plus a 64-byte copy into a pre-sized `VecDeque`.
+//!
+//! The ring is fixed-capacity. When full, the *oldest* span is
+//! dropped and counted, so a long run keeps the most recent window of
+//! traffic for trace export while `recorded`/`dropped` still account
+//! for everything that ever passed through.
+
+use std::collections::VecDeque;
+
+use crate::obs::span::Span;
+
+/// Default per-worker ring capacity (`ServerConfig::span_ring_cap`).
+/// 4096 spans × 64 bytes = 256 KiB per worker — enough to hold the
+/// full tail of any stress run we replay into Perfetto.
+pub const DEFAULT_SPAN_RING_CAP: usize = 4096;
+
+/// Fixed-capacity drop-oldest buffer of completed [`Span`]s.
+#[derive(Debug, Clone)]
+pub struct SpanRing {
+    cap: usize,
+    buf: VecDeque<Span>,
+    recorded: u64,
+    dropped: u64,
+}
+
+impl SpanRing {
+    /// Ring holding at most `cap` spans (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> SpanRing {
+        let cap = cap.max(1);
+        SpanRing {
+            cap,
+            buf: VecDeque::with_capacity(cap),
+            recorded: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Record a completed span; evicts the oldest when full.
+    pub fn push(&mut self, span: Span) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(span);
+        self.recorded += 1;
+    }
+
+    /// Spans currently buffered (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Maximum spans held before evicting.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total spans ever pushed (including since-evicted ones).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Spans evicted by overflow.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Buffered spans, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &Span> {
+        self.buf.iter()
+    }
+}
+
+impl Default for SpanRing {
+    fn default() -> Self {
+        SpanRing::new(DEFAULT_SPAN_RING_CAP)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_below_capacity_drops_nothing() {
+        let mut r = SpanRing::new(8);
+        for i in 0..5 {
+            r.push(Span::unstamped(i));
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.recorded(), 5);
+        assert_eq!(r.dropped(), 0);
+        let seqs: Vec<u64> = r.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let mut r = SpanRing::new(4);
+        for i in 0..10 {
+            r.push(Span::unstamped(i));
+        }
+        // recorded counts everything; the buffer keeps the newest
+        // window; dropped accounts for the difference exactly.
+        assert_eq!(r.recorded(), 10);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        assert_eq!(
+            r.recorded() - r.dropped(),
+            r.len() as u64
+        );
+        let seqs: Vec<u64> = r.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let mut r = SpanRing::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.push(Span::unstamped(1));
+        r.push(Span::unstamped(2));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.iter().next().unwrap().seq, 2);
+        assert_eq!(r.dropped(), 1);
+    }
+}

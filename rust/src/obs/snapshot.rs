@@ -1,0 +1,423 @@
+//! Unified telemetry registry: one merge-able snapshot of everything
+//! the serving pipeline measures.
+//!
+//! [`TelemetrySnapshot`] gathers the per-request latency histograms
+//! ([`Metrics`], end-to-end plus per-seam), the interlayer cache
+//! counters ([`CacheStats`]), the simulated off-chip traffic split
+//! ([`DmaTraffic`] measured/analytic/raw buckets), the executor pool
+//! counters ([`PoolStats`]), and the per-worker span rings. It renders
+//! two ways:
+//!
+//! * the human `serve` summary (built in `main.rs` from the accessor
+//!   methods here), and
+//! * a stable machine-readable JSON document ([`Self::to_json`],
+//!   written by `serve --stats-json PATH`), whose shape is validated
+//!   by `tools/bench_compare.py --check-stats` so the schema cannot
+//!   silently drift. The schema is documented in
+//!   `docs/observability.md`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::coordinator::cache::CacheStats;
+use crate::coordinator::metrics::{Histogram, Metrics};
+use crate::exec::PoolStats;
+use crate::obs::ring::SpanRing;
+use crate::obs::span::SEAM_KEYS;
+use crate::sim::dma::DmaTraffic;
+use crate::util::json::Json;
+
+/// Version of the `--stats-json` document layout. Bump when keys are
+/// renamed or removed (additions are compatible).
+pub const STATS_SCHEMA_VERSION: u64 = 1;
+
+/// Everything one serve run measured, in one merge-able value.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetrySnapshot {
+    /// Merged serving counters + latency histograms.
+    pub metrics: Metrics,
+    /// Per-worker span rings (index order = join order; spans carry
+    /// their own worker id).
+    pub spans: Vec<SpanRing>,
+    /// Interlayer bitstream-cache counters at shutdown, if the server
+    /// ran with a cache.
+    pub cache: Option<CacheStats>,
+    /// Simulated off-chip traffic of the profiling pass, if hardware
+    /// accounting ran.
+    pub dma: Option<DmaTraffic>,
+    /// Process-global executor pool counters at snapshot time.
+    pub pool: PoolStats,
+    /// Worker threads the server ran with.
+    pub workers: usize,
+    /// Interlayer transport name (`dense` / `sealed`).
+    pub transport: String,
+}
+
+impl TelemetrySnapshot {
+    /// Total spans recorded across all rings (including evicted).
+    pub fn spans_recorded(&self) -> u64 {
+        self.spans.iter().map(|r| r.recorded()).sum()
+    }
+
+    /// Total spans evicted by ring overflow.
+    pub fn spans_dropped(&self) -> u64 {
+        self.spans.iter().map(|r| r.dropped()).sum()
+    }
+
+    /// Spans still buffered (available for trace export).
+    pub fn spans_buffered(&self) -> usize {
+        self.spans.iter().map(|r| r.len()).sum()
+    }
+
+    /// Cache hit rate over this server's lookups (0.0 when no
+    /// lookups happened).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total =
+            self.metrics.cache_hits + self.metrics.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.metrics.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Merge another snapshot (e.g. several servers sharing one
+    /// report). Metrics and span rings accumulate; cache and DMA
+    /// counters add where both sides have them (occupancy fields take
+    /// the max — they are point-in-time, not counters); pool stats
+    /// take the field-wise max because both sides usually observed
+    /// the same process-global pool.
+    pub fn merge(&mut self, o: &TelemetrySnapshot) {
+        self.metrics.merge(&o.metrics);
+        self.spans.extend(o.spans.iter().cloned());
+        self.workers += o.workers;
+        match (&mut self.cache, &o.cache) {
+            (Some(a), Some(b)) => {
+                a.hits += b.hits;
+                a.misses += b.misses;
+                a.evictions += b.evictions;
+                a.bytes_held = a.bytes_held.max(b.bytes_held);
+                a.entries = a.entries.max(b.entries);
+                a.budget_bytes = a.budget_bytes.max(b.budget_bytes);
+            }
+            (None, Some(b)) => self.cache = Some(*b),
+            _ => {}
+        }
+        match (&mut self.dma, &o.dma) {
+            (Some(a), Some(b)) => {
+                a.fmap_bytes += b.fmap_bytes;
+                a.weight_bytes += b.weight_bytes;
+                a.measured_fmap_bytes += b.measured_fmap_bytes;
+                a.raw_fmap_bytes += b.raw_fmap_bytes;
+            }
+            (None, Some(b)) => self.dma = Some(*b),
+            _ => {}
+        }
+        self.pool = PoolStats {
+            threads: self.pool.threads.max(o.pool.threads),
+            jobs_submitted: self
+                .pool
+                .jobs_submitted
+                .max(o.pool.jobs_submitted),
+            jobs_executed: self
+                .pool
+                .jobs_executed
+                .max(o.pool.jobs_executed),
+            jobs_helped: self.pool.jobs_helped.max(o.pool.jobs_helped),
+            queue_highwater: self
+                .pool
+                .queue_highwater
+                .max(o.pool.queue_highwater),
+        };
+        if self.transport.is_empty() {
+            self.transport = o.transport.clone();
+        } else if !o.transport.is_empty()
+            && self.transport != o.transport
+        {
+            self.transport = "mixed".to_string();
+        }
+    }
+
+    /// Render the stable stats document (see module docs).
+    pub fn to_json(&self) -> Json {
+        let m = &self.metrics;
+        let mut stages = BTreeMap::new();
+        for (i, key) in SEAM_KEYS.iter().enumerate() {
+            stages.insert(
+                (*key).to_string(),
+                hist_json(m.stage_hist(i)),
+            );
+        }
+        let mut latency = BTreeMap::new();
+        latency
+            .insert("end_to_end".into(), hist_json(m.latency_hist()));
+        latency.insert("stages".into(), Json::Obj(stages));
+
+        let cache = match &self.cache {
+            None => Json::Null,
+            Some(c) => obj(vec![
+                ("hits", num(c.hits)),
+                ("misses", num(c.misses)),
+                ("evictions", num(c.evictions)),
+                ("bytes_held", num(c.bytes_held)),
+                ("entries", num(c.entries as u64)),
+                ("budget_bytes", num(c.budget_bytes)),
+                ("hit_rate", Json::Num(self.cache_hit_rate())),
+            ]),
+        };
+        let dma = match &self.dma {
+            None => Json::Null,
+            Some(d) => obj(vec![
+                ("fmap_bytes", num(d.fmap_bytes)),
+                ("weight_bytes", num(d.weight_bytes)),
+                ("measured_fmap_bytes", num(d.measured_fmap_bytes)),
+                ("raw_fmap_bytes", num(d.raw_fmap_bytes)),
+                (
+                    "measured_fraction",
+                    Json::Num(d.measured_fraction()),
+                ),
+            ]),
+        };
+
+        obj(vec![
+            ("schema", num(STATS_SCHEMA_VERSION)),
+            ("workers", num(self.workers as u64)),
+            ("transport", Json::Str(self.transport.clone())),
+            ("requests", num(m.requests)),
+            ("batches", num(m.batches)),
+            ("errors", num(m.errors)),
+            ("latency_us", Json::Obj(latency)),
+            ("cache", cache),
+            (
+                "transport_bytes",
+                obj(vec![
+                    ("sealed_shipments", num(m.sealed_shipments)),
+                    (
+                        "sealed_stream_bytes",
+                        num(m.sealed_stream_bytes),
+                    ),
+                ]),
+            ),
+            ("dma", dma),
+            (
+                "pool",
+                obj(vec![
+                    ("threads", num(self.pool.threads as u64)),
+                    ("jobs_submitted", num(self.pool.jobs_submitted)),
+                    ("jobs_executed", num(self.pool.jobs_executed)),
+                    ("jobs_helped", num(self.pool.jobs_helped)),
+                    (
+                        "queue_highwater",
+                        num(self.pool.queue_highwater as u64),
+                    ),
+                ]),
+            ),
+            (
+                "spans",
+                obj(vec![
+                    ("recorded", num(self.spans_recorded())),
+                    ("dropped", num(self.spans_dropped())),
+                    (
+                        "buffered",
+                        num(self.spans_buffered() as u64),
+                    ),
+                    ("rings", num(self.spans.len() as u64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Write [`Self::to_json`] to `path`.
+    pub fn write_json(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| {
+                format!(
+                    "writing telemetry stats to {}",
+                    path.display()
+                )
+            })
+    }
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
+fn hist_json(h: &Histogram) -> Json {
+    obj(vec![
+        ("count", num(h.count())),
+        ("sum_us", num(h.sum_us())),
+        ("max_us", num(h.max_us())),
+        ("mean_us", Json::Num(h.mean_us())),
+        ("p50_us", num(h.quantile_us(0.50))),
+        ("p95_us", num(h.quantile_us(0.95))),
+        ("p99_us", num(h.quantile_us(0.99))),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{Span, Stage};
+    use std::time::Duration;
+
+    fn snapshot_with(n_requests: u64) -> TelemetrySnapshot {
+        let mut snap = TelemetrySnapshot {
+            workers: 2,
+            transport: "sealed".to_string(),
+            ..Default::default()
+        };
+        let mut ring = SpanRing::new(16);
+        for k in 0..n_requests {
+            let mut s = Span::unstamped(k);
+            for (i, st) in Stage::ALL.iter().enumerate() {
+                s.stamp_at(*st, 1_000 * k + 100 * i as u64);
+            }
+            snap.metrics.observe_span(&s);
+            ring.push(s);
+        }
+        snap.spans.push(ring);
+        snap.metrics.cache_hits = 3;
+        snap.metrics.cache_misses = 1;
+        snap
+    }
+
+    #[test]
+    fn json_has_schema_stage_keys_and_consistent_sums() {
+        let snap = snapshot_with(4);
+        let doc = snap.to_json();
+        assert_eq!(doc.get("schema").as_usize(), Some(1));
+        assert_eq!(doc.get("requests").as_usize(), Some(4));
+        assert_eq!(doc.get("transport").as_str(), Some("sealed"));
+
+        let e2e = doc.get("latency_us").get("end_to_end");
+        assert_eq!(e2e.get("count").as_usize(), Some(4));
+        let stages = doc.get("latency_us").get("stages");
+        let mut stage_sum = 0.0;
+        for key in SEAM_KEYS {
+            let h = stages.get(key);
+            assert!(
+                h.as_obj().is_some(),
+                "stage key {key} missing"
+            );
+            assert_eq!(h.get("count").as_usize(), Some(4));
+            stage_sum += h.get("sum_us").as_f64().unwrap();
+        }
+        // Seams partition end-to-end: stage sums equal (never
+        // exceed) the end-to-end sum.
+        assert_eq!(stage_sum, e2e.get("sum_us").as_f64().unwrap());
+
+        assert_eq!(
+            doc.get("spans").get("recorded").as_usize(),
+            Some(4)
+        );
+        assert_eq!(
+            doc.get("cache"),
+            &Json::Null,
+            "no cache stats attached"
+        );
+    }
+
+    #[test]
+    fn json_renders_cache_block_when_present() {
+        let mut snap = snapshot_with(1);
+        snap.cache = Some(CacheStats {
+            hits: 3,
+            misses: 1,
+            evictions: 2,
+            bytes_held: 512,
+            entries: 4,
+            budget_bytes: 1024,
+        });
+        let doc = snap.to_json();
+        let c = doc.get("cache");
+        assert_eq!(c.get("hits").as_usize(), Some(3));
+        assert_eq!(c.get("evictions").as_usize(), Some(2));
+        assert_eq!(c.get("hit_rate").as_f64(), Some(0.75));
+    }
+
+    #[test]
+    fn json_round_trips_through_parser() {
+        let snap = snapshot_with(2);
+        let text = snap.to_json().to_string();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("requests").as_usize(), Some(2));
+        for key in SEAM_KEYS {
+            assert!(doc
+                .get("latency_us")
+                .get("stages")
+                .get(key)
+                .as_obj()
+                .is_some());
+        }
+    }
+
+    #[test]
+    fn hit_rate_from_metrics_counters() {
+        let snap = snapshot_with(1);
+        assert_eq!(snap.cache_hit_rate(), 0.75);
+        let empty = TelemetrySnapshot::default();
+        assert_eq!(empty.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates_metrics_spans_and_dma() {
+        let mut a = snapshot_with(3);
+        a.dma = Some(DmaTraffic {
+            fmap_bytes: 100,
+            weight_bytes: 10,
+            measured_fmap_bytes: 60,
+            raw_fmap_bytes: 40,
+        });
+        let mut b = snapshot_with(2);
+        b.dma = Some(DmaTraffic {
+            fmap_bytes: 50,
+            weight_bytes: 5,
+            measured_fmap_bytes: 30,
+            raw_fmap_bytes: 20,
+        });
+        b.transport = "dense".to_string();
+        a.merge(&b);
+        assert_eq!(a.metrics.requests, 5);
+        assert_eq!(a.spans_recorded(), 5);
+        assert_eq!(a.spans.len(), 2);
+        assert_eq!(a.workers, 4);
+        let d = a.dma.unwrap();
+        assert_eq!(d.fmap_bytes, 150);
+        assert_eq!(d.measured_fmap_bytes, 90);
+        assert_eq!(a.transport, "mixed");
+    }
+
+    #[test]
+    fn observe_matches_observe_span_for_end_to_end() {
+        // The legacy observe() path and the span path agree on the
+        // end-to-end histogram.
+        let mut via_span = Metrics::new();
+        let mut s = Span::unstamped(0);
+        for (i, st) in Stage::ALL.iter().enumerate() {
+            s.stamp_at(*st, 50 * i as u64);
+        }
+        via_span.observe_span(&s);
+        let mut via_obs = Metrics::new();
+        via_obs.observe(Duration::from_micros(250));
+        assert_eq!(
+            via_span.latency_hist().sum_us(),
+            via_obs.latency_hist().sum_us()
+        );
+        assert_eq!(
+            via_span.quantile_us(0.5),
+            via_obs.quantile_us(0.5)
+        );
+    }
+}

@@ -1,0 +1,261 @@
+//! Stage spans: per-request monotonic timestamps at every pipeline
+//! seam.
+//!
+//! A [`Span`] is a tiny, `Copy` record that travels *with* the request
+//! through the serving pipeline (`Request` → `ShippedRequest` →
+//! `Response`) and is stamped — one [`now_us`] read, no allocation, no
+//! lock — as the request crosses each [`Stage`] boundary:
+//!
+//! ```text
+//!   Enqueue ──> BatchFormed ──> Shipped ──> Opened ──> EngineExec ──> Reply
+//!   (client)    (batcher)       (batcher)   (worker)   (worker)       (worker)
+//! ```
+//!
+//! All stamps are microseconds since one process-wide monotonic epoch
+//! (`Instant`-backed), so stamps taken on different threads are
+//! directly comparable and the five adjacent seam intervals ([`SEAMS`])
+//! partition the end-to-end latency exactly:
+//! `Σ seam_us(i) == total_us()` for a complete span. That identity is
+//! what lets the per-stage histograms in
+//! [`Metrics`](crate::coordinator::metrics::Metrics) be checked
+//! against the end-to-end histogram (per-stage sums can never exceed
+//! end-to-end — asserted in `rust/tests/server_stress.rs`).
+//!
+//! Telemetry observes, never reorders: a span carries no payload and
+//! nothing in the pipeline branches on it, so the sealed≡dense and
+//! pooled≡serial bit-identity invariants are untouched.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// The pipeline seams a request crosses, in order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Stage {
+    /// Client handed the request to the server queue (`submit`).
+    Enqueue = 0,
+    /// The batcher closed a batch containing the request.
+    BatchFormed = 1,
+    /// The request was packaged by the interlayer transport (sealed
+    /// under `SealedTransport`) and dispatched toward a worker.
+    Shipped = 2,
+    /// The worker opened the envelope to dense pixels at the engine
+    /// boundary.
+    Opened = 3,
+    /// The engine finished executing the request's batch.
+    EngineExec = 4,
+    /// The response was handed back to the client channel.
+    Reply = 5,
+}
+
+/// Number of stamped stages per span.
+pub const N_STAGES: usize = 6;
+
+impl Stage {
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::Enqueue,
+        Stage::BatchFormed,
+        Stage::Shipped,
+        Stage::Opened,
+        Stage::EngineExec,
+        Stage::Reply,
+    ];
+
+    /// Short human tag.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Enqueue => "enqueue",
+            Stage::BatchFormed => "batch",
+            Stage::Shipped => "ship",
+            Stage::Opened => "open",
+            Stage::EngineExec => "exec",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+/// The five adjacent seam intervals, in pipeline order. Together they
+/// partition `[Enqueue, Reply]` with no gap and no overlap.
+pub const SEAMS: [(Stage, Stage); N_STAGES - 1] = [
+    (Stage::Enqueue, Stage::BatchFormed),
+    (Stage::BatchFormed, Stage::Shipped),
+    (Stage::Shipped, Stage::Opened),
+    (Stage::Opened, Stage::EngineExec),
+    (Stage::EngineExec, Stage::Reply),
+];
+
+/// Stable machine-readable keys for the seam intervals — the stage
+/// keys of the `--stats-json` schema (validated by
+/// `tools/bench_compare.py --check-stats`, so they cannot silently
+/// drift).
+pub const SEAM_KEYS: [&str; N_STAGES - 1] = [
+    "enqueue_to_batch",
+    "batch_to_ship",
+    "ship_to_open",
+    "open_to_exec",
+    "exec_to_reply",
+];
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process-wide telemetry epoch (monotonic;
+/// comparable across threads).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+fn next_seq() -> u64 {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+const UNSTAMPED: u64 = u64::MAX;
+
+/// Per-request span context: a sequence id, the worker/lane the
+/// request landed on, and one microsecond stamp per [`Stage`].
+///
+/// `Copy` on purpose — a span is 64 bytes of plain integers, moved
+/// and stamped on the hot path with no indirection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Process-unique request sequence number (submit order).
+    pub seq: u64,
+    /// Worker that served the request (stamped by the worker).
+    pub worker: u32,
+    /// Request's slot within its batch — the trace "lane" (tid).
+    pub lane: u32,
+    t_us: [u64; N_STAGES],
+}
+
+impl Span {
+    /// Fresh span with [`Stage::Enqueue`] stamped now.
+    pub fn begin() -> Span {
+        let mut s = Span::unstamped(next_seq());
+        s.stamp(Stage::Enqueue);
+        s
+    }
+
+    /// Fresh span with no stamps (tests and synthetic traces; the
+    /// serving pipeline always starts from [`Span::begin`]).
+    pub fn unstamped(seq: u64) -> Span {
+        Span {
+            seq,
+            worker: 0,
+            lane: 0,
+            t_us: [UNSTAMPED; N_STAGES],
+        }
+    }
+
+    /// Stamp `stage` with the current monotonic time.
+    #[inline]
+    pub fn stamp(&mut self, stage: Stage) {
+        self.t_us[stage as usize] = now_us();
+    }
+
+    /// Stamp `stage` with an explicit time (tests, synthetic traces).
+    pub fn stamp_at(&mut self, stage: Stage, t_us: u64) {
+        self.t_us[stage as usize] = t_us;
+    }
+
+    /// Stamp time of `stage`, if stamped.
+    pub fn at(&self, stage: Stage) -> Option<u64> {
+        let t = self.t_us[stage as usize];
+        (t != UNSTAMPED).then_some(t)
+    }
+
+    /// Width of seam interval `i` (see [`SEAMS`]) in microseconds;
+    /// `None` unless both endpoints are stamped.
+    pub fn seam_us(&self, i: usize) -> Option<u64> {
+        let (a, b) = SEAMS[i];
+        Some(self.at(b)?.saturating_sub(self.at(a)?))
+    }
+
+    /// End-to-end microseconds (`Reply - Enqueue`), if complete.
+    pub fn total_us(&self) -> Option<u64> {
+        Some(
+            self.at(Stage::Reply)?
+                .saturating_sub(self.at(Stage::Enqueue)?),
+        )
+    }
+
+    /// [`Span::total_us`] as a `Duration`.
+    pub fn total(&self) -> Option<Duration> {
+        self.total_us().map(Duration::from_micros)
+    }
+
+    /// True when every stage is stamped.
+    pub fn is_complete(&self) -> bool {
+        self.t_us.iter().all(|&t| t != UNSTAMPED)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn begin_stamps_enqueue_only() {
+        let s = Span::begin();
+        assert!(s.at(Stage::Enqueue).is_some());
+        for st in &Stage::ALL[1..] {
+            assert!(s.at(*st).is_none(), "{st:?} must be unstamped");
+        }
+        assert!(!s.is_complete());
+        assert!(s.total_us().is_none());
+    }
+
+    #[test]
+    fn seqs_are_unique_and_increasing() {
+        let a = Span::begin();
+        let b = Span::begin();
+        assert!(b.seq > a.seq);
+    }
+
+    #[test]
+    fn stamps_are_monotonic_and_seams_partition_total() {
+        let mut s = Span::begin();
+        for st in &Stage::ALL[1..] {
+            s.stamp(*st);
+        }
+        assert!(s.is_complete());
+        let mut prev = s.at(Stage::Enqueue).unwrap();
+        for st in &Stage::ALL[1..] {
+            let t = s.at(*st).unwrap();
+            assert!(t >= prev, "{st:?} went backwards");
+            prev = t;
+        }
+        // The seam identity Σ seam == total: per-stage histograms can
+        // never sum past the end-to-end histogram.
+        let seams: u64 =
+            (0..SEAMS.len()).map(|i| s.seam_us(i).unwrap()).sum();
+        assert_eq!(seams, s.total_us().unwrap());
+    }
+
+    #[test]
+    fn synthetic_stamps_are_exact() {
+        let mut s = Span::unstamped(7);
+        for (i, st) in Stage::ALL.iter().enumerate() {
+            s.stamp_at(*st, 100 * (i as u64 + 1));
+        }
+        assert_eq!(s.total_us(), Some(500));
+        for i in 0..SEAMS.len() {
+            assert_eq!(s.seam_us(i), Some(100));
+        }
+        assert_eq!(
+            s.total(),
+            Some(Duration::from_micros(500))
+        );
+    }
+
+    #[test]
+    fn now_us_is_monotonic() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

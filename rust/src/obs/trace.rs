@@ -1,0 +1,240 @@
+//! Chrome `trace_events` export for completed spans.
+//!
+//! `serve --trace-out PATH` dumps every buffered span as the JSON
+//! object format understood by `chrome://tracing` and Perfetto
+//! (ui.perfetto.dev → "Open trace file"): one *process* (pid) per
+//! worker, one *thread* (tid) per request lane within a batch, and one
+//! complete-event ("ph":"X") slice per pipeline seam, so each request
+//! renders as the five back-to-back slices
+//! enqueue→batch→ship→open→exec→reply on its lane.
+//!
+//! Timestamps are the span's microseconds-since-epoch stamps used
+//! as-is — trace `ts`/`dur` are defined in microseconds, so no unit
+//! conversion happens here.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::obs::ring::SpanRing;
+use crate::obs::span::{SEAM_KEYS, SEAMS};
+use crate::util::json::Json;
+
+/// Display names for the seam slices shown in the trace viewer
+/// (index-aligned with [`SEAMS`] / [`SEAM_KEYS`]).
+pub const SEAM_NAMES: [&str; SEAMS.len()] = [
+    "enqueue→batch",
+    "batch→ship",
+    "ship→open",
+    "open→exec",
+    "exec→reply",
+];
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
+fn meta_event(name: &str, pid: u32, tid: Option<u32>, value: String) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("args", obj(vec![("name", Json::Str(value))])),
+    ];
+    if let Some(t) = tid {
+        pairs.push(("tid", Json::Num(t as f64)));
+    }
+    obj(pairs)
+}
+
+/// Render every buffered span in `rings` as a Chrome trace document.
+pub fn chrome_trace(rings: &[SpanRing]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+
+    // Name each worker process and each request lane once, from the
+    // worker/lane ids actually present in the spans.
+    let mut workers: BTreeSet<u32> = BTreeSet::new();
+    let mut lanes: BTreeSet<(u32, u32)> = BTreeSet::new();
+    for ring in rings {
+        for span in ring.iter() {
+            workers.insert(span.worker);
+            lanes.insert((span.worker, span.lane));
+        }
+    }
+    for w in &workers {
+        events.push(meta_event(
+            "process_name",
+            *w,
+            None,
+            format!("fmc-worker-{w}"),
+        ));
+    }
+    for (w, l) in &lanes {
+        events.push(meta_event(
+            "thread_name",
+            *w,
+            Some(*l),
+            format!("lane-{l}"),
+        ));
+    }
+
+    for ring in rings {
+        for span in ring.iter() {
+            for (i, (a, b)) in SEAMS.iter().enumerate() {
+                let (Some(ta), Some(tb)) = (span.at(*a), span.at(*b))
+                else {
+                    continue;
+                };
+                events.push(obj(vec![
+                    ("name", Json::Str(SEAM_NAMES[i].to_string())),
+                    ("cat", Json::Str("pipeline".to_string())),
+                    ("ph", Json::Str("X".to_string())),
+                    ("ts", Json::Num(ta as f64)),
+                    ("dur", Json::Num(tb.saturating_sub(ta) as f64)),
+                    ("pid", Json::Num(span.worker as f64)),
+                    ("tid", Json::Num(span.lane as f64)),
+                    (
+                        "args",
+                        obj(vec![
+                            ("seq", Json::Num(span.seq as f64)),
+                            (
+                                "seam",
+                                Json::Str(SEAM_KEYS[i].to_string()),
+                            ),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+    }
+
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Write [`chrome_trace`] output to `path`.
+pub fn write_chrome_trace(
+    path: &Path,
+    rings: &[SpanRing],
+) -> anyhow::Result<()> {
+    std::fs::write(path, format!("{}\n", chrome_trace(rings)))
+        .with_context(|| {
+            format!("writing chrome trace to {}", path.display())
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{Span, Stage};
+
+    fn synthetic(seq: u64, worker: u32, lane: u32, t0: u64) -> Span {
+        let mut s = Span::unstamped(seq);
+        s.worker = worker;
+        s.lane = lane;
+        for (i, st) in Stage::ALL.iter().enumerate() {
+            s.stamp_at(*st, t0 + 10 * i as u64);
+        }
+        s
+    }
+
+    #[test]
+    fn trace_has_one_slice_per_seam_and_pid_per_worker() {
+        let mut r0 = SpanRing::new(8);
+        let mut r1 = SpanRing::new(8);
+        r0.push(synthetic(0, 0, 0, 100));
+        r0.push(synthetic(1, 0, 1, 200));
+        r1.push(synthetic(2, 1, 0, 150));
+        let doc = chrome_trace(&[r0, r1]);
+
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .collect();
+        // 3 spans × 5 seams.
+        assert_eq!(xs.len(), 3 * SEAMS.len());
+
+        let pids: BTreeSet<usize> = xs
+            .iter()
+            .map(|e| e.get("pid").as_usize().unwrap())
+            .collect();
+        assert_eq!(pids, BTreeSet::from([0, 1]));
+
+        // Process metadata names every worker.
+        let procs: Vec<&Json> = events
+            .iter()
+            .filter(|e| {
+                e.get("name").as_str() == Some("process_name")
+            })
+            .collect();
+        assert_eq!(procs.len(), 2);
+        assert_eq!(
+            procs[0].get("args").get("name").as_str(),
+            Some("fmc-worker-0")
+        );
+
+        // One span's slices are back-to-back in seam order.
+        let mut seq0: Vec<(&str, u64, u64)> = xs
+            .iter()
+            .filter(|e| e.get("args").get("seq").as_usize() == Some(0))
+            .map(|e| {
+                (
+                    e.get("name").as_str().unwrap(),
+                    e.get("ts").as_f64().unwrap() as u64,
+                    e.get("dur").as_f64().unwrap() as u64,
+                )
+            })
+            .collect();
+        seq0.sort_by_key(|(_, ts, _)| *ts);
+        assert_eq!(seq0.len(), SEAMS.len());
+        for (i, (name, ts, dur)) in seq0.iter().enumerate() {
+            assert_eq!(*name, SEAM_NAMES[i]);
+            assert_eq!(*ts, 100 + 10 * i as u64);
+            assert_eq!(*dur, 10);
+        }
+    }
+
+    #[test]
+    fn trace_round_trips_through_parser() {
+        let mut r = SpanRing::new(4);
+        r.push(synthetic(9, 2, 3, 1000));
+        let text = chrome_trace(&[r]).to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert!(
+            parsed.get("traceEvents").as_arr().unwrap().len()
+                >= SEAMS.len()
+        );
+        assert_eq!(
+            parsed.get("displayTimeUnit").as_str(),
+            Some("ms")
+        );
+    }
+
+    #[test]
+    fn incomplete_spans_emit_only_stamped_seams() {
+        let mut s = Span::unstamped(5);
+        s.stamp_at(Stage::Enqueue, 10);
+        s.stamp_at(Stage::BatchFormed, 20);
+        // Shipped..Reply never stamped: only the first seam renders.
+        let mut r = SpanRing::new(4);
+        r.push(s);
+        let doc = chrome_trace(&[r]);
+        let xs = doc
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .count();
+        assert_eq!(xs, 1);
+    }
+}

@@ -15,6 +15,14 @@
 //! and the `InterlayerCache` must keep exact byte accounting under
 //! concurrent workers.
 //!
+//! Telemetry (ISSUE 6): every request's [`fmc_accel::obs::Span`] must
+//! cover the full stage sequence with the five seams exactly
+//! partitioning the end-to-end interval, the per-worker span rings
+//! must keep exact recorded/dropped/buffered accounting under
+//! overflow, the Chrome trace export must carry one complete slice
+//! sequence per request, and the executor pool's lifetime counters
+//! must balance (submitted == executed) after every join.
+//!
 //! The tests inject synthetic [`InferenceEngine`]s so the pipeline
 //! runs without PJRT artifacts; `sim_profile` is pinned so startup
 //! skips the codec profiling pass.
@@ -35,9 +43,14 @@ use fmc_accel::coordinator::{
     BatchPolicy, EngineFactory, InferenceEngine, InferenceServer,
     InterlayerCache, Metrics, ServerConfig,
 };
+use fmc_accel::exec::ExecPool;
 use fmc_accel::nn::Tensor3;
+use fmc_accel::obs::{
+    chrome_trace, TelemetrySnapshot, SEAM_KEYS, SEAM_NAMES,
+};
 use fmc_accel::sim::scheduler::{self, CompressionProfile};
 use fmc_accel::sim::Accelerator;
+use fmc_accel::util::json::Json;
 
 /// Deterministic synthetic engine: class = (first pixel) mod 7, and
 /// the first logit echoes the pixel so clients can verify routing.
@@ -624,4 +637,239 @@ fn interlayer_cache_byte_accounting_survives_eviction_races() {
         "every lookup accounted"
     );
     assert!(stats.evictions > 0, "budget pressure must evict");
+}
+
+// --- pipeline telemetry (ISSUE 6) -------------------------------------
+
+/// TagEngine server serving `n` requests at the given worker count;
+/// returns the full telemetry snapshot (optionally with a small span
+/// ring to force overflow).
+fn run_telemetry_server(
+    workers: usize, n: usize, ring_cap: Option<usize>,
+) -> TelemetrySnapshot {
+    let factory: EngineFactory = Arc::new(|_: usize| {
+        Ok(Box::new(TagEngine {
+            cap: 4,
+            images: Arc::new(AtomicUsize::new(0)),
+            batches: Arc::new(AtomicUsize::new(0)),
+        }) as Box<dyn InferenceEngine>)
+    });
+    let mut cfg = stress_config(workers);
+    if let Some(cap) = ring_cap {
+        cfg = cfg.with_span_ring_cap(cap);
+    }
+    let server =
+        InferenceServer::start_with_engines(cfg, factory).unwrap();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(tagged_image(i)).unwrap())
+        .collect();
+    for rx in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("telemetry response");
+        // The response carries its span, already closed at reply.
+        assert!(resp.span.is_complete(), "response span incomplete");
+    }
+    server.shutdown_telemetry()
+}
+
+fn num(j: &Json) -> f64 {
+    match j {
+        Json::Num(n) => *n,
+        other => panic!("expected number, got {other}"),
+    }
+}
+
+#[test]
+fn telemetry_spans_cover_every_request() {
+    for workers in [1usize, 3] {
+        let snap = run_telemetry_server(workers, 20, None);
+        assert_eq!(snap.metrics.requests, 20);
+        assert_eq!(snap.spans_recorded(), 20, "{workers} workers");
+        assert_eq!(snap.spans_dropped(), 0);
+        assert_eq!(snap.workers, workers);
+        for ring in &snap.spans {
+            for span in ring.iter() {
+                assert!(span.is_complete(), "span {} gapped", span.seq);
+                assert!((span.worker as usize) < workers);
+                // The five seams exactly partition end to end.
+                let seam_sum: u64 = (0..SEAM_KEYS.len())
+                    .map(|i| span.seam_us(i).unwrap())
+                    .sum();
+                assert_eq!(seam_sum, span.total_us().unwrap());
+            }
+        }
+        // Same partition identity, aggregated: per-stage histogram
+        // mass equals (so in particular never exceeds) the
+        // end-to-end mass.
+        let m = &snap.metrics;
+        let stage_mass: u64 = (0..SEAM_KEYS.len())
+            .map(|i| m.stage_hist(i).sum_us())
+            .sum();
+        assert_eq!(stage_mass, m.latency_hist().sum_us());
+        assert_eq!(m.latency_hist().count(), 20);
+    }
+}
+
+#[test]
+fn span_ring_overflow_keeps_exact_accounting() {
+    // A 4-slot ring under 20 requests must evict — but the counters
+    // stay exact and the histograms still see every request.
+    let snap = run_telemetry_server(1, 20, Some(4));
+    assert_eq!(snap.metrics.requests, 20);
+    assert_eq!(snap.spans_recorded(), 20);
+    assert!(snap.spans_buffered() <= 4);
+    assert!(snap.spans_dropped() >= 16);
+    assert_eq!(
+        snap.spans_recorded() - snap.spans_dropped(),
+        snap.spans_buffered() as u64,
+        "recorded - dropped must equal what is still buffered"
+    );
+    assert_eq!(snap.metrics.latency_hist().count(), 20);
+}
+
+#[test]
+fn chrome_trace_export_covers_every_request_and_seam() {
+    const N: usize = 24;
+    const WORKERS: usize = 3;
+    let snap = run_telemetry_server(WORKERS, N, None);
+    // Round-trip through the parser: the export must be valid JSON.
+    let doc = Json::parse(&chrome_trace(&snap.spans).to_string())
+        .expect("trace JSON parses");
+    let Json::Arr(events) = doc.get("traceEvents") else {
+        panic!("traceEvents missing");
+    };
+    let slices: Vec<&Json> = events
+        .iter()
+        .filter(|e| matches!(e.get("ph"), Json::Str(s) if s == "X"))
+        .collect();
+    assert_eq!(
+        slices.len(),
+        N * SEAM_KEYS.len(),
+        "one slice per request per seam"
+    );
+    let mut pids = std::collections::BTreeSet::new();
+    for s in &slices {
+        let pid = num(s.get("pid")) as usize;
+        assert!(pid < WORKERS, "pid {pid} out of range");
+        pids.insert(pid);
+        assert!(num(s.get("dur")) >= 0.0);
+    }
+    // Every worker that emitted slices has a process_name record.
+    let named: std::collections::BTreeSet<usize> = events
+        .iter()
+        .filter(|e| {
+            matches!(e.get("ph"), Json::Str(s) if s == "M")
+                && matches!(e.get("name"),
+                            Json::Str(s) if s == "process_name")
+        })
+        .map(|e| num(e.get("pid")) as usize)
+        .collect();
+    assert!(pids.is_subset(&named), "unnamed worker pid in trace");
+    // One request's slices, in time order, walk the seams in
+    // pipeline order (sort is stable, so equal timestamps keep the
+    // export's per-span emission order).
+    let min_seq = slices
+        .iter()
+        .map(|s| num(s.get("args").get("seq")) as u64)
+        .min()
+        .unwrap();
+    let mut first: Vec<&Json> = slices
+        .iter()
+        .copied()
+        .filter(|s| num(s.get("args").get("seq")) as u64 == min_seq)
+        .collect();
+    first.sort_by_key(|s| num(s.get("ts")) as u64);
+    let names: Vec<&str> = first
+        .iter()
+        .map(|s| match s.get("name") {
+            Json::Str(n) => n.as_str(),
+            other => panic!("slice name not a string: {other}"),
+        })
+        .collect();
+    assert_eq!(names, SEAM_NAMES, "seam slices out of order");
+}
+
+#[test]
+fn stats_json_shape_matches_schema() {
+    let snap = run_telemetry_server(2, 16, None);
+    let doc = Json::parse(&snap.to_json().to_string())
+        .expect("stats JSON parses");
+    for key in [
+        "schema", "workers", "transport", "requests", "batches",
+        "errors", "latency_us", "pool", "spans",
+    ] {
+        assert!(
+            !matches!(doc.get(key), Json::Null),
+            "top-level key {key} missing"
+        );
+    }
+    let e2e = doc.get("latency_us").get("end_to_end");
+    let hist_keys = [
+        "count", "sum_us", "max_us", "mean_us", "p50_us", "p95_us",
+        "p99_us",
+    ];
+    for hk in hist_keys {
+        assert!(
+            !matches!(e2e.get(hk), Json::Null),
+            "end_to_end histogram key {hk} missing"
+        );
+    }
+    // What tools/bench_compare.py --check-stats gates, asserted at
+    // the source: every stage histogram present and the stage
+    // latency mass bounded by the end-to-end mass.
+    let stages = doc.get("latency_us").get("stages");
+    let mut stage_mass = 0.0;
+    for sk in SEAM_KEYS {
+        let h = stages.get(sk);
+        for hk in hist_keys {
+            assert!(
+                !matches!(h.get(hk), Json::Null),
+                "stage {sk} histogram key {hk} missing"
+            );
+        }
+        stage_mass += num(h.get("sum_us"));
+    }
+    assert!(stage_mass <= num(e2e.get("sum_us")));
+    assert_eq!(num(doc.get("requests")), 16.0);
+    assert_eq!(num(doc.get("spans").get("recorded")), 16.0);
+    let pool = doc.get("pool");
+    assert_eq!(
+        num(pool.get("jobs_submitted")),
+        num(pool.get("jobs_executed")),
+        "pool job accounting must balance in the snapshot"
+    );
+}
+
+#[test]
+fn exec_pool_job_accounting_across_worker_counts() {
+    // ISSUE 6 satellite: submitted == executed after every join, for
+    // helper-only (0 threads) through oversubscribed pools.
+    for threads in [0usize, 1, 2, 4] {
+        let pool = ExecPool::new(threads);
+        pool.scope(|s| {
+            for i in 0..40 {
+                s.submit(move || {
+                    std::hint::black_box(i * i);
+                });
+            }
+        });
+        let st = pool.stats();
+        assert_eq!(
+            st.jobs_submitted, 40,
+            "{threads} threads: submissions miscounted"
+        );
+        assert_eq!(
+            st.jobs_submitted, st.jobs_executed,
+            "{threads} threads: jobs lost between submit and join"
+        );
+        assert!(st.jobs_helped <= st.jobs_executed);
+        assert!(st.queue_highwater >= 1);
+        if threads == 0 {
+            assert_eq!(
+                st.jobs_helped, 40,
+                "no workers: the joiner must run every job"
+            );
+        }
+    }
 }

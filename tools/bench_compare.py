@@ -25,12 +25,104 @@ pooled many-small-fmap paths must not be slower than the spawn-per-call
 scoped baseline by more than ``--min-pool-ratio`` — the regression the
 persistent executor pool exists to prevent, gateable on any runner.
 
+``--check-stats STATS.json`` validates the serve telemetry snapshot
+written by ``fmc-accel serve --stats-json`` instead: required top-level
+keys, full histogram blocks for end-to-end latency and every pipeline
+stage, quantile monotonicity, per-stage latency mass bounded by the
+end-to-end mass, and executor-pool job accounting
+(submitted == executed). With ``--check-stats`` the BASELINE/FRESH
+positionals are optional.
+
 Exit code 0 = pass, 1 = regression, 2 = usage/file error.
 """
 
 import argparse
 import json
 import sys
+
+# Keys of one rendered histogram block in the stats JSON.
+HIST_KEYS = ("count", "sum_us", "max_us", "mean_us", "p50_us",
+             "p95_us", "p99_us")
+
+# The five pipeline seams (must match rust obs::SEAM_KEYS).
+STAGE_KEYS = ("enqueue_to_batch", "batch_to_ship", "ship_to_open",
+              "open_to_exec", "exec_to_reply")
+
+
+def check_hist(doc, label, problems):
+    """Validate one histogram block; returns it (or {})."""
+    if not isinstance(doc, dict):
+        problems.append(f"{label}: not an object")
+        return {}
+    missing = [k for k in HIST_KEYS if k not in doc]
+    if missing:
+        problems.append(f"{label}: missing {', '.join(missing)}")
+        return {}
+    if doc["count"] > 0:
+        q = [doc["p50_us"], doc["p95_us"], doc["p99_us"],
+             doc["max_us"]]
+        if sorted(q) != q:
+            problems.append(
+                f"{label}: quantiles not monotone "
+                f"p50={q[0]} p95={q[1]} p99={q[2]} max={q[3]}")
+    return doc
+
+
+def check_stats(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot read {path}: {e}",
+              file=sys.stderr)
+        return 2
+
+    problems = []
+    for key in ("schema", "workers", "transport", "requests",
+                "batches", "errors", "latency_us", "pool", "spans"):
+        if key not in doc:
+            problems.append(f"top-level key missing: {key}")
+    lat = doc.get("latency_us", {})
+    e2e = check_hist(lat.get("end_to_end"), "latency_us.end_to_end",
+                     problems)
+    stages = lat.get("stages", {})
+    stage_sum = 0
+    for sk in STAGE_KEYS:
+        h = check_hist(stages.get(sk), f"latency_us.stages.{sk}",
+                       problems)
+        stage_sum += h.get("sum_us", 0)
+    # The seams partition each request's end-to-end interval, so the
+    # per-stage latency mass can never exceed the end-to-end mass.
+    if e2e and stage_sum > e2e["sum_us"]:
+        problems.append(
+            f"stage latency mass {stage_sum}us exceeds end-to-end "
+            f"{e2e['sum_us']}us")
+    pool = doc.get("pool", {})
+    sub = pool.get("jobs_submitted")
+    exe = pool.get("jobs_executed")
+    if sub is None or exe is None:
+        problems.append("pool.jobs_submitted/jobs_executed missing")
+    elif sub != exe:
+        problems.append(
+            f"pool job accounting: {sub} submitted != {exe} executed")
+    spans = doc.get("spans", {})
+    if spans.get("recorded", 0) < doc.get("requests", 0):
+        problems.append(
+            f"spans.recorded {spans.get('recorded')} < requests "
+            f"{doc.get('requests')}")
+
+    if problems:
+        print(f"bench_compare: stats check FAILED on {path}:",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  [REGRESSION] {p}", file=sys.stderr)
+        return 1
+    print(f"  [ok        ] stats schema v{doc['schema']}: "
+          f"{doc['requests']} requests, {len(STAGE_KEYS)} stage "
+          f"histograms, stage mass {stage_sum}us <= "
+          f"e2e {e2e.get('sum_us', 0)}us, pool {sub} == {exe}")
+    print(f"bench_compare: stats shape OK for {path}")
+    return 0
 
 
 def load_entries(path):
@@ -48,8 +140,8 @@ def load_entries(path):
 def main():
     ap = argparse.ArgumentParser(
         description="codec bench regression gate")
-    ap.add_argument("baseline")
-    ap.add_argument("fresh")
+    ap.add_argument("baseline", nargs="?")
+    ap.add_argument("fresh", nargs="?")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fractional throughput drop "
                          "(default 0.25 = 25%%)")
@@ -59,7 +151,19 @@ def main():
     ap.add_argument("--min-pool-ratio", type=float, default=0.75,
                     help="minimum pooled/scoped throughput ratio for "
                          "--check-invariants (default 0.75)")
+    ap.add_argument("--check-stats", metavar="STATS_JSON",
+                    help="validate a serve --stats-json telemetry "
+                         "snapshot instead of (or before) the bench "
+                         "comparison")
     args = ap.parse_args()
+
+    if args.check_stats:
+        rc = check_stats(args.check_stats)
+        if rc or not args.baseline:
+            return rc
+    if not args.baseline or not args.fresh:
+        ap.error("BASELINE and FRESH are required unless "
+                 "--check-stats is the only check")
 
     base = load_entries(args.baseline)
     fresh = load_entries(args.fresh)
