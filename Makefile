@@ -8,7 +8,7 @@
 
 CARGO ?= cargo
 
-.PHONY: all build test fmt clippy smoke bench-check bench-codec golden verify
+.PHONY: all build test fmt clippy smoke chaos bench-check bench-codec golden verify
 
 all: build
 
@@ -39,6 +39,23 @@ smoke:
 	  --trace-out target/serve_trace.json
 	python3 tools/bench_compare.py \
 	  --check-stats target/serve_stats.json
+
+# Chaos smoke (ISSUE 7): fault-injected serve runs on the synthetic
+# engine — each seeded FaultPlan kills one worker mid-run and sprinkles
+# open failures/stage delays — then gate each run's exported stats on
+# the admission conservation identity (submitted == replied + shed_*
+# + failed) via bench_compare. The serve binary itself exits non-zero
+# if any client reply is lost or the identity breaks, so this catches
+# lost/double replies as well as counter drift.
+chaos:
+	for seed in 1 2 3; do \
+	  $(CARGO) run --release --bin fmc-accel -- serve \
+	    --engine synthetic --requests 64 --workers 3 \
+	    --faults seed=$$seed \
+	    --stats-json target/chaos_stats_$$seed.json || exit 1; \
+	  python3 tools/bench_compare.py \
+	    --check-stats target/chaos_stats_$$seed.json || exit 1; \
+	done
 
 # Bench-regression gate. Reuses the smoke json if a smoke run already
 # produced one (CI runs `make verify` first, which ends with smoke);

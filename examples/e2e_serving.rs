@@ -58,15 +58,21 @@ fn main() -> anyhow::Result<()> {
     let workload = data::shapes_batch(2024, n, 32);
 
     let t0 = Instant::now();
+    // submit is typed now: a QueueFull/DeadlinePassed/ShuttingDown
+    // shed would surface here instead of silently hanging a client
+    // (this driver never saturates the default 1024-deep queue, so
+    // any error is a real failure).
     let rxs: Vec<_> = workload
         .iter()
         .map(|(img, _)| server.submit(img.clone()))
-        .collect::<anyhow::Result<Vec<_>>>()?;
+        .collect::<Result<Vec<_>, _>>()?;
     let mut correct = 0usize;
     let mut sim_cycles = 0u64;
     let mut sim_energy = 0f64;
     for ((_, label), rx) in workload.iter().zip(rxs) {
-        let resp = rx.recv()?;
+        let resp = rx.recv()?.map_err(|rej| {
+            anyhow::anyhow!("request rejected: {rej}")
+        })?;
         if resp.class == *label {
             correct += 1;
         }

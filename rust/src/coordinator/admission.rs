@@ -1,0 +1,183 @@
+//! Typed admission control for the serving front door.
+//!
+//! The paper's accelerator keeps the compress→ship→decompress stream
+//! inside a fixed on-chip buffer budget; the serving analogue is a
+//! **bounded** admission queue that sheds load with a typed error
+//! instead of buffering without limit. This module is the vocabulary
+//! of that discipline:
+//!
+//! * [`SubmitError`] — why a submit was refused at the door;
+//! * [`ShedReason`] / [`Rejection`] — why an *admitted* request was
+//!   later shed or failed, delivered through its response channel as
+//!   the `Err` arm of [`ServeResult`];
+//! * [`AdmissionCounters`] — the submit-side tallies, folded into the
+//!   run's `Metrics` at shutdown so the conservation identity
+//!   `submitted == replied + shed_* + failed` is checkable from one
+//!   place (`Metrics::accounted`, `docs/robustness.md`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::server::Response;
+
+/// Why `submit` refused a request at the front door. Every variant is
+/// immediate backpressure: the request was never queued, and its
+/// shed is already counted (`Metrics::submitted` still includes it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue is at capacity — the pipeline is
+    /// saturated end to end (workers busy, inboxes full, queue full).
+    QueueFull {
+        /// The queue bound that was hit (`ServerConfig::queue_cap`).
+        capacity: usize,
+    },
+    /// The request's deadline had already passed at submit time.
+    DeadlinePassed,
+    /// The server has shut down (or lost every worker).
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { capacity } => write!(
+                f,
+                "admission queue full (capacity {capacity})"
+            ),
+            SubmitError::DeadlinePassed => {
+                write!(f, "deadline already passed at submit")
+            }
+            SubmitError::ShuttingDown => {
+                write!(f, "inference server is shutting down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why an admitted request was shed or failed after admission.
+/// Delivered to the client as `Err(`[`Rejection`]`)` on its response
+/// channel — a typed reply, never a silently dropped sender.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Expired before the batcher sealed/shipped it (cheap shed
+    /// beats wasted transport + engine work).
+    DeadlineBatch,
+    /// Expired when its worker reached the envelope-open boundary.
+    DeadlineOpen,
+    /// The server shut down (or lost every worker) with the request
+    /// still queued.
+    ShuttingDown,
+    /// The owning worker died and the batch had already burned its
+    /// single requeue (at-most-once: never replayed twice).
+    WorkerLost,
+    /// The envelope failed to open even after the retry.
+    OpenFailed,
+    /// The engine returned an error (or panicked) for this batch.
+    EngineError,
+}
+
+impl ShedReason {
+    /// Stable key (stats JSON, test tallies).
+    pub fn key(&self) -> &'static str {
+        match self {
+            ShedReason::DeadlineBatch => "deadline-batch",
+            ShedReason::DeadlineOpen => "deadline-open",
+            ShedReason::ShuttingDown => "shutting-down",
+            ShedReason::WorkerLost => "worker-lost",
+            ShedReason::OpenFailed => "open-failed",
+            ShedReason::EngineError => "engine-error",
+        }
+    }
+}
+
+/// The typed "no" a client receives instead of a [`Response`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rejection {
+    /// The request's span sequence number (joins client-side logs to
+    /// trace exports).
+    pub seq: u64,
+    pub reason: ShedReason,
+}
+
+impl std::fmt::Display for Rejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request {} shed: {}", self.seq, self.reason.key())
+    }
+}
+
+impl std::error::Error for Rejection {}
+
+/// What arrives on a submit's response channel: the response, or a
+/// typed rejection. The channel disconnecting without either means
+/// the process around the server is tearing down — see
+/// `docs/robustness.md` for the one narrow race where that happens.
+pub type ServeResult = Result<Response, Rejection>;
+
+/// Submit-side shed tallies. These live on the *client-facing* handle
+/// (the batcher never sees refused requests), shared across cloned
+/// handles, and are folded into the merged `Metrics` after the
+/// batcher joins — ordering is exact because folding happens
+/// strictly after the last submit (shutdown consumes the handle).
+#[derive(Debug, Default)]
+pub struct AdmissionCounters {
+    pub submitted: AtomicU64,
+    pub shed_queue_full: AtomicU64,
+    pub shed_deadline_submit: AtomicU64,
+    pub shed_shutdown: AtomicU64,
+}
+
+impl AdmissionCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold the submit-side tallies into a metrics block (additive —
+    /// the batcher-side sheds are already there).
+    pub fn fold_into(
+        &self, m: &mut crate::coordinator::metrics::Metrics,
+    ) {
+        m.submitted += self.submitted.load(Ordering::Relaxed);
+        m.shed_queue_full +=
+            self.shed_queue_full.load(Ordering::Relaxed);
+        m.shed_deadline_submit +=
+            self.shed_deadline_submit.load(Ordering::Relaxed);
+        m.shed_shutdown += self.shed_shutdown.load(Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_stable() {
+        assert_eq!(
+            SubmitError::QueueFull { capacity: 4 }.to_string(),
+            "admission queue full (capacity 4)"
+        );
+        let r = Rejection {
+            seq: 7,
+            reason: ShedReason::DeadlineOpen,
+        };
+        assert_eq!(r.to_string(), "request 7 shed: deadline-open");
+    }
+
+    #[test]
+    fn fold_into_is_additive() {
+        use crate::coordinator::metrics::Metrics;
+        let c = AdmissionCounters::new();
+        c.submitted.store(10, Ordering::Relaxed);
+        c.shed_queue_full.store(2, Ordering::Relaxed);
+        c.shed_deadline_submit.store(1, Ordering::Relaxed);
+        c.shed_shutdown.store(3, Ordering::Relaxed);
+        let mut m = Metrics::new();
+        m.submitted = 5;
+        m.shed_shutdown = 1;
+        c.fold_into(&mut m);
+        assert_eq!(m.submitted, 15);
+        assert_eq!(m.shed_queue_full, 2);
+        assert_eq!(m.shed_deadline_submit, 1);
+        assert_eq!(m.shed_shutdown, 4);
+    }
+}

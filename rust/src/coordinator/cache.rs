@@ -68,7 +68,10 @@ impl InterlayerCache {
             self.hits += 1;
             let entry = self.held.remove(i);
             self.held.push(entry);
-            Some(Arc::clone(&self.held.last().unwrap().1))
+            let (_, bs, _) = self.held.last().expect(
+                "invariant: entry just pushed for recency refresh",
+            );
+            Some(Arc::clone(bs))
         } else {
             self.misses += 1;
             None

@@ -1,0 +1,353 @@
+//! Deterministic fault injection for the serving pipeline.
+//!
+//! A [`FaultPlan`] names every failure the coordinator knows how to
+//! survive and decides, purely from `(seed, seam identity)`, where it
+//! fires: worker kills at the `worker-recv` seam, envelope-open
+//! failures at `envelope-open`, delays at `ship` / `open`. Decisions
+//! are pure functions of the plan — the same plan replayed against the
+//! same traffic injects the same faults — which is what lets the chaos
+//! suite in `rust/tests/server_stress.rs` sweep seeds × worker counts
+//! and assert *exact* accounting and bit-identical responses instead
+//! of "usually works".
+//!
+//! The seams, by name (used in `--faults` specs and docs):
+//!
+//! | seam            | injection                                    |
+//! |-----------------|----------------------------------------------|
+//! | `worker-recv`   | worker panics when it receives its Nth batch |
+//! | `envelope-open` | first open attempt of a request fails        |
+//! | `ship`          | batcher sleeps before shipping a batch       |
+//! | `open`          | worker sleeps before opening a batch         |
+//!
+//! Kills at `worker-recv` fire *before* any reply for the batch is
+//! sent, so the requeue path (at-most-once, see `docs/robustness.md`)
+//! can never double-reply. A seeded plan never kills the only worker:
+//! injected faults must be survivable by design.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Seam name: worker kill on batch receipt.
+pub const SEAM_WORKER_RECV: &str = "worker-recv";
+/// Seam name: envelope-open failure at the engine boundary.
+pub const SEAM_ENVELOPE_OPEN: &str = "envelope-open";
+/// Seam name: delay before the batcher ships a batch.
+pub const SEAM_SHIP: &str = "ship";
+/// Seam name: delay before a worker opens a batch.
+pub const SEAM_OPEN: &str = "open";
+
+/// splitmix64 — tiny, seedable, good enough to spread fault sites.
+/// (Same generator family as `testutil::Prng`; duplicated here so the
+/// library never depends on test utilities.)
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A deterministic set of injected faults for one serve run.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Per-worker kill point: worker `w` panics at the receipt of its
+    /// `kill_at[w]`-th batch (1-based). `None` = worker never killed.
+    kill_at: Vec<Option<u64>>,
+    /// Fail the first open attempt of every request whose span `seq`
+    /// satisfies `seq % period == phase`. 0 disables.
+    open_fail_period: u64,
+    open_fail_phase: u64,
+    /// Sleep this long before opening any batch on worker `.0`.
+    open_delay: Option<(usize, Duration)>,
+    /// Sleep this long before shipping every batch.
+    ship_delay: Option<Duration>,
+    /// Human-readable provenance ("seed=7", "kill=1@2", …).
+    label: String,
+}
+
+impl FaultPlan {
+    /// An empty plan for `workers` workers (no faults; add them with
+    /// the builder methods).
+    pub fn new(workers: usize) -> FaultPlan {
+        FaultPlan {
+            kill_at: vec![None; workers.max(1)],
+            open_fail_period: 0,
+            open_fail_phase: 0,
+            open_delay: None,
+            ship_delay: None,
+            label: "none".to_string(),
+        }
+    }
+
+    /// Derive a survivable plan from a seed: kills exactly one worker
+    /// early in its batch stream (never when there is only one worker
+    /// — injected faults must leave a survivor), fails a periodic
+    /// subset of first open attempts, and sprinkles one delay flavor.
+    pub fn seeded(seed: u64, workers: usize) -> FaultPlan {
+        let workers = workers.max(1);
+        let mut plan = FaultPlan::new(workers);
+        plan.label = format!("seed={seed}");
+        let r0 = splitmix64(seed);
+        if workers >= 2 {
+            let victim = (r0 % workers as u64) as usize;
+            // Kill at the 1st or 2nd batch so even short runs reach
+            // the kill point.
+            let nth = 1 + (splitmix64(seed ^ 0xA5A5) % 2);
+            plan.kill_at[victim] = Some(nth);
+        }
+        plan.open_fail_period = 3 + (splitmix64(seed ^ 0x0F0F) % 5);
+        plan.open_fail_phase =
+            splitmix64(seed ^ 0xF00D) % plan.open_fail_period;
+        let delay = Duration::from_micros(
+            200 + splitmix64(seed ^ 0xBEEF) % 800,
+        );
+        if splitmix64(seed ^ 0xD1CE) % 2 == 0 {
+            plan.ship_delay = Some(delay);
+        } else {
+            plan.open_delay =
+                Some(((r0 >> 32) as usize % workers, delay));
+        }
+        plan
+    }
+
+    /// Parse a `--faults` spec: comma-separated clauses.
+    ///
+    /// * `seed=N` — the whole seeded plan (other clauses override it)
+    /// * `kill=W@N` — kill worker W at its Nth received batch
+    /// * `open-fail=P` or `open-fail=P/PH` — fail the first open
+    ///   attempt when `seq % P == PH` (PH defaults to 0)
+    /// * `ship-delay-us=N` — sleep N µs before shipping each batch
+    /// * `open-delay-us=W@N` — worker W sleeps N µs before opening
+    pub fn parse(
+        spec: &str, workers: usize,
+    ) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new(workers);
+        plan.label = spec.to_string();
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (key, val) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("bad fault clause: {clause}"))?;
+            let parse_u64 = |s: &str| {
+                s.parse::<u64>()
+                    .map_err(|_| format!("bad number in: {clause}"))
+            };
+            match key {
+                "seed" => {
+                    let seeded =
+                        FaultPlan::seeded(parse_u64(val)?, workers);
+                    let label = plan.label.clone();
+                    plan = seeded;
+                    plan.label = label;
+                }
+                "kill" => {
+                    let (w, n) = val.split_once('@').ok_or_else(
+                        || format!("kill wants W@N: {clause}"),
+                    )?;
+                    let w = parse_u64(w)? as usize;
+                    if w >= plan.kill_at.len() {
+                        return Err(format!(
+                            "kill worker {w} out of range \
+                             (workers={workers})"
+                        ));
+                    }
+                    plan.kill_at[w] = Some(parse_u64(n)?.max(1));
+                }
+                "open-fail" => match val.split_once('/') {
+                    Some((p, ph)) => {
+                        plan.open_fail_period = parse_u64(p)?;
+                        plan.open_fail_phase = parse_u64(ph)?;
+                    }
+                    None => {
+                        plan.open_fail_period = parse_u64(val)?;
+                        plan.open_fail_phase = 0;
+                    }
+                },
+                "ship-delay-us" => {
+                    plan.ship_delay =
+                        Some(Duration::from_micros(parse_u64(val)?));
+                }
+                "open-delay-us" => {
+                    let (w, n) = val.split_once('@').ok_or_else(
+                        || format!("open-delay-us wants W@N: {clause}"),
+                    )?;
+                    plan.open_delay = Some((
+                        parse_u64(w)? as usize,
+                        Duration::from_micros(parse_u64(n)?),
+                    ));
+                }
+                _ => {
+                    return Err(format!("unknown fault key: {key}"))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Builder: kill worker `w` at its `nth` received batch (1-based).
+    pub fn with_worker_kill(mut self, w: usize, nth: u64) -> Self {
+        if w < self.kill_at.len() {
+            self.kill_at[w] = Some(nth.max(1));
+        }
+        self
+    }
+
+    /// Builder: fail the first open attempt when
+    /// `seq % period == phase`.
+    pub fn with_open_fail_every(
+        mut self, period: u64, phase: u64,
+    ) -> Self {
+        self.open_fail_period = period;
+        self.open_fail_phase = if period > 0 { phase % period } else { 0 };
+        self
+    }
+
+    /// Builder: sleep before shipping every batch.
+    pub fn with_ship_delay(mut self, d: Duration) -> Self {
+        self.ship_delay = Some(d);
+        self
+    }
+
+    /// Builder: worker `w` sleeps before opening every batch.
+    pub fn with_open_delay(mut self, w: usize, d: Duration) -> Self {
+        self.open_delay = Some((w, d));
+        self
+    }
+
+    /// Does this plan kill any worker at all?
+    pub fn kills_any(&self) -> bool {
+        self.kill_at.iter().any(|k| k.is_some())
+    }
+
+    /// `worker-recv` seam: should worker `wi` die at the receipt of
+    /// its `nth` batch (1-based)?
+    pub fn kill_at_recv(&self, wi: usize, nth: u64) -> bool {
+        self.kill_at.get(wi).copied().flatten() == Some(nth)
+    }
+
+    /// `envelope-open` seam: should this open attempt fail? Only the
+    /// first attempt (`attempt == 0`) ever fails — injected open
+    /// failures are transient by definition, so the retry always
+    /// recovers and the response bits never change.
+    pub fn fail_open(&self, seq: u64, attempt: u32) -> bool {
+        attempt == 0
+            && self.open_fail_period > 0
+            && seq % self.open_fail_period == self.open_fail_phase
+    }
+
+    /// `ship` seam: delay before the batcher ships a batch.
+    pub fn delay_before_ship(&self) -> Option<Duration> {
+        self.ship_delay
+    }
+
+    /// `open` seam: delay before worker `wi` opens a batch.
+    pub fn delay_before_open(&self, wi: usize) -> Option<Duration> {
+        match self.open_delay {
+            Some((w, d)) if w == wi => Some(d),
+            _ => None,
+        }
+    }
+
+    /// Provenance label ("seed=7", an explicit spec, or "none").
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+}
+
+/// Shared handle, as carried by `ServerConfig`.
+pub type SharedFaultPlan = Arc<FaultPlan>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        for seed in 0..32u64 {
+            let a = FaultPlan::seeded(seed, 3);
+            let b = FaultPlan::seeded(seed, 3);
+            assert_eq!(a.kill_at, b.kill_at);
+            assert_eq!(a.open_fail_period, b.open_fail_period);
+            assert_eq!(a.open_fail_phase, b.open_fail_phase);
+            assert_eq!(a.ship_delay, b.ship_delay);
+            assert_eq!(a.open_delay, b.open_delay);
+        }
+    }
+
+    #[test]
+    fn seeded_plans_never_kill_the_only_worker() {
+        for seed in 0..64u64 {
+            let p = FaultPlan::seeded(seed, 1);
+            assert!(
+                !p.kills_any(),
+                "seed {seed} would kill the only worker"
+            );
+        }
+    }
+
+    #[test]
+    fn seeded_plans_kill_at_most_one_worker() {
+        for seed in 0..64u64 {
+            let p = FaultPlan::seeded(seed, 4);
+            let kills =
+                p.kill_at.iter().filter(|k| k.is_some()).count();
+            assert!(kills <= 1, "seed {seed} kills {kills} workers");
+        }
+    }
+
+    #[test]
+    fn open_failures_hit_only_the_first_attempt() {
+        let p = FaultPlan::new(1).with_open_fail_every(2, 0);
+        assert!(p.fail_open(4, 0));
+        assert!(!p.fail_open(4, 1), "retry must always recover");
+        assert!(!p.fail_open(5, 0), "wrong phase never fails");
+    }
+
+    #[test]
+    fn kill_fires_exactly_at_the_named_batch() {
+        let p = FaultPlan::new(3).with_worker_kill(1, 2);
+        assert!(!p.kill_at_recv(1, 1));
+        assert!(p.kill_at_recv(1, 2));
+        assert!(!p.kill_at_recv(1, 3));
+        assert!(!p.kill_at_recv(0, 2));
+        assert!(!p.kill_at_recv(9, 2), "out-of-range worker is quiet");
+    }
+
+    #[test]
+    fn parse_round_trips_every_clause() {
+        let p = FaultPlan::parse(
+            "kill=1@3,open-fail=4/1,ship-delay-us=250",
+            2,
+        )
+        .expect("spec parses");
+        assert!(p.kill_at_recv(1, 3));
+        assert!(p.fail_open(5, 0));
+        assert!(!p.fail_open(4, 0));
+        assert_eq!(
+            p.delay_before_ship(),
+            Some(Duration::from_micros(250))
+        );
+
+        let p = FaultPlan::parse("open-delay-us=0@100", 2).unwrap();
+        assert_eq!(
+            p.delay_before_open(0),
+            Some(Duration::from_micros(100))
+        );
+        assert_eq!(p.delay_before_open(1), None);
+
+        let seeded = FaultPlan::parse("seed=9", 3).unwrap();
+        let direct = FaultPlan::seeded(9, 3);
+        assert_eq!(seeded.kill_at, direct.kill_at);
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!(FaultPlan::parse("frobnicate=1", 2).is_err());
+        assert!(FaultPlan::parse("kill=5@1", 2).is_err());
+        assert!(FaultPlan::parse("kill=banana", 2).is_err());
+        assert!(FaultPlan::parse("seed=", 2).is_err());
+    }
+}

@@ -135,11 +135,38 @@ pub struct Metrics {
     /// Interlayer bitstream-cache misses (streams sealed fresh).
     pub cache_misses: u64,
     /// Sealed envelopes received by workers (the compressed-domain
-    /// transport currency; dense envelopes are not counted).
+    /// transport currency; dense envelopes are not counted). A
+    /// requeued batch ships again, so this is traffic, not requests.
     pub sealed_shipments: u64,
     /// Total sealed stream bytes that crossed the batcher→worker
     /// seam (what the transport actually moved).
     pub sealed_stream_bytes: u64,
+    /// Everything that ever knocked on the front door — admitted or
+    /// refused (folded in from `AdmissionCounters` at shutdown).
+    pub submitted: u64,
+    /// Refused at the door: bounded admission queue at capacity.
+    pub shed_queue_full: u64,
+    /// Refused at the door: deadline already passed at submit.
+    pub shed_deadline_submit: u64,
+    /// Shed by the batcher: expired before sealing/shipping.
+    pub shed_deadline_batch: u64,
+    /// Shed by a worker: expired at the envelope-open boundary.
+    pub shed_deadline_open: u64,
+    /// Shed at shutdown (queued requests replied `ShuttingDown`, or
+    /// submits refused after the queue closed).
+    pub shed_shutdown: u64,
+    /// Admitted requests that got a typed failure reply (engine
+    /// error, open failure after retry, worker lost past the single
+    /// requeue). Distinct from `errors`, which counts infrastructure
+    /// events (spawn/startup failures, worker deaths) — one worker
+    /// death is one error however many requests it strands.
+    pub failed: u64,
+    /// Batches re-dispatched to a survivor after a worker death.
+    pub requeued_batches: u64,
+    /// Requests inside those requeued batches.
+    pub requeued_requests: u64,
+    /// Envelope opens that succeeded only on the retry attempt.
+    pub open_retries: u64,
 }
 
 impl Default for Metrics {
@@ -160,6 +187,16 @@ impl Metrics {
             cache_misses: 0,
             sealed_shipments: 0,
             sealed_stream_bytes: 0,
+            submitted: 0,
+            shed_queue_full: 0,
+            shed_deadline_submit: 0,
+            shed_deadline_batch: 0,
+            shed_deadline_open: 0,
+            shed_shutdown: 0,
+            failed: 0,
+            requeued_batches: 0,
+            requeued_requests: 0,
+            open_retries: 0,
         }
     }
 
@@ -171,11 +208,19 @@ impl Metrics {
 
     /// Record a completed request span: end-to-end latency plus every
     /// stamped seam interval into its stage histogram.
+    ///
+    /// An *incomplete* span — a request shed at admission, a deadline
+    /// seam, or mid-pipeline — records **nothing**: partial stage
+    /// mass without matching end-to-end mass would break the
+    /// stage-mass ≤ e2e invariant that `bench_compare.py
+    /// --check-stats` enforces. Sheds are visible through the
+    /// `shed_*` counters instead.
     pub fn observe_span(&mut self, span: &Span) {
-        if let Some(total) = span.total_us() {
-            self.latency.observe_us(total);
-            self.requests += 1;
-        }
+        let Some(total) = span.total_us() else {
+            return;
+        };
+        self.latency.observe_us(total);
+        self.requests += 1;
         for (i, h) in self.stages.iter_mut().enumerate() {
             if let Some(d) = span.seam_us(i) {
                 h.observe_us(d);
@@ -211,6 +256,24 @@ impl Metrics {
         self.latency.quantile_us(q)
     }
 
+    /// Total requests shed with a typed reason (door + seams).
+    pub fn shed_total(&self) -> u64 {
+        self.shed_queue_full
+            + self.shed_deadline_submit
+            + self.shed_deadline_batch
+            + self.shed_deadline_open
+            + self.shed_shutdown
+    }
+
+    /// Left side of the conservation identity: every submit is either
+    /// replied, shed with a typed reason, or failed with a typed
+    /// reason. After shutdown, `accounted() == submitted` must hold
+    /// exactly (asserted by the chaos suite and `bench_compare.py
+    /// --check-stats`).
+    pub fn accounted(&self) -> u64 {
+        self.requests + self.shed_total() + self.failed
+    }
+
     /// Merge another metrics block.
     pub fn merge(&mut self, o: &Metrics) {
         self.latency.merge(&o.latency);
@@ -224,6 +287,16 @@ impl Metrics {
         self.cache_misses += o.cache_misses;
         self.sealed_shipments += o.sealed_shipments;
         self.sealed_stream_bytes += o.sealed_stream_bytes;
+        self.submitted += o.submitted;
+        self.shed_queue_full += o.shed_queue_full;
+        self.shed_deadline_submit += o.shed_deadline_submit;
+        self.shed_deadline_batch += o.shed_deadline_batch;
+        self.shed_deadline_open += o.shed_deadline_open;
+        self.shed_shutdown += o.shed_shutdown;
+        self.failed += o.failed;
+        self.requeued_batches += o.requeued_batches;
+        self.requeued_requests += o.requeued_requests;
+        self.open_retries += o.open_retries;
     }
 }
 
@@ -367,18 +440,59 @@ mod tests {
     }
 
     #[test]
-    fn observe_span_ignores_incomplete_total() {
+    fn incomplete_spans_add_no_partial_stage_mass() {
+        // Regression for the shed path: a request dropped mid-pipeline
+        // (deadline shed, worker loss, shutdown) has stamped early
+        // seams but no Reply. It must contribute NOTHING — partial
+        // stage mass with zero end-to-end mass would break the
+        // stage-mass ≤ e2e invariant the stats gate enforces.
         let mut m = Metrics::new();
         let mut s = Span::unstamped(0);
         s.stamp_at(Stage::Enqueue, 100);
         s.stamp_at(Stage::BatchFormed, 250);
+        s.stamp_at(Stage::Shipped, 400);
         m.observe_span(&s);
-        // No Reply stamp: no end-to-end observation, but the stamped
-        // seam still lands in its stage histogram.
         assert_eq!(m.requests, 0);
         assert_eq!(m.latency_hist().count(), 0);
-        assert_eq!(m.stage_hist(0).count(), 1);
-        assert_eq!(m.stage_hist(0).sum_us(), 150);
-        assert_eq!(m.stage_hist(1).count(), 0);
+        for i in 0..N_SEAMS {
+            assert_eq!(m.stage_hist(i).count(), 0, "seam {i}");
+            assert_eq!(m.stage_hist(i).sum_us(), 0, "seam {i}");
+        }
+        // With a complete span mixed in, the invariant still holds.
+        m.observe_span(&synthetic_span(1_000, 100));
+        let stage_sum: u64 =
+            m.stage_hists().iter().map(|h| h.sum_us()).sum();
+        assert!(stage_sum <= m.latency_hist().sum_us());
+    }
+
+    #[test]
+    fn merge_adds_shed_and_requeue_counters() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.submitted = 10;
+        a.requests = 4;
+        b.submitted = 5;
+        b.shed_queue_full = 1;
+        b.shed_deadline_submit = 2;
+        b.shed_deadline_batch = 3;
+        b.shed_deadline_open = 4;
+        b.shed_shutdown = 5;
+        b.failed = 6;
+        b.requeued_batches = 7;
+        b.requeued_requests = 8;
+        b.open_retries = 9;
+        a.merge(&b);
+        assert_eq!(a.submitted, 15);
+        assert_eq!(a.shed_queue_full, 1);
+        assert_eq!(a.shed_deadline_submit, 2);
+        assert_eq!(a.shed_deadline_batch, 3);
+        assert_eq!(a.shed_deadline_open, 4);
+        assert_eq!(a.shed_shutdown, 5);
+        assert_eq!(a.failed, 6);
+        assert_eq!(a.requeued_batches, 7);
+        assert_eq!(a.requeued_requests, 8);
+        assert_eq!(a.open_retries, 9);
+        assert_eq!(a.shed_total(), 15);
+        assert_eq!(a.accounted(), 4 + 15 + 6);
     }
 }

@@ -20,19 +20,31 @@
 //! Every request carries a telemetry span ([`crate::obs`]) stamped at
 //! each seam; [`InferenceServer::shutdown_telemetry`] returns the
 //! run's merged [`crate::obs::TelemetrySnapshot`].
+//!
+//! The serving pipeline is bounded and typed end to end: [`admission`]
+//! defines the submit-side shed errors and the reply-side rejection
+//! reasons, and [`faults`] the deterministic fault-injection plans
+//! that the chaos suite (and `serve --faults`) drive through the
+//! worker pool. See `docs/robustness.md`.
 
+pub mod admission;
 pub mod batcher;
 pub mod cache;
+pub mod faults;
 pub mod metrics;
 pub mod server;
 pub mod transport;
 
+pub use admission::{
+    Rejection, ServeResult, ShedReason, SubmitError,
+};
 pub use batcher::{BatchOutcome, BatchPolicy};
 pub use cache::{CacheStats, InterlayerCache};
+pub use faults::{FaultPlan, SharedFaultPlan};
 pub use metrics::{Histogram, Metrics};
 pub use server::{
     EngineFactory, InferenceEngine, InferenceServer, Request,
-    Response, ServerConfig,
+    Response, ServerConfig, DEFAULT_QUEUE_CAP,
 };
 pub use transport::{
     transport_by_name, DenseTransport, EngineStage, FmapEnvelope,

@@ -6,58 +6,73 @@
 //! Topology:
 //!
 //! ```text
-//!   clients ── submit ──> [request channel]
-//!                              │  fmc-batcher: poll_batch (policy)
+//!   clients ── submit ──> [bounded admission queue]   (typed shed:
+//!                              │                       QueueFull /
+//!                              │  fmc-batcher:         DeadlinePassed /
+//!                              │  poll_batch (policy)  ShuttingDown)
 //!                              ▼
 //!                    batch-level round-robin shard
+//!                    │ (bounded inboxes + in-flight ledger)
 //!                    │            │            │
 //!               fmc-worker-0  fmc-worker-1 … fmc-worker-N-1
 //!               (own Runtime, (PJRT executables are not Sync,
 //!                own Metrics)  so each worker owns its engine)
 //! ```
 //!
-//! * the batcher owns the batching policy end to end — an arrival
-//!   during an idle window goes through the same
-//!   [`poll_batch`] linger as any other, so it still coalesces
-//!   (the seed handled that case with a raw `recv` that produced
-//!   singleton batches);
-//! * the batcher→worker currency is the [`FmapEnvelope`] produced by
-//!   the configured [`InterlayerTransport`]: under the default
-//!   [`SealedTransport`], workers receive sealed streams and dense
-//!   pixels only materialize at the engine boundary (open-on-demand
-//!   on the executor pool) — bit-identical to the dense reference
-//!   transport for every worker count and shard count
-//!   (`rust/tests/server_stress.rs`);
-//! * batches shard across workers round-robin. Engine panics are
-//!   contained per batch (the batch errors, the worker and its
-//!   accumulated metrics survive, queued batches still get served);
-//!   if a worker thread dies anyway, the batcher drops it from
-//!   rotation and re-dispatches the batch whose send failed to a
-//!   survivor;
-//! * every worker keeps its own [`Metrics`] *and* its own
-//!   [`SpanRing`]; [`InferenceServer::shutdown`] merges the metrics
-//!   (plus the batcher's own error counters) via [`Metrics::merge`],
-//!   and [`InferenceServer::shutdown_telemetry`] returns the full
-//!   [`TelemetrySnapshot`] — merged metrics, every worker's span
-//!   ring, cache/DMA/pool counters;
-//! * telemetry observes, never reorders: every request carries a
-//!   [`Span`] (stamped at enqueue / batch-formed / shipped / opened /
-//!   engine-exec / reply) instead of a bare `submitted: Instant`, and
-//!   nothing in the pipeline branches on it — the sealed≡dense and
-//!   pooled≡serial bit-identity invariants are untouched;
-//! * the per-request simulated-hardware accounting (cycles/energy on
-//!   the 403-GOPS ASIC) is computed once per server, not once per
-//!   worker — the served geometry is static.
+//! Robustness model (full treatment in `docs/robustness.md`):
+//!
+//! * **Bounded admission.** The submit queue is a `sync_channel` of
+//!   [`ServerConfig::queue_cap`] requests, and every worker inbox is a
+//!   `sync_channel` of [`WORKER_INBOX`] batches. When the pipeline
+//!   saturates end to end, the batcher's dispatch blocks, the front
+//!   queue fills, and `submit` sheds with a typed
+//!   [`SubmitError::QueueFull`] instead of buffering without limit —
+//!   the serving analogue of the paper's fixed on-chip buffer budget.
+//! * **Deadline propagation.** [`InferenceServer::submit_within`]
+//!   stamps an absolute deadline into the request's [`Span`]; the
+//!   batcher sheds expired requests before sealing/shipping
+//!   (`shed_deadline_batch`) and workers shed them again at the
+//!   envelope-open boundary (`shed_deadline_open`) — a cheap typed
+//!   reply beats wasted transport and engine work.
+//! * **In-flight recovery.** Every dispatched batch is recorded in
+//!   its worker's in-flight ledger before the send. When a worker
+//!   dies, the batcher harvests the ledger and requeues each batch to
+//!   a survivor **at most once** (a `requeued` flag burns the single
+//!   replay). Sealed envelopes are immutable `Arc` payloads and kills
+//!   fire before any reply, so a replayed batch produces bit-identical
+//!   responses and can never double-reply.
+//! * **Typed accounting.** Every submit ends in exactly one bucket:
+//!   replied, one of the `shed_*` counters, or `failed` — the
+//!   conservation identity `submitted == accounted()` is asserted by
+//!   the chaos suite in `rust/tests/server_stress.rs` and by
+//!   `bench_compare.py --check-stats` on the exported stats JSON.
+//! * Fault injection ([`FaultPlan`], `serve --faults`) drives all of
+//!   the above deterministically: worker kills at `worker-recv`,
+//!   transient open failures at `envelope-open`, delays at
+//!   `ship`/`open`.
+//!
+//! Telemetry still observes and never reorders: nothing in the
+//! pipeline branches on a span's stamps, so the sealed≡dense and
+//! pooled≡serial bit-identity invariants are untouched — now also
+//! under every injected fault.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, SendError, Sender, SyncSender,
+    TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::compress::sealed::SealedFmap;
 use crate::config::{models, AccelConfig, Network};
+use crate::coordinator::admission::{
+    AdmissionCounters, Rejection, ServeResult, ShedReason, SubmitError,
+};
 use crate::coordinator::batcher::{poll_batch, BatchOutcome, BatchPolicy};
 use crate::coordinator::cache::InterlayerCache;
+use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::transport::{
     FmapEnvelope, InterlayerTransport, SealedTransport,
@@ -66,22 +81,37 @@ use crate::harness::profiles as harness_profiles;
 use crate::nn::Tensor3;
 use crate::obs::ring::{SpanRing, DEFAULT_SPAN_RING_CAP};
 use crate::obs::snapshot::TelemetrySnapshot;
-use crate::obs::span::{Span, Stage};
+use crate::obs::span::{now_us, Span, Stage};
 use crate::runtime::Runtime;
 use crate::sim::dma::DmaTraffic;
 use crate::sim::scheduler::CompressionProfile;
 use crate::sim::Accelerator;
+use crate::util::lock_unpoisoned;
 
 /// How long the batcher sleeps in `poll_batch` before re-polling when
-/// no requests are pending (also the shutdown-detection latency).
+/// no requests are pending (also the shutdown- and worker-death
+/// detection latency).
 const IDLE_POLL: Duration = Duration::from_millis(200);
+
+/// Default bound of the admission queue
+/// ([`ServerConfig::queue_cap`]).
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
+/// Bound of each worker's batch inbox. Small on purpose: the front
+/// door can only shed ([`SubmitError::QueueFull`]) if saturation
+/// propagates *backwards* — worker inboxes fill, the batcher's
+/// dispatch blocks, the admission queue fills. An unbounded inbox
+/// would let the batcher drain the front queue forever and the bound
+/// there would never bind.
+const WORKER_INBOX: usize = 2;
 
 /// One classification request as submitted by a client (dense pixels;
 /// the batcher packages it for transport before dispatch). Carries
-/// its telemetry [`Span`] — [`Stage::Enqueue`] stamped at submit.
+/// its telemetry [`Span`] — [`Stage::Enqueue`] stamped at submit, and
+/// the optional deadline riding inside the span.
 pub struct Request {
     pub image: Tensor3,
-    pub resp: Sender<Response>,
+    pub resp: Sender<ServeResult>,
     pub span: Span,
 }
 
@@ -91,10 +121,42 @@ pub struct Request {
 /// seam, and the worker opens it at the engine boundary. The span
 /// arrives with [`Stage::BatchFormed`] and [`Stage::Shipped`]
 /// stamped by the batcher.
+///
+/// `Clone` because the in-flight ledger holds a copy of every
+/// dispatched batch for requeue-on-worker-death: under the sealed
+/// transport the clone shares the stream `Arc`, so no payload bytes
+/// are copied.
+#[derive(Clone)]
 struct ShippedRequest {
     input: FmapEnvelope,
-    resp: Sender<Response>,
+    resp: Sender<ServeResult>,
     span: Span,
+}
+
+/// A batch as dispatched to a worker, identified for the in-flight
+/// ledger. `requeued` marks a batch already re-dispatched once after
+/// a worker loss — the at-most-once requeue guard: a batch that loses
+/// its worker twice is failed (typed [`ShedReason::WorkerLost`]),
+/// never replayed again.
+#[derive(Clone)]
+struct DispatchedBatch {
+    id: u64,
+    requeued: bool,
+    requests: Vec<ShippedRequest>,
+}
+
+/// Per-worker in-flight ledger: batch id → the batch, inserted by the
+/// batcher *before* the send, retired by the worker *after* the last
+/// reply of the batch. Whatever a dead worker leaves behind is
+/// exactly its un-replied work.
+type Ledger = Arc<Mutex<HashMap<u64, DispatchedBatch>>>;
+
+/// Everything the batcher holds per live worker.
+struct WorkerLink {
+    wi: usize,
+    tx: SyncSender<DispatchedBatch>,
+    ledger: Ledger,
+    handle: JoinHandle<WorkerReport>,
 }
 
 /// Response with host + simulated-hardware accounting.
@@ -196,6 +258,12 @@ pub struct ServerConfig {
     /// run outgrows it, the oldest spans are evicted (and counted as
     /// dropped); histograms still see every request.
     pub span_ring_cap: usize,
+    /// Bound of the admission queue (clamped to ≥ 1). When full,
+    /// `submit` sheds with [`SubmitError::QueueFull`].
+    pub queue_cap: usize,
+    /// Deterministic fault plan (`None` in production; chaos tests
+    /// and `serve --faults` inject one).
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl ServerConfig {
@@ -211,6 +279,8 @@ impl ServerConfig {
             cache: None,
             transport: Arc::new(SealedTransport),
             span_ring_cap: DEFAULT_SPAN_RING_CAP,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            faults: None,
         }
     }
 
@@ -241,11 +311,25 @@ impl ServerConfig {
         self.span_ring_cap = cap;
         self
     }
+
+    /// Builder-style admission-queue bound.
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+
+    /// Builder-style fault plan.
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.faults = Some(plan);
+        self
+    }
 }
 
 /// Handle to the running server.
 pub struct InferenceServer {
-    tx: Sender<Request>,
+    tx: SyncSender<Request>,
+    admission: Arc<AdmissionCounters>,
+    queue_cap: usize,
     batcher: Option<JoinHandle<TelemetrySnapshot>>,
 }
 
@@ -270,35 +354,78 @@ impl InferenceServer {
     pub fn start_with_engines(cfg: ServerConfig,
                               factory: EngineFactory)
                               -> anyhow::Result<Self> {
-        let (tx, rx) = channel::<Request>();
+        let queue_cap = cfg.queue_cap.max(1);
+        let (tx, rx) = sync_channel::<Request>(queue_cap);
         let batcher = std::thread::Builder::new()
             .name("fmc-batcher".into())
             .spawn(move || batcher_loop(cfg, factory, rx))?;
         Ok(InferenceServer {
             tx,
+            admission: Arc::new(AdmissionCounters::new()),
+            queue_cap,
             batcher: Some(batcher),
         })
     }
 
-    /// Submit an image; returns a receiver for the response, or an
-    /// error if the server has shut down (the seed silently dropped
+    /// Submit an image with no deadline. Returns a receiver for the
+    /// typed outcome, or an immediate typed shed: the bounded queue
+    /// is full ([`SubmitError::QueueFull`]) or the server is down
+    /// ([`SubmitError::ShuttingDown`] — the seed silently dropped
     /// such requests and the caller hung on a channel that would
     /// never answer).
     pub fn submit(&self, image: Tensor3)
-                  -> anyhow::Result<Receiver<Response>> {
+                  -> Result<Receiver<ServeResult>, SubmitError> {
+        self.submit_inner(image, None)
+    }
+
+    /// Submit an image that is only worth serving for `budget` more
+    /// time. The deadline travels in the request's span; the batcher
+    /// and workers shed it at their seams once it passes. A zero (or
+    /// already-spent) budget sheds right here with
+    /// [`SubmitError::DeadlinePassed`].
+    pub fn submit_within(&self, image: Tensor3, budget: Duration)
+                         -> Result<Receiver<ServeResult>, SubmitError>
+    {
+        let deadline = now_us()
+            .saturating_add(budget.as_micros().min(u64::MAX as u128)
+                            as u64);
+        self.submit_inner(image, Some(deadline))
+    }
+
+    fn submit_inner(&self, image: Tensor3, deadline_us: Option<u64>)
+                    -> Result<Receiver<ServeResult>, SubmitError> {
+        use std::sync::atomic::Ordering::Relaxed;
+        // Every knock on the door counts, shed or not — `submitted`
+        // is the right-hand side of the conservation identity.
+        self.admission.submitted.fetch_add(1, Relaxed);
+        let mut span = Span::begin();
+        if let Some(d) = deadline_us {
+            span = span.with_deadline_us(d);
+            if span.expired_at(now_us()) {
+                self.admission
+                    .shed_deadline_submit
+                    .fetch_add(1, Relaxed);
+                return Err(SubmitError::DeadlinePassed);
+            }
+        }
         let (rtx, rrx) = channel();
-        self.tx
-            .send(Request {
-                image,
-                resp: rtx,
-                span: Span::begin(),
-            })
-            .map_err(|_| {
-                anyhow::anyhow!(
-                    "inference server is shut down (request not queued)"
-                )
-            })?;
-        Ok(rrx)
+        match self.tx.try_send(Request {
+            image,
+            resp: rtx,
+            span,
+        }) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => {
+                self.admission.shed_queue_full.fetch_add(1, Relaxed);
+                Err(SubmitError::QueueFull {
+                    capacity: self.queue_cap,
+                })
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.admission.shed_shutdown.fetch_add(1, Relaxed);
+                Err(SubmitError::ShuttingDown)
+            }
+        }
     }
 
     /// Close the queue, join the batcher and all workers, and return
@@ -309,13 +436,20 @@ impl InferenceServer {
 
     /// Close the queue, join everything, and return the full
     /// telemetry snapshot: merged metrics, every worker's span ring,
-    /// cache / DMA / executor-pool counters.
+    /// cache / DMA / executor-pool counters, admission tallies.
     pub fn shutdown_telemetry(mut self) -> TelemetrySnapshot {
         drop(self.tx);
-        self.batcher
+        let mut snap = self
+            .batcher
             .take()
             .map(|w| w.join().unwrap_or_default())
-            .unwrap_or_default()
+            .unwrap_or_default();
+        // Fold the submit-side shed tallies in strictly after the
+        // batcher joined — no submit can race this (shutdown consumed
+        // the handle), so the conservation identity is exact.
+        self.admission.fold_into(&mut snap.metrics);
+        snap.queue_cap = self.queue_cap;
+        snap
     }
 }
 
@@ -352,7 +486,7 @@ fn measured_profiles_via_cache(
                 // Either way the stream travels as the pipeline
                 // currency: a SealedFmap handle (shared Arc, no
                 // stream bytes copied), tagged with its producer.
-                let sf = match cache.lock().unwrap().get(&key) {
+                let sf = match lock_unpoisoned(cache).get(&key) {
                     Some(bs) => {
                         hits += 1;
                         SealedFmap::from_bitstream(bs)
@@ -363,10 +497,10 @@ fn measured_profiles_via_cache(
                             harness_profiles::sealed_layer_sample(
                                 l, i, q, seed, dw,
                             );
-                        cache.lock().unwrap().insert_arc(
+                        lock_unpoisoned(cache).insert_arc(
                             key,
                             Arc::clone(sf.bitstream().expect(
-                                "sample streams are coded",
+                                "invariant: sample streams are coded",
                             )),
                         );
                         sf
@@ -377,7 +511,9 @@ fn measured_profiles_via_cache(
                 let p = harness_profiles::profile_from_sealed(
                     l, &sf, q,
                 )
-                .expect("cached sample streams are coded");
+                .expect(
+                    "invariant: cached sample streams are coded",
+                );
                 // Bypass: compression that does not pay stores raw.
                 if p.pays() {
                     Some(p)
@@ -441,12 +577,237 @@ fn sim_costs(
 }
 
 /// A worker thread's report at join: its metrics block plus its
-/// completed-span ring.
+/// completed-span ring. Returned even when the worker dies mid-run —
+/// the drain loop's panic is caught on-thread so accumulated
+/// telemetry is never lost with the worker.
 type WorkerReport = (Metrics, SpanRing);
 
+/// Reply a typed rejection to every request of a batch. Counting is
+/// the caller's job (each call site owns exactly one counter).
+fn reject_all(requests: Vec<ShippedRequest>, reason: ShedReason) {
+    for r in requests {
+        let _ = r.resp.send(Err(Rejection {
+            seq: r.span.seq,
+            reason,
+        }));
+    }
+}
+
+/// Drain and atomically clear a dead worker's ledger, oldest batch
+/// first (dispatch order keeps replay deterministic).
+fn harvest(ledger: &Ledger) -> Vec<DispatchedBatch> {
+    let mut left: Vec<DispatchedBatch> = lock_unpoisoned(ledger)
+        .drain()
+        .map(|(_, b)| b)
+        .collect();
+    left.sort_by_key(|b| b.id);
+    left
+}
+
+/// Requeue a harvested batch — or fail it if it already burned its
+/// single requeue (at-most-once: a batch is never replayed twice, so
+/// a reply can never be duplicated even if a worker died *after*
+/// replying).
+fn requeue_or_reject(
+    mut b: DispatchedBatch, metrics: &mut Metrics,
+    queue: &mut VecDeque<DispatchedBatch>,
+) {
+    if b.requeued {
+        metrics.failed += b.requests.len() as u64;
+        reject_all(b.requests, ShedReason::WorkerLost);
+    } else {
+        b.requeued = true;
+        metrics.requeued_batches += 1;
+        metrics.requeued_requests += b.requests.len() as u64;
+        queue.push_back(b);
+    }
+}
+
+/// Record the batch in the link's ledger, then try a non-blocking
+/// send. On failure the ledger insert is rolled back (the worker
+/// never saw this id). `Err((batch, worker_is_dead))` returns the
+/// batch for the next candidate.
+fn try_dispatch(
+    link: &WorkerLink, b: DispatchedBatch,
+) -> Result<(), (DispatchedBatch, bool)> {
+    lock_unpoisoned(&link.ledger).insert(b.id, b.clone());
+    match link.tx.try_send(b) {
+        Ok(()) => Ok(()),
+        Err(TrySendError::Full(b)) => {
+            lock_unpoisoned(&link.ledger).remove(&b.id);
+            Err((b, false))
+        }
+        Err(TrySendError::Disconnected(b)) => {
+            lock_unpoisoned(&link.ledger).remove(&b.id);
+            Err((b, true))
+        }
+    }
+}
+
+/// [`try_dispatch`], but blocking: used when every inbox is full —
+/// this stall is the backpressure that fills the admission queue.
+fn blocking_dispatch(
+    link: &WorkerLink, b: DispatchedBatch,
+) -> Result<(), DispatchedBatch> {
+    lock_unpoisoned(&link.ledger).insert(b.id, b.clone());
+    match link.tx.send(b) {
+        Ok(()) => Ok(()),
+        Err(SendError(b)) => {
+            lock_unpoisoned(&link.ledger).remove(&b.id);
+            Err(b)
+        }
+    }
+}
+
+/// Join a worker that left the rotation (died, or closed at
+/// shutdown), merge its report, and requeue whatever its ledger still
+/// holds onto `queue`.
+fn reap_link(
+    link: WorkerLink, metrics: &mut Metrics,
+    rings: &mut Vec<SpanRing>, queue: &mut VecDeque<DispatchedBatch>,
+) {
+    let WorkerLink {
+        wi,
+        tx,
+        ledger,
+        handle,
+    } = link;
+    drop(tx);
+    match handle.join() {
+        // A worker killed mid-run still reports Ok: its drain loop's
+        // panic is caught on-thread (it counts its own death in
+        // `errors`), so accumulated metrics + spans survive.
+        Ok((m, ring)) => {
+            metrics.merge(&m);
+            rings.push(ring);
+        }
+        Err(_) => {
+            eprintln!(
+                "worker {wi}: thread lost outside containment"
+            );
+            metrics.errors += 1;
+        }
+    }
+    for b in harvest(&ledger) {
+        requeue_or_reject(b, metrics, queue);
+    }
+}
+
+/// Dispatch a queue of batches over the live links: non-blocking
+/// round-robin sweep first, blocking send when every inbox is full,
+/// dead links reaped (joined + their ledgers requeued) on the spot.
+/// Batches that outlive their second worker are failed typed. May
+/// leave `links` empty — the caller decides how to wind down.
+fn dispatch_batches(
+    start: VecDeque<DispatchedBatch>,
+    links: &mut Vec<WorkerLink>, rr: &mut usize,
+    metrics: &mut Metrics, rings: &mut Vec<SpanRing>,
+) {
+    let mut queue = start;
+    while let Some(mut b) = queue.pop_front() {
+        loop {
+            if links.is_empty() {
+                metrics.failed += b.requests.len() as u64;
+                reject_all(b.requests, ShedReason::WorkerLost);
+                break;
+            }
+            let n = links.len();
+            let mut outcome = Some(b);
+            let mut dead_at: Option<usize> = None;
+            for k in 0..n {
+                let i = (*rr + k) % n;
+                match try_dispatch(
+                    &links[i],
+                    outcome.take().expect(
+                        "invariant: batch present until dispatched",
+                    ),
+                ) {
+                    Ok(()) => {
+                        *rr = (i + 1) % n;
+                        break;
+                    }
+                    Err((back, dead)) => {
+                        outcome = Some(back);
+                        if dead {
+                            dead_at = Some(i);
+                            break;
+                        }
+                    }
+                }
+            }
+            match (outcome, dead_at) {
+                (None, _) => break, // dispatched
+                (Some(back), Some(i)) => {
+                    let link = links.remove(i);
+                    reap_link(link, metrics, rings, &mut queue);
+                    b = back; // retry on the survivors
+                }
+                (Some(back), None) => {
+                    // Every inbox full: block on the round-robin
+                    // target. This stall propagates to the admission
+                    // queue — exactly the bounded-buffer behavior we
+                    // want under saturation.
+                    let i = *rr % links.len();
+                    match blocking_dispatch(&links[i], back) {
+                        Ok(()) => {
+                            *rr = (i + 1) % links.len();
+                            break;
+                        }
+                        Err(back) => {
+                            let link = links.remove(i);
+                            reap_link(
+                                link, metrics, rings, &mut queue,
+                            );
+                            b = back;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Reap every worker that announced its death since the last poll —
+/// in-flight batches requeue to survivors promptly instead of waiting
+/// for the next dispatch to bounce off the dead inbox.
+fn reap_notices(
+    death_rx: &Receiver<usize>, links: &mut Vec<WorkerLink>,
+    rr: &mut usize, metrics: &mut Metrics,
+    rings: &mut Vec<SpanRing>,
+) {
+    while let Ok(wi) = death_rx.try_recv() {
+        // Already reaped via a bounced dispatch? Then it left the
+        // rotation and there is nothing further to do.
+        let Some(i) = links.iter().position(|l| l.wi == wi) else {
+            continue;
+        };
+        let link = links.remove(i);
+        let mut queue = VecDeque::new();
+        reap_link(link, metrics, rings, &mut queue);
+        dispatch_batches(queue, links, rr, metrics, rings);
+    }
+}
+
+/// Typed `ShuttingDown` replies for everything still queued at the
+/// front door when the batcher winds down without workers. (A submit
+/// racing the final `try_recv` may instead observe its reply channel
+/// closing — the one narrow untyped window, see
+/// `docs/robustness.md`.)
+fn drain_and_reject(rx: &Receiver<Request>, metrics: &mut Metrics) {
+    while let Ok(r) = rx.try_recv() {
+        metrics.shed_shutdown += 1;
+        let _ = r.resp.send(Err(Rejection {
+            seq: r.span.seq,
+            reason: ShedReason::ShuttingDown,
+        }));
+    }
+}
+
 /// The batcher thread: builds the worker pool, owns the batching
-/// policy, shards batches round-robin, merges worker metrics and
-/// span rings into the run's [`TelemetrySnapshot`] at shutdown.
+/// policy, shards batches round-robin with in-flight ledgers and
+/// bounded inboxes, sheds expired requests before shipping, requeues
+/// a dead worker's batches to survivors, and merges worker metrics
+/// and span rings into the run's [`TelemetrySnapshot`] at shutdown.
 fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
                 rx: Receiver<Request>) -> TelemetrySnapshot {
     let mut metrics = Metrics::new();
@@ -466,26 +827,34 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
         TelemetrySnapshot {
             metrics,
             spans: rings,
-            cache: Some(cache.lock().unwrap().stats()),
+            cache: Some(lock_unpoisoned(&cache).stats()),
             dma: Some(dma),
             pool: crate::exec::global().stats(),
             workers,
             transport: cfg.transport.name().to_string(),
+            queue_cap: 0, // stamped by the server handle at shutdown
         }
     };
 
     // Spawn the workers; each constructs its engine on its own thread
     // and reports its batch cap (or the construction error) back.
+    // Workers announce an on-thread death through `death_tx` so the
+    // batcher can requeue their in-flight work promptly.
     let n_workers = cfg.workers.max(1);
     let ring_cap = cfg.span_ring_cap;
+    let (death_tx, death_rx) = channel::<usize>();
     type Ready = anyhow::Result<usize>;
-    let mut spawned: Vec<(usize, Sender<Vec<ShippedRequest>>,
+    let mut spawned: Vec<(usize, SyncSender<DispatchedBatch>, Ledger,
                           Receiver<Ready>, JoinHandle<WorkerReport>)> =
         Vec::new();
     for wi in 0..n_workers {
-        let (btx, brx) = channel::<Vec<ShippedRequest>>();
+        let (btx, brx) = sync_channel::<DispatchedBatch>(WORKER_INBOX);
         let (ready_tx, ready_rx) = channel::<Ready>();
         let factory = Arc::clone(&factory);
+        let ledger: Ledger = Arc::new(Mutex::new(HashMap::new()));
+        let worker_ledger = Arc::clone(&ledger);
+        let faults = cfg.faults.clone();
+        let death = death_tx.clone();
         match std::thread::Builder::new()
             .name(format!("fmc-worker-{wi}"))
             .spawn(move || {
@@ -497,27 +866,34 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
                     cycles_per_image,
                     energy_per_image,
                     ring_cap,
+                    worker_ledger,
+                    faults,
+                    death,
                 )
             }) {
-            Ok(h) => spawned.push((wi, btx, ready_rx, h)),
+            Ok(h) => spawned.push((wi, btx, ledger, ready_rx, h)),
             Err(e) => {
                 eprintln!("worker {wi}: spawn failed: {e}");
                 metrics.errors += 1;
             }
         }
     }
+    drop(death_tx);
 
     // Collect readiness; only workers with a live engine join the
     // dispatch rotation. The smallest engine cap clamps the policy.
-    let mut senders: Vec<Sender<Vec<ShippedRequest>>> = Vec::new();
-    let mut handles: Vec<JoinHandle<WorkerReport>> = Vec::new();
+    let mut links: Vec<WorkerLink> = Vec::new();
     let mut engine_cap = usize::MAX;
-    for (wi, btx, ready_rx, h) in spawned {
+    for (wi, btx, ledger, ready_rx, h) in spawned {
         match ready_rx.recv() {
             Ok(Ok(cap)) => {
                 engine_cap = engine_cap.min(cap);
-                senders.push(btx);
-                handles.push(h);
+                links.push(WorkerLink {
+                    wi,
+                    tx: btx,
+                    ledger,
+                    handle: h,
+                });
             }
             Ok(Err(e)) => {
                 eprintln!("worker {wi}: {e:#}");
@@ -533,11 +909,12 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
             }
         }
     }
-    if senders.is_empty() {
-        // No live worker: exit now. Dropping `rx` makes subsequent
-        // submits fail fast, and already-queued requests error out
-        // through their dropped response senders (no hangs).
+    if links.is_empty() {
+        // No live worker: shed everything already queued with a typed
+        // ShuttingDown reply, then exit. Dropping `rx` makes
+        // subsequent submits fail fast (typed, at the door).
         eprintln!("server: no live workers; shutting down");
+        drain_and_reject(&rx, &mut metrics);
         return snapshot(metrics, Vec::new(), 0);
     }
 
@@ -545,9 +922,23 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
         max_batch: cfg.policy.max_batch.min(engine_cap),
         ..cfg.policy
     };
+    let faults = cfg.faults.clone();
 
-    let mut rr = 0usize; // round-robin cursor over live workers
+    let n_live = links.len();
+    let mut rings: Vec<SpanRing> = Vec::new();
+    let mut rr = 0usize; // round-robin cursor over live links
+    let mut next_batch_id = 0u64;
     loop {
+        reap_notices(
+            &death_rx, &mut links, &mut rr, &mut metrics, &mut rings,
+        );
+        if links.is_empty() {
+            eprintln!(
+                "server: every worker died; shedding queued requests"
+            );
+            drain_and_reject(&rx, &mut metrics);
+            return snapshot(metrics, rings, n_live);
+        }
         match poll_batch(&rx, policy, IDLE_POLL) {
             // Idle window elapsed with nothing pending: poll again.
             // The next arrival goes through poll_batch's linger like
@@ -557,6 +948,12 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
             BatchOutcome::Idle => continue,
             BatchOutcome::Closed => break,
             BatchOutcome::Batch(batch) => {
+                if let Some(d) = faults
+                    .as_deref()
+                    .and_then(FaultPlan::delay_before_ship)
+                {
+                    std::thread::sleep(d);
+                }
                 // The interlayer-transport seam: the batcher packages
                 // every request through the configured transport, so
                 // the batch crosses to its worker as sealed streams
@@ -566,61 +963,90 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
                 // the policy closed the batch, Shipped once the
                 // envelope exists, so the batch→ship seam is the
                 // transport's own cost.
-                let mut batch: Vec<ShippedRequest> = batch
-                    .into_iter()
-                    .map(|r| {
-                        let Request {
-                            image,
-                            resp,
-                            mut span,
-                        } = r;
-                        span.stamp(Stage::BatchFormed);
-                        let input = cfg.transport.ship_raw(image);
-                        span.stamp(Stage::Shipped);
-                        ShippedRequest { input, resp, span }
-                    })
-                    .collect();
-                loop {
-                    if senders.is_empty() {
-                        // Every worker died mid-flight: fail the
-                        // batch (dropping the responders errors each
-                        // client's receiver).
-                        metrics.errors += batch.len() as u64;
-                        break;
+                //
+                // Deadline seam #1: a request that expired while
+                // queued sheds here, before any sealing/shipping work
+                // is spent on it.
+                let mut shipped: Vec<ShippedRequest> =
+                    Vec::with_capacity(batch.len());
+                for r in batch {
+                    let Request {
+                        image,
+                        resp,
+                        mut span,
+                    } = r;
+                    if span.expired_at(now_us()) {
+                        metrics.shed_deadline_batch += 1;
+                        let _ = resp.send(Err(Rejection {
+                            seq: span.seq,
+                            reason: ShedReason::DeadlineBatch,
+                        }));
+                        continue;
                     }
-                    let i = rr % senders.len();
-                    match senders[i].send(batch) {
-                        Ok(()) => {
-                            rr += 1;
-                            break;
-                        }
-                        Err(send_back) => {
-                            // Worker died (panicked engine): drop it
-                            // from rotation and re-dispatch to a
-                            // survivor.
-                            batch = send_back.0;
-                            senders.remove(i);
-                        }
-                    }
+                    span.stamp(Stage::BatchFormed);
+                    let input = cfg.transport.ship_raw(image);
+                    span.stamp(Stage::Shipped);
+                    shipped.push(ShippedRequest { input, resp, span });
                 }
+                if shipped.is_empty() {
+                    continue;
+                }
+                let b = DispatchedBatch {
+                    id: next_batch_id,
+                    requeued: false,
+                    requests: shipped,
+                };
+                next_batch_id += 1;
+                dispatch_batches(
+                    VecDeque::from([b]),
+                    &mut links,
+                    &mut rr,
+                    &mut metrics,
+                    &mut rings,
+                );
             }
         }
     }
 
-    // Close worker queues, join, and merge their metrics + span
-    // rings. A worker that died (panic outside the per-batch
-    // containment) loses its accumulated counts — record at least
-    // the loss itself.
-    drop(senders);
-    let mut rings: Vec<SpanRing> = Vec::new();
-    let n_live = handles.len();
-    for h in handles {
-        match h.join() {
+    // Shutdown. Drain any death notices first so a worker killed on
+    // its final batch hands its in-flight work to a survivor before
+    // inboxes start closing.
+    reap_notices(
+        &death_rx, &mut links, &mut rr, &mut metrics, &mut rings,
+    );
+    // Close worker inboxes in order and join. Each worker finishes
+    // everything already in its inbox before seeing the disconnect,
+    // so a non-empty ledger at join time means the worker died — its
+    // batches requeue to the links still open behind it.
+    while !links.is_empty() {
+        let WorkerLink {
+            wi,
+            tx,
+            ledger,
+            handle,
+        } = links.remove(0);
+        drop(tx);
+        match handle.join() {
             Ok((m, ring)) => {
                 metrics.merge(&m);
                 rings.push(ring);
             }
-            Err(_) => metrics.errors += 1,
+            Err(_) => {
+                eprintln!(
+                    "worker {wi}: thread lost outside containment"
+                );
+                metrics.errors += 1;
+            }
+        }
+        let leftovers = harvest(&ledger);
+        if !leftovers.is_empty() {
+            let mut queue = VecDeque::new();
+            for b in leftovers {
+                requeue_or_reject(b, &mut metrics, &mut queue);
+            }
+            dispatch_batches(
+                queue, &mut links, &mut rr, &mut metrics, &mut rings,
+            );
         }
     }
     snapshot(metrics, rings, n_live)
@@ -628,15 +1054,24 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
 
 /// One runtime worker: constructs its engine on this thread (reports
 /// the batch cap — or the error — through `ready`), then drains
-/// batches until the batcher closes the channel. The engine never
+/// batches until the batcher closes the inbox. The engine never
 /// crosses a thread boundary. Returns its metrics block and its
 /// completed-span ring — both worker-owned for the whole run, so
 /// recording telemetry takes no locks.
+///
+/// The drain loop runs under `catch_unwind`: a worker death (the
+/// injected `worker-recv` kill, or a real bug escaping the per-batch
+/// containment) still hands back the telemetry accumulated so far,
+/// counts itself in `errors`, and announces the death so the batcher
+/// requeues the ledger. The kill fires *before* any reply for the
+/// received batch, which is what makes the requeue replay-safe.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(wi: usize, factory: EngineFactory,
-               rx: Receiver<Vec<ShippedRequest>>,
+               rx: Receiver<DispatchedBatch>,
                ready: Sender<anyhow::Result<usize>>,
                cycles_per_image: u64, energy_per_image: f64,
-               span_ring_cap: usize)
+               span_ring_cap: usize, ledger: Ledger,
+               faults: Option<Arc<FaultPlan>>, death: Sender<usize>)
                -> WorkerReport {
     let mut metrics = Metrics::new();
     let mut spans = SpanRing::new(span_ring_cap);
@@ -651,26 +1086,95 @@ fn worker_loop(wi: usize, factory: EngineFactory,
         }
     };
     drop(ready);
-    while let Ok(batch) = rx.recv() {
-        handle_batch(
-            batch,
-            engine.as_mut(),
-            &mut metrics,
-            &mut spans,
-            wi,
-            cycles_per_image,
-            energy_per_image,
+    let run = std::panic::catch_unwind(
+        std::panic::AssertUnwindSafe(|| {
+            let mut nth = 0u64;
+            while let Ok(dispatch) = rx.recv() {
+                nth += 1;
+                if faults
+                    .as_deref()
+                    .map_or(false, |f| f.kill_at_recv(wi, nth))
+                {
+                    panic!(
+                        "fault-injected worker kill: worker {wi} \
+                         at batch {nth}"
+                    );
+                }
+                let id = dispatch.id;
+                handle_batch(
+                    dispatch.requests,
+                    engine.as_mut(),
+                    &mut metrics,
+                    &mut spans,
+                    wi,
+                    cycles_per_image,
+                    energy_per_image,
+                    faults.as_deref(),
+                );
+                // Every request of the batch was replied or shed:
+                // retire the ledger entry so it can never replay.
+                lock_unpoisoned(&ledger).remove(&id);
+            }
+        }),
+    );
+    if run.is_err() {
+        // Death is an infrastructure event (one per worker), not a
+        // per-request failure — the stranded requests are accounted
+        // when the batcher requeues or fails them.
+        metrics.errors += 1;
+        let _ = death.send(wi);
+        eprintln!(
+            "worker {wi}: died; in-flight batches will requeue"
         );
     }
     (metrics, spans)
 }
 
+/// Open an envelope at the engine boundary, with one retry. The
+/// `envelope-open` fault seam injects a transient first-attempt
+/// failure here; a *real* decode panic is also contained and retried
+/// once, and a stream that fails both attempts costs the request a
+/// typed `OpenFailed` — never the worker. Under the sealed transport
+/// the pre-retry clone shares the stream `Arc` (no payload copy).
+fn open_envelope(
+    env: FmapEnvelope, faults: Option<&FaultPlan>, seq: u64,
+    metrics: &mut Metrics,
+) -> Result<Tensor3, ()> {
+    let pool = crate::exec::global();
+    let injected =
+        faults.map_or(false, |f| f.fail_open(seq, 0));
+    if !injected {
+        let first = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                env.clone().open_with_pool(pool)
+            }),
+        );
+        match first {
+            Ok(img) => return Ok(img),
+            Err(_) => eprintln!(
+                "request {seq}: envelope open panicked; retrying"
+            ),
+        }
+    }
+    metrics.open_retries += 1;
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        env.open_with_pool(pool)
+    }))
+    .map_err(|_| ())
+}
+
+#[allow(clippy::too_many_arguments)]
 fn handle_batch(batch: Vec<ShippedRequest>,
                 engine: &mut dyn InferenceEngine,
                 metrics: &mut Metrics, spans: &mut SpanRing,
                 wi: usize, cycles_per_image: u64,
-                energy_per_image: f64) {
+                energy_per_image: f64, faults: Option<&FaultPlan>) {
     metrics.batches += 1;
+    if let Some(d) =
+        faults.and_then(|f| f.delay_before_open(wi))
+    {
+        std::thread::sleep(d);
+    }
     // Open each envelope at the engine boundary — the lazy,
     // on-demand decode of the compressed-domain dataflow: sealed
     // inputs stay sealed until the engine needs dense pixels, and
@@ -678,28 +1182,65 @@ fn handle_batch(batch: Vec<ShippedRequest>,
     // `CodecScratch`, bit-identical for every pool size). Each
     // request's Opened stamp lands right after its own decode, so
     // the ship→open seam prices the envelope-opening work.
-    let pool = crate::exec::global();
-    let mut meta: Vec<(Sender<Response>, Span)> =
+    let mut meta: Vec<(Sender<ServeResult>, Span)> =
         Vec::with_capacity(batch.len());
     let mut images: Vec<Tensor3> = Vec::with_capacity(batch.len());
     for (lane, r) in batch.into_iter().enumerate() {
         if r.input.is_sealed() {
+            // Traffic, not requests: counted even if the request
+            // sheds right below (the stream bytes already crossed the
+            // seam) and again when a batch is requeued.
             metrics.sealed_shipments += 1;
             metrics.sealed_stream_bytes += r.input.stream_bytes();
         }
         let mut span = r.span;
         span.worker = wi as u32;
         span.lane = lane as u32;
-        images.push(r.input.open_with_pool(pool));
-        span.stamp(Stage::Opened);
-        meta.push((r.resp, span));
+        // Deadline seam #2: a request that expired in transit sheds
+        // before any decode or engine work is spent on it.
+        if span.expired_at(now_us()) {
+            metrics.shed_deadline_open += 1;
+            let _ = r.resp.send(Err(Rejection {
+                seq: span.seq,
+                reason: ShedReason::DeadlineOpen,
+            }));
+            continue;
+        }
+        match open_envelope(r.input, faults, span.seq, metrics) {
+            Ok(img) => {
+                span.stamp(Stage::Opened);
+                images.push(img);
+                meta.push((r.resp, span));
+            }
+            Err(()) => {
+                metrics.failed += 1;
+                let _ = r.resp.send(Err(Rejection {
+                    seq: span.seq,
+                    reason: ShedReason::OpenFailed,
+                }));
+            }
+        }
     }
-    // Contain engine panics to the batch: the batch errors out, but
+    if meta.is_empty() {
+        // The whole batch shed or failed before the engine.
+        return;
+    }
+    // Contain engine panics to the batch: the batch fails typed, but
     // the worker — and the metrics it has accumulated — survive, and
     // batches already queued on this worker still get served.
     let result = std::panic::catch_unwind(
         std::panic::AssertUnwindSafe(|| engine.infer(&images)),
     );
+    let fail_batch = |meta: Vec<(Sender<ServeResult>, Span)>,
+                      metrics: &mut Metrics| {
+        metrics.failed += meta.len() as u64;
+        for (resp, span) in meta {
+            let _ = resp.send(Err(Rejection {
+                seq: span.seq,
+                reason: ShedReason::EngineError,
+            }));
+        }
+    };
     match result {
         Ok(Ok(results)) => {
             if results.len() != meta.len() {
@@ -708,7 +1249,7 @@ fn handle_batch(batch: Vec<ShippedRequest>,
                     results.len(),
                     meta.len()
                 );
-                metrics.errors += meta.len() as u64;
+                fail_batch(meta, metrics);
                 return;
             }
             // The whole batch executed as one engine call: stamp
@@ -723,25 +1264,25 @@ fn handle_batch(batch: Vec<ShippedRequest>,
                 let latency = span.total().unwrap_or_default();
                 metrics.observe_span(&span);
                 spans.push(span);
-                let _ = resp.send(Response {
+                let _ = resp.send(Ok(Response {
                     class,
                     logits,
                     latency,
                     sim_cycles: cycles_per_image,
                     sim_energy_j: energy_per_image,
                     span,
-                });
+                }));
             }
         }
         Ok(Err(e)) => {
             eprintln!("batch failed: {e:#}");
-            metrics.errors += meta.len() as u64;
+            fail_batch(meta, metrics);
         }
         Err(_) => {
             eprintln!(
                 "batch failed: engine panicked (worker continues)"
             );
-            metrics.errors += meta.len() as u64;
+            fail_batch(meta, metrics);
         }
     }
 }

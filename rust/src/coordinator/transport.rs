@@ -263,8 +263,7 @@ pub fn new_in_flight(stages: usize) -> InFlightMeasures {
 pub fn in_flight_profiles(
     m: &InFlightMeasures,
 ) -> Vec<Option<CompressionProfile>> {
-    m.lock()
-        .unwrap()
+    crate::util::lock_unpoisoned(m)
         .iter()
         .map(|s| s.map(|s| s.profile()))
         .collect()
@@ -309,7 +308,7 @@ impl StagedEngine {
                -> StagedEngine {
         assert!(!stages.is_empty(), "staged engine needs stages");
         assert_eq!(
-            measures.lock().unwrap().len(),
+            crate::util::lock_unpoisoned(&measures).len(),
             stages.len(),
             "one measure slot per stage"
         );
@@ -365,7 +364,8 @@ impl InferenceEngine for StagedEngine {
                         let env = self
                             .transport
                             .ship_compressed(&cf, q, pool);
-                        self.measures.lock().unwrap()[si - 1]
+                        crate::util::lock_unpoisoned(&self.measures)
+                            [si - 1]
                             .get_or_insert_with(StageMeasure::default)
                             .record(&cf, &env);
                         env.open_with_pool(pool)

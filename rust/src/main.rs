@@ -10,7 +10,8 @@
 //!   serve    --requests N [--workers W] [--no-compress]
 //!            [--artifacts DIR] [--cache-budget BYTES]
 //!            [--transport sealed|dense] [--engine runtime|synthetic]
-//!            [--span-ring-cap N]
+//!            [--span-ring-cap N] [--queue-cap N] [--deadline-ms N]
+//!            [--faults SPEC] (e.g. seed=7 or kill=1@2,open-fail=4)
 //!            [--stats-json PATH] [--trace-out PATH]
 //!   selftest [--artifacts DIR]
 
@@ -19,8 +20,9 @@ use fmc_accel::cli::Args;
 use fmc_accel::compress::{codec, qtable::qtable};
 use fmc_accel::config::{models, AccelConfig};
 use fmc_accel::coordinator::{
-    transport_by_name, EngineFactory, InferenceEngine,
+    transport_by_name, EngineFactory, FaultPlan, InferenceEngine,
     InferenceServer, InterlayerCache, ServerConfig, StagedEngine,
+    SubmitError, DEFAULT_QUEUE_CAP,
 };
 use fmc_accel::data;
 use fmc_accel::harness::{figs, profiles, tables};
@@ -313,10 +315,28 @@ fn serve(args: &Args) -> i32 {
         return 2;
     };
     let engine_kind = args.opt_or("engine", "runtime").to_string();
+    // Bounded admission + optional per-request deadline + optional
+    // deterministic fault plan (chaos runs; see docs/robustness.md).
+    let queue_cap = args.opt_usize("queue-cap", DEFAULT_QUEUE_CAP);
+    let deadline_ms = args.opt_usize("deadline-ms", 0);
+    let faults = match args.opt("faults") {
+        Some(spec) => match FaultPlan::parse(spec, workers.max(1)) {
+            Ok(plan) => Some(std::sync::Arc::new(plan)),
+            Err(e) => {
+                eprintln!("bad --faults spec: {e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
     let mut cfg = ServerConfig::new(dir)
         .with_workers(workers)
         .with_cache(cache.clone())
-        .with_transport(transport);
+        .with_transport(transport)
+        .with_queue_cap(queue_cap);
+    if let Some(plan) = &faults {
+        cfg = cfg.with_faults(std::sync::Arc::clone(plan));
+    }
     cfg.compressed = !args.flag("no-compress");
     cfg.span_ring_cap =
         args.opt_usize("span-ring-cap", cfg.span_ring_cap);
@@ -361,26 +381,55 @@ fn serve(args: &Args) -> i32 {
     };
     let images = data::shapes_batch(7, n, 32);
     let mut correct = 0usize;
+    let mut replied = 0usize;
+    let mut submit_shed = 0usize;
+    let mut rejected = 0usize;
+    let mut lost = 0usize;
     let mut rxs = Vec::with_capacity(n);
     for (img, _) in images.iter() {
-        match server.submit(img.clone()) {
-            Ok(rx) => rxs.push(rx),
-            Err(e) => {
-                eprintln!("submit: {e:#}");
+        let sent = if deadline_ms > 0 {
+            server.submit_within(
+                img.clone(),
+                std::time::Duration::from_millis(deadline_ms as u64),
+            )
+        } else {
+            server.submit(img.clone())
+        };
+        match sent {
+            Ok(rx) => rxs.push(Some(rx)),
+            // Typed backpressure is an answer, not a crash: count the
+            // shed and keep driving (the conservation check below
+            // still has to balance).
+            Err(
+                e @ (SubmitError::QueueFull { .. }
+                | SubmitError::DeadlinePassed),
+            ) => {
+                eprintln!("submit shed: {e}");
+                submit_shed += 1;
+                rxs.push(None);
+            }
+            Err(SubmitError::ShuttingDown) => {
+                eprintln!("submit: server is shutting down");
                 return 1;
             }
         }
     }
     for ((_, label), rx) in images.iter().zip(rxs) {
+        let Some(rx) = rx else { continue };
         match rx.recv() {
-            Ok(resp) => {
+            Ok(Ok(resp)) => {
+                replied += 1;
                 if resp.class == *label {
                     correct += 1;
                 }
             }
+            Ok(Err(rej)) => {
+                eprintln!("rejected: {rej}");
+                rejected += 1;
+            }
             Err(_) => {
                 eprintln!("response channel closed");
-                return 1;
+                lost += 1;
             }
         }
     }
@@ -394,8 +443,8 @@ fn serve(args: &Args) -> i32 {
         println!("accuracy  : n/a (synthetic engine)");
     } else {
         println!(
-            "accuracy  : {:.1}%",
-            correct as f64 / n.max(1) as f64 * 100.0
+            "accuracy  : {:.1}% (over {replied} replied)",
+            correct as f64 / replied.max(1) as f64 * 100.0
         );
     }
     println!(
@@ -422,7 +471,7 @@ fn serve(args: &Args) -> i32 {
         ]);
     }
     st.print();
-    let cs = cache.lock().unwrap().stats();
+    let cs = fmc_accel::util::lock_unpoisoned(&cache).stats();
     println!(
         "bs cache  : {} hits, {} misses ({:.0}% hit), {} held in {} entries",
         metrics.cache_hits,
@@ -449,6 +498,26 @@ fn serve(args: &Args) -> i32 {
         snap.spans_recorded(),
         snap.spans_dropped()
     );
+    println!(
+        "admission : {} submitted / {} replied | shed {} \
+         (queue {}, deadline {}+{}+{}, shutdown {}) | failed {} | \
+         requeued {} batches / {} requests | open retries {}",
+        metrics.submitted,
+        metrics.requests,
+        metrics.shed_total(),
+        metrics.shed_queue_full,
+        metrics.shed_deadline_submit,
+        metrics.shed_deadline_batch,
+        metrics.shed_deadline_open,
+        metrics.shed_shutdown,
+        metrics.failed,
+        metrics.requeued_batches,
+        metrics.requeued_requests,
+        metrics.open_retries,
+    );
+    if let Some(plan) = &faults {
+        println!("faults    : {}", plan.label());
+    }
     if let Some(path) = args.opt("stats-json") {
         if let Err(e) =
             snap.write_json(std::path::Path::new(path))
@@ -470,7 +539,29 @@ fn serve(args: &Args) -> i32 {
             "trace     : {path} (chrome://tracing or ui.perfetto.dev)"
         );
     }
-    if metrics.errors > 0 {
+    // Exit semantics: lost replies and broken accounting always fail;
+    // `errors` only fails a fault-free run (an injected worker kill
+    // is *supposed* to cost one infra error — the conservation
+    // identity is the pass/fail line for chaos runs).
+    if lost > 0 {
+        eprintln!("lost      : {lost} replies");
+        return 1;
+    }
+    if submit_shed + rejected > 0 {
+        println!(
+            "client    : {submit_shed} shed at submit, {rejected} \
+             typed rejections received"
+        );
+    }
+    if metrics.accounted() != metrics.submitted {
+        eprintln!(
+            "accounting: {} accounted != {} submitted",
+            metrics.accounted(),
+            metrics.submitted
+        );
+        return 1;
+    }
+    if metrics.errors > 0 && faults.is_none() {
         eprintln!("errors    : {}", metrics.errors);
         return 1;
     }

@@ -4,7 +4,7 @@
 //! serve run and hands it back when the thread joins — the same
 //! ownership pattern as the per-worker `Metrics`. That makes the hot
 //! path genuinely lock-free: recording a completed span is a bounds
-//! check plus a 64-byte copy into a pre-sized `VecDeque`.
+//! check plus a 72-byte copy into a pre-sized `VecDeque`.
 //!
 //! The ring is fixed-capacity. When full, the *oldest* span is
 //! dropped and counted, so a long run keeps the most recent window of
@@ -16,7 +16,7 @@ use std::collections::VecDeque;
 use crate::obs::span::Span;
 
 /// Default per-worker ring capacity (`ServerConfig::span_ring_cap`).
-/// 4096 spans × 64 bytes = 256 KiB per worker — enough to hold the
+/// 4096 spans × 72 bytes = 288 KiB per worker — enough to hold the
 /// full tail of any stress run we replay into Perfetto.
 pub const DEFAULT_SPAN_RING_CAP: usize = 4096;
 

@@ -31,7 +31,11 @@ use crate::util::json::Json;
 
 /// Version of the `--stats-json` document layout. Bump when keys are
 /// renamed or removed (additions are compatible).
-pub const STATS_SCHEMA_VERSION: u64 = 1;
+///
+/// v2: added the `admission` block (bounded-queue shed/requeue
+/// counters and the conservation identity inputs) and tightened the
+/// stage histograms to exclude shed requests entirely.
+pub const STATS_SCHEMA_VERSION: u64 = 2;
 
 /// Everything one serve run measured, in one merge-able value.
 #[derive(Debug, Clone, Default)]
@@ -53,6 +57,9 @@ pub struct TelemetrySnapshot {
     pub workers: usize,
     /// Interlayer transport name (`dense` / `sealed`).
     pub transport: String,
+    /// Bound of the admission queue the server ran with (0 when the
+    /// snapshot predates the server handle, e.g. unit-built).
+    pub queue_cap: usize,
 }
 
 impl TelemetrySnapshot {
@@ -93,6 +100,7 @@ impl TelemetrySnapshot {
         self.metrics.merge(&o.metrics);
         self.spans.extend(o.spans.iter().cloned());
         self.workers += o.workers;
+        self.queue_cap = self.queue_cap.max(o.queue_cap);
         match (&mut self.cache, &o.cache) {
             (Some(a), Some(b)) => {
                 a.hits += b.hits;
@@ -188,6 +196,32 @@ impl TelemetrySnapshot {
             ("requests", num(m.requests)),
             ("batches", num(m.batches)),
             ("errors", num(m.errors)),
+            (
+                // The conservation identity's inputs: submitted ==
+                // replied + every shed bucket + failed (validated by
+                // bench_compare.py --check-stats).
+                "admission",
+                obj(vec![
+                    ("queue_cap", num(self.queue_cap as u64)),
+                    ("submitted", num(m.submitted)),
+                    ("replied", num(m.requests)),
+                    ("shed_queue_full", num(m.shed_queue_full)),
+                    (
+                        "shed_deadline_submit",
+                        num(m.shed_deadline_submit),
+                    ),
+                    (
+                        "shed_deadline_batch",
+                        num(m.shed_deadline_batch),
+                    ),
+                    ("shed_deadline_open", num(m.shed_deadline_open)),
+                    ("shed_shutdown", num(m.shed_shutdown)),
+                    ("failed", num(m.failed)),
+                    ("requeued_batches", num(m.requeued_batches)),
+                    ("requeued_requests", num(m.requeued_requests)),
+                    ("open_retries", num(m.open_retries)),
+                ]),
+            ),
             ("latency_us", Json::Obj(latency)),
             ("cache", cache),
             (
@@ -297,7 +331,7 @@ mod tests {
     fn json_has_schema_stage_keys_and_consistent_sums() {
         let snap = snapshot_with(4);
         let doc = snap.to_json();
-        assert_eq!(doc.get("schema").as_usize(), Some(1));
+        assert_eq!(doc.get("schema").as_usize(), Some(2));
         assert_eq!(doc.get("requests").as_usize(), Some(4));
         assert_eq!(doc.get("transport").as_str(), Some("sealed"));
 
@@ -326,6 +360,42 @@ mod tests {
             doc.get("cache"),
             &Json::Null,
             "no cache stats attached"
+        );
+    }
+
+    #[test]
+    fn json_admission_block_carries_the_conservation_inputs() {
+        let mut snap = snapshot_with(3);
+        snap.queue_cap = 128;
+        snap.metrics.submitted = 7;
+        snap.metrics.shed_queue_full = 1;
+        snap.metrics.shed_deadline_batch = 2;
+        snap.metrics.failed = 1;
+        snap.metrics.requeued_batches = 1;
+        snap.metrics.requeued_requests = 4;
+        snap.metrics.open_retries = 2;
+        let doc = snap.to_json();
+        let a = doc.get("admission");
+        assert_eq!(a.get("queue_cap").as_usize(), Some(128));
+        assert_eq!(a.get("submitted").as_usize(), Some(7));
+        assert_eq!(
+            a.get("replied").as_usize(),
+            Some(3),
+            "replied mirrors metrics.requests"
+        );
+        assert_eq!(a.get("shed_queue_full").as_usize(), Some(1));
+        assert_eq!(a.get("shed_deadline_submit").as_usize(), Some(0));
+        assert_eq!(a.get("shed_deadline_batch").as_usize(), Some(2));
+        assert_eq!(a.get("shed_deadline_open").as_usize(), Some(0));
+        assert_eq!(a.get("shed_shutdown").as_usize(), Some(0));
+        assert_eq!(a.get("failed").as_usize(), Some(1));
+        assert_eq!(a.get("requeued_batches").as_usize(), Some(1));
+        assert_eq!(a.get("requeued_requests").as_usize(), Some(4));
+        assert_eq!(a.get("open_retries").as_usize(), Some(2));
+        // 7 == 3 replied + 1 qf + 2 db + 1 failed: conservation.
+        assert_eq!(
+            snap.metrics.accounted(),
+            snap.metrics.submitted
         );
     }
 

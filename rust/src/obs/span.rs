@@ -117,9 +117,10 @@ fn next_seq() -> u64 {
 const UNSTAMPED: u64 = u64::MAX;
 
 /// Per-request span context: a sequence id, the worker/lane the
-/// request landed on, and one microsecond stamp per [`Stage`].
+/// request landed on, an optional deadline, and one microsecond
+/// stamp per [`Stage`].
 ///
-/// `Copy` on purpose — a span is 64 bytes of plain integers, moved
+/// `Copy` on purpose — a span is 72 bytes of plain integers, moved
 /// and stamped on the hot path with no indirection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Span {
@@ -130,6 +131,10 @@ pub struct Span {
     /// Request's slot within its batch — the trace "lane" (tid).
     pub lane: u32,
     t_us: [u64; N_STAGES],
+    /// Absolute deadline ([`now_us`] clock); `UNSTAMPED` = none. The
+    /// batcher and workers shed the request at their seams once this
+    /// passes (`docs/robustness.md`).
+    deadline_us: u64,
 }
 
 impl Span {
@@ -148,7 +153,27 @@ impl Span {
             worker: 0,
             lane: 0,
             t_us: [UNSTAMPED; N_STAGES],
+            deadline_us: UNSTAMPED,
         }
+    }
+
+    /// Attach an absolute deadline (on the [`now_us`] clock).
+    pub fn with_deadline_us(mut self, deadline_us: u64) -> Span {
+        self.deadline_us = deadline_us;
+        self
+    }
+
+    /// The span's absolute deadline, if it carries one.
+    pub fn deadline_us(&self) -> Option<u64> {
+        (self.deadline_us != UNSTAMPED).then_some(self.deadline_us)
+    }
+
+    /// Has the deadline passed at `now` (µs on the [`now_us`] clock)?
+    /// Always `false` for a span without a deadline. A zero-budget
+    /// deadline is expired the instant it is stamped (`now ==
+    /// deadline` counts as expired).
+    pub fn expired_at(&self, now: u64) -> bool {
+        self.deadline_us != UNSTAMPED && now >= self.deadline_us
     }
 
     /// Stamp `stage` with the current monotonic time.
@@ -250,6 +275,19 @@ mod tests {
             s.total(),
             Some(Duration::from_micros(500))
         );
+    }
+
+    #[test]
+    fn deadline_defaults_to_none_and_expires_inclusively() {
+        let s = Span::unstamped(1);
+        assert_eq!(s.deadline_us(), None);
+        assert!(!s.expired_at(u64::MAX - 1), "no deadline never expires");
+
+        let s = s.with_deadline_us(100);
+        assert_eq!(s.deadline_us(), Some(100));
+        assert!(!s.expired_at(99));
+        assert!(s.expired_at(100), "now == deadline is expired");
+        assert!(s.expired_at(101));
     }
 
     #[test]

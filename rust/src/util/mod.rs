@@ -2,6 +2,17 @@
 
 pub mod json;
 
+/// Lock a mutex, recovering the data if a previous holder panicked.
+/// For plain-accumulator state (caches, counters, in-flight ledgers)
+/// every intermediate value is valid, so a poisoned lock carries no
+/// corruption — propagating the poison would cascade one contained
+/// panic into killing every thread that shares the lock.
+pub fn lock_unpoisoned<T>(
+    m: &std::sync::Mutex<T>,
+) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// Round-half-to-even, matching `jnp.round` so the rust codec is
 /// bit-compatible with the Pallas kernels and their oracles.
 #[inline]

@@ -23,6 +23,14 @@
 //! sequence per request, and the executor pool's lifetime counters
 //! must balance (submitted == executed) after every join.
 //!
+//! Robustness (ISSUE 7): the chaos suite at the bottom drives the
+//! bounded admission queue to typed `QueueFull` sheds, propagates
+//! deadlines to the batch and open seams, kills workers mid-run with
+//! deterministic [`FaultPlan`]s and requires the in-flight requeue to
+//! deliver every reply exactly once and bit-identical to the
+//! fault-free run, and property-checks the conservation identity
+//! `submitted == replied + shed_* + failed` under churn.
+//!
 //! The tests inject synthetic [`InferenceEngine`]s so the pipeline
 //! runs without PJRT artifacts; `sim_profile` is pinned so startup
 //! skips the codec profiling pass.
@@ -40,8 +48,9 @@ use fmc_accel::coordinator::transport::{
 };
 use fmc_accel::testutil::stages::{LogitStage, SmoothStage};
 use fmc_accel::coordinator::{
-    BatchPolicy, EngineFactory, InferenceEngine, InferenceServer,
-    InterlayerCache, Metrics, ServerConfig,
+    BatchPolicy, EngineFactory, FaultPlan, InferenceEngine,
+    InferenceServer, InterlayerCache, Metrics, ServerConfig,
+    ShedReason, SubmitError,
 };
 use fmc_accel::exec::ExecPool;
 use fmc_accel::nn::Tensor3;
@@ -148,7 +157,8 @@ fn eight_submitters_three_workers_lose_nothing() {
                     let tag = base + i;
                     let resp = rx
                         .recv_timeout(Duration::from_secs(30))
-                        .expect("response within 30s");
+                        .expect("response within 30s")
+                        .expect("request served, not shed");
                     assert_eq!(resp.class, tag % 7, "class for {tag}");
                     assert_eq!(
                         resp.logits[0], tag as f32,
@@ -217,7 +227,7 @@ fn post_idle_burst_batches() -> u64 {
         .map(|i| server.submit(tagged_image(i)).unwrap())
         .collect();
     for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
     }
     let metrics = server.shutdown();
     assert_eq!(metrics.requests, 4);
@@ -281,7 +291,8 @@ fn run_accounted_server(
         .map(|rx| {
             let r = rx
                 .recv_timeout(Duration::from_secs(60))
-                .expect("accounted response");
+                .expect("accounted response")
+                .expect("request served, not shed");
             (r.class, r.sim_cycles, r.sim_energy_j)
         })
         .collect();
@@ -362,7 +373,9 @@ fn drive_dead_server(server: InferenceServer) -> u64 {
     let mut queued = Vec::new();
     loop {
         match server.submit(tagged_image(0)) {
-            Err(_) => break, // batcher observed dead: correct
+            // The batcher exited: the dead server must say so, typed.
+            Err(SubmitError::ShuttingDown) => break,
+            Err(e) => panic!("dead server shed wrongly: {e}"),
             Ok(rx) => {
                 queued.push(rx);
                 assert!(
@@ -373,11 +386,21 @@ fn drive_dead_server(server: InferenceServer) -> u64 {
             }
         }
     }
+    // Requests the dying batcher drained get a typed ShuttingDown
+    // reply; a submit racing the final drain may instead see its
+    // channel close (the documented narrow window,
+    // docs/robustness.md). What can never happen is a served reply
+    // or a hang.
     for rx in queued {
-        assert!(
-            rx.recv_timeout(Duration::from_secs(30)).is_err(),
-            "queued request must error, not hang"
-        );
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Err(rej)) => {
+                assert_eq!(rej.reason, ShedReason::ShuttingDown)
+            }
+            Err(_) => {}
+            Ok(Ok(_)) => {
+                panic!("dead server served a request")
+            }
+        }
     }
     let metrics = server.shutdown();
     assert_eq!(metrics.requests, 0);
@@ -442,7 +465,8 @@ fn run_transport_server(
         .map(|rx| {
             let r = rx
                 .recv_timeout(Duration::from_secs(30))
-                .expect("transport response");
+                .expect("transport response")
+                .expect("request served, not shed");
             (r.class, r.logits, r.sim_cycles)
         })
         .collect();
@@ -515,7 +539,8 @@ fn run_staged_server(
         .map(|rx| {
             let r = rx
                 .recv_timeout(Duration::from_secs(30))
-                .expect("staged response");
+                .expect("staged response")
+                .expect("request served, not shed");
             (r.class, r.logits)
         })
         .collect();
@@ -666,7 +691,8 @@ fn run_telemetry_server(
     for rx in rxs {
         let resp = rx
             .recv_timeout(Duration::from_secs(30))
-            .expect("telemetry response");
+            .expect("telemetry response")
+            .expect("request served, not shed");
         // The response carries its span, already closed at reply.
         assert!(resp.span.is_complete(), "response span incomplete");
     }
@@ -839,6 +865,598 @@ fn stats_json_shape_matches_schema() {
         num(pool.get("jobs_executed")),
         "pool job accounting must balance in the snapshot"
     );
+    // Schema 2 (ISSUE 7): admission block with the conservation
+    // identity — the same gate bench_compare.py --check-stats applies.
+    assert_eq!(num(doc.get("schema")), 2.0);
+    let adm = doc.get("admission");
+    let shed_keys = [
+        "shed_queue_full", "shed_deadline_submit",
+        "shed_deadline_batch", "shed_deadline_open", "shed_shutdown",
+    ];
+    for key in ["queue_cap", "submitted", "replied", "failed",
+                "requeued_batches", "requeued_requests",
+                "open_retries"]
+        .into_iter()
+        .chain(shed_keys)
+    {
+        assert!(
+            !matches!(adm.get(key), Json::Null),
+            "admission key {key} missing"
+        );
+    }
+    let shed: f64 =
+        shed_keys.iter().map(|k| num(adm.get(k))).sum();
+    assert_eq!(
+        num(adm.get("submitted")),
+        num(adm.get("replied")) + shed + num(adm.get("failed")),
+        "conservation identity in the exported JSON"
+    );
+    assert_eq!(num(adm.get("replied")), num(doc.get("requests")));
+}
+
+// --- bounded admission, deadlines, fault injection (ISSUE 7) ----------
+
+/// TagEngine behind a shared gate: `infer` blocks until the test
+/// drops its lock on the gate, so a test can hold the whole pipeline
+/// full at a known point — the only way to drive the bounded
+/// admission queue to a deterministic `QueueFull`, or to age queued
+/// requests past their deadlines.
+struct GateEngine {
+    inner: TagEngine,
+    gate: Arc<Mutex<()>>,
+}
+
+impl InferenceEngine for GateEngine {
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn infer(&mut self, images: &[Tensor3])
+             -> anyhow::Result<Vec<(usize, Vec<f32>)>> {
+        let _hold = self.gate.lock().unwrap();
+        self.inner.infer(images)
+    }
+}
+
+fn gated_factory(gate: Arc<Mutex<()>>) -> EngineFactory {
+    Arc::new(move |_: usize| {
+        Ok(Box::new(GateEngine {
+            inner: TagEngine {
+                cap: 4,
+                images: Arc::new(AtomicUsize::new(0)),
+                batches: Arc::new(AtomicUsize::new(0)),
+            },
+            gate: Arc::clone(&gate),
+        }) as Box<dyn InferenceEngine>)
+    })
+}
+
+fn tag_factory() -> EngineFactory {
+    Arc::new(|_: usize| {
+        Ok(Box::new(TagEngine {
+            cap: 4,
+            images: Arc::new(AtomicUsize::new(0)),
+            batches: Arc::new(AtomicUsize::new(0)),
+        }) as Box<dyn InferenceEngine>)
+    })
+}
+
+#[test]
+fn bounded_admission_sheds_queue_full_with_exact_accounting() {
+    // Tentpole acceptance: with the engine gated shut and a 1-deep
+    // queue, submits must start shedding typed QueueFull — and once
+    // the gate opens, every *accepted* request is served, with
+    // `submitted == replied + shed` holding exactly.
+    let gate = Arc::new(Mutex::new(()));
+    let factory = gated_factory(Arc::clone(&gate));
+    let mut cfg = stress_config(1).with_queue_cap(1);
+    cfg.policy = BatchPolicy {
+        max_batch: 1,
+        linger: Duration::from_millis(1),
+    };
+    let server =
+        InferenceServer::start_with_engines(cfg, factory).unwrap();
+
+    let hold = gate.lock().unwrap();
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    let deadline =
+        std::time::Instant::now() + Duration::from_secs(30);
+    let mut tag = 0usize;
+    while shed < 3 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "queue never filled (only {shed} sheds)"
+        );
+        match server.submit(tagged_image(tag)) {
+            Ok(rx) => accepted.push((tag, rx)),
+            Err(SubmitError::QueueFull { capacity }) => {
+                assert_eq!(capacity, 1, "shed names the bound it hit");
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected shed: {e}"),
+        }
+        tag += 1;
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    drop(hold);
+
+    let n_ok = accepted.len() as u64;
+    for (tag, rx) in accepted {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("accepted request answered")
+            .expect("accepted request served");
+        assert_eq!(resp.class, tag % 7, "class for {tag}");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.requests, n_ok, "every accepted request replied");
+    assert_eq!(m.shed_queue_full, shed);
+    assert_eq!(m.submitted, n_ok + shed);
+    assert_eq!(m.accounted(), m.submitted, "conservation identity");
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn zero_budget_submit_is_rejected_at_the_door() {
+    let server = InferenceServer::start_with_engines(
+        stress_config(1),
+        tag_factory(),
+    )
+    .unwrap();
+    let err = match server
+        .submit_within(tagged_image(3), Duration::ZERO)
+    {
+        Err(e) => e,
+        Ok(_) => panic!("zero budget must shed at the door"),
+    };
+    assert_eq!(err, SubmitError::DeadlinePassed);
+    // A viable budget still serves.
+    let rx = server
+        .submit_within(tagged_image(3), Duration::from_secs(30))
+        .expect("viable budget admits");
+    let resp = rx
+        .recv_timeout(Duration::from_secs(30))
+        .unwrap()
+        .expect("viable request served");
+    assert_eq!(resp.class, 3);
+    let m = server.shutdown();
+    assert_eq!(m.submitted, 2);
+    assert_eq!(m.shed_deadline_submit, 1);
+    assert_eq!(m.requests, 1);
+    assert_eq!(m.accounted(), m.submitted, "conservation identity");
+}
+
+#[test]
+fn expired_requests_shed_at_batch_and_open_seams() {
+    // Deadlines are enforced at seams, not mid-flight: the head
+    // request opens before its deadline passes and is served (late),
+    // requests caught in a worker inbox shed at the open seam, and
+    // requests still queued in the batcher shed at the batch seam.
+    let gate = Arc::new(Mutex::new(()));
+    let factory = gated_factory(Arc::clone(&gate));
+    let mut cfg = stress_config(1);
+    cfg.policy = BatchPolicy {
+        max_batch: 1,
+        linger: Duration::from_millis(1),
+    };
+    let server =
+        InferenceServer::start_with_engines(cfg, factory).unwrap();
+    let hold = gate.lock().unwrap();
+    let rxs: Vec<_> = (0..8)
+        .map(|i| {
+            server
+                .submit_within(
+                    tagged_image(i),
+                    Duration::from_millis(200),
+                )
+                .expect("default queue holds 8")
+        })
+        .collect();
+    // Age everything except the head request (already opened on the
+    // worker, blocked in the gated engine) past its deadline.
+    std::thread::sleep(Duration::from_millis(1000));
+    drop(hold);
+
+    let mut ok = 0u64;
+    let mut by_reason: std::collections::BTreeMap<&'static str, u64> =
+        Default::default();
+    for rx in rxs {
+        match rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("typed answer, never a hang")
+        {
+            Ok(resp) => {
+                assert!(resp.span.is_complete());
+                ok += 1;
+            }
+            Err(rej) => {
+                *by_reason.entry(rej.reason.key()).or_default() += 1
+            }
+        }
+    }
+    let m = server.shutdown();
+    assert_eq!(ok, 1, "exactly the head request is served");
+    let batch =
+        by_reason.get("deadline-batch").copied().unwrap_or(0);
+    let open = by_reason.get("deadline-open").copied().unwrap_or(0);
+    assert_eq!(batch + open, 7, "the rest shed on a deadline seam");
+    assert!(open >= 1, "inboxed requests shed at the open seam");
+    assert!(batch >= 1, "queued requests shed at the batch seam");
+    assert_eq!(m.requests, ok);
+    assert_eq!(m.shed_deadline_batch, batch);
+    assert_eq!(m.shed_deadline_open, open);
+    assert_eq!(m.submitted, 8);
+    assert_eq!(m.accounted(), 8, "conservation identity");
+    // Satellite regression at system level: shed requests leave NO
+    // partial stage mass, so the seam histograms still exactly
+    // partition the end-to-end mass of the served request.
+    let stage_mass: u64 = (0..SEAM_KEYS.len())
+        .map(|i| m.stage_hist(i).sum_us())
+        .sum();
+    assert_eq!(stage_mass, m.latency_hist().sum_us());
+    assert_eq!(m.latency_hist().count(), ok);
+}
+
+#[test]
+fn worker_death_requeues_in_flight_exactly_once() {
+    const N: usize = 60;
+    const WORKERS: usize = 3;
+    let cfg = stress_config(WORKERS).with_faults(Arc::new(
+        FaultPlan::new(WORKERS).with_worker_kill(1, 2),
+    ));
+    let server =
+        InferenceServer::start_with_engines(cfg, tag_factory())
+            .unwrap();
+    let rxs: Vec<_> = (0..N)
+        .map(|i| server.submit(tagged_image(i)).unwrap())
+        .collect();
+    for (tag, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("reply despite the worker death")
+            .expect("request served via requeue");
+        // Bit-identity under faults: the replayed batches answer
+        // exactly like the fault-free run would.
+        assert_eq!(resp.class, tag % 7, "class for {tag}");
+        assert_eq!(
+            resp.logits[0], tag as f32,
+            "logit echo for {tag}"
+        );
+        assert!(
+            rx.try_recv().is_err(),
+            "request {tag} answered more than once"
+        );
+    }
+    let m = server.shutdown();
+    assert_eq!(m.requests, N as u64, "every request replied");
+    assert_eq!(m.submitted, N as u64);
+    assert_eq!(m.failed, 0, "a single requeue absorbed the death");
+    assert_eq!(m.errors, 1, "the kill is one infra event");
+    assert!(
+        m.requeued_batches >= 1,
+        "the dead worker's in-flight batch replayed"
+    );
+    assert!(m.requeued_requests >= 1);
+    assert_eq!(m.accounted(), m.submitted, "conservation identity");
+}
+
+/// `n` tagged requests through a 1-worker TagEngine server under the
+/// given transport + fault plan; returns the client-visible payloads
+/// and the shutdown metrics.
+fn run_faulted_server(
+    transport: Arc<dyn InterlayerTransport>, faults: Arc<FaultPlan>,
+    n: usize,
+) -> (Vec<(usize, Vec<f32>)>, Metrics) {
+    let cfg = stress_config(1)
+        .with_transport(transport)
+        .with_faults(faults);
+    let server =
+        InferenceServer::start_with_engines(cfg, tag_factory())
+            .unwrap();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(tagged_image(i)).unwrap())
+        .collect();
+    let resps = rxs
+        .into_iter()
+        .map(|rx| {
+            let r = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("faulted response")
+                .expect("the open retry must recover");
+            (r.class, r.logits)
+        })
+        .collect();
+    (resps, server.shutdown())
+}
+
+#[test]
+fn open_failures_recover_via_retry_and_stay_bit_identical() {
+    // Every request's first envelope-open attempt fails (period 1);
+    // the single retry must recover every one, under both transports,
+    // without changing a response bit between them.
+    let plan =
+        || Arc::new(FaultPlan::new(1).with_open_fail_every(1, 0));
+    let (sealed, sm) =
+        run_faulted_server(Arc::new(SealedTransport), plan(), 16);
+    let (dense, dm) =
+        run_faulted_server(Arc::new(DenseTransport), plan(), 16);
+    assert_eq!(sealed, dense, "open-retry changed response bits");
+    for m in [&sm, &dm] {
+        assert_eq!(
+            m.open_retries, 16,
+            "one injected retry per request"
+        );
+        assert_eq!(
+            m.failed, 0,
+            "transient open failures never fail a request"
+        );
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.requests, 16);
+        assert_eq!(m.accounted(), m.submitted);
+    }
+}
+
+#[test]
+fn chaos_sweep_keeps_accounting_exact_and_replies_bit_identical() {
+    // Seeded chaos across worker counts: one worker killed mid-run,
+    // periodic open failures, a ship or open delay — every client
+    // still gets exactly one reply, bit-identical to the fault-free
+    // TagEngine answer, and the conservation identity stays exact.
+    const N: usize = 40;
+    for workers in [2usize, 4] {
+        for seed in [1u64, 2, 3] {
+            let cfg = stress_config(workers).with_faults(Arc::new(
+                FaultPlan::seeded(seed, workers),
+            ));
+            let server = InferenceServer::start_with_engines(
+                cfg,
+                tag_factory(),
+            )
+            .unwrap();
+            let rxs: Vec<_> = (0..N)
+                .map(|i| server.submit(tagged_image(i)).unwrap())
+                .collect();
+            for (tag, rx) in rxs.into_iter().enumerate() {
+                let resp = rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .unwrap_or_else(|e| {
+                        panic!(
+                            "seed {seed}/{workers}w: reply for \
+                             {tag} lost: {e}"
+                        )
+                    })
+                    .unwrap_or_else(|r| {
+                        panic!(
+                            "seed {seed}/{workers}w: {tag} shed: {r}"
+                        )
+                    });
+                assert_eq!(
+                    resp.class,
+                    tag % 7,
+                    "seed {seed}/{workers}w: class drifted for {tag}"
+                );
+                assert_eq!(
+                    resp.logits[0], tag as f32,
+                    "seed {seed}/{workers}w: logits drifted for {tag}"
+                );
+                assert!(
+                    rx.try_recv().is_err(),
+                    "seed {seed}/{workers}w: {tag} answered twice"
+                );
+            }
+            let m = server.shutdown();
+            assert_eq!(m.requests, N as u64);
+            assert_eq!(m.submitted, N as u64);
+            assert_eq!(m.failed, 0);
+            assert_eq!(
+                m.accounted(),
+                m.submitted,
+                "seed {seed}/{workers}w: conservation identity"
+            );
+            assert_eq!(
+                m.errors, 1,
+                "seed {seed}/{workers}w: seeded plans kill exactly \
+                 one worker"
+            );
+            assert!(
+                m.requeued_batches >= 1,
+                "seed {seed}/{workers}w: the kill must exercise \
+                 the requeue path"
+            );
+        }
+    }
+}
+
+/// One 2-worker accounted run — measured sealed-stream profiles via a
+/// fresh cache, sealed transport — under an optional fault plan;
+/// returns the hardware-accounting payloads and the full snapshot.
+fn run_accounted_chaos(
+    faults: Option<Arc<FaultPlan>>,
+) -> (Vec<(usize, u64, f64)>, TelemetrySnapshot) {
+    let mut cfg =
+        ServerConfig::new("/nonexistent-artifacts-not-used")
+            .with_workers(2)
+            .with_cache(Arc::new(Mutex::new(InterlayerCache::new(
+                64 * 1024 * 1024,
+            ))))
+            .with_transport(Arc::new(SealedTransport));
+    cfg.policy = BatchPolicy {
+        max_batch: 4,
+        linger: Duration::from_millis(2),
+    };
+    cfg.compressed = true;
+    cfg.sim_profile = None; // measure through the sealed streams
+    if let Some(f) = faults {
+        cfg = cfg.with_faults(f);
+    }
+    let server =
+        InferenceServer::start_with_engines(cfg, tag_factory())
+            .unwrap();
+    let rxs: Vec<_> = (0..8)
+        .map(|i| server.submit(tagged_image(i)).unwrap())
+        .collect();
+    let resps = rxs
+        .into_iter()
+        .map(|rx| {
+            let r = rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("accounted chaos response")
+                .expect("request served despite faults");
+            (r.class, r.sim_cycles, r.sim_energy_j)
+        })
+        .collect();
+    (resps, server.shutdown_telemetry())
+}
+
+#[test]
+fn chaos_keeps_wire_measured_accounting_exact() {
+    // A worker kill + transient open failures must not move a single
+    // bit of the wire-measured hardware accounting, and the exported
+    // snapshot must keep measured_fraction at 1.0 with the
+    // conservation identity intact.
+    let (clean, clean_snap) = run_accounted_chaos(None);
+    let (faulted, snap) = run_accounted_chaos(Some(Arc::new(
+        FaultPlan::new(2)
+            .with_worker_kill(1, 1)
+            .with_open_fail_every(2, 0),
+    )));
+    assert_eq!(clean, faulted, "faults changed accounting bits");
+    for s in [&clean_snap, &snap] {
+        let dma = s.dma.as_ref().expect("profiling pass ran");
+        assert_eq!(
+            dma.measured_fraction(),
+            1.0,
+            "profiled traffic fully wire-measured under faults"
+        );
+        assert_eq!(s.metrics.accounted(), s.metrics.submitted);
+        assert_eq!(s.metrics.requests, 8);
+        assert_eq!(s.metrics.failed, 0);
+    }
+    assert_eq!(snap.metrics.errors, 1, "the injected kill");
+    assert!(snap.metrics.requeued_batches >= 1);
+}
+
+#[test]
+fn conservation_identity_holds_under_churn() {
+    // Property test (satellite): random mixes of deadline-free,
+    // tight-deadline, and zero-budget submits against a gated, kill-
+    // injected server across worker counts — every client-side
+    // outcome tally must equal its server counter, and
+    // `submitted == replied + shed_* + failed` must hold exactly.
+    use std::collections::BTreeMap;
+    const OPS: usize = 60;
+    for (case, workers) in [1usize, 2, 4].into_iter().enumerate() {
+        let gate = Arc::new(Mutex::new(()));
+        let factory = gated_factory(Arc::clone(&gate));
+        let mut cfg = stress_config(workers).with_queue_cap(4);
+        cfg.policy = BatchPolicy {
+            max_batch: 2,
+            linger: Duration::from_millis(1),
+        };
+        let killed = workers >= 2;
+        if killed {
+            // Never kill a lone worker (the requeue needs a
+            // survivor, same rule FaultPlan::seeded enforces).
+            cfg = cfg.with_faults(Arc::new(
+                FaultPlan::new(workers).with_worker_kill(0, 2),
+            ));
+        }
+        let server =
+            InferenceServer::start_with_engines(cfg, factory)
+                .unwrap();
+        let mut prng = fmc_accel::testutil::Prng::new(
+            0xC0FFEE + case as u64,
+        );
+        let hold = gate.lock().unwrap();
+        let mut pending = Vec::new();
+        let mut client: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for i in 0..OPS {
+            let sent = match prng.below(3) {
+                0 => server.submit(tagged_image(i)),
+                1 => server.submit_within(
+                    tagged_image(i),
+                    Duration::from_millis(40),
+                ),
+                _ => server.submit_within(
+                    tagged_image(i),
+                    Duration::ZERO,
+                ),
+            };
+            match sent {
+                Ok(rx) => pending.push((i, rx)),
+                Err(SubmitError::QueueFull { .. }) => {
+                    *client.entry("queue-full").or_default() += 1
+                }
+                Err(SubmitError::DeadlinePassed) => {
+                    *client.entry("deadline-submit").or_default() += 1
+                }
+                Err(SubmitError::ShuttingDown) => {
+                    *client.entry("shutdown-submit").or_default() += 1
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Age the tight-deadline requests past expiry, then open.
+        std::thread::sleep(Duration::from_millis(150));
+        drop(hold);
+
+        let mut ok = 0u64;
+        let mut lost = 0u64;
+        let mut replies: BTreeMap<&'static str, u64> =
+            BTreeMap::new();
+        for (tag, rx) in pending {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(resp)) => {
+                    assert_eq!(
+                        resp.class,
+                        tag % 7,
+                        "{workers}w: class for {tag}"
+                    );
+                    ok += 1;
+                }
+                Ok(Err(rej)) => {
+                    *replies.entry(rej.reason.key()).or_default() += 1
+                }
+                Err(_) => lost += 1,
+            }
+        }
+        let snap = server.shutdown_telemetry();
+        let m = &snap.metrics;
+        let r = |k: &str| replies.get(k).copied().unwrap_or(0);
+        let c = |k: &str| client.get(k).copied().unwrap_or(0);
+        assert_eq!(lost, 0, "{workers}w: replies lost");
+        assert_eq!(m.submitted, OPS as u64);
+        assert_eq!(m.requests, ok, "{workers}w: replied tally");
+        assert_eq!(m.shed_queue_full, c("queue-full"));
+        assert_eq!(m.shed_deadline_submit, c("deadline-submit"));
+        assert_eq!(m.shed_deadline_batch, r("deadline-batch"));
+        assert_eq!(m.shed_deadline_open, r("deadline-open"));
+        assert_eq!(
+            m.shed_shutdown,
+            c("shutdown-submit") + r("shutting-down")
+        );
+        assert_eq!(
+            m.failed,
+            r("worker-lost") + r("open-failed") + r("engine-error")
+        );
+        assert_eq!(
+            m.accounted(),
+            m.submitted,
+            "{workers}w: conservation identity"
+        );
+        assert_eq!(
+            m.errors,
+            u64::from(killed),
+            "{workers}w: infra events"
+        );
+        assert_eq!(
+            snap.spans_recorded(),
+            ok,
+            "{workers}w: one span per served request"
+        );
+    }
 }
 
 #[test]

@@ -29,9 +29,12 @@ persistent executor pool exists to prevent, gateable on any runner.
 written by ``fmc-accel serve --stats-json`` instead: required top-level
 keys, full histogram blocks for end-to-end latency and every pipeline
 stage, quantile monotonicity, per-stage latency mass bounded by the
-end-to-end mass, and executor-pool job accounting
-(submitted == executed). With ``--check-stats`` the BASELINE/FRESH
-positionals are optional.
+end-to-end mass, executor-pool job accounting
+(submitted == executed), and the schema-v2 admission block: all
+shed/requeue counters present and non-negative, with the conservation
+identity ``submitted == replied + shed_* + failed`` holding exactly —
+this is what ``make chaos`` gates after each fault-injected serve run.
+With ``--check-stats`` the BASELINE/FRESH positionals are optional.
 
 Exit code 0 = pass, 1 = regression, 2 = usage/file error.
 """
@@ -47,6 +50,15 @@ HIST_KEYS = ("count", "sum_us", "max_us", "mean_us", "p50_us",
 # The five pipeline seams (must match rust obs::SEAM_KEYS).
 STAGE_KEYS = ("enqueue_to_batch", "batch_to_ship", "ship_to_open",
               "open_to_exec", "exec_to_reply")
+
+# Shed buckets of the admission block (schema v2). Together with
+# "replied" and "failed" they must partition "submitted" exactly.
+SHED_KEYS = ("shed_queue_full", "shed_deadline_submit",
+             "shed_deadline_batch", "shed_deadline_open",
+             "shed_shutdown")
+ADMISSION_KEYS = (("queue_cap", "submitted", "replied", "failed",
+                   "requeued_batches", "requeued_requests",
+                   "open_retries") + SHED_KEYS)
 
 
 def check_hist(doc, label, problems):
@@ -111,16 +123,52 @@ def check_stats(path):
             f"spans.recorded {spans.get('recorded')} < requests "
             f"{doc.get('requests')}")
 
+    # Admission block (schema v2, ISSUE 7): shed/requeue counters
+    # present and non-negative, and the conservation identity
+    # submitted == replied + shed_* + failed must hold exactly — a
+    # lost or double-counted request under faults shows up here.
+    adm = doc.get("admission")
+    if not isinstance(adm, dict):
+        problems.append("admission block missing (schema >= 2)")
+        adm = {}
+    missing = [k for k in ADMISSION_KEYS if k not in adm]
+    if missing:
+        problems.append(f"admission: missing {', '.join(missing)}")
+    negative = [k for k in ADMISSION_KEYS
+                if isinstance(adm.get(k), (int, float))
+                and adm[k] < 0]
+    if negative:
+        problems.append(f"admission: negative {', '.join(negative)}")
+    if not missing and not negative:
+        shed = sum(adm[k] for k in SHED_KEYS)
+        accounted = adm["replied"] + shed + adm["failed"]
+        if adm["submitted"] != accounted:
+            problems.append(
+                f"admission conservation: submitted "
+                f"{adm['submitted']} != replied {adm['replied']} + "
+                f"shed {shed} + failed {adm['failed']}")
+        if adm["replied"] != doc.get("requests"):
+            problems.append(
+                f"admission.replied {adm['replied']} != requests "
+                f"{doc.get('requests')}")
+
     if problems:
         print(f"bench_compare: stats check FAILED on {path}:",
               file=sys.stderr)
         for p in problems:
             print(f"  [REGRESSION] {p}", file=sys.stderr)
         return 1
+    shed = sum(adm[k] for k in SHED_KEYS)
     print(f"  [ok        ] stats schema v{doc['schema']}: "
           f"{doc['requests']} requests, {len(STAGE_KEYS)} stage "
           f"histograms, stage mass {stage_sum}us <= "
           f"e2e {e2e.get('sum_us', 0)}us, pool {sub} == {exe}")
+    print(f"  [ok        ] admission conservation: "
+          f"{adm['submitted']} submitted == {adm['replied']} replied "
+          f"+ {shed} shed + {adm['failed']} failed "
+          f"(requeued {adm['requeued_batches']} batches / "
+          f"{adm['requeued_requests']} requests, "
+          f"{adm['open_retries']} open retries)")
     print(f"bench_compare: stats shape OK for {path}")
     return 0
 
