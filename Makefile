@@ -8,7 +8,7 @@
 
 CARGO ?= cargo
 
-.PHONY: all build test fmt clippy smoke chaos bench-check bench-codec golden verify
+.PHONY: all build test test-dispatch fmt clippy smoke chaos bench-check bench-codec golden verify
 
 all: build
 
@@ -16,6 +16,15 @@ build:
 	$(CARGO) build --release
 
 test:
+	$(CARGO) test -q
+
+# Re-run the suite under each forced SIMD dispatch tier (ISSUE 8):
+# FMC_SIMD=off pins the scalar reference, =portable the lanewise
+# fallback, and the bare run takes the best tier the host CPU
+# detects. Mirrors the CI simd-dispatch matrix for local use.
+test-dispatch:
+	FMC_SIMD=off $(CARGO) test -q
+	FMC_SIMD=portable $(CARGO) test -q
 	$(CARGO) test -q
 
 fmt:

@@ -13,7 +13,8 @@
 //! which `tools/bench_compare.py` diffs against the checked-in file.
 
 use fmc_accel::bench_util::{BenchReport, Bencher, Sample};
-use fmc_accel::compress::{bitstream, codec, dct, qtable::qtable};
+use fmc_accel::compress::simd::{self, SimdTier};
+use fmc_accel::compress::{bitstream, codec, dct, quant, qtable::qtable};
 use fmc_accel::coordinator::transport::{
     DenseTransport, InterlayerTransport, SealedTransport,
 };
@@ -185,6 +186,95 @@ fn main() {
         "sealed transport must be bit-identical to dense"
     );
 
+    // Kernel-granularity SIMD tiers (ISSUE 8): every runnable
+    // dispatch tier against the scalar reference on the same inputs.
+    // Entry names carry a " [tier]" suffix; `tools/bench_compare.py`
+    // only requires the `[scalar]` rows, so a host without a feature
+    // (or a non-x86 host) simply emits fewer tiers.
+    println!(
+        "simd dispatch: active tier = {} (set FMC_SIMD to override)",
+        simd::active().name()
+    );
+    let hdrs: Vec<quant::QuantHeader> = blocks
+        .iter()
+        .map(|blk| bitstream::snap_header(quant::block_extrema(blk)))
+        .collect();
+    let scalar_seal =
+        bitstream::seal_with_simd(&cf, SimdTier::Scalar);
+    let mut tier_samples: Vec<(Sample, Option<u64>)> = Vec::new();
+    let blk_elems = Some(4096u64 * 64);
+    let fmap_elems = Some((32 * 64 * 64) as u64);
+    for &tier in &simd::available() {
+        let name = tier.name();
+        // Bit-identity spot checks before timing (the full sweep
+        // lives in tests/codec_par.rs).
+        {
+            let mut a = blocks[0];
+            let mut c = blocks[0];
+            simd::dct2d_fast_inplace(SimdTier::Scalar, &mut a);
+            simd::dct2d_fast_inplace(tier, &mut c);
+            assert_eq!(a, c, "dct2d [{name}] diverged from scalar");
+            let mut d0 = [0f32; 64];
+            let mut d1 = [0f32; 64];
+            simd::idct2d_sparse_into(
+                SimdTier::Scalar, &masked[0], bitmaps[0], &mut d0,
+            );
+            simd::idct2d_sparse_into(
+                tier, &masked[0], bitmaps[0], &mut d1,
+            );
+            assert_eq!(d0, d1, "gated idct [{name}] diverged");
+            assert_eq!(
+                scalar_seal,
+                bitstream::seal_with_simd(&cf, tier),
+                "seal [{name}] diverged from scalar"
+            );
+        }
+        let s = b.run(&format!("dct2d fast x4096 [{name}]"), || {
+            let mut acc = 0f32;
+            for blk in &blocks {
+                let mut t = *blk;
+                simd::dct2d_fast_inplace(tier, &mut t);
+                acc += t[0];
+            }
+            acc
+        });
+        tier_samples.push((s, blk_elems));
+        let s = b.run(&format!("idct2d gated x4096 [{name}]"), || {
+            let mut acc = 0f32;
+            let mut out = [0f32; 64];
+            for (blk, &bm) in masked.iter().zip(bitmaps.iter()) {
+                simd::idct2d_sparse_into(tier, blk, bm, &mut out);
+                acc += out[0];
+            }
+            acc
+        });
+        tier_samples.push((s, blk_elems));
+        let s = b.run(&format!("quantize x4096 [{name}]"), || {
+            let mut acc = 0i32;
+            let mut q1 = [0f32; 64];
+            let mut q2 = [0i16; 64];
+            for (blk, hdr) in blocks.iter().zip(hdrs.iter()) {
+                simd::gemm_quantize_with_into(
+                    tier, blk, hdr, &mut q1,
+                );
+                simd::qtable_quantize_into(
+                    tier, &q1, &qt, hdr, &mut q2,
+                );
+                acc += q2[0] as i32;
+            }
+            acc
+        });
+        tier_samples.push((s, blk_elems));
+        let s = b.run(&format!("seal 32x64x64 [{name}]"), || {
+            bitstream::seal_with_simd(&cf, tier).stream_bytes()
+        });
+        tier_samples.push((s, fmap_elems));
+        let s = b.run(&format!("open 32x64x64 [{name}]"), || {
+            bitstream::open_with_simd(&sealed, tier).nnz()
+        });
+        tier_samples.push((s, fmap_elems));
+    }
+
     // The serving-shaped workload: a stream of many *small* maps
     // (profiling samples, calibration sweeps, per-request interlayer
     // maps). Here the per-call `thread::scope` spawn the seed paid is
@@ -250,8 +340,6 @@ fn main() {
         acc
     });
 
-    let blk_elems = Some(4096u64 * 64);
-    let fmap_elems = Some((32 * 64 * 64) as u64);
     let small_elems = Some((64 * 8 * 16 * 16) as u64);
     for (s, elems) in [
         (&s1, blk_elems),
@@ -277,6 +365,10 @@ fn main() {
     ] {
         println!("{}", s.report());
         report.push(s, elems);
+    }
+    for (s, elems) in &tier_samples {
+        println!("{}", s.report());
+        report.push(s, *elems);
     }
 
     let speedup = |base: &Sample, new: &Sample| {

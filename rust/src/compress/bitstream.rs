@@ -62,6 +62,7 @@ use super::huffman::{
     canonical_codes, code_lengths, zigzag_scan, zigzag_unscan,
 };
 use super::quant::QuantHeader;
+use super::simd::{self, SimdTier};
 use super::{Block, BLOCK};
 use crate::exec::ExecPool;
 use crate::util::rint;
@@ -324,26 +325,33 @@ fn split_ref<'a>(
 /// on which pool worker runs it.
 fn seal_blocks(
     blocks: &[EncodedBlock], first_block: usize, flip: bool,
-    out: &mut ShardOut<'_>,
+    tier: SimdTier, out: &mut ShardOut<'_>,
 ) {
     let mut cursors = [0usize; 8];
+    // Whole-block widen scratch: at most 64 values × 2 wire bytes.
+    let mut wide = [0u8; 2 * 64];
     for (k, b) in blocks.iter().enumerate() {
         out.index[k * INDEX_WIRE_BYTES..(k + 1) * INDEX_WIRE_BYTES]
             .copy_from_slice(&b.bitmap.to_le_bytes());
         out.headers[k * HEADER_WIRE_BYTES..(k + 1) * HEADER_WIRE_BYTES]
             .copy_from_slice(&pack_header(&b.header).to_le_bytes());
         let flipped = flip && (first_block + k) % 2 == 1;
+        // Widen the block's whole value run to LE 16-bit words once,
+        // then scatter rows into their (possibly flipped) lanes as
+        // plain byte copies.
         let vals = b.values();
+        let wide = &mut wide[..VALUE_WIRE_BYTES * vals.len()];
+        simd::widen_values_le(tier, vals, wide);
         let mut vi = 0usize;
         for r in 0..BLOCK {
             let n = b.row_nnz(r);
             let lane = if flipped { BLOCK - 1 - r } else { r };
             let lo = cursors[lane];
-            for (j, &v) in vals[vi..vi + n].iter().enumerate() {
-                let w = (v as i16).to_le_bytes();
-                out.lanes[lane][lo + 2 * j] = w[0];
-                out.lanes[lane][lo + 2 * j + 1] = w[1];
-            }
+            out.lanes[lane][lo..lo + VALUE_WIRE_BYTES * n]
+                .copy_from_slice(
+                    &wide[VALUE_WIRE_BYTES * vi
+                        ..VALUE_WIRE_BYTES * (vi + n)],
+                );
             cursors[lane] = lo + VALUE_WIRE_BYTES * n;
             vi += n;
         }
@@ -355,7 +363,8 @@ fn seal_blocks(
 /// [`seal_blocks`]).
 fn open_blocks(
     index: &[u8], headers: &[u8], lanes: [&[u8]; 8],
-    first_block: usize, flip: bool, out: &mut [EncodedBlock],
+    first_block: usize, flip: bool, tier: SimdTier,
+    out: &mut [EncodedBlock],
 ) {
     let mut cursors = [0usize; 8];
     for (k, ob) in out.iter_mut().enumerate() {
@@ -374,18 +383,19 @@ fn open_blocks(
         let mut q2 = [0i16; 64];
         for r in 0..BLOCK {
             let lane = if flipped { BLOCK - 1 - r } else { r };
-            let mut rowbits = (bm >> (r * 8)) & 0xFF;
-            let mut cur = cursors[lane];
-            while rowbits != 0 {
-                let c = rowbits.trailing_zeros() as usize;
-                q2[r * BLOCK + c] = i16::from_le_bytes([
-                    lanes[lane][cur],
-                    lanes[lane][cur + 1],
-                ]);
-                cur += VALUE_WIRE_BYTES;
-                rowbits &= rowbits - 1;
-            }
-            cursors[lane] = cur;
+            let rowbits = ((bm >> (r * 8)) & 0xFF) as u8;
+            let cur = cursors[lane];
+            let row: &mut [i16; 8] = (&mut q2
+                [r * BLOCK..(r + 1) * BLOCK])
+                .try_into()
+                .unwrap();
+            cursors[lane] = cur
+                + simd::expand_row_values(
+                    tier,
+                    &lanes[lane][cur..],
+                    rowbits,
+                    row,
+                );
         }
         ob.encode_from(&q2, hdr);
         debug_assert_eq!(ob.bitmap, bm, "wire bitmap mismatch");
@@ -398,7 +408,8 @@ fn open_blocks(
 /// more than one shard is actually dispatched.
 fn seal_impl(
     cf: &CompressedFmap, shards: usize, pool: Option<&ExecPool>,
-    flip: bool, scheme: &'static str, out: &mut FmapBitstream,
+    flip: bool, scheme: &'static str, tier: SimdTier,
+    out: &mut FmapBitstream,
 ) {
     let bpc = cf.blocks_per_channel();
     let nblocks = cf.blocks.len();
@@ -479,7 +490,7 @@ fn seal_impl(
                     let end = (first + per_blocks).min(nblocks);
                     let blocks = &cf.blocks[first..end];
                     sc.submit(move || {
-                        seal_blocks(blocks, first, flip, &mut so)
+                        seal_blocks(blocks, first, flip, tier, &mut so)
                     });
                 }
             });
@@ -488,7 +499,9 @@ fn seal_impl(
             for (s, mut so) in shard_outs.into_iter().enumerate() {
                 let first = s * per_blocks;
                 let end = (first + per_blocks).min(nblocks);
-                seal_blocks(&cf.blocks[first..end], first, flip, &mut so);
+                seal_blocks(
+                    &cf.blocks[first..end], first, flip, tier, &mut so,
+                );
             }
         }
     }
@@ -509,7 +522,7 @@ fn bitmap_flip(scheme: &str) -> bool {
 /// has to clone the header/lane buffers.
 fn open_impl(
     bs: &FmapBitstream, index: &[u8], flip: bool, shards: usize,
-    pool: Option<&ExecPool>,
+    pool: Option<&ExecPool>, tier: SimdTier,
 ) -> CompressedFmap {
     let bpc = bs.h.div_ceil(BLOCK) * bs.w.div_ceil(BLOCK);
     let nblocks = bs.blocks();
@@ -555,7 +568,7 @@ fn open_impl(
                     sc.submit(move || {
                         open_blocks(
                             ichunk, hchunk, lanes_s, first, flip,
-                            bchunk,
+                            tier, bchunk,
                         )
                     });
                 }
@@ -564,7 +577,8 @@ fn open_impl(
         _ => {
             for (first, bchunk, ichunk, hchunk, lanes_s) in tasks {
                 open_blocks(
-                    ichunk, hchunk, lanes_s, first, flip, bchunk,
+                    ichunk, hchunk, lanes_s, first, flip, tier,
+                    bchunk,
                 );
             }
         }
@@ -575,13 +589,28 @@ fn open_impl(
 /// Seal to the bitmap wire format (serial; never touches the pool).
 pub fn seal(cf: &CompressedFmap) -> FmapBitstream {
     let mut out = FmapBitstream::empty();
-    seal_impl(cf, 1, None, true, SCHEME_BITMAP, &mut out);
+    seal_impl(
+        cf, 1, None, true, SCHEME_BITMAP, simd::active(), &mut out,
+    );
+    out
+}
+
+/// Serial seal with an explicit SIMD tier. Production paths use the
+/// process-wide [`simd::active`] tier; this entry point exists for
+/// the cross-tier bit-identity property tests and the per-tier bench
+/// entries, which need several tiers in one process (the `FMC_SIMD`
+/// override is read once and can't be switched after startup).
+pub fn seal_with_simd(
+    cf: &CompressedFmap, tier: SimdTier,
+) -> FmapBitstream {
+    let mut out = FmapBitstream::empty();
+    seal_impl(cf, 1, None, true, SCHEME_BITMAP, tier, &mut out);
     out
 }
 
 /// Serial seal reusing `out`'s stream allocations.
 pub fn seal_into(cf: &CompressedFmap, out: &mut FmapBitstream) {
-    seal_impl(cf, 1, None, true, SCHEME_BITMAP, out);
+    seal_impl(cf, 1, None, true, SCHEME_BITMAP, simd::active(), out);
 }
 
 /// Seal with channel shards on `pool` (1 shard = inline serial);
@@ -590,10 +619,14 @@ pub fn seal_sharded(
     cf: &CompressedFmap, shards: usize, pool: &ExecPool,
 ) -> FmapBitstream {
     let mut out = FmapBitstream::empty();
+    let tier = simd::active();
     if shards.clamp(1, cf.c.max(1)) == 1 {
-        seal_impl(cf, 1, None, true, SCHEME_BITMAP, &mut out);
+        seal_impl(cf, 1, None, true, SCHEME_BITMAP, tier, &mut out);
     } else {
-        seal_impl(cf, shards, Some(pool), true, SCHEME_BITMAP, &mut out);
+        seal_impl(
+            cf, shards, Some(pool), true, SCHEME_BITMAP, tier,
+            &mut out,
+        );
     }
     out
 }
@@ -614,13 +647,35 @@ pub fn seal_par(cf: &CompressedFmap) -> FmapBitstream {
 /// [`SCHEME_BITMAP_NOFLIP`] so [`open`] still decodes it).
 pub fn seal_unflipped(cf: &CompressedFmap) -> FmapBitstream {
     let mut out = FmapBitstream::empty();
-    seal_impl(cf, 1, None, false, SCHEME_BITMAP_NOFLIP, &mut out);
+    seal_impl(
+        cf,
+        1,
+        None,
+        false,
+        SCHEME_BITMAP_NOFLIP,
+        simd::active(),
+        &mut out,
+    );
     out
 }
 
 /// Open a bitmap stream (serial; never touches the pool).
 pub fn open(bs: &FmapBitstream) -> CompressedFmap {
-    open_impl(bs, &bs.index, bitmap_flip(bs.scheme), 1, None)
+    open_impl(
+        bs,
+        &bs.index,
+        bitmap_flip(bs.scheme),
+        1,
+        None,
+        simd::active(),
+    )
+}
+
+/// Serial open with an explicit SIMD tier (see [`seal_with_simd`]).
+pub fn open_with_simd(
+    bs: &FmapBitstream, tier: SimdTier,
+) -> CompressedFmap {
+    open_impl(bs, &bs.index, bitmap_flip(bs.scheme), 1, None, tier)
 }
 
 /// Open with channel shards on `pool`; identical output for every
@@ -629,10 +684,11 @@ pub fn open_sharded(
     bs: &FmapBitstream, shards: usize, pool: &ExecPool,
 ) -> CompressedFmap {
     let flip = bitmap_flip(bs.scheme);
+    let tier = simd::active();
     if shards.clamp(1, bs.c.max(1)) == 1 {
-        open_impl(bs, &bs.index, flip, 1, None)
+        open_impl(bs, &bs.index, flip, 1, None, tier)
     } else {
-        open_impl(bs, &bs.index, flip, shards, Some(pool))
+        open_impl(bs, &bs.index, flip, shards, Some(pool), tier)
     }
 }
 
@@ -735,7 +791,7 @@ impl FmapCodec for BitmapIndexCodec {
             &bs.index,
             bs.blocks() * INDEX_WIRE_BYTES,
         );
-        open_impl(bs, &index, true, 1, None)
+        open_impl(bs, &index, true, 1, None, simd::active())
     }
 }
 

@@ -31,12 +31,9 @@
 //!   records the spawn-amortization win on many small maps.
 
 use super::bitstream::snap_header;
-use super::dct;
 use super::encode::EncodedBlock;
-use super::quant::{
-    block_extrema, gemm_dequantize, gemm_quantize_with_into,
-    qtable_dequantize, qtable_quantize_into,
-};
+use super::quant::block_extrema;
+use super::simd::{self, SimdTier};
 use super::{Block, BLOCK, IMAX};
 use crate::exec::ExecPool;
 use crate::nn::Tensor3;
@@ -187,11 +184,14 @@ fn compress_channel_into(chan: &[f32], h: usize, w: usize, qt: &Block,
     let hb = h.div_ceil(BLOCK);
     let wb = w.div_ceil(BLOCK);
     debug_assert_eq!(out.len(), hb * wb);
+    // One tier lookup per channel plane; the per-block kernels below
+    // dispatch on it without re-reading the detection state.
+    let tier = simd::active();
     let mut bi = 0;
     for br in 0..hb {
         for bc in 0..wb {
             extract_tile(chan, h, w, br, bc, &mut scratch.tile);
-            dct::dct2d_fast_inplace(&mut scratch.tile);
+            simd::dct2d_fast_inplace(tier, &mut scratch.tile);
             // Snap the extrema onto the 32-bit wire grid *before* the
             // Eq. 7 affine map: the hardware only ever has the 16-bit
             // dynamic-fixed-point extrema it stores (§III-B), so the
@@ -199,8 +199,12 @@ fn compress_channel_into(chan: &[f32], h: usize, w: usize, qt: &Block,
             // same snapped values (a zero coefficient encodes to code
             // zero exactly) and sealing the block is lossless.
             let hdr = snap_header(block_extrema(&scratch.tile));
-            gemm_quantize_with_into(&scratch.tile, &hdr, &mut scratch.q1);
-            qtable_quantize_into(&scratch.q1, qt, &hdr, &mut scratch.q2);
+            simd::gemm_quantize_with_into(
+                tier, &scratch.tile, &hdr, &mut scratch.q1,
+            );
+            simd::qtable_quantize_into(
+                tier, &scratch.q1, qt, &hdr, &mut scratch.q2,
+            );
             out[bi].encode_from(&scratch.q2, hdr);
             bi += 1;
         }
@@ -223,7 +227,7 @@ fn compress_channel_into(chan: &[f32], h: usize, w: usize, qt: &Block,
 /// the dense two-step decode (bit-identical to the seed pipeline).
 #[inline]
 fn decode_tile(b: &EncodedBlock, qt: &Block, freq: &mut Block,
-               tile: &mut Block) {
+               tile: &mut Block, tier: SimdTier) {
     let zp = b.header.zero_point();
     let span = b.header.span();
     if span > 0.0 && zp > 0.0 && zp < IMAX {
@@ -231,6 +235,11 @@ fn decode_tile(b: &EncodedBlock, qt: &Block, freq: &mut Block,
             tile.fill(0.0);
             return;
         }
+        // The fused per-value dequantize stays scalar: it walks the
+        // bitmap's set bits (gather-shaped, cost ∝ nnz), which is
+        // exactly the access pattern lane-SIMD can't keep
+        // bit-identical cheaply — the transform below is where the
+        // block-shaped work is.
         freq.fill(0.0);
         let vals = b.values();
         let mut bm = b.bitmap;
@@ -242,16 +251,17 @@ fn decode_tile(b: &EncodedBlock, qt: &Block, freq: &mut Block,
             vi += 1;
             bm &= bm - 1;
         }
-        dct::idct2d_sparse_into(freq, b.bitmap, tile);
+        simd::idct2d_sparse_into(tier, freq, b.bitmap, tile);
     } else {
         // Clamped zero-point or degenerate span (where a zero code
         // legitimately dequantizes to the zero-point value, not ≈ 0):
         // dense decode, numerically identical to the two-step
-        // dequantize + dense inverse.
+        // dequantize + dense inverse. `freq` doubles as the q1'
+        // scratch.
         let q2 = b.decode();
-        let q1p = qtable_dequantize(&q2, qt, &b.header);
-        *tile = gemm_dequantize(&q1p, &b.header);
-        dct::idct2d_fast_inplace(tile);
+        simd::qtable_dequantize_into(tier, &q2, qt, &b.header, freq);
+        simd::gemm_dequantize_into(tier, freq, &b.header, tile);
+        simd::idct2d_fast_inplace(tier, tile);
     }
 }
 
@@ -263,12 +273,15 @@ fn decompress_channel_into(blocks: &[EncodedBlock], qt: &Block,
     let hb = h.div_ceil(BLOCK);
     let wb = w.div_ceil(BLOCK);
     debug_assert_eq!(blocks.len(), hb * wb);
+    let tier = simd::active();
     let mut bi = 0;
     for br in 0..hb {
         for bc in 0..wb {
             let b = &blocks[bi];
             bi += 1;
-            decode_tile(b, qt, &mut scratch.q1, &mut scratch.tile);
+            decode_tile(
+                b, qt, &mut scratch.q1, &mut scratch.tile, tier,
+            );
             insert_tile(chan, h, w, br, bc, &scratch.tile);
         }
     }
@@ -568,6 +581,7 @@ pub fn roundtrip_snr_db(x: &Tensor3, qtable: &Block) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::dct;
     use crate::compress::qtable::qtable;
     use crate::testutil::Prng;
 

@@ -98,7 +98,10 @@ pub fn idct2d(z: &Block) -> Block {
 // ---------------------------------------------------------------------------
 
 /// Even-half 4×4 coefficients `Ce` (rows k = 0,2,4,6 of C, left half).
-fn ce() -> &'static [[f32; 4]; 4] {
+/// `pub(crate)` so the `compress::simd` tiers share the exact same
+/// constants as the scalar reference (any re-derivation would risk
+/// last-bit drift).
+pub(crate) fn ce() -> &'static [[f32; 4]; 4] {
     static M: OnceLock<[[f32; 4]; 4]> = OnceLock::new();
     M.get_or_init(|| {
         let c = dct_matrix();
@@ -113,7 +116,7 @@ fn ce() -> &'static [[f32; 4]; 4] {
 }
 
 /// Odd-half 4×4 coefficients `Co` (rows k = 1,3,5,7 of C, left half).
-fn co() -> &'static [[f32; 4]; 4] {
+pub(crate) fn co() -> &'static [[f32; 4]; 4] {
     static M: OnceLock<[[f32; 4]; 4]> = OnceLock::new();
     M.get_or_init(|| {
         let c = dct_matrix();

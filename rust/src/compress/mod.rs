@@ -17,8 +17,10 @@
 //! (the packed wire format: sealed index/header/value streams behind
 //! the [`bitstream::FmapCodec`] trait), [`sealed`] (the
 //! [`sealed::SealedFmap`] transport handle — the compressed-domain
-//! pipeline currency), [`baseline`] (RLE / CSR / COO / STC
-//! comparators), [`fixed`] (16-bit dynamic fixed point, 8-bit
+//! pipeline currency), [`simd`] (runtime-dispatched SIMD tiers of
+//! the hot kernels, bit-identical to the scalar reference; see
+//! `README.md` §SIMD dispatch seam), [`baseline`] (RLE / CSR / COO /
+//! STC comparators), [`fixed`] (16-bit dynamic fixed point, 8-bit
 //! feature-wise quant).
 
 pub mod baseline;
@@ -31,6 +33,7 @@ pub mod huffman;
 pub mod qtable;
 pub mod quant;
 pub mod sealed;
+pub mod simd;
 
 /// One 8×8 spatial/frequency block, row-major.
 pub type Block = [f32; 64];

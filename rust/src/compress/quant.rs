@@ -91,8 +91,11 @@ pub fn qtable_quantize_into(q1: &Block, qt: &Block, hdr: &QuantHeader,
                             q2: &mut [i16; 64]) {
     let zp = hdr.zero_point();
     // Two passes: the all-f32 divide/round loop auto-vectorizes
-    // (vdivps+vroundps); interleaving the i16 casts defeats SIMD and
-    // costs ~8x on this hot path (EXPERIMENTS.md §Perf).
+    // (vdivps+vroundps); interleaving the i16 casts cost ~8x here
+    // before the split (EXPERIMENTS.md §Perf). This scalar form is
+    // the bit-identity reference — the production path dispatches to
+    // `compress/simd`, whose x86 tiers round and narrow in-register
+    // (cvtps2dq + packssdw, identical to `as i16` for |q2| ≤ 255).
     let mut tmp = [0f32; 64];
     for i in 0..64 {
         tmp[i] = rint((q1[i] - zp) / qt[i]);

@@ -1,0 +1,522 @@
+//! Runtime-dispatched SIMD tiers for the codec hot kernels (ISSUE 8).
+//!
+//! The paper's accelerator processes all lanes of an 8×8 block at
+//! once (fully parallel DCT/quantize hardware, §IV); the software hot
+//! path ran the same math one scalar lane at a time. This module puts
+//! the three hot kernels — the folded 4×4 DCT/IDCT products
+//! ([`dct2d_fast_inplace`] / [`idct2d_fast_inplace`] /
+//! [`idct2d_sparse_into`]), the Eq. 7/8/9/10 quantize lane loops
+//! ([`gemm_quantize_with_into`] / [`qtable_quantize_into`] /
+//! [`qtable_dequantize_into`] / [`gemm_dequantize_into`]), and the
+//! flip-pack 16-bit value-lane widen/expand
+//! ([`widen_values_le`] / [`expand_row_values`]) — behind one
+//! runtime-dispatch seam.
+//!
+//! **Tiers.** [`SimdTier::Scalar`] delegates to the untouched
+//! reference kernels in `dct.rs` / `quant.rs` (and loop-for-loop
+//! copies of the original `bitstream.rs` pack loops) — it IS the
+//! pre-dispatch code path. [`SimdTier::Portable`] is safe lanewise
+//! array code (eight 1-D transforms per instruction stream) that any
+//! backend's auto-vectorizer can profitably chew on; the quantize and
+//! pack loops delegate to scalar there because those loops already
+//! auto-vectorize as written (see `quant.rs`). [`SimdTier::Sse41`]
+//! and [`SimdTier::Avx2`] are `target_feature`-gated x86 intrinsics
+//! (`x86.rs`) selected once per process via
+//! `is_x86_feature_detected!`.
+//!
+//! **Bit identity is the contract, not a goal.** Every tier must
+//! produce byte-for-byte identical `CompressedFmap` and
+//! `FmapBitstream` output. The rules that make f32 SIMD exactly match
+//! the scalar reference:
+//!
+//! - no FMA: multiplies and adds stay separate ops, like the scalar
+//!   `a * b + acc` (Rust never contracts either form);
+//! - identical per-lane accumulation order, accumulators seeded with
+//!   `+0.0` exactly like the scalar `[0f32; 4]` inits;
+//! - gated IDCT terms are skipped by *blending* (`blendv`), never by
+//!   adding a masked `+0.0` — adding zero flips `-0.0` lanes;
+//! - rounding via `roundps` nearest-even = `util::rint`
+//!   (`round_ties_even`), and clamping via compare+blend reproducing
+//!   `f32::clamp`'s exact semantics (`-0.0.clamp(0.0, m) == -0.0`);
+//! - division uses the hardware divide (`divps`), same op as scalar.
+//!
+//! **Override.** `FMC_SIMD=off|portable|sse|avx2` forces a tier for
+//! A/B measurement (read once, at first use; `off` forces the scalar
+//! reference). Unavailable requests fall back to the best detected
+//! tier with a warning. Tests and benches that need several tiers in
+//! one process pass an explicit [`SimdTier`] instead — every kernel
+//! here takes the tier as its first argument, and
+//! `bitstream::{seal_with_simd, open_with_simd}` expose the same for
+//! whole streams.
+
+use std::sync::OnceLock;
+
+use super::dct;
+use super::quant::{self, QuantHeader};
+use super::Block;
+
+mod portable;
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod x86;
+
+/// One implementation tier of the codec hot kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdTier {
+    /// The untouched scalar reference kernels (bit-identity anchor).
+    Scalar,
+    /// Safe lanewise array code (auto-vectorizer friendly), no
+    /// target-feature requirements.
+    Portable,
+    /// 128-bit x86 intrinsics (`sse4.1` for `roundps`/`blendv`/
+    /// `pshufb`).
+    Sse41,
+    /// 256-bit x86 intrinsics.
+    Avx2,
+}
+
+impl SimdTier {
+    /// Stable lower-case name used in bench entry tags and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Portable => "portable",
+            SimdTier::Sse41 => "sse4.1",
+            SimdTier::Avx2 => "avx2",
+        }
+    }
+
+    /// Clamp to what this CPU can actually run: an x86 tier requested
+    /// on a host without the feature degrades to the best available
+    /// tier below it. Keeps every dispatch entry point safe to call
+    /// with any tier value.
+    pub fn sanitized(self) -> SimdTier {
+        match self {
+            SimdTier::Avx2 if !have_avx2() => {
+                if have_sse41() {
+                    SimdTier::Sse41
+                } else {
+                    SimdTier::Portable
+                }
+            }
+            SimdTier::Sse41 if !have_sse41() => SimdTier::Portable,
+            t => t,
+        }
+    }
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+fn have_sse41() -> bool {
+    std::arch::is_x86_feature_detected!("sse4.1")
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+fn have_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+fn have_sse41() -> bool {
+    false
+}
+
+#[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+fn have_avx2() -> bool {
+    false
+}
+
+/// Best tier this CPU supports.
+pub fn best_detected() -> SimdTier {
+    if have_avx2() {
+        SimdTier::Avx2
+    } else if have_sse41() {
+        SimdTier::Sse41
+    } else {
+        SimdTier::Portable
+    }
+}
+
+/// Every tier runnable on this CPU, scalar first (the reference the
+/// tier-sweep tests and benches compare everything against).
+pub fn available() -> Vec<SimdTier> {
+    let mut v = vec![SimdTier::Scalar, SimdTier::Portable];
+    if have_sse41() {
+        v.push(SimdTier::Sse41);
+    }
+    if have_avx2() {
+        v.push(SimdTier::Avx2);
+    }
+    v
+}
+
+/// Resolve an `FMC_SIMD`-style request string to a runnable tier.
+/// `None` / `""` / `auto` pick the best detected tier; unknown or
+/// unavailable requests warn and degrade rather than fail — a bench
+/// override must never turn into a crash in serving.
+pub fn select(req: Option<&str>) -> SimdTier {
+    let norm = req.map(|s| s.trim().to_ascii_lowercase());
+    let want = match norm.as_deref() {
+        None | Some("") | Some("auto") | Some("best") => {
+            best_detected()
+        }
+        Some("off") | Some("scalar") | Some("0") => SimdTier::Scalar,
+        Some("portable") => SimdTier::Portable,
+        Some("sse") | Some("sse4") | Some("sse4.1")
+        | Some("sse41") => SimdTier::Sse41,
+        Some("avx") | Some("avx2") => SimdTier::Avx2,
+        Some(other) => {
+            eprintln!(
+                "FMC_SIMD: unknown tier {other:?} \
+                 (expected off|portable|sse|avx2|auto); using {}",
+                best_detected().name()
+            );
+            best_detected()
+        }
+    };
+    let got = want.sanitized();
+    if got != want {
+        eprintln!(
+            "FMC_SIMD: {} not supported on this CPU; using {}",
+            want.name(),
+            got.name()
+        );
+    }
+    got
+}
+
+static ACTIVE: OnceLock<SimdTier> = OnceLock::new();
+
+/// The process-wide tier: `FMC_SIMD` if set (read once, at first
+/// use), else the best detected tier. All production codec entry
+/// points funnel through this.
+pub fn active() -> SimdTier {
+    *ACTIVE.get_or_init(|| {
+        select(std::env::var("FMC_SIMD").ok().as_deref())
+    })
+}
+
+/// Dispatch an expression per tier. The `Sse41`/`Avx2` arms are only
+/// compiled on x86; elsewhere those tier values (unreachable after
+/// [`SimdTier::sanitized`]) fall back to the portable expression.
+macro_rules! dispatch {
+    ($tier:expr, $scalar:expr, $portable:expr,
+     $sse:expr, $avx2:expr $(,)?) => {
+        match $tier {
+            SimdTier::Scalar => $scalar,
+            SimdTier::Portable => $portable,
+            #[cfg(any(
+                target_arch = "x86",
+                target_arch = "x86_64"
+            ))]
+            // SAFETY: `sanitized()` only yields these tiers when the
+            // matching target feature was detected at runtime.
+            SimdTier::Sse41 => unsafe { $sse },
+            #[cfg(any(
+                target_arch = "x86",
+                target_arch = "x86_64"
+            ))]
+            SimdTier::Avx2 => unsafe { $avx2 },
+            #[cfg(not(any(
+                target_arch = "x86",
+                target_arch = "x86_64"
+            )))]
+            SimdTier::Sse41 | SimdTier::Avx2 => $portable,
+        }
+    };
+}
+
+// --- transforms ------------------------------------------------------
+
+/// Tier-dispatched in-place forward 2-D DCT
+/// (≡ [`dct::dct2d_fast_inplace`] bit for bit).
+pub fn dct2d_fast_inplace(tier: SimdTier, x: &mut Block) {
+    dispatch!(
+        tier.sanitized(),
+        dct::dct2d_fast_inplace(x),
+        portable::dct2d_fast_inplace(x),
+        x86::sse::dct2d_fast_inplace(x),
+        x86::avx2::dct2d_fast_inplace(x),
+    )
+}
+
+/// Tier-dispatched in-place inverse 2-D DCT
+/// (≡ [`dct::idct2d_fast_inplace`] bit for bit).
+pub fn idct2d_fast_inplace(tier: SimdTier, z: &mut Block) {
+    dispatch!(
+        tier.sanitized(),
+        dct::idct2d_fast_inplace(z),
+        portable::idct2d_fast_inplace(z),
+        x86::sse::idct2d_fast_inplace(z),
+        x86::avx2::idct2d_fast_inplace(z),
+    )
+}
+
+/// Per-column occupancy of a block bitmap: `col_rows[c]` bit `r` ⇔
+/// `z[r*8+c]` occupied; `col_mask` bit `c` ⇔ column `c` non-empty.
+/// Same derivation as the scalar `dct::idct2d_sparse_into`.
+fn column_occupancy(bitmap: u64) -> ([u8; 8], u8) {
+    let mut col_rows = [0u8; 8];
+    let mut col_mask = 0u8;
+    for r in 0..8 {
+        let rowbits = ((bitmap >> (r * 8)) & 0xFF) as u8;
+        col_mask |= rowbits;
+        for (c, cr) in col_rows.iter_mut().enumerate() {
+            *cr |= ((rowbits >> c) & 1) << r;
+        }
+    }
+    (col_rows, col_mask)
+}
+
+/// Tier-dispatched sparsity-gated inverse 2-D DCT
+/// (≡ [`dct::idct2d_sparse_into`] bit for bit, including the sign of
+/// every exact zero — gating is done by blending, not by adding a
+/// masked zero).
+pub fn idct2d_sparse_into(
+    tier: SimdTier, z: &Block, bitmap: u64, out: &mut Block,
+) {
+    let tier = tier.sanitized();
+    if tier == SimdTier::Scalar {
+        return dct::idct2d_sparse_into(z, bitmap, out);
+    }
+    if bitmap == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let (col_rows, col_mask) = column_occupancy(bitmap);
+    dispatch!(
+        tier,
+        dct::idct2d_sparse_into(z, bitmap, out),
+        portable::idct2d_sparse_into(z, &col_rows, col_mask, out),
+        x86::sse::idct2d_sparse_into(z, &col_rows, col_mask, out),
+        x86::avx2::idct2d_sparse_into(z, &col_rows, col_mask, out),
+    )
+}
+
+// --- quantization ----------------------------------------------------
+
+/// Tier-dispatched Eq. 7 against a given header
+/// (≡ [`quant::gemm_quantize_with_into`] bit for bit; the vector
+/// tiers reproduce `f32::clamp` exactly, including `-0.0` staying
+/// `-0.0`). The Portable tier delegates to scalar: that loop already
+/// auto-vectorizes as written.
+pub fn gemm_quantize_with_into(
+    tier: SimdTier, freq: &Block, hdr: &QuantHeader, q1: &mut Block,
+) {
+    dispatch!(
+        tier.sanitized(),
+        quant::gemm_quantize_with_into(freq, hdr, q1),
+        quant::gemm_quantize_with_into(freq, hdr, q1),
+        x86::sse::gemm_quantize_with_into(freq, hdr, q1),
+        x86::avx2::gemm_quantize_with_into(freq, hdr, q1),
+    )
+}
+
+/// Tier-dispatched Eq. 8 (+zp)
+/// (≡ [`quant::qtable_quantize_into`] bit for bit: `roundps` is
+/// round-half-to-even like `util::rint`, and `cvtps2dq` + `packssdw`
+/// narrows identically to the scalar `as i16` for every value the
+/// codec can produce — |q2| ≤ 255 by construction).
+pub fn qtable_quantize_into(
+    tier: SimdTier, q1: &Block, qt: &Block, hdr: &QuantHeader,
+    q2: &mut [i16; 64],
+) {
+    dispatch!(
+        tier.sanitized(),
+        quant::qtable_quantize_into(q1, qt, hdr, q2),
+        quant::qtable_quantize_into(q1, qt, hdr, q2),
+        x86::sse::qtable_quantize_into(q1, qt, hdr.zero_point(), q2),
+        x86::avx2::qtable_quantize_into(q1, qt, hdr.zero_point(), q2),
+    )
+}
+
+/// Tier-dispatched Eq. 9 (+zp) into a caller buffer
+/// (≡ [`quant::qtable_dequantize`] bit for bit).
+pub fn qtable_dequantize_into(
+    tier: SimdTier, q2: &[i16; 64], qt: &Block, hdr: &QuantHeader,
+    q1: &mut Block,
+) {
+    dispatch!(
+        tier.sanitized(),
+        *q1 = quant::qtable_dequantize(q2, qt, hdr),
+        *q1 = quant::qtable_dequantize(q2, qt, hdr),
+        x86::sse::qtable_dequantize_into(
+            q2,
+            qt,
+            hdr.zero_point(),
+            q1
+        ),
+        x86::avx2::qtable_dequantize_into(
+            q2,
+            qt,
+            hdr.zero_point(),
+            q1
+        ),
+    )
+}
+
+/// Tier-dispatched Eq. 10 into a caller buffer
+/// (≡ [`quant::gemm_dequantize`] bit for bit).
+pub fn gemm_dequantize_into(
+    tier: SimdTier, q1p: &Block, hdr: &QuantHeader, f: &mut Block,
+) {
+    dispatch!(
+        tier.sanitized(),
+        *f = quant::gemm_dequantize(q1p, hdr),
+        *f = quant::gemm_dequantize(q1p, hdr),
+        x86::sse::gemm_dequantize_into(q1p, hdr, f),
+        x86::avx2::gemm_dequantize_into(q1p, hdr, f),
+    )
+}
+
+// --- flip-pack value lanes -------------------------------------------
+
+/// Loop-for-loop copy of the original `seal_blocks` inner widen: one
+/// LE 16-bit word per i8 value. Kept private here so the Scalar tier
+/// of the refactored seal path is byte-identical to the pre-dispatch
+/// code.
+fn widen_values_le_scalar(vals: &[i8], out: &mut [u8]) {
+    for (j, &v) in vals.iter().enumerate() {
+        let w = (v as i16).to_le_bytes();
+        out[2 * j] = w[0];
+        out[2 * j + 1] = w[1];
+    }
+}
+
+/// Widen a run of i8 codec values to the 16-bit little-endian SRAM
+/// words of the value lanes (`out.len() == 2 * vals.len()`). The seal
+/// path widens a whole block's value run at once, then scatters rows
+/// into their flip lanes with plain `copy_from_slice`.
+pub fn widen_values_le(tier: SimdTier, vals: &[i8], out: &mut [u8]) {
+    debug_assert_eq!(out.len(), 2 * vals.len());
+    dispatch!(
+        tier.sanitized(),
+        widen_values_le_scalar(vals, out),
+        widen_values_le_scalar(vals, out),
+        x86::sse::widen_values_le(vals, out),
+        x86::avx2::widen_values_le(vals, out),
+    )
+}
+
+/// Loop-for-loop copy of the original `open_blocks` inner expand:
+/// walk the set bits of `rowbits`, reading one LE 16-bit word per bit
+/// from `src` into the named column of `dst`. Returns the bytes
+/// consumed (`2 * popcount`). Unset columns of `dst` are left alone
+/// (the caller hands a zeroed row).
+fn expand_row_values_scalar(
+    src: &[u8], rowbits: u8, dst: &mut [i16; 8],
+) -> usize {
+    let mut bits = rowbits;
+    let mut k = 0usize;
+    while bits != 0 {
+        let c = bits.trailing_zeros() as usize;
+        dst[c] = i16::from_le_bytes([src[2 * k], src[2 * k + 1]]);
+        k += 1;
+        bits &= bits - 1;
+    }
+    2 * k
+}
+
+/// Expand one row's packed value run (`rowbits` = that row's bitmap
+/// byte) from a value lane into the row's 8 columns. `dst` must be
+/// zeroed for the unset columns (the open path hands a fresh
+/// `[0i16; 64]` block, so the SIMD tiers may store zeros there).
+/// Returns the lane bytes consumed.
+pub fn expand_row_values(
+    tier: SimdTier, src: &[u8], rowbits: u8, dst: &mut [i16; 8],
+) -> usize {
+    dispatch!(
+        tier.sanitized(),
+        expand_row_values_scalar(src, rowbits, dst),
+        expand_row_values_scalar(src, rowbits, dst),
+        x86::sse::expand_row_values(src, rowbits, dst),
+        x86::sse::expand_row_values(src, rowbits, dst),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_parses_overrides() {
+        assert_eq!(select(Some("off")), SimdTier::Scalar);
+        assert_eq!(select(Some("scalar")), SimdTier::Scalar);
+        assert_eq!(select(Some("portable")), SimdTier::Portable);
+        // Unknown strings degrade to the detected best, never panic.
+        assert_eq!(select(Some("quantum")), best_detected());
+        assert_eq!(select(None), best_detected());
+        assert_eq!(select(Some("AUTO")), best_detected());
+        // Feature requests come back sanitized to something runnable.
+        let got = select(Some("avx2"));
+        assert_eq!(got, SimdTier::Avx2.sanitized());
+        assert!(available().contains(&got));
+    }
+
+    #[test]
+    fn available_is_scalar_first_and_sanitized_closed() {
+        let av = available();
+        assert_eq!(av[0], SimdTier::Scalar);
+        assert!(av.contains(&SimdTier::Portable));
+        assert!(av.contains(&best_detected()));
+        for t in [
+            SimdTier::Scalar,
+            SimdTier::Portable,
+            SimdTier::Sse41,
+            SimdTier::Avx2,
+        ] {
+            assert!(
+                av.contains(&t.sanitized()),
+                "sanitized({:?}) must be runnable",
+                t
+            );
+        }
+    }
+
+    #[test]
+    fn column_occupancy_matches_definition() {
+        let bm: u64 = 0x8000_0000_0000_0103;
+        let (col_rows, col_mask) = column_occupancy(bm);
+        // row 0 has cols 0,1; row 1 has col 0; row 7 has col 7.
+        assert_eq!(col_rows[0], 0b0000_0011);
+        assert_eq!(col_rows[1], 0b0000_0001);
+        assert_eq!(col_rows[7], 0b1000_0000);
+        assert_eq!(col_mask, 0b1000_0011);
+        assert_eq!(column_occupancy(0), ([0u8; 8], 0));
+        assert_eq!(
+            column_occupancy(u64::MAX),
+            ([0xFFu8; 8], 0xFF)
+        );
+    }
+
+    #[test]
+    fn widen_and_expand_match_across_tiers() {
+        for &tier in &available() {
+            let vals: Vec<i8> = (0..23)
+                .map(|i| (i * 11 % 256) as u8 as i8)
+                .collect();
+            let mut want = vec![0u8; 2 * vals.len()];
+            widen_values_le_scalar(&vals, &mut want);
+            let mut got = vec![0u8; 2 * vals.len()];
+            widen_values_le(tier, &vals, &mut got);
+            assert_eq!(got, want, "widen tier {}", tier.name());
+
+            for rowbits in [0u8, 1, 0x80, 0xA5, 0xFF, 0x0F] {
+                let n = rowbits.count_ones() as usize;
+                let src: Vec<u8> =
+                    (0..2 * n + 3).map(|i| i as u8 + 1).collect();
+                let mut want = [0i16; 8];
+                let cw = expand_row_values_scalar(
+                    &src, rowbits, &mut want,
+                );
+                let mut got = [0i16; 8];
+                let cg =
+                    expand_row_values(tier, &src, rowbits, &mut got);
+                assert_eq!(
+                    (cg, got),
+                    (cw, want),
+                    "expand tier {} rowbits {rowbits:#x}",
+                    tier.name()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Portable lanewise tier: the 1-D transforms of all eight rows (or
+//! columns) of a block run as one instruction stream over `[f32; 8]`
+//! lane arrays — the shape every auto-vectorizer handles, with no
+//! target-feature requirement. Per-lane op order is exactly the
+//! scalar `dct1d_fast` / `idct1d_fast` / `idct1d_gated` sequence, so
+//! the output is bit-identical to the reference (same adds, same
+//! multiplies, same accumulation order, accumulators seeded `+0.0`).
+
+use crate::compress::dct;
+use crate::compress::Block;
+
+type Lanes = [[f32; 8]; 8];
+
+/// Lanewise `dct1d_fast`: `t[i][l]` = input position `i` of lane `l`.
+fn dct1d_lanes(t: &Lanes) -> Lanes {
+    let ce = dct::ce();
+    let co = dct::co();
+    let mut sum = [[0f32; 8]; 4];
+    let mut dif = [[0f32; 8]; 4];
+    for i in 0..4 {
+        for l in 0..8 {
+            sum[i][l] = t[i][l] + t[7 - i][l];
+            dif[i][l] = t[i][l] - t[7 - i][l];
+        }
+    }
+    let mut out = [[0f32; 8]; 8];
+    for k in 0..4 {
+        let mut e = [0f32; 8];
+        let mut o = [0f32; 8];
+        for i in 0..4 {
+            for l in 0..8 {
+                e[l] += ce[k][i] * sum[i][l];
+                o[l] += co[k][i] * dif[i][l];
+            }
+        }
+        out[2 * k] = e;
+        out[2 * k + 1] = o;
+    }
+    out
+}
+
+/// Lanewise `idct1d_fast`.
+fn idct1d_lanes(z: &Lanes) -> Lanes {
+    let ce = dct::ce();
+    let co = dct::co();
+    let mut s = [[0f32; 8]; 4];
+    let mut d = [[0f32; 8]; 4];
+    for n in 0..4 {
+        for k in 0..4 {
+            for l in 0..8 {
+                s[n][l] += ce[k][n] * z[2 * k][l];
+                d[n][l] += co[k][n] * z[2 * k + 1][l];
+            }
+        }
+    }
+    let mut x = [[0f32; 8]; 8];
+    for n in 0..4 {
+        for l in 0..8 {
+            x[n][l] = s[n][l] + d[n][l];
+            x[7 - n][l] = s[n][l] - d[n][l];
+        }
+    }
+    x
+}
+
+pub fn dct2d_fast_inplace(x: &mut Block) {
+    // Row pass: lanes are rows, so load transposed.
+    let mut t = [[0f32; 8]; 8];
+    for r in 0..8 {
+        for j in 0..8 {
+            t[j][r] = x[r * 8 + j];
+        }
+    }
+    let u = dct1d_lanes(&t); // u[j][r] = row-transformed y[r][j]
+    // Column pass: lanes are columns; position r vector is row r of y.
+    let mut v = [[0f32; 8]; 8];
+    for r in 0..8 {
+        for c in 0..8 {
+            v[r][c] = u[c][r];
+        }
+    }
+    let w = dct1d_lanes(&v); // w[k][c] = final z[k][c]
+    for k in 0..8 {
+        for c in 0..8 {
+            x[k * 8 + c] = w[k][c];
+        }
+    }
+}
+
+pub fn idct2d_fast_inplace(z: &mut Block) {
+    // Column pass first (mirrors the scalar order): lanes are
+    // columns, and row k of z is already the position-k vector.
+    let mut rows = [[0f32; 8]; 8];
+    for k in 0..8 {
+        for c in 0..8 {
+            rows[k][c] = z[k * 8 + c];
+        }
+    }
+    let u = idct1d_lanes(&rows); // u[n][c] = intermediate t[n][c]
+    // Row pass: lanes are rows; position l vector is column l of t.
+    let mut v = [[0f32; 8]; 8];
+    for l in 0..8 {
+        for r in 0..8 {
+            v[l][r] = u[r][l];
+        }
+    }
+    let w = idct1d_lanes(&v); // w[m][r] = out[r][m]
+    for r in 0..8 {
+        for m in 0..8 {
+            z[r * 8 + m] = w[m][r];
+        }
+    }
+}
+
+/// Lanewise `idct2d_sparse_into` body. The dispatcher has already
+/// handled `bitmap == 0` and derived the occupancy; cleared bits are
+/// exactly-zero coefficients (codec contract). Stage-1 gating is a
+/// per-lane skip — same accumulate-or-don't as scalar, so `-0.0`
+/// lanes survive exactly as the reference produces them.
+pub fn idct2d_sparse_into(
+    z: &Block, col_rows: &[u8; 8], col_mask: u8, out: &mut Block,
+) {
+    let ce = dct::ce();
+    let co = dct::co();
+    // Stage 1: lanes are columns, gated per (term, lane).
+    let mut s = [[0f32; 8]; 4];
+    let mut d = [[0f32; 8]; 4];
+    for k in 0..4 {
+        for n in 0..4 {
+            for c in 0..8 {
+                if col_rows[c] & (1 << (2 * k)) != 0 {
+                    s[n][c] += ce[k][n] * z[2 * k * 8 + c];
+                }
+                if col_rows[c] & (1 << (2 * k + 1)) != 0 {
+                    d[n][c] += co[k][n] * z[(2 * k + 1) * 8 + c];
+                }
+            }
+        }
+    }
+    let mut t = [[0f32; 8]; 8]; // t[n][c] = stage-1 output
+    for n in 0..4 {
+        for c in 0..8 {
+            t[n][c] = s[n][c] + d[n][c];
+            t[7 - n][c] = s[n][c] - d[n][c];
+        }
+    }
+    // Stage 2: lanes are rows, all sharing the column-occupancy gate.
+    let mut s2 = [[0f32; 8]; 4];
+    let mut d2 = [[0f32; 8]; 4];
+    for k in 0..4 {
+        if col_mask & (1 << (2 * k)) != 0 {
+            for n in 0..4 {
+                for r in 0..8 {
+                    s2[n][r] += ce[k][n] * t[r][2 * k];
+                }
+            }
+        }
+        if col_mask & (1 << (2 * k + 1)) != 0 {
+            for n in 0..4 {
+                for r in 0..8 {
+                    d2[n][r] += co[k][n] * t[r][2 * k + 1];
+                }
+            }
+        }
+    }
+    for n in 0..4 {
+        for r in 0..8 {
+            out[r * 8 + n] = s2[n][r] + d2[n][r];
+            out[r * 8 + (7 - n)] = s2[n][r] - d2[n][r];
+        }
+    }
+}

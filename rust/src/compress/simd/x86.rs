@@ -1,0 +1,858 @@
+//! x86 intrinsic tiers (SSE4.1 / AVX2) of the codec hot kernels.
+//!
+//! Both tiers run all eight 1-D transforms of a block pass in one
+//! instruction stream — AVX2 holds a lane set in one `__m256`, SSE in
+//! a `lo`/`hi` pair of `__m128` — with the scalar kernels' exact
+//! per-lane op order (see the bit-identity rules in `simd/mod.rs`).
+//! SSE4.1 is the floor because the kernels need `roundps`
+//! (nearest-even = `util::rint`), `blendvps` (gated-IDCT skip that
+//! preserves `-0.0`), and `pshufb`/`pmovsxbw` for the value-lane
+//! pack/unpack.
+//!
+//! Every `pub unsafe fn` here requires its module's target feature;
+//! the dispatcher in `simd/mod.rs` only routes to a tier after
+//! runtime detection.
+
+#[cfg(target_arch = "x86")]
+use core::arch::x86::*;
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+/// `roundps` immediate: round to nearest even, no exception signal —
+/// the vector twin of `util::rint` (`f32::round_ties_even`).
+const RINT: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+/// Per-term blend masks for the gated IDCT stage 1: lane `c` of term
+/// `j` is all-ones iff coefficient row `j` of column `c` is occupied.
+fn term_masks(col_rows: &[u8; 8]) -> [[u32; 8]; 8] {
+    let mut m = [[0u32; 8]; 8];
+    for (c, &cr) in col_rows.iter().enumerate() {
+        for (j, mj) in m.iter_mut().enumerate() {
+            if cr & (1 << j) != 0 {
+                mj[c] = u32::MAX;
+            }
+        }
+    }
+    m
+}
+
+/// `pshufb` control bytes expanding a packed run of 16-bit LE words
+/// to their bitmap-named columns: entry `m` scatters word `k` of the
+/// source to column position `c` for the `k`-th set bit `c` of `m`;
+/// unset columns get `0x80` controls (byte zero), i.e. value 0.
+const fn build_expand_shuf() -> [[u8; 16]; 256] {
+    let mut t = [[0x80u8; 16]; 256];
+    let mut m = 0usize;
+    while m < 256 {
+        let mut c = 0usize;
+        let mut k = 0usize;
+        while c < 8 {
+            if m & (1 << c) != 0 {
+                t[m][2 * c] = (2 * k) as u8;
+                t[m][2 * c + 1] = (2 * k + 1) as u8;
+                k += 1;
+            }
+            c += 1;
+        }
+        m += 1;
+    }
+    t
+}
+
+static EXPAND_SHUF: [[u8; 16]; 256] = build_expand_shuf();
+
+pub mod sse {
+    use super::*;
+    use crate::compress::quant::QuantHeader;
+    use crate::compress::{dct, Block, IMAX};
+
+    /// Eight f32 lanes as a pair of `__m128` halves (lanes 0..4 /
+    /// 4..8).
+    #[derive(Clone, Copy)]
+    struct F8 {
+        lo: __m128,
+        hi: __m128,
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn f8_load(p: *const f32) -> F8 {
+        F8 {
+            lo: _mm_loadu_ps(p),
+            hi: _mm_loadu_ps(p.add(4)),
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn f8_store(p: *mut f32, v: F8) {
+        _mm_storeu_ps(p, v.lo);
+        _mm_storeu_ps(p.add(4), v.hi);
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn f8_zero() -> F8 {
+        F8 {
+            lo: _mm_setzero_ps(),
+            hi: _mm_setzero_ps(),
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn f8_add(a: F8, b: F8) -> F8 {
+        F8 {
+            lo: _mm_add_ps(a.lo, b.lo),
+            hi: _mm_add_ps(a.hi, b.hi),
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn f8_sub(a: F8, b: F8) -> F8 {
+        F8 {
+            lo: _mm_sub_ps(a.lo, b.lo),
+            hi: _mm_sub_ps(a.hi, b.hi),
+        }
+    }
+
+    /// Scale by a broadcast constant (coefficient * lane vector).
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn f8_scale(c: f32, v: F8) -> F8 {
+        let s = _mm_set1_ps(c);
+        F8 {
+            lo: _mm_mul_ps(s, v.lo),
+            hi: _mm_mul_ps(s, v.hi),
+        }
+    }
+
+    /// Lanewise select: `mask` sign-bit set picks `b`, else `a`.
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn f8_blendv(a: F8, b: F8, mask: F8) -> F8 {
+        F8 {
+            lo: _mm_blendv_ps(a.lo, b.lo, mask.lo),
+            hi: _mm_blendv_ps(a.hi, b.hi, mask.hi),
+        }
+    }
+
+    /// Transpose a 4×4 quadrant held in four `__m128` rows.
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn tr4(
+        a: __m128, b: __m128, c: __m128, d: __m128,
+    ) -> (__m128, __m128, __m128, __m128) {
+        let t0 = _mm_unpacklo_ps(a, b); // a0 b0 a1 b1
+        let t1 = _mm_unpackhi_ps(a, b); // a2 b2 a3 b3
+        let t2 = _mm_unpacklo_ps(c, d); // c0 d0 c1 d1
+        let t3 = _mm_unpackhi_ps(c, d); // c2 d2 c3 d3
+        (
+            _mm_movelh_ps(t0, t2), // a0 b0 c0 d0
+            _mm_movehl_ps(t2, t0), // a1 b1 c1 d1
+            _mm_movelh_ps(t1, t3), // a2 b2 c2 d2
+            _mm_movehl_ps(t3, t1), // a3 b3 c3 d3
+        )
+    }
+
+    /// Full 8×8 transpose: `out[j]` lane `i` = `r[i]` lane `j`.
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn transpose8(r: &[F8; 8]) -> [F8; 8] {
+        let q00 = tr4(r[0].lo, r[1].lo, r[2].lo, r[3].lo);
+        let q10 = tr4(r[4].lo, r[5].lo, r[6].lo, r[7].lo);
+        let q01 = tr4(r[0].hi, r[1].hi, r[2].hi, r[3].hi);
+        let q11 = tr4(r[4].hi, r[5].hi, r[6].hi, r[7].hi);
+        [
+            F8 { lo: q00.0, hi: q10.0 },
+            F8 { lo: q00.1, hi: q10.1 },
+            F8 { lo: q00.2, hi: q10.2 },
+            F8 { lo: q00.3, hi: q10.3 },
+            F8 { lo: q01.0, hi: q11.0 },
+            F8 { lo: q01.1, hi: q11.1 },
+            F8 { lo: q01.2, hi: q11.2 },
+            F8 { lo: q01.3, hi: q11.3 },
+        ]
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn load_rows(x: &Block) -> [F8; 8] {
+        let p = x.as_ptr();
+        [
+            f8_load(p),
+            f8_load(p.add(8)),
+            f8_load(p.add(16)),
+            f8_load(p.add(24)),
+            f8_load(p.add(32)),
+            f8_load(p.add(40)),
+            f8_load(p.add(48)),
+            f8_load(p.add(56)),
+        ]
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn store_rows(x: &mut Block, r: &[F8; 8]) {
+        let p = x.as_mut_ptr();
+        f8_store(p, r[0]);
+        f8_store(p.add(8), r[1]);
+        f8_store(p.add(16), r[2]);
+        f8_store(p.add(24), r[3]);
+        f8_store(p.add(32), r[4]);
+        f8_store(p.add(40), r[5]);
+        f8_store(p.add(48), r[6]);
+        f8_store(p.add(56), r[7]);
+    }
+
+    /// Lanewise `dct1d_fast` (position index = array index).
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn dct1d(t: &[F8; 8]) -> [F8; 8] {
+        let ce = dct::ce();
+        let co = dct::co();
+        let mut sum = [f8_zero(); 4];
+        let mut dif = [f8_zero(); 4];
+        for i in 0..4 {
+            sum[i] = f8_add(t[i], t[7 - i]);
+            dif[i] = f8_sub(t[i], t[7 - i]);
+        }
+        let mut out = [f8_zero(); 8];
+        for k in 0..4 {
+            let mut e = f8_zero();
+            let mut o = f8_zero();
+            for i in 0..4 {
+                e = f8_add(e, f8_scale(ce[k][i], sum[i]));
+                o = f8_add(o, f8_scale(co[k][i], dif[i]));
+            }
+            out[2 * k] = e;
+            out[2 * k + 1] = o;
+        }
+        out
+    }
+
+    /// Lanewise `idct1d_fast`.
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn idct1d(z: &[F8; 8]) -> [F8; 8] {
+        let ce = dct::ce();
+        let co = dct::co();
+        let mut s = [f8_zero(); 4];
+        let mut d = [f8_zero(); 4];
+        for n in 0..4 {
+            for k in 0..4 {
+                s[n] = f8_add(s[n], f8_scale(ce[k][n], z[2 * k]));
+                d[n] =
+                    f8_add(d[n], f8_scale(co[k][n], z[2 * k + 1]));
+            }
+        }
+        let mut x = [f8_zero(); 8];
+        for n in 0..4 {
+            x[n] = f8_add(s[n], d[n]);
+            x[7 - n] = f8_sub(s[n], d[n]);
+        }
+        x
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dct2d_fast_inplace(x: &mut Block) {
+        let rows = load_rows(x);
+        let t = transpose8(&rows); // lanes = rows
+        let u = dct1d(&t);
+        let v = transpose8(&u); // lanes = columns
+        let w = dct1d(&v);
+        store_rows(x, &w);
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn idct2d_fast_inplace(z: &mut Block) {
+        let rows = load_rows(z); // lanes = columns (no transpose)
+        let u = idct1d(&rows);
+        let v = transpose8(&u); // lanes = rows
+        let w = idct1d(&v);
+        let o = transpose8(&w);
+        store_rows(z, &o);
+    }
+
+    /// Gated inverse (dispatcher already handled `bitmap == 0` and
+    /// derived the occupancy). Stage 1 skips terms per lane by
+    /// *blending* the pre-add accumulator back in — adding a masked
+    /// zero would flip `-0.0` lanes the scalar reference preserves.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn idct2d_sparse_into(
+        z: &Block, col_rows: &[u8; 8], col_mask: u8,
+        out: &mut Block,
+    ) {
+        let ce = dct::ce();
+        let co = dct::co();
+        let rows = load_rows(z); // lanes = columns
+        let masks = super::term_masks(col_rows);
+        let mut s = [f8_zero(); 4];
+        let mut d = [f8_zero(); 4];
+        for k in 0..4 {
+            let pe = masks[2 * k].as_ptr() as *const f32;
+            let po = masks[2 * k + 1].as_ptr() as *const f32;
+            let me = f8_load(pe);
+            let mo = f8_load(po);
+            for n in 0..4 {
+                let te = f8_scale(ce[k][n], rows[2 * k]);
+                s[n] = f8_blendv(s[n], f8_add(s[n], te), me);
+                let to = f8_scale(co[k][n], rows[2 * k + 1]);
+                d[n] = f8_blendv(d[n], f8_add(d[n], to), mo);
+            }
+        }
+        let mut t = [f8_zero(); 8];
+        for n in 0..4 {
+            t[n] = f8_add(s[n], d[n]);
+            t[7 - n] = f8_sub(s[n], d[n]);
+        }
+        // Stage 2: lanes = rows, uniform column-occupancy gate.
+        let v = transpose8(&t);
+        let mut s2 = [f8_zero(); 4];
+        let mut d2 = [f8_zero(); 4];
+        for k in 0..4 {
+            if col_mask & (1 << (2 * k)) != 0 {
+                for n in 0..4 {
+                    s2[n] = f8_add(
+                        s2[n],
+                        f8_scale(ce[k][n], v[2 * k]),
+                    );
+                }
+            }
+            if col_mask & (1 << (2 * k + 1)) != 0 {
+                for n in 0..4 {
+                    d2[n] = f8_add(
+                        d2[n],
+                        f8_scale(co[k][n], v[2 * k + 1]),
+                    );
+                }
+            }
+        }
+        let mut x2 = [f8_zero(); 8];
+        for n in 0..4 {
+            x2[n] = f8_add(s2[n], d2[n]);
+            x2[7 - n] = f8_sub(s2[n], d2[n]);
+        }
+        let o = transpose8(&x2);
+        store_rows(out, &o);
+    }
+
+    /// `f32::clamp(x, lo, hi)` reproduced exactly for non-NaN input
+    /// (compare+blend; notably `-0.0.clamp(0.0, hi) == -0.0`).
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn clamp_ps(x: __m128, lo: __m128, hi: __m128) -> __m128 {
+        let lt = _mm_cmplt_ps(x, lo);
+        let gt = _mm_cmpgt_ps(x, hi);
+        _mm_blendv_ps(_mm_blendv_ps(x, lo, lt), hi, gt)
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn gemm_quantize_with_into(
+        freq: &Block, hdr: &QuantHeader, q1: &mut Block,
+    ) {
+        let span = hdr.span();
+        if span <= 0.0 {
+            q1.fill(0.0); // scratch may hold a previous block
+            return;
+        }
+        let fmin = _mm_set1_ps(hdr.fmin);
+        let vspan = _mm_set1_ps(span);
+        let imax = _mm_set1_ps(IMAX);
+        let zero = _mm_setzero_ps();
+        for i in 0..16 {
+            let v = _mm_loadu_ps(freq.as_ptr().add(4 * i));
+            let t = _mm_mul_ps(
+                _mm_div_ps(_mm_sub_ps(v, fmin), vspan),
+                imax,
+            );
+            let r = _mm_round_ps::<RINT>(t);
+            _mm_storeu_ps(
+                q1.as_mut_ptr().add(4 * i),
+                clamp_ps(r, zero, imax),
+            );
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn qtable_quantize_into(
+        q1: &Block, qt: &Block, zp: f32, q2: &mut [i16; 64],
+    ) {
+        let zpv = _mm_set1_ps(zp);
+        for i in 0..8 {
+            let a = _mm_loadu_ps(q1.as_ptr().add(8 * i));
+            let b = _mm_loadu_ps(q1.as_ptr().add(8 * i + 4));
+            let qa = _mm_loadu_ps(qt.as_ptr().add(8 * i));
+            let qb = _mm_loadu_ps(qt.as_ptr().add(8 * i + 4));
+            let ra = _mm_round_ps::<RINT>(_mm_div_ps(
+                _mm_sub_ps(a, zpv),
+                qa,
+            ));
+            let rb = _mm_round_ps::<RINT>(_mm_div_ps(
+                _mm_sub_ps(b, zpv),
+                qb,
+            ));
+            let p = _mm_packs_epi32(
+                _mm_cvtps_epi32(ra),
+                _mm_cvtps_epi32(rb),
+            );
+            _mm_storeu_si128(
+                q2.as_mut_ptr().add(8 * i) as *mut __m128i,
+                p,
+            );
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn qtable_dequantize_into(
+        q2: &[i16; 64], qt: &Block, zp: f32, q1: &mut Block,
+    ) {
+        let zpv = _mm_set1_ps(zp);
+        for i in 0..8 {
+            let w = _mm_loadu_si128(
+                q2.as_ptr().add(8 * i) as *const __m128i
+            );
+            let fa = _mm_cvtepi32_ps(_mm_cvtepi16_epi32(w));
+            let fb = _mm_cvtepi32_ps(_mm_cvtepi16_epi32(
+                _mm_srli_si128::<8>(w),
+            ));
+            let qa = _mm_loadu_ps(qt.as_ptr().add(8 * i));
+            let qb = _mm_loadu_ps(qt.as_ptr().add(8 * i + 4));
+            _mm_storeu_ps(
+                q1.as_mut_ptr().add(8 * i),
+                _mm_add_ps(_mm_mul_ps(fa, qa), zpv),
+            );
+            _mm_storeu_ps(
+                q1.as_mut_ptr().add(8 * i + 4),
+                _mm_add_ps(_mm_mul_ps(fb, qb), zpv),
+            );
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn gemm_dequantize_into(
+        q1p: &Block, hdr: &QuantHeader, f: &mut Block,
+    ) {
+        let imax = _mm_set1_ps(IMAX);
+        let span = _mm_set1_ps(hdr.span());
+        let fmin = _mm_set1_ps(hdr.fmin);
+        for i in 0..16 {
+            let q = _mm_loadu_ps(q1p.as_ptr().add(4 * i));
+            let r = _mm_add_ps(
+                _mm_mul_ps(_mm_div_ps(q, imax), span),
+                fmin,
+            );
+            _mm_storeu_ps(f.as_mut_ptr().add(4 * i), r);
+        }
+    }
+
+    /// Sign-extend i8 values to 16-bit LE words (`pmovsxbw`), 8 per
+    /// step, stack-buffered tail.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn widen_values_le(vals: &[i8], out: &mut [u8]) {
+        let n = vals.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm_loadl_epi64(
+                vals.as_ptr().add(i) as *const __m128i
+            );
+            let w = _mm_cvtepi8_epi16(v);
+            _mm_storeu_si128(
+                out.as_mut_ptr().add(2 * i) as *mut __m128i,
+                w,
+            );
+            i += 8;
+        }
+        if i < n {
+            let mut buf = [0i8; 8];
+            buf[..n - i].copy_from_slice(&vals[i..]);
+            let v =
+                _mm_loadl_epi64(buf.as_ptr() as *const __m128i);
+            let w = _mm_cvtepi8_epi16(v);
+            let mut ob = [0u8; 16];
+            _mm_storeu_si128(ob.as_mut_ptr() as *mut __m128i, w);
+            out[2 * i..].copy_from_slice(&ob[..2 * (n - i)]);
+        }
+    }
+
+    /// Scatter one row's packed LE words to their bitmap-named
+    /// columns with one `pshufb` (zeros to unset columns — the
+    /// caller's row is freshly zeroed). Stack-buffers the lane tail
+    /// when fewer than 16 bytes remain.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn expand_row_values(
+        src: &[u8], rowbits: u8, dst: &mut [i16; 8],
+    ) -> usize {
+        let n = rowbits.count_ones() as usize;
+        let shuf = _mm_loadu_si128(
+            EXPAND_SHUF[rowbits as usize].as_ptr()
+                as *const __m128i,
+        );
+        let v = if src.len() >= 16 {
+            _mm_loadu_si128(src.as_ptr() as *const __m128i)
+        } else {
+            let mut buf = [0u8; 16];
+            buf[..2 * n].copy_from_slice(&src[..2 * n]);
+            _mm_loadu_si128(buf.as_ptr() as *const __m128i)
+        };
+        _mm_storeu_si128(
+            dst.as_mut_ptr() as *mut __m128i,
+            _mm_shuffle_epi8(v, shuf),
+        );
+        2 * n
+    }
+}
+
+pub mod avx2 {
+    use super::*;
+    use crate::compress::quant::QuantHeader;
+    use crate::compress::{dct, Block, IMAX};
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_rows(x: &Block) -> [__m256; 8] {
+        let p = x.as_ptr();
+        [
+            _mm256_loadu_ps(p),
+            _mm256_loadu_ps(p.add(8)),
+            _mm256_loadu_ps(p.add(16)),
+            _mm256_loadu_ps(p.add(24)),
+            _mm256_loadu_ps(p.add(32)),
+            _mm256_loadu_ps(p.add(40)),
+            _mm256_loadu_ps(p.add(48)),
+            _mm256_loadu_ps(p.add(56)),
+        ]
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_rows(x: &mut Block, r: &[__m256; 8]) {
+        let p = x.as_mut_ptr();
+        _mm256_storeu_ps(p, r[0]);
+        _mm256_storeu_ps(p.add(8), r[1]);
+        _mm256_storeu_ps(p.add(16), r[2]);
+        _mm256_storeu_ps(p.add(24), r[3]);
+        _mm256_storeu_ps(p.add(32), r[4]);
+        _mm256_storeu_ps(p.add(40), r[5]);
+        _mm256_storeu_ps(p.add(48), r[6]);
+        _mm256_storeu_ps(p.add(56), r[7]);
+    }
+
+    /// Full 8×8 transpose: `out[j]` lane `i` = `r[i]` lane `j`
+    /// (unpack pairs → 4-wide shuffles → 128-bit half swaps).
+    #[target_feature(enable = "avx2")]
+    unsafe fn transpose8(r: &[__m256; 8]) -> [__m256; 8] {
+        let t0 = _mm256_unpacklo_ps(r[0], r[1]);
+        let t1 = _mm256_unpackhi_ps(r[0], r[1]);
+        let t2 = _mm256_unpacklo_ps(r[2], r[3]);
+        let t3 = _mm256_unpackhi_ps(r[2], r[3]);
+        let t4 = _mm256_unpacklo_ps(r[4], r[5]);
+        let t5 = _mm256_unpackhi_ps(r[4], r[5]);
+        let t6 = _mm256_unpacklo_ps(r[6], r[7]);
+        let t7 = _mm256_unpackhi_ps(r[6], r[7]);
+        let u0 = _mm256_shuffle_ps::<0b01_00_01_00>(t0, t2);
+        let u1 = _mm256_shuffle_ps::<0b11_10_11_10>(t0, t2);
+        let u2 = _mm256_shuffle_ps::<0b01_00_01_00>(t1, t3);
+        let u3 = _mm256_shuffle_ps::<0b11_10_11_10>(t1, t3);
+        let u4 = _mm256_shuffle_ps::<0b01_00_01_00>(t4, t6);
+        let u5 = _mm256_shuffle_ps::<0b11_10_11_10>(t4, t6);
+        let u6 = _mm256_shuffle_ps::<0b01_00_01_00>(t5, t7);
+        let u7 = _mm256_shuffle_ps::<0b11_10_11_10>(t5, t7);
+        [
+            _mm256_permute2f128_ps::<0x20>(u0, u4),
+            _mm256_permute2f128_ps::<0x20>(u1, u5),
+            _mm256_permute2f128_ps::<0x20>(u2, u6),
+            _mm256_permute2f128_ps::<0x20>(u3, u7),
+            _mm256_permute2f128_ps::<0x31>(u0, u4),
+            _mm256_permute2f128_ps::<0x31>(u1, u5),
+            _mm256_permute2f128_ps::<0x31>(u2, u6),
+            _mm256_permute2f128_ps::<0x31>(u3, u7),
+        ]
+    }
+
+    /// Lanewise `dct1d_fast`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dct1d(t: &[__m256; 8]) -> [__m256; 8] {
+        let ce = dct::ce();
+        let co = dct::co();
+        let mut sum = [_mm256_setzero_ps(); 4];
+        let mut dif = [_mm256_setzero_ps(); 4];
+        for i in 0..4 {
+            sum[i] = _mm256_add_ps(t[i], t[7 - i]);
+            dif[i] = _mm256_sub_ps(t[i], t[7 - i]);
+        }
+        let mut out = [_mm256_setzero_ps(); 8];
+        for k in 0..4 {
+            let mut e = _mm256_setzero_ps();
+            let mut o = _mm256_setzero_ps();
+            for i in 0..4 {
+                e = _mm256_add_ps(
+                    e,
+                    _mm256_mul_ps(
+                        _mm256_set1_ps(ce[k][i]),
+                        sum[i],
+                    ),
+                );
+                o = _mm256_add_ps(
+                    o,
+                    _mm256_mul_ps(
+                        _mm256_set1_ps(co[k][i]),
+                        dif[i],
+                    ),
+                );
+            }
+            out[2 * k] = e;
+            out[2 * k + 1] = o;
+        }
+        out
+    }
+
+    /// Lanewise `idct1d_fast`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn idct1d(z: &[__m256; 8]) -> [__m256; 8] {
+        let ce = dct::ce();
+        let co = dct::co();
+        let mut s = [_mm256_setzero_ps(); 4];
+        let mut d = [_mm256_setzero_ps(); 4];
+        for n in 0..4 {
+            for k in 0..4 {
+                s[n] = _mm256_add_ps(
+                    s[n],
+                    _mm256_mul_ps(
+                        _mm256_set1_ps(ce[k][n]),
+                        z[2 * k],
+                    ),
+                );
+                d[n] = _mm256_add_ps(
+                    d[n],
+                    _mm256_mul_ps(
+                        _mm256_set1_ps(co[k][n]),
+                        z[2 * k + 1],
+                    ),
+                );
+            }
+        }
+        let mut x = [_mm256_setzero_ps(); 8];
+        for n in 0..4 {
+            x[n] = _mm256_add_ps(s[n], d[n]);
+            x[7 - n] = _mm256_sub_ps(s[n], d[n]);
+        }
+        x
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dct2d_fast_inplace(x: &mut Block) {
+        let rows = load_rows(x);
+        let t = transpose8(&rows); // lanes = rows
+        let u = dct1d(&t);
+        let v = transpose8(&u); // lanes = columns
+        let w = dct1d(&v);
+        store_rows(x, &w);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn idct2d_fast_inplace(z: &mut Block) {
+        let rows = load_rows(z); // lanes = columns (no transpose)
+        let u = idct1d(&rows);
+        let v = transpose8(&u); // lanes = rows
+        let w = idct1d(&v);
+        let o = transpose8(&w);
+        store_rows(z, &o);
+    }
+
+    /// Gated inverse; see the SSE twin for the blend rationale.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn idct2d_sparse_into(
+        z: &Block, col_rows: &[u8; 8], col_mask: u8,
+        out: &mut Block,
+    ) {
+        let ce = dct::ce();
+        let co = dct::co();
+        let rows = load_rows(z); // lanes = columns
+        let masks = super::term_masks(col_rows);
+        let mut s = [_mm256_setzero_ps(); 4];
+        let mut d = [_mm256_setzero_ps(); 4];
+        for k in 0..4 {
+            let me = _mm256_loadu_ps(
+                masks[2 * k].as_ptr() as *const f32
+            );
+            let mo = _mm256_loadu_ps(
+                masks[2 * k + 1].as_ptr() as *const f32,
+            );
+            for n in 0..4 {
+                let te = _mm256_mul_ps(
+                    _mm256_set1_ps(ce[k][n]),
+                    rows[2 * k],
+                );
+                s[n] = _mm256_blendv_ps(
+                    s[n],
+                    _mm256_add_ps(s[n], te),
+                    me,
+                );
+                let to = _mm256_mul_ps(
+                    _mm256_set1_ps(co[k][n]),
+                    rows[2 * k + 1],
+                );
+                d[n] = _mm256_blendv_ps(
+                    d[n],
+                    _mm256_add_ps(d[n], to),
+                    mo,
+                );
+            }
+        }
+        let mut t = [_mm256_setzero_ps(); 8];
+        for n in 0..4 {
+            t[n] = _mm256_add_ps(s[n], d[n]);
+            t[7 - n] = _mm256_sub_ps(s[n], d[n]);
+        }
+        let v = transpose8(&t); // lanes = rows
+        let mut s2 = [_mm256_setzero_ps(); 4];
+        let mut d2 = [_mm256_setzero_ps(); 4];
+        for k in 0..4 {
+            if col_mask & (1 << (2 * k)) != 0 {
+                for n in 0..4 {
+                    s2[n] = _mm256_add_ps(
+                        s2[n],
+                        _mm256_mul_ps(
+                            _mm256_set1_ps(ce[k][n]),
+                            v[2 * k],
+                        ),
+                    );
+                }
+            }
+            if col_mask & (1 << (2 * k + 1)) != 0 {
+                for n in 0..4 {
+                    d2[n] = _mm256_add_ps(
+                        d2[n],
+                        _mm256_mul_ps(
+                            _mm256_set1_ps(co[k][n]),
+                            v[2 * k + 1],
+                        ),
+                    );
+                }
+            }
+        }
+        let mut x2 = [_mm256_setzero_ps(); 8];
+        for n in 0..4 {
+            x2[n] = _mm256_add_ps(s2[n], d2[n]);
+            x2[7 - n] = _mm256_sub_ps(s2[n], d2[n]);
+        }
+        let o = transpose8(&x2);
+        store_rows(out, &o);
+    }
+
+    /// `f32::clamp` reproduced exactly for non-NaN input.
+    #[target_feature(enable = "avx2")]
+    unsafe fn clamp_ps(
+        x: __m256, lo: __m256, hi: __m256,
+    ) -> __m256 {
+        let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(x, lo);
+        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(x, hi);
+        _mm256_blendv_ps(_mm256_blendv_ps(x, lo, lt), hi, gt)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_quantize_with_into(
+        freq: &Block, hdr: &QuantHeader, q1: &mut Block,
+    ) {
+        let span = hdr.span();
+        if span <= 0.0 {
+            q1.fill(0.0); // scratch may hold a previous block
+            return;
+        }
+        let fmin = _mm256_set1_ps(hdr.fmin);
+        let vspan = _mm256_set1_ps(span);
+        let imax = _mm256_set1_ps(IMAX);
+        let zero = _mm256_setzero_ps();
+        for i in 0..8 {
+            let v = _mm256_loadu_ps(freq.as_ptr().add(8 * i));
+            let t = _mm256_mul_ps(
+                _mm256_div_ps(_mm256_sub_ps(v, fmin), vspan),
+                imax,
+            );
+            let r = _mm256_round_ps::<RINT>(t);
+            _mm256_storeu_ps(
+                q1.as_mut_ptr().add(8 * i),
+                clamp_ps(r, zero, imax),
+            );
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn qtable_quantize_into(
+        q1: &Block, qt: &Block, zp: f32, q2: &mut [i16; 64],
+    ) {
+        let zpv = _mm256_set1_ps(zp);
+        for i in 0..8 {
+            let q = _mm256_loadu_ps(q1.as_ptr().add(8 * i));
+            let qtv = _mm256_loadu_ps(qt.as_ptr().add(8 * i));
+            let r = _mm256_round_ps::<RINT>(_mm256_div_ps(
+                _mm256_sub_ps(q, zpv),
+                qtv,
+            ));
+            let w = _mm256_cvtps_epi32(r);
+            // packssdw within one 128-bit lane keeps element order
+            // (the 256-bit form interleaves halves).
+            let p = _mm_packs_epi32(
+                _mm256_castsi256_si128(w),
+                _mm256_extracti128_si256::<1>(w),
+            );
+            _mm_storeu_si128(
+                q2.as_mut_ptr().add(8 * i) as *mut __m128i,
+                p,
+            );
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn qtable_dequantize_into(
+        q2: &[i16; 64], qt: &Block, zp: f32, q1: &mut Block,
+    ) {
+        let zpv = _mm256_set1_ps(zp);
+        for i in 0..8 {
+            let w = _mm_loadu_si128(
+                q2.as_ptr().add(8 * i) as *const __m128i
+            );
+            let f = _mm256_cvtepi32_ps(_mm256_cvtepi16_epi32(w));
+            let qtv = _mm256_loadu_ps(qt.as_ptr().add(8 * i));
+            _mm256_storeu_ps(
+                q1.as_mut_ptr().add(8 * i),
+                _mm256_add_ps(_mm256_mul_ps(f, qtv), zpv),
+            );
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_dequantize_into(
+        q1p: &Block, hdr: &QuantHeader, f: &mut Block,
+    ) {
+        let imax = _mm256_set1_ps(IMAX);
+        let span = _mm256_set1_ps(hdr.span());
+        let fmin = _mm256_set1_ps(hdr.fmin);
+        for i in 0..8 {
+            let q = _mm256_loadu_ps(q1p.as_ptr().add(8 * i));
+            let r = _mm256_add_ps(
+                _mm256_mul_ps(_mm256_div_ps(q, imax), span),
+                fmin,
+            );
+            _mm256_storeu_ps(f.as_mut_ptr().add(8 * i), r);
+        }
+    }
+
+    /// Sign-extend i8 values to 16-bit LE words, 16 per step
+    /// (`vpmovsxbw ymm`), stack-buffered tail.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn widen_values_le(vals: &[i8], out: &mut [u8]) {
+        let n = vals.len();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let v = _mm_loadu_si128(
+                vals.as_ptr().add(i) as *const __m128i
+            );
+            let w = _mm256_cvtepi8_epi16(v);
+            _mm256_storeu_si256(
+                out.as_mut_ptr().add(2 * i) as *mut __m256i,
+                w,
+            );
+            i += 16;
+        }
+        if i < n {
+            let mut buf = [0i8; 16];
+            buf[..n - i].copy_from_slice(&vals[i..]);
+            let v =
+                _mm_loadu_si128(buf.as_ptr() as *const __m128i);
+            let w = _mm256_cvtepi8_epi16(v);
+            let mut ob = [0u8; 32];
+            _mm256_storeu_si256(
+                ob.as_mut_ptr() as *mut __m256i,
+                w,
+            );
+            out[2 * i..].copy_from_slice(&ob[..2 * (n - i)]);
+        }
+    }
+}

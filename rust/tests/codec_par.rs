@@ -8,8 +8,10 @@
 
 use fmc_accel::compress::bitstream;
 use fmc_accel::compress::codec::CompressedFmap;
-use fmc_accel::compress::encode::FlipPacker;
+use fmc_accel::compress::encode::{EncodedBlock, FlipPacker};
+use fmc_accel::compress::quant::{self, QuantHeader};
 use fmc_accel::compress::sealed::SealedFmap;
+use fmc_accel::compress::simd::{self, SimdTier};
 use fmc_accel::compress::{codec, dct, qtable::qtable};
 use fmc_accel::exec::ExecPool;
 use fmc_accel::nn::Tensor3;
@@ -332,4 +334,193 @@ fn idct_sparse_corner_bitmaps() {
     // callers guarantee cleared bits are zero, so pass a zero block
     let zeros = [0f32; 64];
     assert_eq!(dct::idct2d_sparse(&zeros, 0), dct::idct2d_fast(&zeros));
+}
+
+// --- SIMD dispatch tiers (ISSUE 8) -----------------------------------
+//
+// Every tier in `simd::available()` must be BIT-identical to the
+// Scalar tier (which delegates to the untouched reference kernels):
+// f32 outputs are compared through `to_bits`, so even a `-0.0` vs
+// `+0.0` divergence fails. The `FMC_SIMD` CI matrix legs rerun this
+// whole file under forced tiers; these tests additionally sweep every
+// runnable tier inside one process via the explicit-tier APIs.
+
+fn bits64(b: &[f32; 64]) -> Vec<u32> {
+    b.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn simd_transforms_bit_identical_across_tiers() {
+    let tiers = simd::available();
+    check_prop("simd dct2d/idct2d ≡ scalar", 40, |p| {
+        let mut z = [0f32; 64];
+        p.fill_normal(&mut z, 2.0);
+        let mut fwd = z;
+        simd::dct2d_fast_inplace(SimdTier::Scalar, &mut fwd);
+        let mut inv = z;
+        simd::idct2d_fast_inplace(SimdTier::Scalar, &mut inv);
+        for &t in &tiers {
+            let mut f = z;
+            simd::dct2d_fast_inplace(t, &mut f);
+            assert_eq!(bits64(&f), bits64(&fwd), "dct2d [{}]", t.name());
+            let mut i = z;
+            simd::idct2d_fast_inplace(t, &mut i);
+            assert_eq!(bits64(&i), bits64(&inv), "idct2d [{}]", t.name());
+        }
+    });
+}
+
+#[test]
+fn simd_sparse_idct_bit_identical_across_tiers() {
+    let tiers = simd::available();
+    check_prop("simd idct2d_sparse ≡ scalar", 40, |p| {
+        let mut z = [0f32; 64];
+        p.fill_normal(&mut z, 2.0);
+        // Random density from ~6% to 100% (same recipe as the
+        // sparse ≡ dense test above), honoring the contract that
+        // cleared bits are exactly-zero coefficients.
+        let mut keep = u64::MAX;
+        for _ in 0..p.below(5) {
+            keep &= p.next_u64();
+        }
+        let mut bm = 0u64;
+        for (i, v) in z.iter_mut().enumerate() {
+            if keep & (1 << i) == 0 {
+                *v = 0.0;
+            } else if *v != 0.0 {
+                bm |= 1 << i;
+            }
+        }
+        let mut want = [0f32; 64];
+        simd::idct2d_sparse_into(SimdTier::Scalar, &z, bm, &mut want);
+        for &t in &tiers {
+            // Dirty output buffer: the kernel must overwrite every
+            // position, including gated-to-zero ones.
+            let mut got = [7.25f32; 64];
+            simd::idct2d_sparse_into(t, &z, bm, &mut got);
+            assert_eq!(
+                bits64(&got),
+                bits64(&want),
+                "sparse idct [{}] bitmap {bm:#018x}",
+                t.name()
+            );
+        }
+    });
+    // All-zero bitmap edge: every tier must produce exact +0.0
+    // everywhere, regardless of buffer garbage.
+    for &t in &simd::available() {
+        let mut got = [3.5f32; 64];
+        simd::idct2d_sparse_into(t, &[0f32; 64], 0, &mut got);
+        assert_eq!(bits64(&got), vec![0u32; 64], "zero bitmap [{}]", t.name());
+    }
+}
+
+#[test]
+fn simd_quant_kernels_bit_identical_across_tiers() {
+    let tiers = simd::available();
+    check_prop("simd quantize/dequantize ≡ scalar", 40, |p| {
+        let mut freq = [0f32; 64];
+        p.fill_normal(&mut freq, 3.0);
+        let qt = qtable(p.below(4));
+        let raw = quant::block_extrema(&freq);
+        // A narrowed header makes both clamp rails engage and drives
+        // `rint` through negative-tiny inputs (the `-0.0` cases the
+        // vector clamp must preserve exactly).
+        let narrowed = QuantHeader {
+            fmin: raw.fmin + 0.25 * raw.span(),
+            fmax: raw.fmax - 0.25 * raw.span(),
+        };
+        for hdr in [raw, narrowed] {
+            let mut want_q1 = [0f32; 64];
+            quant::gemm_quantize_with_into(&freq, &hdr, &mut want_q1);
+            let want_q2 = quant::qtable_quantize(&want_q1, &qt, &hdr);
+            let want_q1p = quant::qtable_dequantize(&want_q2, &qt, &hdr);
+            let want_f = quant::gemm_dequantize(&want_q1p, &hdr);
+            for &t in &tiers {
+                let mut q1 = [0f32; 64];
+                simd::gemm_quantize_with_into(t, &freq, &hdr, &mut q1);
+                assert_eq!(
+                    bits64(&q1),
+                    bits64(&want_q1),
+                    "gemm_quantize [{}]",
+                    t.name()
+                );
+                let mut q2 = [0i16; 64];
+                simd::qtable_quantize_into(t, &q1, &qt, &hdr, &mut q2);
+                assert_eq!(q2, want_q2, "qtable_quantize [{}]", t.name());
+                let mut q1p = [0f32; 64];
+                simd::qtable_dequantize_into(t, &q2, &qt, &hdr, &mut q1p);
+                assert_eq!(
+                    bits64(&q1p),
+                    bits64(&want_q1p),
+                    "qtable_dequantize [{}]",
+                    t.name()
+                );
+                let mut f = [0f32; 64];
+                simd::gemm_dequantize_into(t, &q1p, &hdr, &mut f);
+                assert_eq!(
+                    bits64(&f),
+                    bits64(&want_f),
+                    "gemm_dequantize [{}]",
+                    t.name()
+                );
+            }
+        }
+        // Degenerate span: every tier must wipe the scratch to zero.
+        let flat = QuantHeader { fmin: 1.0, fmax: 1.0 };
+        for &t in &tiers {
+            let mut q1 = [9f32; 64];
+            simd::gemm_quantize_with_into(t, &freq, &flat, &mut q1);
+            assert_eq!(bits64(&q1), vec![0u32; 64], "degenerate [{}]", t.name());
+        }
+    });
+}
+
+#[test]
+fn simd_seal_open_bit_identical_across_tiers() {
+    let tiers = simd::available();
+    check_prop("seal/open per tier ≡ scalar", 10, |p| {
+        let x = rand_fmap(p, 6, 40);
+        let cf = codec::compress(&x, &qtable(p.below(4)));
+        let want = bitstream::seal_with_simd(&cf, SimdTier::Scalar);
+        // The production entry point (whatever tier FMC_SIMD picked)
+        // must sit on the same byte stream.
+        assert_eq!(want, bitstream::seal(&cf), "active-tier seal");
+        for &t in &tiers {
+            let s = bitstream::seal_with_simd(&cf, t);
+            assert_eq!(want, s, "seal [{}]", t.name());
+            assert_same_fmap(
+                &bitstream::open_with_simd(&want, t),
+                &cf,
+            );
+        }
+    });
+}
+
+#[test]
+fn dispatched_compress_matches_scalar_composition() {
+    // End-to-end anchor: on an 8×8 single-block map the fused codec
+    // kernel reduces to the public scalar reference pipeline
+    // (dct → snap → Eq.7 → Eq.8 → encode). The dispatched compress —
+    // under whatever tier FMC_SIMD selected — must reproduce it bit
+    // for bit, proving the dispatch seam changes nothing observable.
+    check_prop("compress ≡ scalar composition", 20, |p| {
+        let mut x = Tensor3::zeros(1, 8, 8);
+        p.fill_normal(&mut x.data, 1.0);
+        let qt = qtable(p.below(4));
+        let cf = codec::compress(&x, &qt);
+
+        let mut tile = [0f32; 64];
+        tile.copy_from_slice(x.channel(0));
+        dct::dct2d_fast_inplace(&mut tile);
+        let hdr = bitstream::snap_header(quant::block_extrema(&tile));
+        let mut q1 = [0f32; 64];
+        quant::gemm_quantize_with_into(&tile, &hdr, &mut q1);
+        let q2 = quant::qtable_quantize(&q1, &qt, &hdr);
+        let mut want = EncodedBlock::default();
+        want.encode_from(&q2, hdr);
+
+        assert_eq!(cf.blocks.len(), 1);
+        assert_eq!(cf.blocks[0], want);
+    });
 }

@@ -17,6 +17,14 @@ on only one side are reported but never fail the gate (bench sets
 evolve across PRs). An empty baseline (the schema placeholder checked
 in before the first full toolchain run) passes trivially.
 
+Kernel-granularity SIMD-tier entries (name suffix `` [scalar]``,
+`` [portable]``, `` [sse4.1]``, `` [avx2]``) are host-dependent: the
+bench emits one set per tier the runtime dispatcher can actually run.
+A non-scalar tier present in the baseline but absent from the fresh
+run (or vice versa) is reported as ``tier-absent`` and never fails the
+gate; ``--check-invariants`` requires only the universal ``[scalar]``
+kernel entries.
+
 Because absolute Melem/s depends on the machine, the baseline diff is
 only meaningful when baseline and fresh ran on comparable hardware
 (e.g. both local, or a CI-regenerated baseline). ``--check-invariants``
@@ -41,7 +49,26 @@ Exit code 0 = pass, 1 = regression, 2 = usage/file error.
 
 import argparse
 import json
+import re
 import sys
+
+# SIMD-tier bench entries carry a " [tier]" suffix (kernel-granularity
+# dispatch benches, ISSUE 8). The scalar tier runs on any host, so
+# ``--check-invariants`` requires its kernel entries; hardware tiers
+# (sse4.1 / avx2, or the portable lanewise fallback) are emitted only
+# where the runtime dispatcher can run them, so an entry for one of
+# those tiers existing on just one side of the baseline diff is
+# expected host variance, never a regression.
+TIER_RE = re.compile(r" \[(scalar|portable|sse4\.1|avx2)\]$")
+
+# Kernel entries every host must produce (scalar tier is universal).
+SCALAR_TIER_ENTRIES = (
+    "dct2d fast x4096 [scalar]",
+    "idct2d gated x4096 [scalar]",
+    "quantize x4096 [scalar]",
+    "seal 32x64x64 [scalar]",
+    "open 32x64x64 [scalar]",
+)
 
 # Keys of one rendered histogram block in the stats JSON.
 HIST_KEYS = ("count", "sum_us", "max_us", "mean_us", "p50_us",
@@ -242,6 +269,22 @@ def main():
         else:
             print("  [ok        ] wire-format seal/open and "
                   "sealed-transport entries present")
+        # Kernel-tier entries: only the universal scalar tier is
+        # required; which hardware tiers appear depends on the host
+        # CPU (and any FMC_SIMD override), so they are reported, not
+        # gated.
+        tier_missing = [n for n in SCALAR_TIER_ENTRIES
+                        if n not in fresh]
+        if tier_missing:
+            for n in tier_missing:
+                print(f"  [REGRESSION] scalar-tier kernel entry "
+                      f"missing: {n}")
+            bad += len(tier_missing)
+        else:
+            tiers = sorted({m.group(1) for n in fresh
+                            for m in [TIER_RE.search(n)] if m})
+            print(f"  [ok        ] scalar-tier kernel entries "
+                  f"present (tiers in run: {', '.join(tiers)})")
         for stage in ("compress", "decompress"):
             scoped = fresh.get(f"{stage} 64x(8x16x16) scoped")
             pooled = fresh.get(f"{stage} 64x(8x16x16) pooled")
@@ -274,7 +317,13 @@ def main():
     for name, b in sorted(base.items()):
         f = fresh.get(name)
         if f is None:
-            print(f"  [only-baseline] {name}")
+            m = TIER_RE.search(name)
+            if m and m.group(1) != "scalar":
+                # A hardware tier measured on the baseline host but
+                # not runnable here — expected, not a dropped entry.
+                print(f"  [tier-absent  ] {name}")
+            else:
+                print(f"  [only-baseline] {name}")
             continue
         b_tput = b.get("melem_per_s")
         f_tput = f.get("melem_per_s")
