@@ -8,7 +8,7 @@
 
 CARGO ?= cargo
 
-.PHONY: all build test test-dispatch fmt clippy smoke chaos bench-check bench-codec golden verify
+.PHONY: all build test test-dispatch fmt clippy smoke chaos bench-check bench-codec bench-serve golden verify
 
 all: build
 
@@ -48,6 +48,9 @@ smoke:
 	  --trace-out target/serve_trace.json
 	python3 tools/bench_compare.py \
 	  --check-stats target/serve_stats.json
+	FMC_BENCH_QUICK=1 $(CARGO) bench --bench serve_sustained
+	python3 tools/bench_compare.py \
+	  --check-serve-bench target/BENCH_serve_sustained.smoke.json
 
 # Chaos smoke (ISSUE 7): fault-injected serve runs on the synthetic
 # engine — each seeded FaultPlan kills one worker mid-run and sprinkles
@@ -87,6 +90,15 @@ bench-check:
 # Full codec hot-path benchmark (rewrites the checked-in baseline).
 bench-codec:
 	$(CARGO) bench --bench codec_hotpath
+
+# Sustained-rate serving benchmark (ISSUE 9): the sharded
+# work-stealing front door under a paced offered load, per worker
+# count. Rewrites the checked-in BENCH_serve_sustained.json baseline,
+# then shape-checks it (schema, quantile monotonicity, conservation).
+bench-serve:
+	$(CARGO) bench --bench serve_sustained
+	python3 tools/bench_compare.py \
+	  --check-serve-bench BENCH_serve_sustained.json
 
 # Regenerate the cross-language golden vectors (needs python + jax).
 golden:

@@ -1,0 +1,260 @@
+//! Sustained-rate serving benchmark for the sharded work-stealing
+//! front door (ISSUE 9): a paced submitter drives the full pipeline
+//! (submit → shard → pull/steal → batch → engine → reply) at a fixed
+//! offered rate per worker count, and the run records delivered
+//! throughput, tail latency per pipeline seam (p50/p99/p999 off the
+//! server's own telemetry histograms), and the shed/steal counters.
+//!
+//! Emits `BENCH_serve_sustained.json` (one entry per workers × rate
+//! cell) so the serving-perf trajectory is tracked across PRs. Set
+//! `FMC_BENCH_QUICK=1` for a fast smoke run (CI): two worker counts,
+//! fewer requests, written to
+//! `target/BENCH_serve_sustained.smoke.json` — which
+//! `tools/bench_compare.py --check-serve-bench` then gates on the
+//! schema shape, quantile monotonicity, and the conservation
+//! identity `submitted == replied + shed + failed`.
+//!
+//! The engine is the stress suite's deterministic synthetic (class =
+//! first pixel mod 7) so the bench runs offline, without PJRT
+//! artifacts, and every reply can be spot-checked for routing.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fmc_accel::coordinator::{
+    BatchPolicy, EngineFactory, InferenceEngine, InferenceServer,
+    Metrics, ServerConfig,
+};
+use fmc_accel::nn::Tensor3;
+use fmc_accel::obs::SEAM_KEYS;
+use fmc_accel::sim::scheduler::CompressionProfile;
+use fmc_accel::util::json::Json;
+
+/// Deterministic synthetic engine: class = (first pixel) mod 7.
+/// Mirrors the stress suite's TagEngine so bench replies are
+/// verifiable without a runtime artifact.
+struct TagEngine {
+    cap: usize,
+}
+
+impl InferenceEngine for TagEngine {
+    fn max_batch(&self) -> usize {
+        self.cap
+    }
+
+    fn infer(
+        &mut self, images: &[Tensor3],
+    ) -> anyhow::Result<Vec<(usize, Vec<f32>)>> {
+        Ok(images
+            .iter()
+            .map(|im| {
+                let tag = im.data[0] as usize;
+                (tag % 7, vec![tag as f32])
+            })
+            .collect())
+    }
+}
+
+fn tagged_image(tag: usize) -> Tensor3 {
+    let mut t = Tensor3::zeros(1, 2, 2);
+    t.data[0] = tag as f32; // exact for tag < 2^24
+    t
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Render one histogram with the tail quantiles the gate checks.
+fn hist_json(
+    h: &fmc_accel::coordinator::Histogram,
+) -> Json {
+    obj(vec![
+        ("count", num(h.count())),
+        ("sum_us", num(h.sum_us())),
+        ("max_us", num(h.max_us())),
+        ("p50_us", num(h.quantile_us(0.50))),
+        ("p99_us", num(h.quantile_us(0.99))),
+        ("p999_us", num(h.quantile_us(0.999))),
+    ])
+}
+
+/// One sustained-rate cell: `n` requests paced at `rate_rps` against
+/// `workers` workers; returns (replied, elapsed, shutdown metrics).
+fn run_cell(
+    workers: usize, rate_rps: f64, n: usize,
+) -> (u64, Duration, Metrics) {
+    let factory: EngineFactory = Arc::new(|_: usize| {
+        Ok(Box::new(TagEngine { cap: 8 })
+            as Box<dyn InferenceEngine>)
+    });
+    let mut cfg =
+        ServerConfig::new("/nonexistent-artifacts-not-used")
+            .with_workers(workers);
+    cfg.policy = BatchPolicy {
+        max_batch: 8,
+        linger: Duration::from_millis(1),
+    };
+    // Pin the hardware-accounting profile so startup skips the codec
+    // profiling pass (codec throughput is codec_hotpath's job).
+    cfg.sim_profile = Some(CompressionProfile::uncompressed());
+    let server = InferenceServer::start_with_engines(cfg, factory)
+        .expect("bench server start");
+
+    let start = Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        let due =
+            start + Duration::from_secs_f64(i as f64 / rate_rps);
+        if let Some(wait) =
+            due.checked_duration_since(Instant::now())
+        {
+            std::thread::sleep(wait);
+        }
+        // Overload sheds are part of the measurement: a full shard
+        // sweep returns a typed QueueFull the metrics account for.
+        if let Ok(rx) = server.submit(tagged_image(i)) {
+            rxs.push((i, rx));
+        }
+    }
+    let mut replied = 0u64;
+    for (tag, rx) in rxs {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(Ok(resp)) => {
+                assert_eq!(
+                    resp.class,
+                    tag % 7,
+                    "bench reply corrupted for {tag}"
+                );
+                replied += 1;
+            }
+            Ok(Err(_)) => {} // typed shed, accounted server-side
+            Err(e) => panic!("reply for {tag} lost: {e}"),
+        }
+    }
+    let elapsed = start.elapsed();
+    (replied, elapsed, server.shutdown())
+}
+
+fn cell_json(
+    workers: usize, rate_rps: f64, n: usize, replied: u64,
+    elapsed: Duration, m: &Metrics,
+) -> Json {
+    let shed = m.shed_queue_full
+        + m.shed_deadline_submit
+        + m.shed_deadline_batch
+        + m.shed_deadline_open
+        + m.shed_shutdown;
+    let mut stages = Vec::new();
+    for (i, key) in SEAM_KEYS.iter().enumerate() {
+        stages.push((*key, hist_json(m.stage_hist(i))));
+    }
+    obj(vec![
+        ("workers", num(workers as u64)),
+        ("rate_rps", Json::Num(rate_rps)),
+        ("requests", num(n as u64)),
+        ("submitted", num(m.submitted)),
+        ("replied", num(replied)),
+        ("shed", num(shed)),
+        ("failed", num(m.failed)),
+        (
+            "throughput_rps",
+            Json::Num(replied as f64 / elapsed.as_secs_f64()),
+        ),
+        ("elapsed_s", Json::Num(elapsed.as_secs_f64())),
+        (
+            "latency_us",
+            obj(vec![
+                ("end_to_end", hist_json(m.latency_hist())),
+                ("stages", Json::Obj(
+                    stages
+                        .into_iter()
+                        .map(|(k, v)| (k.to_string(), v))
+                        .collect(),
+                )),
+            ]),
+        ),
+        (
+            "queue",
+            obj(vec![
+                ("pulls", num(m.pulls)),
+                ("steals", num(m.steals)),
+                ("stolen_requests", num(m.stolen_requests)),
+                (
+                    "shard_depth_highwater",
+                    num(m.shard_depth_highwater),
+                ),
+            ]),
+        ),
+        ("batches", num(m.batches)),
+    ])
+}
+
+fn main() {
+    let quick = std::env::var("FMC_BENCH_QUICK").is_ok();
+    // Quick: two worker counts at one moderate rate — enough to
+    // exercise the steal seam and give the gate a real JSON. Full:
+    // the worker sweep × offered rates, enough requests per cell for
+    // stable tails.
+    let (worker_counts, rates, n): (&[usize], &[f64], usize) =
+        if quick {
+            (&[1, 2], &[4000.0], 2000)
+        } else {
+            (&[1, 2, 4, 8], &[2000.0, 8000.0], 8000)
+        };
+
+    let mut runs = Vec::new();
+    for &workers in worker_counts {
+        for &rate in rates {
+            let (replied, elapsed, m) = run_cell(workers, rate, n);
+            let cell =
+                cell_json(workers, rate, n, replied, elapsed, &m);
+            println!(
+                "workers {workers} @ {rate:7.0} rps: \
+                 {replied}/{n} replied in {:6.2}s \
+                 ({:8.1} rps) | p99 {:6}us p999 {:6}us | \
+                 {} pulls / {} steals ({} stolen) | {} shed",
+                elapsed.as_secs_f64(),
+                replied as f64 / elapsed.as_secs_f64(),
+                m.latency_hist().quantile_us(0.99),
+                m.latency_hist().quantile_us(0.999),
+                m.pulls,
+                m.steals,
+                m.stolen_requests,
+                m.submitted - replied - m.failed,
+            );
+            runs.push(cell);
+        }
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::Str("serve_sustained".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    let path = if quick {
+        // Smoke runs are too noisy to serve as the cross-PR
+        // baseline; the CI gate shape-checks this side file.
+        "target/BENCH_serve_sustained.smoke.json"
+    } else {
+        "BENCH_serve_sustained.json"
+    };
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+    }
+    match std::fs::write(path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

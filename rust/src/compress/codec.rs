@@ -32,7 +32,6 @@
 
 use super::bitstream::snap_header;
 use super::encode::EncodedBlock;
-use super::quant::block_extrema;
 use super::simd::{self, SimdTier};
 use super::{Block, BLOCK, IMAX};
 use crate::exec::ExecPool;
@@ -198,7 +197,10 @@ fn compress_channel_into(chan: &[f32], h: usize, w: usize, qt: &Block,
             // q1 codes, the zero-point and the decoder all run off the
             // same snapped values (a zero coefficient encodes to code
             // zero exactly) and sealing the block is lossless.
-            let hdr = snap_header(block_extrema(&scratch.tile));
+            let hdr = snap_header(simd::block_extrema(
+                tier,
+                &scratch.tile,
+            ));
             simd::gemm_quantize_with_into(
                 tier, &scratch.tile, &hdr, &mut scratch.q1,
             );

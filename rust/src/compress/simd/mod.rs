@@ -5,7 +5,8 @@
 //! path ran the same math one scalar lane at a time. This module puts
 //! the three hot kernels — the folded 4×4 DCT/IDCT products
 //! ([`dct2d_fast_inplace`] / [`idct2d_fast_inplace`] /
-//! [`idct2d_sparse_into`]), the Eq. 7/8/9/10 quantize lane loops
+//! [`idct2d_sparse_into`]), the header min/max scan
+//! ([`block_extrema`]) and Eq. 7/8/9/10 quantize lane loops
 //! ([`gemm_quantize_with_into`] / [`qtable_quantize_into`] /
 //! [`qtable_dequantize_into`] / [`gemm_dequantize_into`]), and the
 //! flip-pack 16-bit value-lane widen/expand
@@ -292,6 +293,25 @@ pub fn idct2d_sparse_into(
 }
 
 // --- quantization ----------------------------------------------------
+
+/// Tier-dispatched per-block min/max header scan
+/// (≡ [`quant::block_extrema`] bit for bit). The vector tiers fold
+/// the 64 lanes with `min_ps`/`max_ps` and reduce horizontally —
+/// min/max folds are order-insensitive for every pair except
+/// `{-0.0, +0.0}`, where the IEEE ops pick whichever operand the
+/// fold order presents; when a reduced extremum lands on 0.0 the
+/// tier re-runs the scalar scan so the header's zero keeps the
+/// scalar's sign bit. The Portable tier delegates to scalar: a
+/// two-accumulator reduction loop auto-vectorizes as written.
+pub fn block_extrema(tier: SimdTier, freq: &Block) -> QuantHeader {
+    dispatch!(
+        tier.sanitized(),
+        quant::block_extrema(freq),
+        quant::block_extrema(freq),
+        x86::sse::block_extrema(freq),
+        x86::avx2::block_extrema(freq),
+    )
+}
 
 /// Tier-dispatched Eq. 7 against a given header
 /// (≡ [`quant::gemm_quantize_with_into`] bit for bit; the vector

@@ -433,6 +433,48 @@ pub mod sse {
         }
     }
 
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn reduce_min(v: __m128) -> f32 {
+        let m = _mm_min_ps(v, _mm_movehl_ps(v, v));
+        let m =
+            _mm_min_ss(m, _mm_shuffle_ps::<0b01_01_01_01>(m, m));
+        _mm_cvtss_f32(m)
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn reduce_max(v: __m128) -> f32 {
+        let m = _mm_max_ps(v, _mm_movehl_ps(v, v));
+        let m =
+            _mm_max_ss(m, _mm_shuffle_ps::<0b01_01_01_01>(m, m));
+        _mm_cvtss_f32(m)
+    }
+
+    /// Header min/max scan: fold the 64 lanes with packed min/max,
+    /// then reduce horizontally. Packed `minps`/`maxps` may pick the
+    /// other member of a `+0.0`/`-0.0` pair than the scalar fold's
+    /// `f32::min`/`f32::max` would (both zeros compare equal, and
+    /// which operand survives depends on fold order), so when either
+    /// reduced extremum lands exactly on zero the scalar scan re-runs
+    /// to keep the header bit-identical across tiers. Non-NaN input
+    /// assumed, like every kernel in this module.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn block_extrema(freq: &Block) -> QuantHeader {
+        let p = freq.as_ptr();
+        let mut lo = _mm_loadu_ps(p);
+        let mut hi = lo;
+        for i in 1..16 {
+            let v = _mm_loadu_ps(p.add(4 * i));
+            lo = _mm_min_ps(lo, v);
+            hi = _mm_max_ps(hi, v);
+        }
+        let fmin = reduce_min(lo);
+        let fmax = reduce_max(hi);
+        if fmin == 0.0 || fmax == 0.0 {
+            return crate::compress::quant::block_extrema(freq);
+        }
+        QuantHeader { fmin, fmax }
+    }
+
     /// Sign-extend i8 values to 16-bit LE words (`pmovsxbw`), 8 per
     /// step, stack-buffered tail.
     #[target_feature(enable = "sse4.1")]
@@ -822,6 +864,41 @@ pub mod avx2 {
             );
             _mm256_storeu_ps(f.as_mut_ptr().add(8 * i), r);
         }
+    }
+
+    /// Header min/max scan; see the SSE twin for the signed-zero
+    /// fallback rationale. Folds 256-bit rows, narrows to 128 bits,
+    /// then reduces like the SSE path.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn block_extrema(freq: &Block) -> QuantHeader {
+        let p = freq.as_ptr();
+        let mut lo = _mm256_loadu_ps(p);
+        let mut hi = lo;
+        for i in 1..8 {
+            let v = _mm256_loadu_ps(p.add(8 * i));
+            lo = _mm256_min_ps(lo, v);
+            hi = _mm256_max_ps(hi, v);
+        }
+        let l = _mm_min_ps(
+            _mm256_castps256_ps128(lo),
+            _mm256_extractf128_ps::<1>(lo),
+        );
+        let h = _mm_max_ps(
+            _mm256_castps256_ps128(hi),
+            _mm256_extractf128_ps::<1>(hi),
+        );
+        let l = _mm_min_ps(l, _mm_movehl_ps(l, l));
+        let l =
+            _mm_min_ss(l, _mm_shuffle_ps::<0b01_01_01_01>(l, l));
+        let h = _mm_max_ps(h, _mm_movehl_ps(h, h));
+        let h =
+            _mm_max_ss(h, _mm_shuffle_ps::<0b01_01_01_01>(h, h));
+        let fmin = _mm_cvtss_f32(l);
+        let fmax = _mm_cvtss_f32(h);
+        if fmin == 0.0 || fmax == 0.0 {
+            return crate::compress::quant::block_extrema(freq);
+        }
+        QuantHeader { fmin, fmax }
     }
 
     /// Sign-extend i8 values to 16-bit LE words, 16 per step

@@ -167,6 +167,16 @@ pub struct Metrics {
     pub requeued_requests: u64,
     /// Envelope opens that succeeded only on the retry attempt.
     pub open_retries: u64,
+    /// Batches a worker formed from its *own* admission shard
+    /// (sharded queue, ISSUE 9).
+    pub pulls: u64,
+    /// Batches a worker stole whole from a sibling shard.
+    pub steals: u64,
+    /// Requests that moved shards inside stolen batches.
+    pub stolen_requests: u64,
+    /// Deepest any single admission shard ever got (merged by max:
+    /// it is a high-water mark, not a flow count).
+    pub shard_depth_highwater: u64,
 }
 
 impl Default for Metrics {
@@ -197,6 +207,10 @@ impl Metrics {
             requeued_batches: 0,
             requeued_requests: 0,
             open_retries: 0,
+            pulls: 0,
+            steals: 0,
+            stolen_requests: 0,
+            shard_depth_highwater: 0,
         }
     }
 
@@ -297,6 +311,12 @@ impl Metrics {
         self.requeued_batches += o.requeued_batches;
         self.requeued_requests += o.requeued_requests;
         self.open_retries += o.open_retries;
+        self.pulls += o.pulls;
+        self.steals += o.steals;
+        self.stolen_requests += o.stolen_requests;
+        self.shard_depth_highwater = self
+            .shard_depth_highwater
+            .max(o.shard_depth_highwater);
     }
 }
 
@@ -481,6 +501,11 @@ mod tests {
         b.requeued_batches = 7;
         b.requeued_requests = 8;
         b.open_retries = 9;
+        b.pulls = 10;
+        b.steals = 11;
+        b.stolen_requests = 12;
+        a.shard_depth_highwater = 6;
+        b.shard_depth_highwater = 4;
         a.merge(&b);
         assert_eq!(a.submitted, 15);
         assert_eq!(a.shed_queue_full, 1);
@@ -492,6 +517,11 @@ mod tests {
         assert_eq!(a.requeued_batches, 7);
         assert_eq!(a.requeued_requests, 8);
         assert_eq!(a.open_retries, 9);
+        assert_eq!(a.pulls, 10);
+        assert_eq!(a.steals, 11);
+        assert_eq!(a.stolen_requests, 12);
+        // High-water marks merge by max, not addition.
+        assert_eq!(a.shard_depth_highwater, 6);
         assert_eq!(a.shed_total(), 15);
         assert_eq!(a.accounted(), 4 + 15 + 6);
     }

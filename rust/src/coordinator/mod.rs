@@ -1,21 +1,26 @@
 //! Inference coordinator: the serving layer around the accelerator.
 //!
 //! The paper's system is an edge inference engine; the coordinator is
-//! the host-side stack a deployment would wrap it with: a request
-//! queue, a [`batcher`] matching the artifact batch size (the paper's
-//! dataflow computes 4 output maps in parallel for exactly this kind
-//! of batching economy), a multi-worker [`server`] — one batcher
-//! thread sharding batches round-robin across N workers, each owning
-//! its own PJRT [`crate::runtime`] (executables are not Sync) and its
-//! own [`metrics`], merged at shutdown. Built on std threads +
-//! channels — tokio is unavailable offline (DESIGN.md §4).
+//! the host-side stack a deployment would wrap it with: a sharded
+//! work-stealing admission queue ([`crate::exec::ShardedQueue`], one
+//! bounded shard per worker), a batching policy ([`batcher`]) matched
+//! to the artifact batch size (the paper's dataflow computes 4 output
+//! maps in parallel for exactly this kind of batching economy), and a
+//! multi-worker [`server`] — N workers pulling and forming their own
+//! batches (idle workers steal whole batches from sibling shards),
+//! each owning its own PJRT [`crate::runtime`] (executables are not
+//! Sync) and its own [`metrics`], merged at shutdown by a coordinator
+//! thread that otherwise only supervises deaths and replays. Built on
+//! std threads + channels — tokio is unavailable offline
+//! (DESIGN.md §4).
 //!
 //! The currency between pipeline stages is decided by the
 //! [`transport`] seam: under the default [`SealedTransport`], the
-//! batcher hands workers sealed [`crate::compress::sealed::SealedFmap`]
-//! envelopes and dense pixels only materialize at the engine boundary
-//! (open-on-demand) — the host-side twin of the paper's
-//! compressed-domain interlayer dataflow.
+//! pulling worker seals each request into a
+//! [`crate::compress::sealed::SealedFmap`] envelope and dense pixels
+//! only materialize at the engine boundary (open-on-demand) — the
+//! host-side twin of the paper's compressed-domain interlayer
+//! dataflow.
 //!
 //! Every request carries a telemetry span ([`crate::obs`]) stamped at
 //! each seam; [`InferenceServer::shutdown_telemetry`] returns the

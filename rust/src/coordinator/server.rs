@@ -1,46 +1,64 @@
-//! The inference server: one batcher thread feeding N persistent
-//! runtime workers — the host-side mirror of the paper folding
-//! compression, decompression and CNN acceleration into a single
-//! computing stream.
+//! The inference server: a sharded, work-stealing admission front
+//! door feeding N persistent runtime workers — the host-side mirror
+//! of the paper folding compression, decompression and CNN
+//! acceleration into a single computing stream.
 //!
-//! Topology:
+//! Topology (ISSUE 9 — the single-batcher round-robin dispatcher is
+//! gone):
 //!
 //! ```text
-//!   clients ── submit ──> [bounded admission queue]   (typed shed:
-//!                              │                       QueueFull /
-//!                              │  fmc-batcher:         DeadlinePassed /
-//!                              │  poll_batch (policy)  ShuttingDown)
-//!                              ▼
-//!                    batch-level round-robin shard
-//!                    │ (bounded inboxes + in-flight ledger)
-//!                    │            │            │
-//!               fmc-worker-0  fmc-worker-1 … fmc-worker-N-1
-//!               (own Runtime, (PJRT executables are not Sync,
-//!                own Metrics)  so each worker owns its engine)
+//!   clients ── submit ──> [ShardedQueue: one bounded shard / worker]
+//!                    shard 0      shard 1     …    shard N-1
+//!                      │            │                  │  (idle
+//!                      ▼            ▼                  ▼   workers
+//!               fmc-worker-0  fmc-worker-1 …  fmc-worker-N-1  steal
+//!               (own Runtime,  pulls + forms its OWN batches,  whole
+//!                own Metrics,  ships, opens, infers, replies)  batches)
+//!                      └────────── requeue injector ──────────┘
+//!                                     ▲
+//!                  fmc-batcher (coordinator): joins the dead,
+//!                  harvests their ledgers, re-injects in-flight
+//!                  batches, rolls up telemetry at shutdown
 //! ```
+//!
+//! Submit is lock-light: one shard mutex touch on the round-robin
+//! target (a full-sweep fallback before shedding). Workers pull from
+//! their own shard with the batching policy's linger, so batches
+//! coalesce at the pull seam; an idle worker steals a whole batch
+//! from the deepest sibling shard — the injector/stealer discipline
+//! of [`crate::exec::ExecPool`], lifted to the serving layer by
+//! [`crate::exec::ShardedQueue`]. With `pin_cores` each worker pins
+//! itself to a core so its shard and engine stay cache-local.
 //!
 //! Robustness model (full treatment in `docs/robustness.md`):
 //!
-//! * **Bounded admission.** The submit queue is a `sync_channel` of
-//!   [`ServerConfig::queue_cap`] requests, and every worker inbox is a
-//!   `sync_channel` of [`WORKER_INBOX`] batches. When the pipeline
-//!   saturates end to end, the batcher's dispatch blocks, the front
-//!   queue fills, and `submit` sheds with a typed
+//! * **Bounded admission.** The queue's capacity
+//!   ([`ServerConfig::queue_cap`]) is split across the per-worker
+//!   shards. When every shard is full, `submit` sheds with a typed
 //!   [`SubmitError::QueueFull`] instead of buffering without limit —
 //!   the serving analogue of the paper's fixed on-chip buffer budget.
+//!   There is no second buffer tier behind the shards (the old
+//!   per-worker inboxes are gone): the bound at the door is the bound.
+//! * **Typed shutdown.** The queue closes *under the shard locks*, so
+//!   a submit racing shutdown always gets a typed
+//!   [`SubmitError::ShuttingDown`] — the seed's narrow untyped
+//!   disconnect window no longer exists.
 //! * **Deadline propagation.** [`InferenceServer::submit_within`]
 //!   stamps an absolute deadline into the request's [`Span`]; the
-//!   batcher sheds expired requests before sealing/shipping
-//!   (`shed_deadline_batch`) and workers shed them again at the
+//!   pulling worker sheds expired requests before sealing/shipping
+//!   (`shed_deadline_batch`, the pull seam) and again at the
 //!   envelope-open boundary (`shed_deadline_open`) — a cheap typed
 //!   reply beats wasted transport and engine work.
-//! * **In-flight recovery.** Every dispatched batch is recorded in
-//!   its worker's in-flight ledger before the send. When a worker
-//!   dies, the batcher harvests the ledger and requeues each batch to
-//!   a survivor **at most once** (a `requeued` flag burns the single
-//!   replay). Sealed envelopes are immutable `Arc` payloads and kills
-//!   fire before any reply, so a replayed batch produces bit-identical
-//!   responses and can never double-reply.
+//! * **In-flight recovery.** A worker records every batch it forms in
+//!   its in-flight ledger *before* the fault-injection kill seam.
+//!   When a worker dies, the coordinator harvests the ledger and
+//!   pushes each batch to the requeue injector **at most once** (a
+//!   `requeued` flag burns the single replay); survivors drain the
+//!   injector ahead of fresh work. Sealed envelopes are immutable
+//!   `Arc` payloads and kills fire before any reply, so a replayed
+//!   batch produces bit-identical responses and can never
+//!   double-reply. Workers only exit when the coordinator stops them,
+//!   so a mid-run death always finds live survivors for its replay.
 //! * **Typed accounting.** Every submit ends in exactly one bucket:
 //!   replied, one of the `shed_*` counters, or `failed` — the
 //!   conservation identity `submitted == accounted()` is asserted by
@@ -52,14 +70,14 @@
 //!   `ship`/`open`.
 //!
 //! Telemetry still observes and never reorders: nothing in the
-//! pipeline branches on a span's stamps, so the sealed≡dense and
-//! pooled≡serial bit-identity invariants are untouched — now also
-//! under every injected fault.
+//! pipeline branches on a span's stamps, so the sealed≡dense,
+//! pooled≡serial and sharded≡single-batcher bit-identity invariants
+//! are untouched — under every injected fault.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{
-    channel, sync_channel, Receiver, SendError, Sender, SyncSender,
-    TrySendError,
+    channel, Receiver, RecvTimeoutError, Sender,
 };
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -70,12 +88,15 @@ use crate::config::{models, AccelConfig, Network};
 use crate::coordinator::admission::{
     AdmissionCounters, Rejection, ServeResult, ShedReason, SubmitError,
 };
-use crate::coordinator::batcher::{poll_batch, BatchOutcome, BatchPolicy};
+use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::cache::InterlayerCache;
 use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::transport::{
     FmapEnvelope, InterlayerTransport, SealedTransport,
+};
+use crate::exec::{
+    pin_current_thread, PullOutcome, PushError, ShardedQueue,
 };
 use crate::harness::profiles as harness_profiles;
 use crate::nn::Tensor3;
@@ -88,44 +109,40 @@ use crate::sim::scheduler::CompressionProfile;
 use crate::sim::Accelerator;
 use crate::util::lock_unpoisoned;
 
-/// How long the batcher sleeps in `poll_batch` before re-polling when
-/// no requests are pending (also the shutdown- and worker-death
-/// detection latency).
+/// How long a worker parks in `ShardedQueue::pull` before re-polling
+/// when its shard and every stealable sibling are empty (also the
+/// coordinator's death- and shutdown-detection latency).
 const IDLE_POLL: Duration = Duration::from_millis(200);
+
+/// Worker backoff once the queue reports `Closed` but the worker has
+/// not been stopped yet: it keeps servicing the requeue injector
+/// (a sibling may still die with in-flight work) without spinning.
+const CLOSED_POLL: Duration = Duration::from_millis(5);
 
 /// Default bound of the admission queue
 /// ([`ServerConfig::queue_cap`]).
 pub const DEFAULT_QUEUE_CAP: usize = 1024;
 
-/// Bound of each worker's batch inbox. Small on purpose: the front
-/// door can only shed ([`SubmitError::QueueFull`]) if saturation
-/// propagates *backwards* — worker inboxes fill, the batcher's
-/// dispatch blocks, the admission queue fills. An unbounded inbox
-/// would let the batcher drain the front queue forever and the bound
-/// there would never bind.
-const WORKER_INBOX: usize = 2;
-
 /// One classification request as submitted by a client (dense pixels;
-/// the batcher packages it for transport before dispatch). Carries
-/// its telemetry [`Span`] — [`Stage::Enqueue`] stamped at submit, and
-/// the optional deadline riding inside the span.
+/// the pulling worker packages it for transport before running it).
+/// Carries its telemetry [`Span`] — [`Stage::Enqueue`] stamped at
+/// submit, and the optional deadline riding inside the span.
 pub struct Request {
     pub image: Tensor3,
     pub resp: Sender<ServeResult>,
     pub span: Span,
 }
 
-/// A request as it travels batcher → worker: the image packaged by
-/// the configured [`InterlayerTransport`]. Under the sealed transport
-/// the pixel buffer is gone — only the sealed stream crosses the
-/// seam, and the worker opens it at the engine boundary. The span
-/// arrives with [`Stage::BatchFormed`] and [`Stage::Shipped`]
-/// stamped by the batcher.
+/// A request after the pull seam: the image packaged by the
+/// configured [`InterlayerTransport`]. Under the sealed transport the
+/// pixel buffer is gone — only the sealed stream remains, and the
+/// worker opens it at the engine boundary. The span arrives with
+/// [`Stage::BatchFormed`] and [`Stage::Shipped`] stamped by the
+/// pulling worker.
 ///
-/// `Clone` because the in-flight ledger holds a copy of every
-/// dispatched batch for requeue-on-worker-death: under the sealed
-/// transport the clone shares the stream `Arc`, so no payload bytes
-/// are copied.
+/// `Clone` because the in-flight ledger holds a copy of every formed
+/// batch for requeue-on-worker-death: under the sealed transport the
+/// clone shares the stream `Arc`, so no payload bytes are copied.
 #[derive(Clone)]
 struct ShippedRequest {
     input: FmapEnvelope,
@@ -133,9 +150,9 @@ struct ShippedRequest {
     span: Span,
 }
 
-/// A batch as dispatched to a worker, identified for the in-flight
-/// ledger. `requeued` marks a batch already re-dispatched once after
-/// a worker loss — the at-most-once requeue guard: a batch that loses
+/// A batch as formed by a worker, identified for the in-flight
+/// ledger. `requeued` marks a batch already replayed once after a
+/// worker loss — the at-most-once requeue guard: a batch that loses
 /// its worker twice is failed (typed [`ShedReason::WorkerLost`]),
 /// never replayed again.
 #[derive(Clone)]
@@ -146,15 +163,21 @@ struct DispatchedBatch {
 }
 
 /// Per-worker in-flight ledger: batch id → the batch, inserted by the
-/// batcher *before* the send, retired by the worker *after* the last
-/// reply of the batch. Whatever a dead worker leaves behind is
-/// exactly its un-replied work.
+/// worker *before* the kill seam, retired *after* the last reply of
+/// the batch. Whatever a dead worker leaves behind is exactly its
+/// un-replied work.
 type Ledger = Arc<Mutex<HashMap<u64, DispatchedBatch>>>;
 
-/// Everything the batcher holds per live worker.
+/// Harvested in-flight batches awaiting replay: the coordinator
+/// pushes a dead worker's ledger here; survivors drain it ahead of
+/// fresh pulls so replays never starve behind new arrivals.
+type Injector = Arc<Mutex<VecDeque<DispatchedBatch>>>;
+
+/// Everything the coordinator holds per live worker.
 struct WorkerLink {
     wi: usize,
-    tx: SyncSender<DispatchedBatch>,
+    stop: Arc<AtomicBool>,
+    policy_tx: Sender<BatchPolicy>,
     ledger: Ledger,
     handle: JoinHandle<WorkerReport>,
 }
@@ -228,8 +251,8 @@ pub struct ServerConfig {
     /// Use the interlayer-compressed model artifact.
     pub compressed: bool,
     pub policy: BatchPolicy,
-    /// Runtime workers fed by the batcher (`FMC_WORKERS` is the CLI's
-    /// source for this; clamped to ≥ 1).
+    /// Runtime workers — and admission shards, one per worker
+    /// (`FMC_WORKERS` is the CLI's source for this; clamped to ≥ 1).
     pub workers: usize,
     /// Accelerator model for the per-request hardware accounting.
     pub accel: AccelConfig,
@@ -248,9 +271,9 @@ pub struct ServerConfig {
     /// or several servers in one process). `None` builds a private
     /// cache sized by `cache_budget_bytes`.
     pub cache: Option<Arc<Mutex<InterlayerCache>>>,
-    /// The batcher→worker / stage→stage currency. Default: sealed
-    /// streams ([`SealedTransport`]); [`DenseTransport`] is the
-    /// bit-identical dense reference.
+    /// The pull-seam / stage→stage currency. Default: sealed streams
+    /// ([`SealedTransport`]); [`DenseTransport`] is the bit-identical
+    /// dense reference.
     ///
     /// [`DenseTransport`]: crate::coordinator::transport::DenseTransport
     pub transport: Arc<dyn InterlayerTransport>,
@@ -258,9 +281,15 @@ pub struct ServerConfig {
     /// run outgrows it, the oldest spans are evicted (and counted as
     /// dropped); histograms still see every request.
     pub span_ring_cap: usize,
-    /// Bound of the admission queue (clamped to ≥ 1). When full,
+    /// Bound of the admission queue (clamped to ≥ 1), split evenly
+    /// across the per-worker shards. When every shard is full,
     /// `submit` sheds with [`SubmitError::QueueFull`].
     pub queue_cap: usize,
+    /// Pin each worker thread to a CPU core (worker i → core i mod
+    /// ncpus). Best-effort: failure logs once and serving proceeds
+    /// unpinned, bit-identical either way. CLI: `--pin-cores` /
+    /// `FMC_PIN=1`.
+    pub pin_cores: bool,
     /// Deterministic fault plan (`None` in production; chaos tests
     /// and `serve --faults` inject one).
     pub faults: Option<Arc<FaultPlan>>,
@@ -280,6 +309,7 @@ impl ServerConfig {
             transport: Arc::new(SealedTransport),
             span_ring_cap: DEFAULT_SPAN_RING_CAP,
             queue_cap: DEFAULT_QUEUE_CAP,
+            pin_cores: false,
             faults: None,
         }
     }
@@ -318,6 +348,12 @@ impl ServerConfig {
         self
     }
 
+    /// Builder-style per-worker core pinning.
+    pub fn with_pin_cores(mut self, pin: bool) -> Self {
+        self.pin_cores = pin;
+        self
+    }
+
     /// Builder-style fault plan.
     pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> Self {
         self.faults = Some(plan);
@@ -327,15 +363,16 @@ impl ServerConfig {
 
 /// Handle to the running server.
 pub struct InferenceServer {
-    tx: SyncSender<Request>,
+    queue: Arc<ShardedQueue<Request>>,
     admission: Arc<AdmissionCounters>,
     queue_cap: usize,
-    batcher: Option<JoinHandle<TelemetrySnapshot>>,
+    coordinator: Option<JoinHandle<TelemetrySnapshot>>,
 }
 
 impl InferenceServer {
-    /// Start the batcher + runtime workers (each worker opens its own
-    /// runtime on its own thread; artifacts compile on first batch).
+    /// Start the coordinator + runtime workers (each worker opens its
+    /// own runtime on its own thread; artifacts compile on first
+    /// batch).
     pub fn start(cfg: ServerConfig) -> anyhow::Result<Self> {
         let dir = cfg.artifacts_dir.clone();
         let compressed = cfg.compressed;
@@ -355,32 +392,37 @@ impl InferenceServer {
                               factory: EngineFactory)
                               -> anyhow::Result<Self> {
         let queue_cap = cfg.queue_cap.max(1);
-        let (tx, rx) = sync_channel::<Request>(queue_cap);
-        let batcher = std::thread::Builder::new()
+        let queue = Arc::new(ShardedQueue::new(
+            cfg.workers.max(1),
+            queue_cap,
+        ));
+        let q = Arc::clone(&queue);
+        let coordinator = std::thread::Builder::new()
             .name("fmc-batcher".into())
-            .spawn(move || batcher_loop(cfg, factory, rx))?;
+            .spawn(move || coordinator_loop(cfg, factory, q))?;
         Ok(InferenceServer {
-            tx,
+            queue,
             admission: Arc::new(AdmissionCounters::new()),
             queue_cap,
-            batcher: Some(batcher),
+            coordinator: Some(coordinator),
         })
     }
 
     /// Submit an image with no deadline. Returns a receiver for the
-    /// typed outcome, or an immediate typed shed: the bounded queue
-    /// is full ([`SubmitError::QueueFull`]) or the server is down
-    /// ([`SubmitError::ShuttingDown`] — the seed silently dropped
-    /// such requests and the caller hung on a channel that would
-    /// never answer).
+    /// typed outcome, or an immediate typed shed: every admission
+    /// shard is full ([`SubmitError::QueueFull`]) or the server is
+    /// down ([`SubmitError::ShuttingDown`] — the queue closes under
+    /// the shard locks, so this path is typed even mid-shutdown; the
+    /// seed silently dropped such requests and the caller hung on a
+    /// channel that would never answer).
     pub fn submit(&self, image: Tensor3)
                   -> Result<Receiver<ServeResult>, SubmitError> {
         self.submit_inner(image, None)
     }
 
     /// Submit an image that is only worth serving for `budget` more
-    /// time. The deadline travels in the request's span; the batcher
-    /// and workers shed it at their seams once it passes. A zero (or
+    /// time. The deadline travels in the request's span; the pulling
+    /// worker sheds it at its seams once it passes. A zero (or
     /// already-spent) budget sheds right here with
     /// [`SubmitError::DeadlinePassed`].
     pub fn submit_within(&self, image: Tensor3, budget: Duration)
@@ -394,62 +436,81 @@ impl InferenceServer {
 
     fn submit_inner(&self, image: Tensor3, deadline_us: Option<u64>)
                     -> Result<Receiver<ServeResult>, SubmitError> {
-        use std::sync::atomic::Ordering::Relaxed;
         // Every knock on the door counts, shed or not — `submitted`
         // is the right-hand side of the conservation identity.
-        self.admission.submitted.fetch_add(1, Relaxed);
+        self.admission.submitted.fetch_add(1, Ordering::Relaxed);
         let mut span = Span::begin();
         if let Some(d) = deadline_us {
             span = span.with_deadline_us(d);
             if span.expired_at(now_us()) {
                 self.admission
                     .shed_deadline_submit
-                    .fetch_add(1, Relaxed);
+                    .fetch_add(1, Ordering::Relaxed);
                 return Err(SubmitError::DeadlinePassed);
             }
         }
         let (rtx, rrx) = channel();
-        match self.tx.try_send(Request {
+        match self.queue.try_push(Request {
             image,
             resp: rtx,
             span,
         }) {
-            Ok(()) => Ok(rrx),
-            Err(TrySendError::Full(_)) => {
-                self.admission.shed_queue_full.fetch_add(1, Relaxed);
+            Ok(_shard) => Ok(rrx),
+            Err(PushError::Full(_)) => {
+                self.admission
+                    .shed_queue_full
+                    .fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::QueueFull {
                     capacity: self.queue_cap,
                 })
             }
-            Err(TrySendError::Disconnected(_)) => {
-                self.admission.shed_shutdown.fetch_add(1, Relaxed);
+            Err(PushError::Closed(_)) => {
+                self.admission
+                    .shed_shutdown
+                    .fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::ShuttingDown)
             }
         }
     }
 
-    /// Close the queue, join the batcher and all workers, and return
-    /// the merged per-worker metrics.
+    /// Close the queue, join the coordinator and all workers, and
+    /// return the merged per-worker metrics.
     pub fn shutdown(self) -> Metrics {
         self.shutdown_telemetry().metrics
     }
 
     /// Close the queue, join everything, and return the full
     /// telemetry snapshot: merged metrics, every worker's span ring,
-    /// cache / DMA / executor-pool counters, admission tallies.
+    /// cache / DMA / executor-pool / admission-queue counters,
+    /// admission tallies.
     pub fn shutdown_telemetry(mut self) -> TelemetrySnapshot {
-        drop(self.tx);
+        self.queue.close();
+        self.queue.wake_all();
         let mut snap = self
-            .batcher
+            .coordinator
             .take()
             .map(|w| w.join().unwrap_or_default())
             .unwrap_or_default();
         // Fold the submit-side shed tallies in strictly after the
-        // batcher joined — no submit can race this (shutdown consumed
-        // the handle), so the conservation identity is exact.
+        // coordinator joined — no submit can race this (shutdown
+        // consumed the handle), so the conservation identity is
+        // exact.
         self.admission.fold_into(&mut snap.metrics);
         snap.queue_cap = self.queue_cap;
         snap
+    }
+}
+
+impl Drop for InferenceServer {
+    /// A handle dropped without `shutdown` still winds the pipeline
+    /// down: close the queue (typed sheds at the door from here on)
+    /// and join the coordinator so no thread outlives the handle.
+    fn drop(&mut self) {
+        self.queue.close();
+        self.queue.wake_all();
+        if let Some(w) = self.coordinator.take() {
+            let _ = w.join();
+        }
     }
 }
 
@@ -594,7 +655,7 @@ fn reject_all(requests: Vec<ShippedRequest>, reason: ShedReason) {
 }
 
 /// Drain and atomically clear a dead worker's ledger, oldest batch
-/// first (dispatch order keeps replay deterministic).
+/// first (formation order keeps replay deterministic).
 fn harvest(ledger: &Ledger) -> Vec<DispatchedBatch> {
     let mut left: Vec<DispatchedBatch> = lock_unpoisoned(ledger)
         .drain()
@@ -623,56 +684,52 @@ fn requeue_or_reject(
     }
 }
 
-/// Record the batch in the link's ledger, then try a non-blocking
-/// send. On failure the ledger insert is rolled back (the worker
-/// never saw this id). `Err((batch, worker_is_dead))` returns the
-/// batch for the next candidate.
-fn try_dispatch(
-    link: &WorkerLink, b: DispatchedBatch,
-) -> Result<(), (DispatchedBatch, bool)> {
-    lock_unpoisoned(&link.ledger).insert(b.id, b.clone());
-    match link.tx.try_send(b) {
-        Ok(()) => Ok(()),
-        Err(TrySendError::Full(b)) => {
-            lock_unpoisoned(&link.ledger).remove(&b.id);
-            Err((b, false))
-        }
-        Err(TrySendError::Disconnected(b)) => {
-            lock_unpoisoned(&link.ledger).remove(&b.id);
-            Err((b, true))
-        }
-    }
-}
-
-/// [`try_dispatch`], but blocking: used when every inbox is full —
-/// this stall is the backpressure that fills the admission queue.
-fn blocking_dispatch(
-    link: &WorkerLink, b: DispatchedBatch,
-) -> Result<(), DispatchedBatch> {
-    lock_unpoisoned(&link.ledger).insert(b.id, b.clone());
-    match link.tx.send(b) {
-        Ok(()) => Ok(()),
-        Err(SendError(b)) => {
-            lock_unpoisoned(&link.ledger).remove(&b.id);
-            Err(b)
-        }
-    }
-}
-
-/// Join a worker that left the rotation (died, or closed at
-/// shutdown), merge its report, and requeue whatever its ledger still
-/// holds onto `queue`.
-fn reap_link(
-    link: WorkerLink, metrics: &mut Metrics,
-    rings: &mut Vec<SpanRing>, queue: &mut VecDeque<DispatchedBatch>,
+/// Fail a run of batches typed — the path for in-flight work with no
+/// surviving worker left to replay it.
+fn fail_batches<I: IntoIterator<Item = DispatchedBatch>>(
+    batches: I, metrics: &mut Metrics,
 ) {
+    for b in batches {
+        metrics.failed += b.requests.len() as u64;
+        reject_all(b.requests, ShedReason::WorkerLost);
+    }
+}
+
+/// Typed `ShuttingDown` replies for everything still parked in the
+/// admission shards once no worker will ever pull again. The queue is
+/// closed under its shard locks first, so no submit can slip in
+/// behind the drain — every queued request gets exactly one typed
+/// reply.
+fn shed_queued(
+    queue: &ShardedQueue<Request>, metrics: &mut Metrics,
+) {
+    for r in queue.drain_all() {
+        metrics.shed_shutdown += 1;
+        let _ = r.resp.send(Err(Rejection {
+            seq: r.span.seq,
+            reason: ShedReason::ShuttingDown,
+        }));
+    }
+}
+
+/// Stop a worker (idempotent for one already dead), join it, merge
+/// its report, and return whatever its ledger still holds. The
+/// `Release` store pairs with the worker's `Acquire` load so any
+/// injector push sequenced before this stop is visible to the
+/// worker's final replay sweep.
+fn stop_and_join(
+    link: WorkerLink, queue: &ShardedQueue<Request>,
+    metrics: &mut Metrics, rings: &mut Vec<SpanRing>,
+) -> Vec<DispatchedBatch> {
     let WorkerLink {
         wi,
-        tx,
+        stop,
         ledger,
         handle,
+        ..
     } = link;
-    drop(tx);
+    stop.store(true, Ordering::Release);
+    queue.wake_all();
     match handle.join() {
         // A worker killed mid-run still reports Ok: its drain loop's
         // panic is caught on-thread (it counts its own death in
@@ -688,128 +745,21 @@ fn reap_link(
             metrics.errors += 1;
         }
     }
-    for b in harvest(&ledger) {
-        requeue_or_reject(b, metrics, queue);
-    }
+    harvest(&ledger)
 }
 
-/// Dispatch a queue of batches over the live links: non-blocking
-/// round-robin sweep first, blocking send when every inbox is full,
-/// dead links reaped (joined + their ledgers requeued) on the spot.
-/// Batches that outlive their second worker are failed typed. May
-/// leave `links` empty — the caller decides how to wind down.
-fn dispatch_batches(
-    start: VecDeque<DispatchedBatch>,
-    links: &mut Vec<WorkerLink>, rr: &mut usize,
-    metrics: &mut Metrics, rings: &mut Vec<SpanRing>,
-) {
-    let mut queue = start;
-    while let Some(mut b) = queue.pop_front() {
-        loop {
-            if links.is_empty() {
-                metrics.failed += b.requests.len() as u64;
-                reject_all(b.requests, ShedReason::WorkerLost);
-                break;
-            }
-            let n = links.len();
-            let mut outcome = Some(b);
-            let mut dead_at: Option<usize> = None;
-            for k in 0..n {
-                let i = (*rr + k) % n;
-                match try_dispatch(
-                    &links[i],
-                    outcome.take().expect(
-                        "invariant: batch present until dispatched",
-                    ),
-                ) {
-                    Ok(()) => {
-                        *rr = (i + 1) % n;
-                        break;
-                    }
-                    Err((back, dead)) => {
-                        outcome = Some(back);
-                        if dead {
-                            dead_at = Some(i);
-                            break;
-                        }
-                    }
-                }
-            }
-            match (outcome, dead_at) {
-                (None, _) => break, // dispatched
-                (Some(back), Some(i)) => {
-                    let link = links.remove(i);
-                    reap_link(link, metrics, rings, &mut queue);
-                    b = back; // retry on the survivors
-                }
-                (Some(back), None) => {
-                    // Every inbox full: block on the round-robin
-                    // target. This stall propagates to the admission
-                    // queue — exactly the bounded-buffer behavior we
-                    // want under saturation.
-                    let i = *rr % links.len();
-                    match blocking_dispatch(&links[i], back) {
-                        Ok(()) => {
-                            *rr = (i + 1) % links.len();
-                            break;
-                        }
-                        Err(back) => {
-                            let link = links.remove(i);
-                            reap_link(
-                                link, metrics, rings, &mut queue,
-                            );
-                            b = back;
-                        }
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// Reap every worker that announced its death since the last poll —
-/// in-flight batches requeue to survivors promptly instead of waiting
-/// for the next dispatch to bounce off the dead inbox.
-fn reap_notices(
-    death_rx: &Receiver<usize>, links: &mut Vec<WorkerLink>,
-    rr: &mut usize, metrics: &mut Metrics,
-    rings: &mut Vec<SpanRing>,
-) {
-    while let Ok(wi) = death_rx.try_recv() {
-        // Already reaped via a bounced dispatch? Then it left the
-        // rotation and there is nothing further to do.
-        let Some(i) = links.iter().position(|l| l.wi == wi) else {
-            continue;
-        };
-        let link = links.remove(i);
-        let mut queue = VecDeque::new();
-        reap_link(link, metrics, rings, &mut queue);
-        dispatch_batches(queue, links, rr, metrics, rings);
-    }
-}
-
-/// Typed `ShuttingDown` replies for everything still queued at the
-/// front door when the batcher winds down without workers. (A submit
-/// racing the final `try_recv` may instead observe its reply channel
-/// closing — the one narrow untyped window, see
-/// `docs/robustness.md`.)
-fn drain_and_reject(rx: &Receiver<Request>, metrics: &mut Metrics) {
-    while let Ok(r) = rx.try_recv() {
-        metrics.shed_shutdown += 1;
-        let _ = r.resp.send(Err(Rejection {
-            seq: r.span.seq,
-            reason: ShedReason::ShuttingDown,
-        }));
-    }
-}
-
-/// The batcher thread: builds the worker pool, owns the batching
-/// policy, shards batches round-robin with in-flight ledgers and
-/// bounded inboxes, sheds expired requests before shipping, requeues
-/// a dead worker's batches to survivors, and merges worker metrics
-/// and span rings into the run's [`TelemetrySnapshot`] at shutdown.
-fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
-                rx: Receiver<Request>) -> TelemetrySnapshot {
+/// The coordinator thread (keeps the seed's `fmc-batcher` name for
+/// tooling continuity): builds the worker pool, distributes the
+/// clamped batching policy, then *supervises* — it joins dead
+/// workers, replays their in-flight ledgers through the requeue
+/// injector, runs the ordered shutdown, and merges worker metrics
+/// and span rings into the run's [`TelemetrySnapshot`]. It never
+/// touches a request on the happy path: workers pull and form their
+/// own batches from the sharded queue.
+fn coordinator_loop(
+    cfg: ServerConfig, factory: EngineFactory,
+    queue: Arc<ShardedQueue<Request>>,
+) -> TelemetrySnapshot {
     let mut metrics = Metrics::new();
     // Interlayer bitstream cache: injected (shared across servers /
     // restarts) or private, sized by the configured byte budget.
@@ -821,9 +771,14 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
     let (cycles_per_image, energy_per_image, dma) =
         sim_costs(&cfg, &cache, &mut metrics);
 
-    let snapshot = |metrics: Metrics,
+    let snapshot = |mut metrics: Metrics,
                     rings: Vec<SpanRing>,
                     workers: usize| {
+        // Flow counters (pulls/steals) come from the workers that did
+        // the pulling; the depth high-water only the queue knows.
+        metrics.shard_depth_highwater = metrics
+            .shard_depth_highwater
+            .max(queue.stats().depth_highwater);
         TelemetrySnapshot {
             metrics,
             spans: rings,
@@ -839,39 +794,46 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
     // Spawn the workers; each constructs its engine on its own thread
     // and reports its batch cap (or the construction error) back.
     // Workers announce an on-thread death through `death_tx` so the
-    // batcher can requeue their in-flight work promptly.
+    // coordinator can replay their in-flight work promptly.
     let n_workers = cfg.workers.max(1);
     let ring_cap = cfg.span_ring_cap;
     let (death_tx, death_rx) = channel::<usize>();
+    let next_batch_id = Arc::new(AtomicU64::new(0));
+    let injector: Injector = Arc::new(Mutex::new(VecDeque::new()));
     type Ready = anyhow::Result<usize>;
-    let mut spawned: Vec<(usize, SyncSender<DispatchedBatch>, Ledger,
-                          Receiver<Ready>, JoinHandle<WorkerReport>)> =
-        Vec::new();
+    #[allow(clippy::type_complexity)]
+    let mut spawned: Vec<(usize, Arc<AtomicBool>,
+                          Sender<BatchPolicy>, Ledger,
+                          Receiver<Ready>,
+                          JoinHandle<WorkerReport>)> = Vec::new();
     for wi in 0..n_workers {
-        let (btx, brx) = sync_channel::<DispatchedBatch>(WORKER_INBOX);
         let (ready_tx, ready_rx) = channel::<Ready>();
-        let factory = Arc::clone(&factory);
+        let (policy_tx, policy_rx) = channel::<BatchPolicy>();
+        let stop = Arc::new(AtomicBool::new(false));
         let ledger: Ledger = Arc::new(Mutex::new(HashMap::new()));
-        let worker_ledger = Arc::clone(&ledger);
-        let faults = cfg.faults.clone();
-        let death = death_tx.clone();
+        let ctx = WorkerCtx {
+            wi,
+            queue: Arc::clone(&queue),
+            injector: Arc::clone(&injector),
+            stop: Arc::clone(&stop),
+            transport: Arc::clone(&cfg.transport),
+            cycles_per_image,
+            energy_per_image,
+            span_ring_cap: ring_cap,
+            ledger: Arc::clone(&ledger),
+            faults: cfg.faults.clone(),
+            next_batch_id: Arc::clone(&next_batch_id),
+            death: death_tx.clone(),
+            pin: cfg.pin_cores,
+        };
+        let factory = Arc::clone(&factory);
         match std::thread::Builder::new()
             .name(format!("fmc-worker-{wi}"))
             .spawn(move || {
-                worker_loop(
-                    wi,
-                    factory,
-                    brx,
-                    ready_tx,
-                    cycles_per_image,
-                    energy_per_image,
-                    ring_cap,
-                    worker_ledger,
-                    faults,
-                    death,
-                )
+                worker_loop(ctx, factory, ready_tx, policy_rx)
             }) {
-            Ok(h) => spawned.push((wi, btx, ledger, ready_rx, h)),
+            Ok(h) => spawned
+                .push((wi, stop, policy_tx, ledger, ready_rx, h)),
             Err(e) => {
                 eprintln!("worker {wi}: spawn failed: {e}");
                 metrics.errors += 1;
@@ -880,17 +842,20 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
     }
     drop(death_tx);
 
-    // Collect readiness; only workers with a live engine join the
-    // dispatch rotation. The smallest engine cap clamps the policy.
+    // Collect readiness; only workers with a live engine stay in the
+    // pool. The smallest engine cap clamps the policy, which is then
+    // distributed to every live worker — all batches everywhere fit
+    // every engine, so a replayed batch always fits its survivor.
     let mut links: Vec<WorkerLink> = Vec::new();
     let mut engine_cap = usize::MAX;
-    for (wi, btx, ledger, ready_rx, h) in spawned {
+    for (wi, stop, policy_tx, ledger, ready_rx, h) in spawned {
         match ready_rx.recv() {
             Ok(Ok(cap)) => {
                 engine_cap = engine_cap.min(cap);
                 links.push(WorkerLink {
                     wi,
-                    tx: btx,
+                    stop,
+                    policy_tx,
                     ledger,
                     handle: h,
                 });
@@ -910,11 +875,12 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
         }
     }
     if links.is_empty() {
-        // No live worker: shed everything already queued with a typed
-        // ShuttingDown reply, then exit. Dropping `rx` makes
-        // subsequent submits fail fast (typed, at the door).
+        // No live worker: close the door (typed sheds from here on)
+        // and shed everything already queued with a typed
+        // ShuttingDown reply, then exit.
         eprintln!("server: no live workers; shutting down");
-        drain_and_reject(&rx, &mut metrics);
+        queue.close();
+        shed_queued(&queue, &mut metrics);
         return snapshot(metrics, Vec::new(), 0);
     }
 
@@ -922,159 +888,138 @@ fn batcher_loop(cfg: ServerConfig, factory: EngineFactory,
         max_batch: cfg.policy.max_batch.min(engine_cap),
         ..cfg.policy
     };
-    let faults = cfg.faults.clone();
+    for link in &links {
+        let _ = link.policy_tx.send(policy);
+    }
 
     let n_live = links.len();
     let mut rings: Vec<SpanRing> = Vec::new();
-    let mut rr = 0usize; // round-robin cursor over live links
-    let mut next_batch_id = 0u64;
+
+    // Supervision: the coordinator sleeps until a worker dies or the
+    // queue closes and drains. Workers never exit on their own — only
+    // the ordered shutdown below stops them — so a mid-run death
+    // always finds live survivors for its replayed ledger.
     loop {
-        reap_notices(
-            &death_rx, &mut links, &mut rr, &mut metrics, &mut rings,
-        );
-        if links.is_empty() {
-            eprintln!(
-                "server: every worker died; shedding queued requests"
-            );
-            drain_and_reject(&rx, &mut metrics);
-            return snapshot(metrics, rings, n_live);
-        }
-        match poll_batch(&rx, policy, IDLE_POLL) {
-            // Idle window elapsed with nothing pending: poll again.
-            // The next arrival goes through poll_batch's linger like
-            // any other, so it still coalesces into a batch (the
-            // seed's raw-`recv` fallback produced singleton batches
-            // here).
-            BatchOutcome::Idle => continue,
-            BatchOutcome::Closed => break,
-            BatchOutcome::Batch(batch) => {
-                if let Some(d) = faults
-                    .as_deref()
-                    .and_then(FaultPlan::delay_before_ship)
-                {
-                    std::thread::sleep(d);
-                }
-                // The interlayer-transport seam: the batcher packages
-                // every request through the configured transport, so
-                // the batch crosses to its worker as sealed streams
-                // (or dense maps under the reference transport) —
-                // dense pixels stop being the dispatch currency.
-                // Telemetry brackets the packaging: BatchFormed when
-                // the policy closed the batch, Shipped once the
-                // envelope exists, so the batch→ship seam is the
-                // transport's own cost.
-                //
-                // Deadline seam #1: a request that expired while
-                // queued sheds here, before any sealing/shipping work
-                // is spent on it.
-                let mut shipped: Vec<ShippedRequest> =
-                    Vec::with_capacity(batch.len());
-                for r in batch {
-                    let Request {
-                        image,
-                        resp,
-                        mut span,
-                    } = r;
-                    if span.expired_at(now_us()) {
-                        metrics.shed_deadline_batch += 1;
-                        let _ = resp.send(Err(Rejection {
-                            seq: span.seq,
-                            reason: ShedReason::DeadlineBatch,
-                        }));
-                        continue;
-                    }
-                    span.stamp(Stage::BatchFormed);
-                    let input = cfg.transport.ship_raw(image);
-                    span.stamp(Stage::Shipped);
-                    shipped.push(ShippedRequest { input, resp, span });
-                }
-                if shipped.is_empty() {
+        match death_rx.recv_timeout(IDLE_POLL) {
+            Ok(wi) => {
+                let Some(i) =
+                    links.iter().position(|l| l.wi == wi)
+                else {
                     continue;
-                }
-                let b = DispatchedBatch {
-                    id: next_batch_id,
-                    requeued: false,
-                    requests: shipped,
                 };
-                next_batch_id += 1;
-                dispatch_batches(
-                    VecDeque::from([b]),
-                    &mut links,
-                    &mut rr,
-                    &mut metrics,
-                    &mut rings,
+                let link = links.remove(i);
+                let leftovers = stop_and_join(
+                    link, &queue, &mut metrics, &mut rings,
                 );
+                let mut replays = VecDeque::new();
+                for b in leftovers {
+                    requeue_or_reject(b, &mut metrics, &mut replays);
+                }
+                if links.is_empty() {
+                    eprintln!(
+                        "server: every worker died; shedding queued \
+                         requests"
+                    );
+                    queue.close();
+                    shed_queued(&queue, &mut metrics);
+                    fail_batches(replays, &mut metrics);
+                    let stranded: Vec<DispatchedBatch> =
+                        lock_unpoisoned(&injector)
+                            .drain(..)
+                            .collect();
+                    fail_batches(stranded, &mut metrics);
+                    return snapshot(metrics, rings, n_live);
+                }
+                if !replays.is_empty() {
+                    lock_unpoisoned(&injector).extend(replays);
+                    queue.wake_all();
+                }
             }
+            Err(RecvTimeoutError::Timeout) => {
+                if queue.is_closed() && queue.is_empty() {
+                    break;
+                }
+            }
+            // Every worker's death sender is gone — nothing left to
+            // supervise; fall through to the ordered join.
+            Err(RecvTimeoutError::Disconnected) => break,
         }
     }
 
-    // Shutdown. Drain any death notices first so a worker killed on
-    // its final batch hands its in-flight work to a survivor before
-    // inboxes start closing.
-    reap_notices(
-        &death_rx, &mut links, &mut rr, &mut metrics, &mut rings,
-    );
-    // Close worker inboxes in order and join. Each worker finishes
-    // everything already in its inbox before seeing the disconnect,
-    // so a non-empty ledger at join time means the worker died — its
-    // batches requeue to the links still open behind it.
+    // Ordered shutdown: stop and join workers one at a time. A worker
+    // drains the requeue injector before honoring its stop, so a
+    // sibling that died on its final batch hands its replay to the
+    // links still open behind it; only the *last* worker's own
+    // in-flight loss has no survivor and fails typed.
+    shed_queued(&queue, &mut metrics);
     while !links.is_empty() {
-        let WorkerLink {
-            wi,
-            tx,
-            ledger,
-            handle,
-        } = links.remove(0);
-        drop(tx);
-        match handle.join() {
-            Ok((m, ring)) => {
-                metrics.merge(&m);
-                rings.push(ring);
-            }
-            Err(_) => {
-                eprintln!(
-                    "worker {wi}: thread lost outside containment"
-                );
-                metrics.errors += 1;
-            }
+        let link = links.remove(0);
+        let leftovers =
+            stop_and_join(link, &queue, &mut metrics, &mut rings);
+        let mut replays = VecDeque::new();
+        for b in leftovers {
+            requeue_or_reject(b, &mut metrics, &mut replays);
         }
-        let leftovers = harvest(&ledger);
-        if !leftovers.is_empty() {
-            let mut queue = VecDeque::new();
-            for b in leftovers {
-                requeue_or_reject(b, &mut metrics, &mut queue);
-            }
-            dispatch_batches(
-                queue, &mut links, &mut rr, &mut metrics, &mut rings,
-            );
+        if links.is_empty() {
+            fail_batches(replays, &mut metrics);
+        } else if !replays.is_empty() {
+            lock_unpoisoned(&injector).extend(replays);
+            queue.wake_all();
         }
     }
+    let stranded: Vec<DispatchedBatch> =
+        lock_unpoisoned(&injector).drain(..).collect();
+    fail_batches(stranded, &mut metrics);
     snapshot(metrics, rings, n_live)
 }
 
+/// Everything a worker thread owns or shares; bundled so the spawn
+/// seam stays readable.
+struct WorkerCtx {
+    wi: usize,
+    queue: Arc<ShardedQueue<Request>>,
+    injector: Injector,
+    stop: Arc<AtomicBool>,
+    transport: Arc<dyn InterlayerTransport>,
+    cycles_per_image: u64,
+    energy_per_image: f64,
+    span_ring_cap: usize,
+    ledger: Ledger,
+    faults: Option<Arc<FaultPlan>>,
+    next_batch_id: Arc<AtomicU64>,
+    death: Sender<usize>,
+    pin: bool,
+}
+
 /// One runtime worker: constructs its engine on this thread (reports
-/// the batch cap — or the error — through `ready`), then drains
-/// batches until the batcher closes the inbox. The engine never
-/// crosses a thread boundary. Returns its metrics block and its
-/// completed-span ring — both worker-owned for the whole run, so
-/// recording telemetry takes no locks.
+/// the batch cap — or the error — through `ready`), waits for the
+/// clamped policy, then pulls from its own admission shard — stealing
+/// whole batches from the deepest sibling when idle — forms and runs
+/// its own batches, and drains the requeue injector ahead of fresh
+/// work. The engine never crosses a thread boundary. Returns its
+/// metrics block and its completed-span ring — both worker-owned for
+/// the whole run, so recording telemetry takes no locks.
 ///
 /// The drain loop runs under `catch_unwind`: a worker death (the
 /// injected `worker-recv` kill, or a real bug escaping the per-batch
 /// containment) still hands back the telemetry accumulated so far,
-/// counts itself in `errors`, and announces the death so the batcher
-/// requeues the ledger. The kill fires *before* any reply for the
-/// received batch, which is what makes the requeue replay-safe.
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(wi: usize, factory: EngineFactory,
-               rx: Receiver<DispatchedBatch>,
-               ready: Sender<anyhow::Result<usize>>,
-               cycles_per_image: u64, energy_per_image: f64,
-               span_ring_cap: usize, ledger: Ledger,
-               faults: Option<Arc<FaultPlan>>, death: Sender<usize>)
-               -> WorkerReport {
+/// counts itself in `errors`, and announces the death so the
+/// coordinator replays the ledger. The kill fires *after* the ledger
+/// insert and *before* any reply for the formed batch, which is what
+/// makes the replay conservation-exact and duplicate-free.
+fn worker_loop(
+    ctx: WorkerCtx, factory: EngineFactory,
+    ready: Sender<anyhow::Result<usize>>,
+    policy_rx: Receiver<BatchPolicy>,
+) -> WorkerReport {
+    let wi = ctx.wi;
+    if ctx.pin && !pin_current_thread(wi) {
+        eprintln!(
+            "worker {wi}: core pinning unavailable; running unpinned"
+        );
+    }
     let mut metrics = Metrics::new();
-    let mut spans = SpanRing::new(span_ring_cap);
+    let mut spans = SpanRing::new(ctx.span_ring_cap);
     let mut engine = match (*factory)(wi) {
         Ok(engine) => {
             let _ = ready.send(Ok(engine.max_batch().max(1)));
@@ -1086,48 +1031,185 @@ fn worker_loop(wi: usize, factory: EngineFactory,
         }
     };
     drop(ready);
+    let Ok(policy) = policy_rx.recv() else {
+        // Coordinator gone before distributing the policy — nothing
+        // to serve.
+        return (metrics, spans);
+    };
     let run = std::panic::catch_unwind(
         std::panic::AssertUnwindSafe(|| {
             let mut nth = 0u64;
-            while let Ok(dispatch) = rx.recv() {
-                nth += 1;
-                if faults
-                    .as_deref()
-                    .map_or(false, |f| f.kill_at_recv(wi, nth))
-                {
-                    panic!(
-                        "fault-injected worker kill: worker {wi} \
-                         at batch {nth}"
+            loop {
+                // Replays first: a dead sibling's harvested batches
+                // must not starve behind fresh arrivals.
+                let replay =
+                    lock_unpoisoned(&ctx.injector).pop_front();
+                if let Some(b) = replay {
+                    run_batch(
+                        &ctx, b, engine.as_mut(), &mut metrics,
+                        &mut spans, &mut nth,
                     );
+                    continue;
                 }
-                let id = dispatch.id;
-                handle_batch(
-                    dispatch.requests,
-                    engine.as_mut(),
-                    &mut metrics,
-                    &mut spans,
+                if ctx.stop.load(Ordering::Acquire) {
+                    // Final replay sweep: an injector push sequenced
+                    // before our stop (Release) is visible here.
+                    let replay =
+                        lock_unpoisoned(&ctx.injector).pop_front();
+                    if let Some(b) = replay {
+                        run_batch(
+                            &ctx, b, engine.as_mut(), &mut metrics,
+                            &mut spans, &mut nth,
+                        );
+                        continue;
+                    }
+                    break;
+                }
+                match ctx.queue.pull(
                     wi,
-                    cycles_per_image,
-                    energy_per_image,
-                    faults.as_deref(),
-                );
-                // Every request of the batch was replied or shed:
-                // retire the ledger entry so it can never replay.
-                lock_unpoisoned(&ledger).remove(&id);
+                    policy.max_batch,
+                    policy.linger,
+                    IDLE_POLL,
+                ) {
+                    // Idle window elapsed with nothing pending
+                    // anywhere: go around (recheck injector / stop).
+                    PullOutcome::Idle => continue,
+                    // Queue closed and drained, but we only exit on
+                    // stop — a sibling may still die with in-flight
+                    // work for us to replay. Back off, don't spin.
+                    PullOutcome::Closed => {
+                        std::thread::sleep(CLOSED_POLL);
+                        continue;
+                    }
+                    PullOutcome::Batch { items, stolen } => {
+                        if stolen {
+                            metrics.steals += 1;
+                            metrics.stolen_requests +=
+                                items.len() as u64;
+                        } else {
+                            metrics.pulls += 1;
+                        }
+                        if let Some(d) = ctx
+                            .faults
+                            .as_deref()
+                            .and_then(FaultPlan::delay_before_ship)
+                        {
+                            std::thread::sleep(d);
+                        }
+                        // The interlayer-transport seam: the pulling
+                        // worker packages every request through the
+                        // configured transport, so the batch enters
+                        // the engine stage as sealed streams (or
+                        // dense maps under the reference transport).
+                        // Telemetry brackets the packaging:
+                        // BatchFormed when the pull closed the batch,
+                        // Shipped once the envelope exists, so the
+                        // batch→ship seam is the transport's own
+                        // cost.
+                        //
+                        // Deadline seam #1 (the pull seam): a request
+                        // that expired while queued sheds here,
+                        // before any sealing/shipping work is spent
+                        // on it.
+                        let mut shipped: Vec<ShippedRequest> =
+                            Vec::with_capacity(items.len());
+                        for r in items {
+                            let Request {
+                                image,
+                                resp,
+                                mut span,
+                            } = r;
+                            if span.expired_at(now_us()) {
+                                metrics.shed_deadline_batch += 1;
+                                let _ = resp.send(Err(Rejection {
+                                    seq: span.seq,
+                                    reason:
+                                        ShedReason::DeadlineBatch,
+                                }));
+                                continue;
+                            }
+                            span.stamp(Stage::BatchFormed);
+                            let input =
+                                ctx.transport.ship_raw(image);
+                            span.stamp(Stage::Shipped);
+                            shipped.push(ShippedRequest {
+                                input,
+                                resp,
+                                span,
+                            });
+                        }
+                        if shipped.is_empty() {
+                            // The whole pull shed on deadline: fall
+                            // straight back into the coalescing pull
+                            // so the next burst still forms one
+                            // batch (regression:
+                            // `full_shed_pull_still_coalesces_…`).
+                            continue;
+                        }
+                        let b = DispatchedBatch {
+                            id: ctx
+                                .next_batch_id
+                                .fetch_add(1, Ordering::Relaxed),
+                            requeued: false,
+                            requests: shipped,
+                        };
+                        run_batch(
+                            &ctx, b, engine.as_mut(), &mut metrics,
+                            &mut spans, &mut nth,
+                        );
+                    }
+                }
             }
         }),
     );
     if run.is_err() {
         // Death is an infrastructure event (one per worker), not a
         // per-request failure — the stranded requests are accounted
-        // when the batcher requeues or fails them.
+        // when the coordinator replays or fails them.
         metrics.errors += 1;
-        let _ = death.send(wi);
+        let _ = ctx.death.send(wi);
         eprintln!(
             "worker {wi}: died; in-flight batches will requeue"
         );
     }
     (metrics, spans)
+}
+
+/// Run one formed (or replayed) batch through the kill seam and the
+/// engine. The ledger insert comes *before* the fault-injection kill
+/// seam: whatever a kill strands in the ledger is exactly the batch
+/// the coordinator harvests, so the conservation identity holds under
+/// injected deaths. The entry retires only after every request of the
+/// batch was replied or shed.
+fn run_batch(
+    ctx: &WorkerCtx, b: DispatchedBatch,
+    engine: &mut dyn InferenceEngine, metrics: &mut Metrics,
+    spans: &mut SpanRing, nth: &mut u64,
+) {
+    let id = b.id;
+    lock_unpoisoned(&ctx.ledger).insert(id, b.clone());
+    *nth += 1;
+    if ctx
+        .faults
+        .as_deref()
+        .map_or(false, |f| f.kill_at_recv(ctx.wi, *nth))
+    {
+        panic!(
+            "fault-injected worker kill: worker {} at batch {}",
+            ctx.wi, *nth
+        );
+    }
+    handle_batch(
+        b.requests,
+        engine,
+        metrics,
+        spans,
+        ctx.wi,
+        ctx.cycles_per_image,
+        ctx.energy_per_image,
+        ctx.faults.as_deref(),
+    );
+    lock_unpoisoned(&ctx.ledger).remove(&id);
 }
 
 /// Open an envelope at the engine boundary, with one retry. The

@@ -22,7 +22,19 @@
 //! [`ExecPool::stats`]) — submitted/executed/helped jobs and the
 //! injector queue high-water — which feed the serving telemetry
 //! snapshot (`crate::obs`).
+//!
+//! The injector/stealer discipline is extracted one level up as
+//! [`steal::ShardedQueue`] (ISSUE 9): per-consumer bounded shards
+//! with whole-batch stealing, the serving layer's admission front
+//! door. [`pin`] carries the optional per-worker core pinning that
+//! rides along once the queue is sharded.
 
+pub mod pin;
 mod pool;
+pub mod steal;
 
+pub use pin::pin_current_thread;
 pub use pool::{global, pool_threads, ExecPool, PoolStats, Scope};
+pub use steal::{
+    PullOutcome, PushError, QueueStats, ShardedQueue,
+};

@@ -1,0 +1,69 @@
+//! Best-effort per-thread CPU core pinning (`--pin-cores` /
+//! `FMC_PIN`).
+//!
+//! Once the serving front door is sharded one queue per worker
+//! (`exec::steal`), pinning each worker to a core keeps its shard's
+//! cache lines and its engine's working set local — the host-side
+//! analogue of the paper's fixed per-PE buffer placement. Pinning is
+//! strictly an optimization: failure (or an unsupported platform)
+//! returns `false` and serving proceeds unpinned, bit-identical
+//! either way.
+//!
+//! Implemented as a raw `sched_setaffinity(2)` syscall on
+//! x86_64-linux (the offline build links no libc crate); every other
+//! platform gets the no-op stub.
+
+/// Pin the calling thread to `cpu` (modulo the machine's CPU count).
+/// Returns whether the affinity call succeeded.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+pub fn pin_current_thread(cpu: usize) -> bool {
+    let ncpus = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let cpu = cpu % ncpus.max(1);
+    // cpu_set_t is 1024 bits; one u64 word per 64 cpus.
+    let mut mask = [0u64; 16];
+    mask[(cpu / 64) % 16] = 1u64 << (cpu % 64);
+    // SAFETY: sched_setaffinity (x86_64 syscall 203) reads
+    // `size_of_val(&mask)` bytes from a live stack buffer; pid 0 is
+    // the calling thread. No memory is written by the kernel.
+    let ret: i64;
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 203i64 => ret,
+            in("rdi") 0usize,
+            in("rsi") core::mem::size_of_val(&mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+/// No-op stub: pinning is linux-x86_64 only in the offline build.
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+pub fn pin_current_thread(_cpu: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinning_is_best_effort_and_never_panics() {
+        // On linux-x86_64 this should succeed for cpu 0; elsewhere
+        // the stub returns false. Either way serving must proceed.
+        let _ok = pin_current_thread(0);
+        let _ok_wrapped = pin_current_thread(usize::MAX);
+    }
+
+    #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+    #[test]
+    fn pin_succeeds_on_cpu_zero() {
+        assert!(pin_current_thread(0));
+    }
+}

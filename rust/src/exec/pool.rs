@@ -32,6 +32,13 @@
 //! jobs the joining thread helped with, and the injector queue's
 //! high-water depth. All relaxed atomics or updates under the
 //! already-held queue lock: nothing new contends on the hot path.
+//!
+//! The injector/stealer pattern here (shared queue + consumers that
+//! help rather than idle) is generalized for the serving front door
+//! as [`crate::exec::steal::ShardedQueue`]: where the pool keeps one
+//! injector because codec jobs are coarse, the admission queue
+//! shards per worker and lets idle workers steal whole batches —
+//! same discipline, tuned for request-rate contention.
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;

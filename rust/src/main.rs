@@ -11,6 +11,7 @@
 //!            [--artifacts DIR] [--cache-budget BYTES]
 //!            [--transport sealed|dense] [--engine runtime|synthetic]
 //!            [--span-ring-cap N] [--queue-cap N] [--deadline-ms N]
+//!            [--pin-cores] (or FMC_PIN=1)
 //!            [--faults SPEC] (e.g. seed=7 or kill=1@2,open-fail=4)
 //!            [--stats-json PATH] [--trace-out PATH]
 //!   selftest [--artifacts DIR]
@@ -319,6 +320,9 @@ fn serve(args: &Args) -> i32 {
     // deterministic fault plan (chaos runs; see docs/robustness.md).
     let queue_cap = args.opt_usize("queue-cap", DEFAULT_QUEUE_CAP);
     let deadline_ms = args.opt_usize("deadline-ms", 0);
+    // Per-worker core pinning (best-effort; see exec::pin).
+    let pin_cores = args.flag("pin-cores")
+        || fmc_accel::cli::env_usize("FMC_PIN", 0) != 0;
     let faults = match args.opt("faults") {
         Some(spec) => match FaultPlan::parse(spec, workers.max(1)) {
             Ok(plan) => Some(std::sync::Arc::new(plan)),
@@ -333,7 +337,8 @@ fn serve(args: &Args) -> i32 {
         .with_workers(workers)
         .with_cache(cache.clone())
         .with_transport(transport)
-        .with_queue_cap(queue_cap);
+        .with_queue_cap(queue_cap)
+        .with_pin_cores(pin_cores);
     if let Some(plan) = &faults {
         cfg = cfg.with_faults(std::sync::Arc::clone(plan));
     }
@@ -492,6 +497,16 @@ fn serve(args: &Args) -> i32 {
         snap.pool.jobs_executed,
         snap.pool.jobs_helped,
         snap.pool.queue_highwater
+    );
+    println!(
+        "queue     : {} shards | {} pulls / {} steals ({} requests \
+         stolen) | shard depth hw {}{}",
+        workers.max(1),
+        metrics.pulls,
+        metrics.steals,
+        metrics.stolen_requests,
+        metrics.shard_depth_highwater,
+        if pin_cores { " | cores pinned" } else { "" },
     );
     println!(
         "spans     : {} recorded, {} dropped (ring cap {ring_cap})",

@@ -35,7 +35,11 @@ use crate::util::json::Json;
 /// v2: added the `admission` block (bounded-queue shed/requeue
 /// counters and the conservation identity inputs) and tightened the
 /// stage histograms to exclude shed requests entirely.
-pub const STATS_SCHEMA_VERSION: u64 = 2;
+///
+/// v3: added the `queue` block (sharded work-stealing admission
+/// queue: shards, pulls, steals, stolen_requests,
+/// shard_depth_highwater) and `p999_us` to every histogram.
+pub const STATS_SCHEMA_VERSION: u64 = 3;
 
 /// Everything one serve run measured, in one merge-able value.
 #[derive(Debug, Clone, Default)]
@@ -222,6 +226,22 @@ impl TelemetrySnapshot {
                     ("open_retries", num(m.open_retries)),
                 ]),
             ),
+            (
+                // The sharded admission front door: how work reached
+                // the workers (own-shard pulls vs whole-batch steals)
+                // and how deep any one shard ever got.
+                "queue",
+                obj(vec![
+                    ("shards", num(self.workers as u64)),
+                    ("pulls", num(m.pulls)),
+                    ("steals", num(m.steals)),
+                    ("stolen_requests", num(m.stolen_requests)),
+                    (
+                        "shard_depth_highwater",
+                        num(m.shard_depth_highwater),
+                    ),
+                ]),
+            ),
             ("latency_us", Json::Obj(latency)),
             ("cache", cache),
             (
@@ -297,6 +317,7 @@ fn hist_json(h: &Histogram) -> Json {
         ("p50_us", num(h.quantile_us(0.50))),
         ("p95_us", num(h.quantile_us(0.95))),
         ("p99_us", num(h.quantile_us(0.99))),
+        ("p999_us", num(h.quantile_us(0.999))),
     ])
 }
 
@@ -331,7 +352,7 @@ mod tests {
     fn json_has_schema_stage_keys_and_consistent_sums() {
         let snap = snapshot_with(4);
         let doc = snap.to_json();
-        assert_eq!(doc.get("schema").as_usize(), Some(2));
+        assert_eq!(doc.get("schema").as_usize(), Some(3));
         assert_eq!(doc.get("requests").as_usize(), Some(4));
         assert_eq!(doc.get("transport").as_str(), Some("sealed"));
 
@@ -397,6 +418,30 @@ mod tests {
             snap.metrics.accounted(),
             snap.metrics.submitted
         );
+    }
+
+    #[test]
+    fn json_queue_block_and_p999_present() {
+        let mut snap = snapshot_with(4);
+        snap.metrics.pulls = 5;
+        snap.metrics.steals = 2;
+        snap.metrics.stolen_requests = 7;
+        snap.metrics.shard_depth_highwater = 3;
+        let doc = snap.to_json();
+        let q = doc.get("queue");
+        assert_eq!(q.get("shards").as_usize(), Some(2));
+        assert_eq!(q.get("pulls").as_usize(), Some(5));
+        assert_eq!(q.get("steals").as_usize(), Some(2));
+        assert_eq!(q.get("stolen_requests").as_usize(), Some(7));
+        assert_eq!(
+            q.get("shard_depth_highwater").as_usize(),
+            Some(3)
+        );
+        let e2e = doc.get("latency_us").get("end_to_end");
+        let p99 = e2e.get("p99_us").as_f64().unwrap();
+        let p999 = e2e.get("p999_us").as_f64().unwrap();
+        let max = e2e.get("max_us").as_f64().unwrap();
+        assert!(p99 <= p999 && p999 <= max, "quantile monotonicity");
     }
 
     #[test]

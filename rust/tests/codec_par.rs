@@ -477,6 +477,77 @@ fn simd_quant_kernels_bit_identical_across_tiers() {
 }
 
 #[test]
+fn simd_block_extrema_bit_identical_across_tiers() {
+    let tiers = simd::available();
+    check_prop("block_extrema per tier ≡ scalar", 40, |p| {
+        let mut freq = [0f32; 64];
+        p.fill_normal(&mut freq, 3.0);
+        let want = quant::block_extrema(&freq);
+        for &t in &tiers {
+            let got = simd::block_extrema(t, &freq);
+            assert_eq!(
+                (got.fmin.to_bits(), got.fmax.to_bits()),
+                (want.fmin.to_bits(), want.fmax.to_bits()),
+                "extrema [{}]",
+                t.name()
+            );
+        }
+    });
+    // Signed-zero extrema: packed minps/maxps keep whichever operand
+    // of a `+0.0`/`-0.0` pair the fold order hands them, so a block
+    // whose true min or max is a zero exercises the vector tiers'
+    // scalar-rescan fallback. Sweep both orderings of the pair across
+    // lane/row positions so every fold path sees each flavor first.
+    for (a, b) in [(0.0f32, -0.0f32), (-0.0f32, 0.0f32)] {
+        for pos in [0usize, 3, 7, 8, 31, 32, 60, 63] {
+            // Zero is the minimum of an otherwise-positive block.
+            let mut f = [1.5f32; 64];
+            f[pos] = a;
+            f[63 - pos] = b;
+            let want = quant::block_extrema(&f);
+            for &t in &tiers {
+                let got = simd::block_extrema(t, &f);
+                assert_eq!(
+                    (got.fmin.to_bits(), got.fmax.to_bits()),
+                    (want.fmin.to_bits(), want.fmax.to_bits()),
+                    "zero-min [{}] pos {pos} pair ({a},{b})",
+                    t.name()
+                );
+            }
+            // Zero is the maximum of an otherwise-negative block.
+            let mut g = [-1.5f32; 64];
+            g[pos] = a;
+            g[63 - pos] = b;
+            let want = quant::block_extrema(&g);
+            for &t in &tiers {
+                let got = simd::block_extrema(t, &g);
+                assert_eq!(
+                    (got.fmin.to_bits(), got.fmax.to_bits()),
+                    (want.fmin.to_bits(), want.fmax.to_bits()),
+                    "zero-max [{}] pos {pos} pair ({a},{b})",
+                    t.name()
+                );
+            }
+        }
+    }
+    // All-zero block of mixed flavors: both extrema land on zero.
+    let mut z = [0.0f32; 64];
+    for v in z.iter_mut().skip(1).step_by(2) {
+        *v = -0.0;
+    }
+    let want = quant::block_extrema(&z);
+    for &t in &tiers {
+        let got = simd::block_extrema(t, &z);
+        assert_eq!(
+            (got.fmin.to_bits(), got.fmax.to_bits()),
+            (want.fmin.to_bits(), want.fmax.to_bits()),
+            "all-zero [{}]",
+            t.name()
+        );
+    }
+}
+
+#[test]
 fn simd_seal_open_bit_identical_across_tiers() {
     let tiers = simd::available();
     check_prop("seal/open per tier ≡ scalar", 10, |p| {

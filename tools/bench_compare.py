@@ -36,13 +36,24 @@ persistent executor pool exists to prevent, gateable on any runner.
 ``--check-stats STATS.json`` validates the serve telemetry snapshot
 written by ``fmc-accel serve --stats-json`` instead: required top-level
 keys, full histogram blocks for end-to-end latency and every pipeline
-stage, quantile monotonicity, per-stage latency mass bounded by the
-end-to-end mass, executor-pool job accounting
-(submitted == executed), and the schema-v2 admission block: all
+stage, quantile monotonicity (p50 <= p95 <= p99 <= p999 <= max),
+per-stage latency mass bounded by the end-to-end mass, executor-pool
+job accounting (submitted == executed), the admission block: all
 shed/requeue counters present and non-negative, with the conservation
 identity ``submitted == replied + shed_* + failed`` holding exactly —
-this is what ``make chaos`` gates after each fault-injected serve run.
+this is what ``make chaos`` gates after each fault-injected serve run
+— and, from schema v3 on, the sharded-queue block (shards / pulls /
+steals / stolen_requests / shard_depth_highwater, all non-negative).
 With ``--check-stats`` the BASELINE/FRESH positionals are optional.
+
+``--check-serve-bench BENCH.json`` validates the sustained-rate
+serving benchmark written by ``cargo bench --bench serve_sustained``
+(``make bench-serve`` / the quick smoke variant): every run entry
+must carry the required keys, monotone end-to-end quantiles, a
+non-negative throughput, non-negative queue counters, and the
+conservation identity ``submitted == replied + shed + failed``. An
+empty ``runs`` list passes only on the checked-in
+``"placeholder": true`` baseline.
 
 Exit code 0 = pass, 1 = regression, 2 = usage/file error.
 """
@@ -70,9 +81,10 @@ SCALAR_TIER_ENTRIES = (
     "open 32x64x64 [scalar]",
 )
 
-# Keys of one rendered histogram block in the stats JSON.
+# Keys of one rendered histogram block in the stats JSON (schema v3
+# added p999_us to every histogram).
 HIST_KEYS = ("count", "sum_us", "max_us", "mean_us", "p50_us",
-             "p95_us", "p99_us")
+             "p95_us", "p99_us", "p999_us")
 
 # The five pipeline seams (must match rust obs::SEAM_KEYS).
 STAGE_KEYS = ("enqueue_to_batch", "batch_to_ship", "ship_to_open",
@@ -87,6 +99,10 @@ ADMISSION_KEYS = (("queue_cap", "submitted", "replied", "failed",
                    "requeued_batches", "requeued_requests",
                    "open_retries") + SHED_KEYS)
 
+# Sharded work-stealing queue block (schema v3, ISSUE 9).
+QUEUE_KEYS = ("shards", "pulls", "steals", "stolen_requests",
+              "shard_depth_highwater")
+
 
 def check_hist(doc, label, problems):
     """Validate one histogram block; returns it (or {})."""
@@ -99,11 +115,12 @@ def check_hist(doc, label, problems):
         return {}
     if doc["count"] > 0:
         q = [doc["p50_us"], doc["p95_us"], doc["p99_us"],
-             doc["max_us"]]
+             doc["p999_us"], doc["max_us"]]
         if sorted(q) != q:
             problems.append(
                 f"{label}: quantiles not monotone "
-                f"p50={q[0]} p95={q[1]} p99={q[2]} max={q[3]}")
+                f"p50={q[0]} p95={q[1]} p99={q[2]} p999={q[3]} "
+                f"max={q[4]}")
     return doc
 
 
@@ -179,6 +196,30 @@ def check_stats(path):
                 f"admission.replied {adm['replied']} != requests "
                 f"{doc.get('requests')}")
 
+    # Sharded-queue block (schema v3, ISSUE 9): counters present and
+    # non-negative, one shard per worker.
+    if isinstance(doc.get("schema"), (int, float)) \
+            and doc["schema"] >= 3:
+        queue = doc.get("queue")
+        if not isinstance(queue, dict):
+            problems.append("queue block missing (schema >= 3)")
+            queue = {}
+        q_missing = [k for k in QUEUE_KEYS if k not in queue]
+        if q_missing:
+            problems.append(
+                f"queue: missing {', '.join(q_missing)}")
+        q_negative = [k for k in QUEUE_KEYS
+                      if isinstance(queue.get(k), (int, float))
+                      and queue[k] < 0]
+        if q_negative:
+            problems.append(
+                f"queue: negative {', '.join(q_negative)}")
+        if ("shards" in queue and "workers" in doc
+                and queue["shards"] != doc["workers"]):
+            problems.append(
+                f"queue.shards {queue['shards']} != workers "
+                f"{doc['workers']} (one shard per worker)")
+
     if problems:
         print(f"bench_compare: stats check FAILED on {path}:",
               file=sys.stderr)
@@ -197,6 +238,113 @@ def check_stats(path):
           f"{adm['requeued_requests']} requests, "
           f"{adm['open_retries']} open retries)")
     print(f"bench_compare: stats shape OK for {path}")
+    return 0
+
+
+# Required keys of one serve_sustained run entry.
+SERVE_RUN_KEYS = ("workers", "rate_rps", "requests", "submitted",
+                  "replied", "shed", "failed", "throughput_rps",
+                  "latency_us", "queue")
+
+
+def check_serve_run(i, run, problems):
+    """Validate one serve_sustained run entry."""
+    label = f"runs[{i}]"
+    if not isinstance(run, dict):
+        problems.append(f"{label}: not an object")
+        return
+    missing = [k for k in SERVE_RUN_KEYS if k not in run]
+    if missing:
+        problems.append(f"{label}: missing {', '.join(missing)}")
+        return
+    for k in ("workers", "requests", "submitted", "replied", "shed",
+              "failed", "rate_rps", "throughput_rps"):
+        if not isinstance(run[k], (int, float)) or run[k] < 0:
+            problems.append(f"{label}.{k}: not a non-negative number")
+            return
+    if run["submitted"] != run["replied"] + run["shed"] \
+            + run["failed"]:
+        problems.append(
+            f"{label}: conservation: submitted {run['submitted']} "
+            f"!= replied {run['replied']} + shed {run['shed']} + "
+            f"failed {run['failed']}")
+    e2e = run["latency_us"].get("end_to_end") \
+        if isinstance(run["latency_us"], dict) else None
+    if not isinstance(e2e, dict):
+        problems.append(f"{label}: latency_us.end_to_end missing")
+        return
+    for k in ("count", "p50_us", "p99_us", "p999_us", "max_us"):
+        if k not in e2e:
+            problems.append(f"{label}: end_to_end.{k} missing")
+            return
+    if e2e["count"] > 0:
+        q = [e2e["p50_us"], e2e["p99_us"], e2e["p999_us"],
+             e2e["max_us"]]
+        if sorted(q) != q:
+            problems.append(
+                f"{label}: end_to_end quantiles not monotone "
+                f"p50={q[0]} p99={q[1]} p999={q[2]} max={q[3]}")
+    if e2e["count"] != run["replied"]:
+        problems.append(
+            f"{label}: end_to_end.count {e2e['count']} != replied "
+            f"{run['replied']}")
+    queue = run["queue"]
+    if not isinstance(queue, dict):
+        problems.append(f"{label}: queue not an object")
+        return
+    for k in ("pulls", "steals", "stolen_requests",
+              "shard_depth_highwater"):
+        if not isinstance(queue.get(k), (int, float)) \
+                or queue[k] < 0:
+            problems.append(
+                f"{label}.queue.{k}: not a non-negative number")
+
+
+def check_serve_bench(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot read {path}: {e}",
+              file=sys.stderr)
+        return 2
+
+    problems = []
+    if doc.get("bench") != "serve_sustained":
+        problems.append(
+            f"bench name {doc.get('bench')!r} != 'serve_sustained'")
+    runs = doc.get("runs")
+    if not isinstance(runs, list):
+        problems.append("runs missing or not a list")
+        runs = []
+    if not runs and not doc.get("placeholder"):
+        problems.append(
+            "runs is empty but the file is not the checked-in "
+            "placeholder")
+    for i, run in enumerate(runs):
+        check_serve_run(i, run, problems)
+
+    if problems:
+        print(f"bench_compare: serve-bench check FAILED on {path}:",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  [REGRESSION] {p}", file=sys.stderr)
+        return 1
+    if not runs:
+        print(f"bench_compare: {path} is the pre-toolchain "
+              "placeholder; nothing to gate")
+        return 0
+    for run in runs:
+        e2e = run["latency_us"]["end_to_end"]
+        print(f"  [ok        ] {run['workers']}w @ "
+              f"{run['rate_rps']:.0f} rps: "
+              f"{run['throughput_rps']:.1f} rps delivered, "
+              f"p99 {e2e['p99_us']}us p999 {e2e['p999_us']}us, "
+              f"{run['queue']['steals']} steals, "
+              f"conservation {run['submitted']} == "
+              f"{run['replied']} + {run['shed']} + {run['failed']}")
+    print(f"bench_compare: serve-bench shape OK for {path} "
+          f"({len(runs)} runs)")
     return 0
 
 
@@ -230,15 +378,25 @@ def main():
                     help="validate a serve --stats-json telemetry "
                          "snapshot instead of (or before) the bench "
                          "comparison")
+    ap.add_argument("--check-serve-bench", metavar="BENCH_JSON",
+                    help="validate a serve_sustained bench JSON "
+                         "(schema shape, quantile monotonicity, "
+                         "conservation identity) instead of (or "
+                         "before) the bench comparison")
     args = ap.parse_args()
 
+    if args.check_serve_bench:
+        rc = check_serve_bench(args.check_serve_bench)
+        if rc or not (args.baseline or args.check_stats):
+            return rc
     if args.check_stats:
         rc = check_stats(args.check_stats)
         if rc or not args.baseline:
             return rc
     if not args.baseline or not args.fresh:
         ap.error("BASELINE and FRESH are required unless "
-                 "--check-stats is the only check")
+                 "--check-stats/--check-serve-bench is the only "
+                 "check")
 
     base = load_entries(args.baseline)
     fresh = load_entries(args.fresh)
