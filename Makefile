@@ -8,7 +8,7 @@
 
 CARGO ?= cargo
 
-.PHONY: all build test test-dispatch fmt clippy smoke chaos bench-check bench-codec bench-serve golden verify
+.PHONY: all build test test-dispatch test-store fmt clippy smoke chaos bench-check bench-codec bench-serve bench-store golden verify
 
 all: build
 
@@ -17,6 +17,17 @@ build:
 
 test:
 	$(CARGO) test -q
+
+# Tiered sealed-stream store suite (ISSUE 10): the store unit tests
+# (record codec, page file, page cache, tier wiring) plus the serving
+# integration tests that hammer spill/backfill races. Store tests use
+# per-process temp-dir scratch; clean any leftovers from aborted runs
+# before and after.
+test-store:
+	rm -rf /tmp/fmc-store-* /tmp/fmc-pagefile-* /tmp/fmc-cache-pressure-* 2>/dev/null || true
+	$(CARGO) test -q store::
+	$(CARGO) test -q --test server_stress store
+	rm -rf /tmp/fmc-store-* /tmp/fmc-pagefile-* /tmp/fmc-cache-pressure-* 2>/dev/null || true
 
 # Re-run the suite under each forced SIMD dispatch tier (ISSUE 8):
 # FMC_SIMD=off pins the scalar reference, =portable the lanewise
@@ -51,6 +62,9 @@ smoke:
 	FMC_BENCH_QUICK=1 $(CARGO) bench --bench serve_sustained
 	python3 tools/bench_compare.py \
 	  --check-serve-bench target/BENCH_serve_sustained.smoke.json
+	FMC_BENCH_QUICK=1 $(CARGO) bench --bench cache_pressure
+	python3 tools/bench_compare.py \
+	  --check-store-bench target/BENCH_cache_pressure.smoke.json
 
 # Chaos smoke (ISSUE 7): fault-injected serve runs on the synthetic
 # engine — each seeded FaultPlan kills one worker mid-run and sprinkles
@@ -68,6 +82,16 @@ chaos:
 	  python3 tools/bench_compare.py \
 	    --check-stats target/chaos_stats_$$seed.json || exit 1; \
 	done
+	rm -rf target/chaos_store
+	$(CARGO) run --release --bin fmc-accel -- serve \
+	  --engine synthetic --requests 64 --workers 3 \
+	  --cache-budget 4096 --store-dir target/chaos_store \
+	  --page-size 4096 \
+	  --faults seed=2,spill-fail=2 \
+	  --stats-json target/chaos_stats_spill.json
+	python3 tools/bench_compare.py \
+	  --check-stats target/chaos_stats_spill.json
+	rm -rf target/chaos_store
 
 # Bench-regression gate. Reuses the smoke json if a smoke run already
 # produced one (CI runs `make verify` first, which ends with smoke);
@@ -99,6 +123,15 @@ bench-serve:
 	$(CARGO) bench --bench serve_sustained
 	python3 tools/bench_compare.py \
 	  --check-serve-bench BENCH_serve_sustained.json
+
+# Cache-pressure benchmark (ISSUE 10): working-set sweeps against the
+# tiered sealed-stream store vs the RAM-only baseline. Rewrites the
+# checked-in BENCH_cache_pressure.json baseline, then shape-checks it
+# (schema, counter sanity, tier-hit conservation).
+bench-store:
+	$(CARGO) bench --bench cache_pressure
+	python3 tools/bench_compare.py \
+	  --check-store-bench BENCH_cache_pressure.json
 
 # Regenerate the cross-language golden vectors (needs python + jax).
 golden:

@@ -99,9 +99,23 @@ impl InterlayerCache {
         self.insert_arc(key, Arc::new(bs));
     }
 
-    /// [`Self::insert`] for an already-shared stream.
+    /// [`Self::insert`] for an already-shared stream. Budget
+    /// evictions are dropped; a tiered deployment uses
+    /// [`Self::insert_arc_evicting`] so they can spill instead.
     pub fn insert_arc(&mut self, key: String,
                       bs: Arc<FmapBitstream>) {
+        let _ = self.insert_arc_evicting(key, bs);
+    }
+
+    /// [`Self::insert_arc`], returning the entries the byte budget
+    /// evicted (coldest first) instead of dropping them — the seam
+    /// the tiered store's spill path hangs off
+    /// (`crate::store::TieredStore`). A same-key replacement is not
+    /// an eviction (the old stream is superseded, not displaced) and
+    /// is not returned.
+    pub fn insert_arc_evicting(
+        &mut self, key: String, bs: Arc<FmapBitstream>,
+    ) -> Vec<(String, Arc<FmapBitstream>)> {
         if let Some(i) =
             self.held.iter().position(|(k, _, _)| *k == key)
         {
@@ -111,11 +125,32 @@ impl InterlayerCache {
         let bytes = bs.stream_bytes();
         self.held.push((key, bs, bytes));
         self.bytes_held += bytes;
+        let mut evicted = Vec::new();
         while self.bytes_held > self.budget && !self.held.is_empty() {
-            let (_, _, b) = self.held.remove(0);
+            let (k, bs, b) = self.held.remove(0);
             self.bytes_held -= b;
             self.evictions += 1;
+            evicted.push((k, bs));
         }
+        evicted
+    }
+
+    /// Drain every entry (coldest first), leaving the cache empty.
+    /// The tiered store's demote-everything hook; counts as
+    /// evictions so occupancy accounting stays consistent.
+    pub fn take_all(&mut self)
+                    -> Vec<(String, Arc<FmapBitstream>)> {
+        self.bytes_held = 0;
+        self.evictions += self.held.len() as u64;
+        std::mem::take(&mut self.held)
+            .into_iter()
+            .map(|(k, bs, _)| (k, bs))
+            .collect()
+    }
+
+    /// The configured byte budget.
+    pub fn budget(&self) -> u64 {
+        self.budget
     }
 
     /// Sealed stream bytes currently held.
@@ -216,6 +251,48 @@ mod tests {
         assert_eq!(s.entries, 1);
         assert_eq!(s.bytes_held, 10);
         assert_eq!(c.recounted_bytes(), 10);
+    }
+
+    #[test]
+    fn insert_arc_evicting_returns_displaced_entries_coldest_first()
+    {
+        let mut c = InterlayerCache::new(25);
+        c.insert("a".into(), stream_of(10));
+        c.insert("b".into(), stream_of(10));
+        // Replacement is not an eviction.
+        let ev = c.insert_arc_evicting(
+            "b".into(),
+            Arc::new(stream_of(12)),
+        );
+        assert!(ev.is_empty());
+        // "a" then "b" must come back in LRU order.
+        let ev = c.insert_arc_evicting(
+            "c".into(),
+            Arc::new(stream_of(20)),
+        );
+        let keys: Vec<&str> =
+            ev.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["a", "b"]);
+        assert_eq!(ev[0].1.stream_bytes(), 10);
+        assert_eq!(ev[1].1.stream_bytes(), 12);
+        assert_eq!(c.bytes_held(), c.recounted_bytes());
+        assert_eq!(c.stats().entries, 1);
+    }
+
+    #[test]
+    fn take_all_drains_in_lru_order_and_zeroes_accounting() {
+        let mut c = InterlayerCache::new(100);
+        c.insert("a".into(), stream_of(10));
+        c.insert("b".into(), stream_of(20));
+        c.get("a"); // "b" is now coldest
+        let all = c.take_all();
+        let keys: Vec<&str> =
+            all.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["b", "a"]);
+        let s = c.stats();
+        assert_eq!((s.entries, s.bytes_held), (0, 0));
+        assert_eq!(s.evictions, 2);
+        assert_eq!(c.recounted_bytes(), 0);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! | `envelope-open` | first open attempt of a request fails        |
 //! | `ship`          | batcher sleeps before shipping a batch       |
 //! | `open`          | worker sleeps before opening a batch         |
+//! | `spill`         | tiered-store spill of an evicted stream fails|
 //!
 //! Kills at `worker-recv` fire *before* any reply for the batch is
 //! sent, so the requeue path (at-most-once, see `docs/robustness.md`)
@@ -35,6 +36,9 @@ pub const SEAM_ENVELOPE_OPEN: &str = "envelope-open";
 pub const SEAM_SHIP: &str = "ship";
 /// Seam name: delay before a worker opens a batch.
 pub const SEAM_OPEN: &str = "open";
+/// Seam name: tiered-store spill failure (evicted stream dropped
+/// instead of landing on disk; later misses re-seal).
+pub const SEAM_SPILL: &str = "spill";
 
 /// splitmix64 — tiny, seedable, good enough to spread fault sites.
 /// (Same generator family as `testutil::Prng`; duplicated here so the
@@ -61,6 +65,11 @@ pub struct FaultPlan {
     open_delay: Option<(usize, Duration)>,
     /// Sleep this long before shipping every batch.
     ship_delay: Option<Duration>,
+    /// Fail the tiered store's spill of the Nth evicted stream when
+    /// `spill_seq % period == phase`. 0 disables. A failed spill
+    /// degrades to drop-and-re-seal, never to wrong bytes.
+    spill_fail_period: u64,
+    spill_fail_phase: u64,
     /// Human-readable provenance ("seed=7", "kill=1@2", …).
     label: String,
 }
@@ -75,6 +84,8 @@ impl FaultPlan {
             open_fail_phase: 0,
             open_delay: None,
             ship_delay: None,
+            spill_fail_period: 0,
+            spill_fail_phase: 0,
             label: "none".to_string(),
         }
     }
@@ -118,6 +129,8 @@ impl FaultPlan {
     ///   attempt when `seq % P == PH` (PH defaults to 0)
     /// * `ship-delay-us=N` — sleep N µs before shipping each batch
     /// * `open-delay-us=W@N` — worker W sleeps N µs before opening
+    /// * `spill-fail=P` or `spill-fail=P/PH` — fail the tiered
+    ///   store's spill when `spill_seq % P == PH` (PH defaults to 0)
     pub fn parse(
         spec: &str, workers: usize,
     ) -> Result<FaultPlan, String> {
@@ -166,6 +179,16 @@ impl FaultPlan {
                         plan.open_fail_phase = 0;
                     }
                 },
+                "spill-fail" => match val.split_once('/') {
+                    Some((p, ph)) => {
+                        plan.spill_fail_period = parse_u64(p)?;
+                        plan.spill_fail_phase = parse_u64(ph)?;
+                    }
+                    None => {
+                        plan.spill_fail_period = parse_u64(val)?;
+                        plan.spill_fail_phase = 0;
+                    }
+                },
                 "ship-delay-us" => {
                     plan.ship_delay =
                         Some(Duration::from_micros(parse_u64(val)?));
@@ -205,6 +228,17 @@ impl FaultPlan {
         self
     }
 
+    /// Builder: fail the tiered store's spill when
+    /// `spill_seq % period == phase`.
+    pub fn with_spill_fail_every(
+        mut self, period: u64, phase: u64,
+    ) -> Self {
+        self.spill_fail_period = period;
+        self.spill_fail_phase =
+            if period > 0 { phase % period } else { 0 };
+        self
+    }
+
     /// Builder: sleep before shipping every batch.
     pub fn with_ship_delay(mut self, d: Duration) -> Self {
         self.ship_delay = Some(d);
@@ -241,6 +275,17 @@ impl FaultPlan {
     /// `ship` seam: delay before the batcher ships a batch.
     pub fn delay_before_ship(&self) -> Option<Duration> {
         self.ship_delay
+    }
+
+    /// `spill` seam: `(period, phase)` for the tiered store's
+    /// deterministic spill-failure check, or `None` when disabled.
+    /// Consumed by `crate::store::TieredStoreConfig::spill_fail`.
+    pub fn spill_fail(&self) -> Option<(u64, u64)> {
+        if self.spill_fail_period > 0 {
+            Some((self.spill_fail_period, self.spill_fail_phase))
+        } else {
+            None
+        }
     }
 
     /// `open` seam: delay before worker `wi` opens a batch.
@@ -319,7 +364,7 @@ mod tests {
     #[test]
     fn parse_round_trips_every_clause() {
         let p = FaultPlan::parse(
-            "kill=1@3,open-fail=4/1,ship-delay-us=250",
+            "kill=1@3,open-fail=4/1,ship-delay-us=250,spill-fail=3/2",
             2,
         )
         .expect("spec parses");
@@ -329,6 +374,22 @@ mod tests {
         assert_eq!(
             p.delay_before_ship(),
             Some(Duration::from_micros(250))
+        );
+        assert_eq!(p.spill_fail(), Some((3, 2)));
+
+        let p = FaultPlan::parse("spill-fail=2", 1).unwrap();
+        assert_eq!(p.spill_fail(), Some((2, 0)));
+        assert_eq!(
+            FaultPlan::new(1).spill_fail(),
+            None,
+            "disabled by default"
+        );
+        assert_eq!(
+            FaultPlan::new(1)
+                .with_spill_fail_every(4, 9)
+                .spill_fail(),
+            Some((4, 1)),
+            "phase wraps to the period"
         );
 
         let p = FaultPlan::parse("open-delay-us=0@100", 2).unwrap();

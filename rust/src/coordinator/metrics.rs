@@ -177,6 +177,19 @@ pub struct Metrics {
     /// Deepest any single admission shard ever got (merged by max:
     /// it is a high-water mark, not a flow count).
     pub shard_depth_highwater: u64,
+    /// Tiered sealed-stream store (ISSUE 10): lookups served by the
+    /// RAM tier.
+    pub store_ram_hits: u64,
+    /// Lookups served by the disk tier (write-behind queue, page
+    /// cache, or page file).
+    pub store_disk_hits: u64,
+    /// RAM-tier evictions accepted into the write-behind spill queue
+    /// instead of dropped.
+    pub store_spills: u64,
+    /// Sealed stream bytes of those spills.
+    pub store_spilled_bytes: u64,
+    /// Disk hits that had to read the page file (page-cache misses).
+    pub store_page_faults: u64,
 }
 
 impl Default for Metrics {
@@ -211,6 +224,11 @@ impl Metrics {
             steals: 0,
             stolen_requests: 0,
             shard_depth_highwater: 0,
+            store_ram_hits: 0,
+            store_disk_hits: 0,
+            store_spills: 0,
+            store_spilled_bytes: 0,
+            store_page_faults: 0,
         }
     }
 
@@ -317,6 +335,11 @@ impl Metrics {
         self.shard_depth_highwater = self
             .shard_depth_highwater
             .max(o.shard_depth_highwater);
+        self.store_ram_hits += o.store_ram_hits;
+        self.store_disk_hits += o.store_disk_hits;
+        self.store_spills += o.store_spills;
+        self.store_spilled_bytes += o.store_spilled_bytes;
+        self.store_page_faults += o.store_page_faults;
     }
 }
 
@@ -524,5 +547,23 @@ mod tests {
         assert_eq!(a.shard_depth_highwater, 6);
         assert_eq!(a.shed_total(), 15);
         assert_eq!(a.accounted(), 4 + 15 + 6);
+    }
+
+    #[test]
+    fn merge_adds_store_tier_counters() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.store_ram_hits = 3;
+        b.store_ram_hits = 2;
+        b.store_disk_hits = 4;
+        b.store_spills = 5;
+        b.store_spilled_bytes = 1024;
+        b.store_page_faults = 6;
+        a.merge(&b);
+        assert_eq!(a.store_ram_hits, 5);
+        assert_eq!(a.store_disk_hits, 4);
+        assert_eq!(a.store_spills, 5);
+        assert_eq!(a.store_spilled_bytes, 1024);
+        assert_eq!(a.store_page_faults, 6);
     }
 }

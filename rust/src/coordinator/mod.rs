@@ -26,6 +26,11 @@
 //! each seam; [`InferenceServer::shutdown_telemetry`] returns the
 //! run's merged [`crate::obs::TelemetrySnapshot`].
 //!
+//! Sealed sample streams persist between requests in the tiered
+//! store ([`crate::store::TieredStore`]): the [`cache`] RAM LRU in
+//! front of an optional paged disk tier, so evictions spill instead
+//! of dropping (`serve --store-dir`; see `docs/storage.md`).
+//!
 //! The serving pipeline is bounded and typed end to end: [`admission`]
 //! defines the submit-side shed errors and the reply-side rejection
 //! reasons, and [`faults`] the deterministic fault-injection plans

@@ -89,7 +89,6 @@ use crate::coordinator::admission::{
     AdmissionCounters, Rejection, ServeResult, ShedReason, SubmitError,
 };
 use crate::coordinator::batcher::BatchPolicy;
-use crate::coordinator::cache::InterlayerCache;
 use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::transport::{
@@ -107,6 +106,10 @@ use crate::runtime::Runtime;
 use crate::sim::dma::DmaTraffic;
 use crate::sim::scheduler::CompressionProfile;
 use crate::sim::Accelerator;
+use crate::store::{
+    PageCacheConfig, TieredStore, TieredStoreConfig,
+    DEFAULT_PAGE_BYTES, DEFAULT_PAGE_CACHE_ENTRIES,
+};
 use crate::util::lock_unpoisoned;
 
 /// How long a worker parks in `ShardedQueue::pull` before re-polling
@@ -264,13 +267,26 @@ pub struct ServerConfig {
     /// measured wire bytes of what the served SmallCNN's maps
     /// actually serialize to, instead of a guessed constant.
     pub sim_profile: Option<CompressionProfile>,
-    /// Byte budget of the interlayer bitstream cache (sealed sample
-    /// streams held between layers and requests; LRU-evicted).
+    /// Byte budget of the interlayer bitstream cache's RAM tier
+    /// (sealed sample streams held between layers and requests;
+    /// LRU-evicted — spilled to the disk tier when one is configured,
+    /// dropped otherwise).
     pub cache_budget_bytes: u64,
-    /// Share an existing cache (e.g. across rolling server restarts
-    /// or several servers in one process). `None` builds a private
-    /// cache sized by `cache_budget_bytes`.
-    pub cache: Option<Arc<Mutex<InterlayerCache>>>,
+    /// Share an existing tiered store (e.g. across rolling server
+    /// restarts or several servers in one process). `None` builds a
+    /// private store: disk-backed under `store_dir` when set,
+    /// RAM-only otherwise, sized by `cache_budget_bytes`.
+    pub cache: Option<Arc<Mutex<TieredStore>>>,
+    /// Directory of the disk tier's page file. `None` (the default)
+    /// serves RAM-only: evictions drop and misses re-seal, exactly
+    /// the pre-tiered behavior. CLI: `serve --store-dir`.
+    pub store_dir: Option<std::path::PathBuf>,
+    /// Fixed page size of the disk tier's page file. CLI:
+    /// `serve --page-size`.
+    pub page_size_bytes: usize,
+    /// Capacity (in pages) of the disk tier's in-memory page cache.
+    /// CLI: `serve --page-cache`.
+    pub page_cache_entries: usize,
     /// The pull-seam / stage→stage currency. Default: sealed streams
     /// ([`SealedTransport`]); [`DenseTransport`] is the bit-identical
     /// dense reference.
@@ -306,6 +322,9 @@ impl ServerConfig {
             sim_profile: None,
             cache_budget_bytes: 8 * 1024 * 1024,
             cache: None,
+            store_dir: None,
+            page_size_bytes: DEFAULT_PAGE_BYTES,
+            page_cache_entries: DEFAULT_PAGE_CACHE_ENTRIES,
             transport: Arc::new(SealedTransport),
             span_ring_cap: DEFAULT_SPAN_RING_CAP,
             queue_cap: DEFAULT_QUEUE_CAP,
@@ -320,11 +339,31 @@ impl ServerConfig {
         self
     }
 
-    /// Builder-style shared interlayer bitstream cache.
+    /// Builder-style shared tiered sealed-stream store.
     pub fn with_cache(
-        mut self, cache: Arc<Mutex<InterlayerCache>>,
+        mut self, cache: Arc<Mutex<TieredStore>>,
     ) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Builder-style disk-tier directory (enables spill-to-disk).
+    pub fn with_store_dir(
+        mut self, dir: impl Into<std::path::PathBuf>,
+    ) -> Self {
+        self.store_dir = Some(dir.into());
+        self
+    }
+
+    /// Builder-style disk-tier page size.
+    pub fn with_page_size_bytes(mut self, bytes: usize) -> Self {
+        self.page_size_bytes = bytes;
+        self
+    }
+
+    /// Builder-style page-cache capacity (pages).
+    pub fn with_page_cache_entries(mut self, pages: usize) -> Self {
+        self.page_cache_entries = pages;
         self
     }
 
@@ -523,7 +562,7 @@ impl Drop for InferenceServer {
 /// `(hits, misses)` this pass itself caused (the shared cache's
 /// global counters would misattribute concurrent sharers' traffic).
 fn measured_profiles_via_cache(
-    net: &Network, seed: u64, cache: &Mutex<InterlayerCache>,
+    net: &Network, seed: u64, cache: &Mutex<TieredStore>,
 ) -> (Vec<Option<harness_profiles::LayerProfile>>, u64, u64) {
     let dw = net.has_depthwise();
     let mut hits = 0u64;
@@ -593,7 +632,7 @@ fn measured_profiles_via_cache(
 /// streams are fetched through the interlayer cache; this pass's
 /// hit/miss counts land in `metrics`.
 fn sim_costs(
-    cfg: &ServerConfig, cache: &Mutex<InterlayerCache>,
+    cfg: &ServerConfig, cache: &Mutex<TieredStore>,
     metrics: &mut Metrics,
 ) -> (u64, f64, DmaTraffic) {
     let accel = Accelerator::new(cfg.accel.clone());
@@ -761,12 +800,45 @@ fn coordinator_loop(
     queue: Arc<ShardedQueue<Request>>,
 ) -> TelemetrySnapshot {
     let mut metrics = Metrics::new();
-    // Interlayer bitstream cache: injected (shared across servers /
-    // restarts) or private, sized by the configured byte budget.
+    // Interlayer sealed-stream store: injected (shared across
+    // servers / restarts), disk-backed when a store directory is
+    // configured, or the plain RAM LRU sized by the byte budget. An
+    // unusable store directory degrades to RAM-only serving — the
+    // disk tier is a capacity optimization, never a correctness
+    // dependency.
     let cache = cfg.cache.clone().unwrap_or_else(|| {
-        Arc::new(Mutex::new(InterlayerCache::new(
-            cfg.cache_budget_bytes,
-        )))
+        let store = match &cfg.store_dir {
+            Some(dir) => {
+                let mut scfg = TieredStoreConfig::new(
+                    dir, cfg.cache_budget_bytes,
+                );
+                scfg.page_size_bytes = cfg.page_size_bytes;
+                scfg.page_cache = PageCacheConfig {
+                    max_entries: cfg.page_cache_entries,
+                };
+                scfg.spill_fail = cfg
+                    .faults
+                    .as_deref()
+                    .and_then(FaultPlan::spill_fail);
+                match TieredStore::open(scfg) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!(
+                            "server: store dir {} unusable \
+                             ({e:#}); serving RAM-only",
+                            dir.display()
+                        );
+                        TieredStore::ram_only(
+                            cfg.cache_budget_bytes,
+                        )
+                    }
+                }
+            }
+            None => {
+                TieredStore::ram_only(cfg.cache_budget_bytes)
+            }
+        };
+        Arc::new(Mutex::new(store))
     });
     let (cycles_per_image, energy_per_image, dma) =
         sim_costs(&cfg, &cache, &mut metrics);
@@ -779,10 +851,25 @@ fn coordinator_loop(
         metrics.shard_depth_highwater = metrics
             .shard_depth_highwater
             .max(queue.stats().depth_highwater);
+        // Flush the write-behind queue so the exported stats
+        // describe a durable disk tier, then snapshot both tiers:
+        // the `cache` block keeps its seed-era RAM shape, the v4
+        // `store` block carries the tier counters.
+        let (cache_stats, store_stats) = {
+            let mut store = lock_unpoisoned(&cache);
+            store.flush();
+            (store.cache_stats(), store.stats())
+        };
+        metrics.store_ram_hits += store_stats.ram_hits;
+        metrics.store_disk_hits += store_stats.disk_hits;
+        metrics.store_spills += store_stats.spills;
+        metrics.store_spilled_bytes += store_stats.spilled_bytes;
+        metrics.store_page_faults += store_stats.page_faults;
         TelemetrySnapshot {
             metrics,
             spans: rings,
-            cache: Some(lock_unpoisoned(&cache).stats()),
+            cache: Some(cache_stats),
+            store: Some(store_stats),
             dma: Some(dma),
             pool: crate::exec::global().stats(),
             workers,

@@ -27,6 +27,10 @@
 //!   path shards onto (codec, calibration, profiling, benches).
 //! * [`coordinator`] — the inference server: request queue, batcher,
 //!   multi-worker runtime pool with batch-level sharding, metrics.
+//! * [`store`] — tiered sealed-stream store: the RAM interlayer
+//!   cache spills evicted streams to an append-only paged disk file
+//!   (checksummed pages, in-memory index, LRU page cache) instead of
+//!   dropping them.
 //! * [`obs`] — pipeline telemetry: per-request stage spans, per-worker
 //!   span rings, the unified [`obs::TelemetrySnapshot`], and Chrome
 //!   trace-event export.
@@ -49,6 +53,7 @@ pub mod nn;
 pub mod obs;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod testutil;
 pub mod util;
 

@@ -9,6 +9,7 @@
 //!   compress-demo [--seed S] [--level L]
 //!   serve    --requests N [--workers W] [--no-compress]
 //!            [--artifacts DIR] [--cache-budget BYTES]
+//!            [--store-dir DIR] [--page-size BYTES] [--page-cache PAGES]
 //!            [--transport sealed|dense] [--engine runtime|synthetic]
 //!            [--span-ring-cap N] [--queue-cap N] [--deadline-ms N]
 //!            [--pin-cores] (or FMC_PIN=1)
@@ -22,14 +23,18 @@ use fmc_accel::compress::{codec, qtable::qtable};
 use fmc_accel::config::{models, AccelConfig};
 use fmc_accel::coordinator::{
     transport_by_name, EngineFactory, FaultPlan, InferenceEngine,
-    InferenceServer, InterlayerCache, ServerConfig, StagedEngine,
-    SubmitError, DEFAULT_QUEUE_CAP,
+    InferenceServer, ServerConfig, StagedEngine, SubmitError,
+    DEFAULT_QUEUE_CAP,
 };
 use fmc_accel::data;
 use fmc_accel::harness::{figs, profiles, tables};
 use fmc_accel::obs;
 use fmc_accel::runtime::{default_artifacts_dir, Runtime};
 use fmc_accel::sim::Accelerator;
+use fmc_accel::store::{
+    PageCacheConfig, TieredStore, TieredStoreConfig,
+    DEFAULT_PAGE_BYTES, DEFAULT_PAGE_CACHE_ENTRIES,
+};
 use fmc_accel::util::human_bytes;
 
 fn main() {
@@ -298,14 +303,6 @@ fn serve(args: &Args) -> i32 {
         .opt("artifacts")
         .map(Into::into)
         .unwrap_or_else(default_artifacts_dir);
-    // Interlayer bitstream cache: sealed sample streams reused
-    // across the server's profiling passes; budget in bytes via
-    // --cache-budget.
-    let cache = std::sync::Arc::new(std::sync::Mutex::new(
-        InterlayerCache::new(
-            args.opt_usize("cache-budget", 8 * 1024 * 1024) as u64,
-        ),
-    ));
     // Interlayer currency: sealed bitstreams by default; --transport
     // dense keeps the bit-identical dense reference path.
     let transport_name = args.opt_or("transport", "sealed");
@@ -333,6 +330,45 @@ fn serve(args: &Args) -> i32 {
         },
         None => None,
     };
+    // Tiered sealed-stream store: sealed sample streams reused
+    // across the server's profiling passes. --cache-budget sizes the
+    // RAM tier; --store-dir adds the paged disk tier (evictions
+    // spill instead of dropping — see docs/storage.md). Built after
+    // the fault plan so a `spill-fail=P` chaos arm reaches the
+    // store's spill seam.
+    let cache_budget =
+        args.opt_usize("cache-budget", 8 * 1024 * 1024) as u64;
+    let store_dir =
+        args.opt("store-dir").map(std::path::PathBuf::from);
+    let store = match &store_dir {
+        Some(sdir) => {
+            let mut scfg =
+                TieredStoreConfig::new(sdir, cache_budget);
+            scfg.page_size_bytes =
+                args.opt_usize("page-size", DEFAULT_PAGE_BYTES);
+            scfg.page_cache = PageCacheConfig {
+                max_entries: args.opt_usize(
+                    "page-cache",
+                    DEFAULT_PAGE_CACHE_ENTRIES,
+                ),
+            };
+            scfg.spill_fail =
+                faults.as_deref().and_then(FaultPlan::spill_fail);
+            match TieredStore::open(scfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!(
+                        "serve: store dir {} unusable ({e:#}); \
+                         serving RAM-only",
+                        sdir.display()
+                    );
+                    TieredStore::ram_only(cache_budget)
+                }
+            }
+        }
+        None => TieredStore::ram_only(cache_budget),
+    };
+    let cache = std::sync::Arc::new(std::sync::Mutex::new(store));
     let mut cfg = ServerConfig::new(dir)
         .with_workers(workers)
         .with_cache(cache.clone())
@@ -476,7 +512,7 @@ fn serve(args: &Args) -> i32 {
         ]);
     }
     st.print();
-    let cs = fmc_accel::util::lock_unpoisoned(&cache).stats();
+    let cs = fmc_accel::util::lock_unpoisoned(&cache).cache_stats();
     println!(
         "bs cache  : {} hits, {} misses ({:.0}% hit), {} held in {} entries",
         metrics.cache_hits,
@@ -485,6 +521,26 @@ fn serve(args: &Args) -> i32 {
         human_bytes(cs.bytes_held),
         cs.entries
     );
+    // Tier breakdown of the sealed-stream store (RAM hits vs disk
+    // backfills vs re-seals), when the disk tier is on.
+    if let (Some(ss), Some(_)) = (&snap.store, &store_dir) {
+        println!(
+            "bs store  : {} lookups | {} ram / {} disk / {} miss | \
+             {} spills ({}), {} failed | {} page faults, {} pages \
+             written, {} rejected | {} disk entries",
+            ss.lookups,
+            ss.ram_hits,
+            ss.disk_hits,
+            ss.misses,
+            ss.spills,
+            human_bytes(ss.spilled_bytes),
+            ss.spill_failures,
+            ss.page_faults,
+            ss.pages_written,
+            ss.pages_rejected,
+            ss.disk_entries,
+        );
+    }
     println!(
         "transport : {transport_name} ({} sealed shipments, {})",
         metrics.sealed_shipments,

@@ -23,6 +23,7 @@ use anyhow::Context;
 
 use crate::coordinator::cache::CacheStats;
 use crate::coordinator::metrics::{Histogram, Metrics};
+use crate::store::StoreStats;
 use crate::exec::PoolStats;
 use crate::obs::ring::SpanRing;
 use crate::obs::span::SEAM_KEYS;
@@ -39,7 +40,12 @@ use crate::util::json::Json;
 /// v3: added the `queue` block (sharded work-stealing admission
 /// queue: shards, pulls, steals, stolen_requests,
 /// shard_depth_highwater) and `p999_us` to every histogram.
-pub const STATS_SCHEMA_VERSION: u64 = 3;
+///
+/// v4: added the `store` block (tiered sealed-stream store: per-tier
+/// hit counters with the conservation identity `ram_hits + disk_hits
+/// + misses == lookups`, spill/page-fault/rejection counters, and
+/// disk occupancy).
+pub const STATS_SCHEMA_VERSION: u64 = 4;
 
 /// Everything one serve run measured, in one merge-able value.
 #[derive(Debug, Clone, Default)]
@@ -49,9 +55,13 @@ pub struct TelemetrySnapshot {
     /// Per-worker span rings (index order = join order; spans carry
     /// their own worker id).
     pub spans: Vec<SpanRing>,
-    /// Interlayer bitstream-cache counters at shutdown, if the server
-    /// ran with a cache.
+    /// Interlayer bitstream-cache (RAM tier) counters at shutdown,
+    /// if the server ran with a cache.
     pub cache: Option<CacheStats>,
+    /// Tiered sealed-stream store counters at shutdown, if the
+    /// server ran with one (always set by the coordinator from
+    /// ISSUE 10 on; `None` on unit-built snapshots).
+    pub store: Option<StoreStats>,
     /// Simulated off-chip traffic of the profiling pass, if hardware
     /// accounting ran.
     pub dma: Option<DmaTraffic>,
@@ -117,6 +127,26 @@ impl TelemetrySnapshot {
             (None, Some(b)) => self.cache = Some(*b),
             _ => {}
         }
+        match (&mut self.store, &o.store) {
+            (Some(a), Some(b)) => {
+                a.lookups += b.lookups;
+                a.ram_hits += b.ram_hits;
+                a.disk_hits += b.disk_hits;
+                a.misses += b.misses;
+                a.spills += b.spills;
+                a.spilled_bytes += b.spilled_bytes;
+                a.spill_failures += b.spill_failures;
+                a.page_faults += b.page_faults;
+                a.pages_written += b.pages_written;
+                a.pages_rejected += b.pages_rejected;
+                // Occupancy is point-in-time, like the cache block.
+                a.disk_entries = a.disk_entries.max(b.disk_entries);
+                a.pending_spills =
+                    a.pending_spills.max(b.pending_spills);
+            }
+            (None, Some(b)) => self.store = Some(*b),
+            _ => {}
+        }
         match (&mut self.dma, &o.dma) {
             (Some(a), Some(b)) => {
                 a.fmap_bytes += b.fmap_bytes;
@@ -178,6 +208,40 @@ impl TelemetrySnapshot {
                 ("budget_bytes", num(c.budget_bytes)),
                 ("hit_rate", Json::Num(self.cache_hit_rate())),
             ]),
+        };
+        let store = match &self.store {
+            None => Json::Null,
+            Some(s) => {
+                let rate = |part: u64| {
+                    if s.lookups == 0 {
+                        0.0
+                    } else {
+                        part as f64 / s.lookups as f64
+                    }
+                };
+                obj(vec![
+                    ("lookups", num(s.lookups)),
+                    ("ram_hits", num(s.ram_hits)),
+                    ("disk_hits", num(s.disk_hits)),
+                    ("misses", num(s.misses)),
+                    ("spills", num(s.spills)),
+                    ("spilled_bytes", num(s.spilled_bytes)),
+                    ("spill_failures", num(s.spill_failures)),
+                    ("page_faults", num(s.page_faults)),
+                    ("pages_written", num(s.pages_written)),
+                    ("pages_rejected", num(s.pages_rejected)),
+                    ("disk_entries", num(s.disk_entries as u64)),
+                    (
+                        "pending_spills",
+                        num(s.pending_spills as u64),
+                    ),
+                    ("ram_hit_rate", Json::Num(rate(s.ram_hits))),
+                    (
+                        "disk_hit_rate",
+                        Json::Num(rate(s.disk_hits)),
+                    ),
+                ])
+            }
         };
         let dma = match &self.dma {
             None => Json::Null,
@@ -244,6 +308,12 @@ impl TelemetrySnapshot {
             ),
             ("latency_us", Json::Obj(latency)),
             ("cache", cache),
+            (
+                // Tiered sealed-stream store (schema v4): per-tier
+                // hit counters with the conservation identity
+                // ram_hits + disk_hits + misses == lookups.
+                "store", store,
+            ),
             (
                 "transport_bytes",
                 obj(vec![
@@ -352,7 +422,7 @@ mod tests {
     fn json_has_schema_stage_keys_and_consistent_sums() {
         let snap = snapshot_with(4);
         let doc = snap.to_json();
-        assert_eq!(doc.get("schema").as_usize(), Some(3));
+        assert_eq!(doc.get("schema").as_usize(), Some(4));
         assert_eq!(doc.get("requests").as_usize(), Some(4));
         assert_eq!(doc.get("transport").as_str(), Some("sealed"));
 
@@ -381,6 +451,11 @@ mod tests {
             doc.get("cache"),
             &Json::Null,
             "no cache stats attached"
+        );
+        assert_eq!(
+            doc.get("store"),
+            &Json::Null,
+            "no store stats attached"
         );
     }
 
@@ -460,6 +535,98 @@ mod tests {
         assert_eq!(c.get("hits").as_usize(), Some(3));
         assert_eq!(c.get("evictions").as_usize(), Some(2));
         assert_eq!(c.get("hit_rate").as_f64(), Some(0.75));
+    }
+
+    #[test]
+    fn json_renders_store_block_with_conservation_and_rates() {
+        let mut snap = snapshot_with(1);
+        snap.store = Some(StoreStats {
+            lookups: 8,
+            ram_hits: 4,
+            disk_hits: 2,
+            misses: 2,
+            spills: 3,
+            spilled_bytes: 900,
+            spill_failures: 1,
+            page_faults: 2,
+            pages_written: 1,
+            pages_rejected: 1,
+            disk_entries: 3,
+            pending_spills: 2,
+        });
+        let doc = snap.to_json();
+        let s = doc.get("store");
+        assert_eq!(s.get("lookups").as_usize(), Some(8));
+        assert_eq!(s.get("ram_hits").as_usize(), Some(4));
+        assert_eq!(s.get("disk_hits").as_usize(), Some(2));
+        assert_eq!(s.get("misses").as_usize(), Some(2));
+        assert_eq!(s.get("spills").as_usize(), Some(3));
+        assert_eq!(s.get("spilled_bytes").as_usize(), Some(900));
+        assert_eq!(s.get("spill_failures").as_usize(), Some(1));
+        assert_eq!(s.get("page_faults").as_usize(), Some(2));
+        assert_eq!(s.get("pages_written").as_usize(), Some(1));
+        assert_eq!(s.get("pages_rejected").as_usize(), Some(1));
+        assert_eq!(s.get("disk_entries").as_usize(), Some(3));
+        assert_eq!(s.get("pending_spills").as_usize(), Some(2));
+        assert_eq!(s.get("ram_hit_rate").as_f64(), Some(0.5));
+        assert_eq!(s.get("disk_hit_rate").as_f64(), Some(0.25));
+        // The tier-hit conservation identity the v4 gate enforces.
+        let lookups = s.get("lookups").as_f64().unwrap();
+        let accounted = s.get("ram_hits").as_f64().unwrap()
+            + s.get("disk_hits").as_f64().unwrap()
+            + s.get("misses").as_f64().unwrap();
+        assert_eq!(lookups, accounted);
+    }
+
+    #[test]
+    fn merge_adds_store_counters_and_maxes_occupancy() {
+        let mut a = snapshot_with(1);
+        a.store = Some(StoreStats {
+            lookups: 4,
+            ram_hits: 2,
+            disk_hits: 1,
+            misses: 1,
+            spills: 2,
+            spilled_bytes: 100,
+            spill_failures: 0,
+            page_faults: 1,
+            pages_written: 1,
+            pages_rejected: 0,
+            disk_entries: 5,
+            pending_spills: 1,
+        });
+        let mut b = snapshot_with(1);
+        b.store = Some(StoreStats {
+            lookups: 6,
+            ram_hits: 3,
+            disk_hits: 2,
+            misses: 1,
+            spills: 1,
+            spilled_bytes: 50,
+            spill_failures: 1,
+            page_faults: 2,
+            pages_written: 2,
+            pages_rejected: 1,
+            disk_entries: 3,
+            pending_spills: 4,
+        });
+        a.merge(&b);
+        let s = a.store.unwrap();
+        assert_eq!(s.lookups, 10);
+        assert_eq!(s.ram_hits, 5);
+        assert_eq!(s.disk_hits, 3);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.spills, 3);
+        assert_eq!(s.spilled_bytes, 150);
+        assert_eq!(s.spill_failures, 1);
+        assert_eq!(s.page_faults, 3);
+        assert_eq!(s.pages_written, 3);
+        assert_eq!(s.pages_rejected, 1);
+        // Occupancy merges by max, counters by addition.
+        assert_eq!(s.disk_entries, 5);
+        assert_eq!(s.pending_spills, 4);
+        // Conservation survives the merge.
+        assert_eq!(s.ram_hits + s.disk_hits + s.misses, s.lookups);
     }
 
     #[test]

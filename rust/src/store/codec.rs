@@ -1,0 +1,240 @@
+//! On-disk serialization of sealed [`FmapBitstream`]s.
+//!
+//! The in-memory stream is already the wire format for its *payload*
+//! lanes; this module adds the framing a self-describing disk record
+//! needs: scheme tag, geometry, qtable, and length-prefixed copies of
+//! the index / header / value lanes. Everything is little-endian and
+//! byte-exact: `decode_stream(encode_stream(bs)) == bs` field for
+//! field (including `f32::to_bits` of the qtable), which is what lets
+//! a disk-tier hit stay bit-identical to the RAM entry it spilled
+//! from.
+//!
+//! Decoding is defensive, never trusting lengths read from disk: every
+//! slice is bounds-checked and any inconsistency (unknown scheme id,
+//! short buffer, trailing garbage) is an `Err`, which the tiered store
+//! treats as a rejected entry — a clean miss, never wrong bytes.
+
+use crate::compress::bitstream::{
+    FmapBitstream, SCHEME_BITMAP, SCHEME_BITMAP_NOFLIP,
+    SCHEME_BITMAP_RLE_INDEX, SCHEME_HUFFMAN, SCHEME_RLE,
+};
+use crate::Result;
+use anyhow::bail;
+
+/// Stable on-disk ids for the sealed-stream schemes. The `&'static
+/// str` scheme tags are an in-process convenience; disk records carry
+/// one byte.
+fn scheme_id(scheme: &str) -> Result<u8> {
+    Ok(match scheme {
+        s if s == SCHEME_BITMAP => 0,
+        s if s == SCHEME_BITMAP_NOFLIP => 1,
+        s if s == SCHEME_BITMAP_RLE_INDEX => 2,
+        s if s == SCHEME_RLE => 3,
+        s if s == SCHEME_HUFFMAN => 4,
+        other => bail!("store codec: unknown scheme {other:?}"),
+    })
+}
+
+fn scheme_of(id: u8) -> Result<&'static str> {
+    Ok(match id {
+        0 => SCHEME_BITMAP,
+        1 => SCHEME_BITMAP_NOFLIP,
+        2 => SCHEME_BITMAP_RLE_INDEX,
+        3 => SCHEME_RLE,
+        4 => SCHEME_HUFFMAN,
+        other => bail!("store codec: unknown scheme id {other}"),
+    })
+}
+
+/// Serialized length of `bs`, computed without serializing — the
+/// write-behind queue budgets page packing with this before paying
+/// for the copy. Must equal `encode_stream(bs).len()` exactly
+/// (unit-tested below).
+pub fn encoded_len(bs: &FmapBitstream) -> usize {
+    1 + 3 * 4                      // scheme id + c/h/w
+        + 64 * 4                   // qtable bits
+        + 4 + bs.index.len()
+        + 4 + bs.headers.len()
+        + bs.lanes.iter().map(|l| 4 + l.len()).sum::<usize>()
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_lane(out: &mut Vec<u8>, lane: &[u8]) {
+    put_u32(out, lane.len() as u32);
+    out.extend_from_slice(lane);
+}
+
+/// Serialize a sealed stream into a self-contained disk record.
+pub fn encode_stream(bs: &FmapBitstream) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(encoded_len(bs));
+    out.push(scheme_id(bs.scheme)?);
+    put_u32(&mut out, bs.c as u32);
+    put_u32(&mut out, bs.h as u32);
+    put_u32(&mut out, bs.w as u32);
+    for v in bs.qtable.iter() {
+        put_u32(&mut out, v.to_bits());
+    }
+    put_lane(&mut out, &bs.index);
+    put_lane(&mut out, &bs.headers);
+    for lane in &bs.lanes {
+        put_lane(&mut out, lane);
+    }
+    debug_assert_eq!(out.len(), encoded_len(bs));
+    Ok(out)
+}
+
+/// Bounds-checked little-endian cursor over a disk record.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n);
+        match end {
+            Some(end) if end <= self.buf.len() => {
+                let s = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            _ => bail!(
+                "store codec: record truncated at byte {} (want {n} \
+                 more of {})",
+                self.pos,
+                self.buf.len()
+            ),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn lane(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+/// Deserialize a disk record back into a sealed stream. Rejects any
+/// record that is short, long (trailing bytes), or carries an unknown
+/// scheme id.
+pub fn decode_stream(buf: &[u8]) -> Result<FmapBitstream> {
+    let mut cur = Cursor { buf, pos: 0 };
+    let mut bs = FmapBitstream::empty();
+    bs.scheme = scheme_of(cur.u8()?)?;
+    bs.c = cur.u32()? as usize;
+    bs.h = cur.u32()? as usize;
+    bs.w = cur.u32()? as usize;
+    for v in bs.qtable.iter_mut() {
+        *v = f32::from_bits(cur.u32()?);
+    }
+    bs.index = cur.lane()?;
+    bs.headers = cur.lane()?;
+    for lane in bs.lanes.iter_mut() {
+        *lane = cur.lane()?;
+    }
+    if cur.pos != buf.len() {
+        bail!(
+            "store codec: {} trailing bytes after record",
+            buf.len() - cur.pos
+        );
+    }
+    Ok(bs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(scheme: &'static str) -> FmapBitstream {
+        let mut bs = FmapBitstream::empty();
+        bs.scheme = scheme;
+        bs.c = 3;
+        bs.h = 16;
+        bs.w = 24;
+        for (i, v) in bs.qtable.iter_mut().enumerate() {
+            *v = 0.5 + i as f32 * 0.25;
+        }
+        bs.index = vec![1, 2, 3, 4, 5];
+        bs.headers = vec![9; 17];
+        for (i, lane) in bs.lanes.iter_mut().enumerate() {
+            *lane = (0..i * 7).map(|b| (b % 251) as u8).collect();
+        }
+        bs
+    }
+
+    #[test]
+    fn round_trips_every_scheme_bit_exact() {
+        for scheme in [
+            SCHEME_BITMAP,
+            SCHEME_BITMAP_NOFLIP,
+            SCHEME_BITMAP_RLE_INDEX,
+            SCHEME_RLE,
+            SCHEME_HUFFMAN,
+        ] {
+            let bs = sample(scheme);
+            let enc = encode_stream(&bs).expect("encode");
+            assert_eq!(enc.len(), encoded_len(&bs), "{scheme}");
+            let dec = decode_stream(&enc).expect("decode");
+            assert_eq!(dec, bs, "{scheme}");
+            assert_eq!(dec.stream_bytes(), bs.stream_bytes());
+        }
+    }
+
+    #[test]
+    fn empty_stream_round_trips() {
+        let bs = FmapBitstream::empty();
+        let enc = encode_stream(&bs).expect("encode");
+        assert_eq!(decode_stream(&enc).expect("decode"), bs);
+    }
+
+    #[test]
+    fn rejects_unknown_scheme_id() {
+        let mut enc =
+            encode_stream(&sample(SCHEME_RLE)).expect("encode");
+        enc[0] = 200;
+        assert!(decode_stream(&enc).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_length() {
+        let enc =
+            encode_stream(&sample(SCHEME_BITMAP)).expect("encode");
+        for n in 0..enc.len() {
+            assert!(
+                decode_stream(&enc[..n]).is_err(),
+                "truncation to {n} bytes must not decode"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut enc =
+            encode_stream(&sample(SCHEME_BITMAP)).expect("encode");
+        enc.push(0);
+        assert!(decode_stream(&enc).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_inner_length() {
+        let mut enc =
+            encode_stream(&sample(SCHEME_HUFFMAN)).expect("encode");
+        // Corrupt the index-lane length prefix to reach past the
+        // buffer end — the cursor must bounds-check, not panic.
+        let at = 1 + 12 + 256;
+        enc[at..at + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_stream(&enc).is_err());
+    }
+}

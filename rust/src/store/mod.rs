@@ -1,0 +1,806 @@
+//! Tiered sealed-stream store: the RAM interlayer cache backed by a
+//! paged on-disk tier (ISSUE 10).
+//!
+//! Sealed [`FmapBitstream`]s are compact, immutable, `Arc`-shared
+//! byte payloads — the paper's whole argument is that the compressed
+//! stream is the currency worth holding (arXiv 2110.06155), so the
+//! cache budget should not end at RAM. [`TieredStore`] wraps the
+//! existing [`InterlayerCache`] as the RAM tier of a two-tier store:
+//!
+//! * **Spill instead of drop.** Eviction from the RAM tier pushes the
+//!   sealed bytes onto a *write-behind queue*; the queue packs
+//!   entries into fixed-size checksummed pages ([`pagefile`]) and
+//!   appends them to the store directory's page file once a page's
+//!   worth has accumulated (or on [`TieredStore::flush`]). Record
+//!   serialization is sharded over the global exec pool — the spill
+//!   path rides the same persistent workers as the codec.
+//! * **Probe before re-seal.** A RAM miss consults the write-behind
+//!   queue and then the compact in-memory key→(page, offset, len)
+//!   index; a located record is read through a bounded LRU
+//!   [`PageCache`] (page faults hit the file, checksum-verified),
+//!   decoded, promoted back into RAM, and returned. Only a miss in
+//!   *both* tiers re-seals.
+//!
+//! The disk tier inherits the repo's determinism contract: the disk
+//! record format round-trips streams bit-exactly ([`codec`]), so a
+//! disk-tier hit re-derives profiles and responses byte-identical to
+//! a RAM hit and to a cold re-seal (stress-tested in
+//! `rust/tests/server_stress.rs`). Corruption can only degrade
+//! capacity, never correctness: any page or record that fails
+//! validation is dropped from the index (counted `pages_rejected`)
+//! and the lookup falls through to a clean re-seal.
+//!
+//! Everything is synchronous under the owner's lock — "write-behind"
+//! means the *file write* is deferred and batched, not that another
+//! thread races the index. That keeps the store trivially
+//! deterministic under the coordinator's `Arc<Mutex<TieredStore>>`
+//! sharing model, like the RAM cache before it.
+
+pub mod codec;
+pub mod page_cache;
+pub mod pagefile;
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::compress::bitstream::FmapBitstream;
+use crate::coordinator::{CacheStats, InterlayerCache};
+
+pub use page_cache::{PageCache, PageCacheConfig, PageCacheStats};
+pub use pagefile::{EntryLoc, PageFile, PAGE_HEADER_BYTES};
+
+/// Default page size for the disk tier (64 KiB pages).
+pub const DEFAULT_PAGE_BYTES: usize = 64 * 1024;
+/// Default page-cache capacity, in pages.
+pub const DEFAULT_PAGE_CACHE_ENTRIES: usize = 64;
+
+/// Configuration of a disk-backed [`TieredStore`].
+#[derive(Debug, Clone)]
+pub struct TieredStoreConfig {
+    /// RAM-tier budget in sealed stream bytes.
+    pub ram_budget_bytes: u64,
+    /// Store directory (created if absent); holds `streams.pages`.
+    pub dir: PathBuf,
+    /// Fixed page size of the page file.
+    pub page_size_bytes: usize,
+    /// In-memory cache of verified page payloads.
+    pub page_cache: PageCacheConfig,
+    /// Deterministic spill-fault injection: `(period, phase)` fails
+    /// every spill whose sequence number is ≡ phase (mod period) —
+    /// the chaos suite's `spill-fail=P` arm.
+    pub spill_fail: Option<(u64, u64)>,
+}
+
+impl TieredStoreConfig {
+    pub fn new(dir: impl Into<PathBuf>, ram_budget_bytes: u64)
+               -> Self {
+        TieredStoreConfig {
+            ram_budget_bytes,
+            dir: dir.into(),
+            page_size_bytes: DEFAULT_PAGE_BYTES,
+            page_cache: PageCacheConfig {
+                max_entries: DEFAULT_PAGE_CACHE_ENTRIES,
+            },
+            spill_fail: None,
+        }
+    }
+}
+
+/// Counters + occupancy snapshot of a [`TieredStore`]. The tier-hit
+/// conservation identity `ram_hits + disk_hits + misses == lookups`
+/// must hold after any operation interleaving (gated by
+/// `tools/bench_compare.py --check-stats` on the schema-v4 `store`
+/// block).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StoreStats {
+    /// Total lookups against the store (each counts exactly one of
+    /// `ram_hits` / `disk_hits` / `misses`).
+    pub lookups: u64,
+    pub ram_hits: u64,
+    /// Hits served from the disk tier (write-behind queue, page
+    /// cache, or page file).
+    pub disk_hits: u64,
+    pub misses: u64,
+    /// Evicted streams accepted into the write-behind queue.
+    pub spills: u64,
+    /// Sealed stream bytes of the accepted spills.
+    pub spilled_bytes: u64,
+    /// Spills dropped instead of written: injected faults, oversize
+    /// entries, or page-file write errors. The entry is simply gone
+    /// — the next lookup misses and re-seals.
+    pub spill_failures: u64,
+    /// Disk hits whose page was not in the page cache (file reads).
+    pub page_faults: u64,
+    pub pages_written: u64,
+    /// Pages (or single records) dropped as unreadable: open-time
+    /// scan rejections plus read-time checksum/decode failures.
+    pub pages_rejected: u64,
+    /// Keys committed to the on-disk index.
+    pub disk_entries: usize,
+    /// Entries sitting in the write-behind queue.
+    pub pending_spills: usize,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Counters {
+    lookups: u64,
+    ram_hits: u64,
+    disk_hits: u64,
+    misses: u64,
+    spills: u64,
+    spilled_bytes: u64,
+    spill_failures: u64,
+    page_faults: u64,
+    pages_written: u64,
+    pages_rejected: u64,
+}
+
+/// The disk tier: page file + index + page cache + the write-behind
+/// queue of not-yet-written spills.
+struct DiskTier {
+    file: PageFile,
+    index: HashMap<String, EntryLoc>,
+    cache: PageCache,
+    /// Write-behind queue, oldest first. Entries here are readable
+    /// (a lookup probes the queue before the index) but not yet
+    /// durable.
+    pending: VecDeque<(String, Arc<FmapBitstream>)>,
+    /// Exact page-payload bytes the queue would occupy — drained to
+    /// the file once a full page's worth has accumulated.
+    pending_payload: usize,
+}
+
+/// Page-payload footprint of one queued entry (framing + record).
+fn entry_len(key: &str, bs: &FmapBitstream) -> usize {
+    8 + key.len() + codec::encoded_len(bs)
+}
+
+/// Two-tier sealed-stream store: [`InterlayerCache`] RAM tier over
+/// an optional paged disk tier. Without a disk tier
+/// ([`TieredStore::ram_only`]) it behaves exactly like the bare RAM
+/// cache — evictions drop, misses re-seal — so every pre-existing
+/// deployment shape still exists, just behind one type.
+pub struct TieredStore {
+    ram: InterlayerCache,
+    disk: Option<DiskTier>,
+    spill_fail: Option<(u64, u64)>,
+    spill_seq: u64,
+    c: Counters,
+}
+
+impl TieredStore {
+    /// A store with no disk tier: the plain RAM LRU, evictions drop.
+    pub fn ram_only(ram_budget_bytes: u64) -> TieredStore {
+        TieredStore {
+            ram: InterlayerCache::new(ram_budget_bytes),
+            disk: None,
+            spill_fail: None,
+            spill_seq: 0,
+            c: Counters::default(),
+        }
+    }
+
+    /// Open (creating or recovering) a disk-backed store. Reopening
+    /// an existing directory re-scans the page file: valid pages
+    /// rebuild the index, torn or corrupt pages are counted
+    /// `pages_rejected` and skipped — never an error, never a
+    /// wrong-bytes hit.
+    pub fn open(cfg: TieredStoreConfig) -> crate::Result<TieredStore> {
+        let (file, recovered) =
+            PageFile::open(&cfg.dir, cfg.page_size_bytes)?;
+        let mut index = HashMap::new();
+        // Scan order is (page, offset): later writes win duplicates.
+        for (k, loc) in recovered.entries {
+            index.insert(k, loc);
+        }
+        let mut c = Counters::default();
+        c.pages_rejected = recovered.pages_rejected;
+        Ok(TieredStore {
+            ram: InterlayerCache::new(cfg.ram_budget_bytes),
+            disk: Some(DiskTier {
+                file,
+                index,
+                cache: PageCache::new(cfg.page_cache),
+                pending: VecDeque::new(),
+                pending_payload: 0,
+            }),
+            spill_fail: cfg.spill_fail,
+            spill_seq: 0,
+            c,
+        })
+    }
+
+    pub fn has_disk_tier(&self) -> bool {
+        self.disk.is_some()
+    }
+
+    /// Look up a sealed stream: RAM tier first, then the disk tier
+    /// (write-behind queue → page cache → page file). A disk hit is
+    /// promoted back into RAM (which may spill something colder).
+    /// Exactly one of ram_hits / disk_hits / misses is counted.
+    pub fn get(&mut self, key: &str) -> Option<Arc<FmapBitstream>> {
+        self.c.lookups += 1;
+        if let Some(bs) = self.ram.get(key) {
+            self.c.ram_hits += 1;
+            return Some(bs);
+        }
+        let found = match self.disk.as_mut() {
+            Some(disk) => disk_lookup(disk, &mut self.c, key),
+            None => None,
+        };
+        match found {
+            Some(bs) => {
+                self.c.disk_hits += 1;
+                // Promote — unless the stream alone overflows the
+                // RAM budget, where insert-evict would just bounce
+                // it straight back to the spill queue every hit.
+                if bs.stream_bytes() <= self.ram.budget() {
+                    let evicted = self.ram.insert_arc_evicting(
+                        key.to_string(),
+                        Arc::clone(&bs),
+                    );
+                    self.spill_all(evicted);
+                }
+                Some(bs)
+            }
+            None => {
+                self.c.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// [`Self::get`], sealing and inserting on a miss in both tiers.
+    /// Concurrent sharers should prefer get → seal unlocked →
+    /// [`Self::insert_arc`], like the RAM cache.
+    pub fn get_or_seal<F: FnOnce() -> FmapBitstream>(
+        &mut self, key: &str, seal: F,
+    ) -> Arc<FmapBitstream> {
+        if let Some(bs) = self.get(key) {
+            return bs;
+        }
+        let bs = Arc::new(seal());
+        self.insert_arc(key.to_string(), Arc::clone(&bs));
+        bs
+    }
+
+    /// Insert into the RAM tier; anything the budget evicts spills
+    /// to the disk tier instead of dropping (when one is attached).
+    pub fn insert_arc(&mut self, key: String,
+                      bs: Arc<FmapBitstream>) {
+        let evicted = self.ram.insert_arc_evicting(key, bs);
+        self.spill_all(evicted);
+    }
+
+    fn spill_all(
+        &mut self,
+        evicted: Vec<(String, Arc<FmapBitstream>)>,
+    ) {
+        for (key, bs) in evicted {
+            self.spill_one(key, bs);
+        }
+    }
+
+    fn spill_one(&mut self, key: String, bs: Arc<FmapBitstream>) {
+        let Some(disk) = self.disk.as_mut() else {
+            return; // RAM-only: eviction drops, as before.
+        };
+        let seq = self.spill_seq;
+        self.spill_seq += 1;
+        if let Some((period, phase)) = self.spill_fail {
+            if period > 0 && seq % period == phase % period {
+                // Injected fault: the stream is gone; the next
+                // lookup misses cleanly and re-seals.
+                self.c.spill_failures += 1;
+                return;
+            }
+        }
+        let len = entry_len(&key, &bs);
+        if len > disk.file.payload_capacity() {
+            // One record must fit one page; a stream bigger than the
+            // page payload cannot spill.
+            self.c.spill_failures += 1;
+            return;
+        }
+        self.c.spills += 1;
+        self.c.spilled_bytes += bs.stream_bytes();
+        disk.pending.push_back((key, bs));
+        disk.pending_payload += len;
+        if disk.pending_payload >= disk.file.payload_capacity() {
+            drain(disk, &mut self.c, false);
+        }
+    }
+
+    /// Write every queued spill out to the page file (partial final
+    /// page included). Serving never requires this — the queue is
+    /// readable — but durability across a reopen does.
+    pub fn flush(&mut self) {
+        if let Some(disk) = self.disk.as_mut() {
+            drain(disk, &mut self.c, true);
+        }
+    }
+
+    /// Demote the whole RAM tier to disk and flush. A test/ops hook:
+    /// after this, every previously-cached key is served by the disk
+    /// tier, which is how the tri-identity tests force disk hits
+    /// deterministically.
+    pub fn demote_all(&mut self) {
+        let held = self.ram.take_all();
+        self.spill_all(held);
+        self.flush();
+    }
+
+    /// RAM-tier stream bytes currently held.
+    pub fn bytes_held(&self) -> u64 {
+        self.ram.bytes_held()
+    }
+
+    /// RAM-tier ground-truth recount (see
+    /// [`InterlayerCache::recounted_bytes`]); the concurrency stress
+    /// tests assert it equals the O(1) counter across both tiers'
+    /// traffic.
+    pub fn recounted_bytes(&self) -> u64 {
+        self.ram.recounted_bytes()
+    }
+
+    /// RAM-tier counters (the `cache` stats block).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.ram.stats()
+    }
+
+    /// Page-cache counters of the disk tier, when attached.
+    pub fn page_cache_stats(&self) -> Option<PageCacheStats> {
+        self.disk.as_ref().map(|d| d.cache.stats())
+    }
+
+    /// Tiered counters (the schema-v4 `store` stats block).
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            lookups: self.c.lookups,
+            ram_hits: self.c.ram_hits,
+            disk_hits: self.c.disk_hits,
+            misses: self.c.misses,
+            spills: self.c.spills,
+            spilled_bytes: self.c.spilled_bytes,
+            spill_failures: self.c.spill_failures,
+            page_faults: self.c.page_faults,
+            pages_written: self.c.pages_written,
+            pages_rejected: self.c.pages_rejected,
+            disk_entries: self
+                .disk
+                .as_ref()
+                .map_or(0, |d| d.index.len()),
+            pending_spills: self
+                .disk
+                .as_ref()
+                .map_or(0, |d| d.pending.len()),
+        }
+    }
+}
+
+impl Drop for TieredStore {
+    fn drop(&mut self) {
+        // Best-effort durability: queued spills land before the
+        // process lets go of the directory.
+        self.flush();
+    }
+}
+
+/// Disk-tier lookup: write-behind queue (newest copy wins), then the
+/// committed index through the page cache. Validation failures drop
+/// the offending page/record from the index and fall through to a
+/// miss — degraded capacity, never wrong bytes.
+fn disk_lookup(disk: &mut DiskTier, c: &mut Counters, key: &str)
+               -> Option<Arc<FmapBitstream>> {
+    if let Some((_, bs)) =
+        disk.pending.iter().rev().find(|(k, _)| k == key)
+    {
+        return Some(Arc::clone(bs));
+    }
+    let loc = *disk.index.get(key)?;
+    let payload = match disk.cache.get(loc.page) {
+        Some(p) => p,
+        None => {
+            c.page_faults += 1;
+            match disk.file.read_page(loc.page) {
+                Ok(p) => {
+                    let p = Arc::new(p);
+                    disk.cache.insert(loc.page, Arc::clone(&p));
+                    p
+                }
+                Err(e) => {
+                    eprintln!(
+                        "store: dropping page {}: {e:#}",
+                        loc.page
+                    );
+                    c.pages_rejected += 1;
+                    disk.cache.invalidate(loc.page);
+                    let bad = loc.page;
+                    disk.index.retain(|_, l| l.page != bad);
+                    return None;
+                }
+            }
+        }
+    };
+    let rec = match pagefile::record_in_payload(&payload, &loc) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("store: dropping record {key:?}: {e:#}");
+            c.pages_rejected += 1;
+            disk.index.remove(key);
+            return None;
+        }
+    };
+    match codec::decode_stream(rec) {
+        Ok(bs) => Some(Arc::new(bs)),
+        Err(e) => {
+            eprintln!("store: dropping record {key:?}: {e:#}");
+            c.pages_rejected += 1;
+            disk.index.remove(key);
+            None
+        }
+    }
+}
+
+/// Drain the write-behind queue into full pages (`all == false`) or
+/// completely, partial final page included (`all == true`). Record
+/// serialization is sharded over the global exec pool; index entries
+/// are committed only after their page is on disk.
+fn drain(disk: &mut DiskTier, c: &mut Counters, all: bool) {
+    let cap = disk.file.payload_capacity();
+    loop {
+        if disk.pending.is_empty() {
+            break;
+        }
+        if !all && disk.pending_payload < cap {
+            break;
+        }
+        // Pop one page's worth off the queue front (oldest first).
+        let mut batch: Vec<(String, Arc<FmapBitstream>)> =
+            Vec::new();
+        let mut used = 0usize;
+        while let Some((k, bs)) = disk.pending.front() {
+            let len = entry_len(k, bs);
+            if used + len > cap {
+                break;
+            }
+            used += len;
+            disk.pending_payload -= len;
+            batch.push(
+                disk.pending
+                    .pop_front()
+                    .expect("invariant: front just observed"),
+            );
+        }
+        if batch.is_empty() {
+            // Defensive: an oversize entry on the queue (spill_one
+            // rejects these up front). Drop it, keep draining.
+            if let Some((k, bs)) = disk.pending.pop_front() {
+                disk.pending_payload = disk
+                    .pending_payload
+                    .saturating_sub(entry_len(&k, &bs));
+                c.spill_failures += 1;
+            }
+            continue;
+        }
+        // Serialize the batch over the persistent exec pool — each
+        // record is independent, and slot-per-entry writes keep the
+        // output order deterministic.
+        let mut encoded: Vec<crate::Result<Vec<u8>>> =
+            Vec::with_capacity(batch.len());
+        encoded.resize_with(batch.len(), || Ok(Vec::new()));
+        crate::exec::global().scope(|s| {
+            for (slot, (_, bs)) in
+                encoded.iter_mut().zip(batch.iter())
+            {
+                s.submit(move || {
+                    *slot = codec::encode_stream(bs);
+                });
+            }
+        });
+        let mut entries: Vec<(String, Vec<u8>)> =
+            Vec::with_capacity(batch.len());
+        for ((key, _), enc) in batch.iter().zip(encoded) {
+            match enc {
+                Ok(rec) => entries.push((key.clone(), rec)),
+                Err(e) => {
+                    eprintln!(
+                        "store: spill of {key:?} failed to \
+                         serialize: {e:#}"
+                    );
+                    c.spill_failures += 1;
+                }
+            }
+        }
+        if entries.is_empty() {
+            continue;
+        }
+        match disk.file.append_page(&entries) {
+            Ok((_, locs)) => {
+                c.pages_written += 1;
+                for ((key, _), loc) in entries.iter().zip(locs) {
+                    disk.index.insert(key.clone(), loc);
+                }
+            }
+            Err(e) => {
+                // The whole page's entries are lost (clean degrade:
+                // future lookups miss and re-seal).
+                eprintln!("store: page append failed: {e:#}");
+                c.spill_failures += entries.len() as u64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::bitstream;
+    use crate::compress::codec as fmap_codec;
+    use crate::compress::qtable::qtable;
+    use crate::data;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fmc-store-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// A stream with `n` value bytes in lane 0 (stream_bytes = n).
+    fn stream_of(n: usize) -> FmapBitstream {
+        let mut bs = FmapBitstream::empty();
+        bs.lanes[0] = vec![0u8; n];
+        bs
+    }
+
+    /// A real sealed stream off the codec — the bit-identity cases
+    /// must survive actual index/header/lane content, not just
+    /// zeroed lanes.
+    fn sealed(seed: u64) -> FmapBitstream {
+        let fmap = data::natural_image(
+            seed, 2, 16, 16, data::Smoothness::Natural, true,
+        );
+        bitstream::seal(&fmap_codec::compress(&fmap, &qtable(1)))
+    }
+
+    fn cfg(dir: &PathBuf, ram: u64) -> TieredStoreConfig {
+        let mut c = TieredStoreConfig::new(dir.clone(), ram);
+        c.page_size_bytes = 4096;
+        c.page_cache = PageCacheConfig { max_entries: 2 };
+        c
+    }
+
+    fn conservation_holds(s: &StoreStats) -> bool {
+        s.ram_hits + s.disk_hits + s.misses == s.lookups
+    }
+
+    #[test]
+    fn ram_only_matches_plain_cache_semantics() {
+        let mut st = TieredStore::ram_only(25);
+        st.insert_arc("a".into(), Arc::new(stream_of(10)));
+        st.insert_arc("b".into(), Arc::new(stream_of(10)));
+        assert!(st.get("a").is_some());
+        st.insert_arc("c".into(), Arc::new(stream_of(10)));
+        // "b" was evicted and there is no disk tier: clean miss.
+        assert!(st.get("b").is_none());
+        let s = st.stats();
+        assert_eq!(s.spills, 0);
+        assert_eq!(s.disk_hits, 0);
+        assert!(conservation_holds(&s));
+        assert_eq!(st.bytes_held(), st.recounted_bytes());
+    }
+
+    #[test]
+    fn evicted_stream_comes_back_bit_identical_from_disk() {
+        let dir = scratch("roundtrip");
+        let a = sealed(7);
+        let b = sealed(8);
+        let budget = a.stream_bytes() + 1; // room for exactly one
+        let mut st =
+            TieredStore::open(cfg(&dir, budget)).expect("open");
+        st.insert_arc("a".into(), Arc::new(a.clone()));
+        st.insert_arc("b".into(), Arc::new(b.clone()));
+        // "a" was evicted to the disk tier (write-behind queue at
+        // least); the hit must be bit-identical to the original.
+        let got = st.get("a").expect("disk tier must serve a");
+        assert_eq!(*got, a);
+        let s = st.stats();
+        assert_eq!(s.disk_hits, 1);
+        assert!(s.spills >= 1);
+        assert!(conservation_holds(&s));
+        // And again after a full flush (served from the page file).
+        st.demote_all();
+        let got = st.get("b").expect("flushed b must be served");
+        assert_eq!(*got, b);
+        assert!(st.stats().pages_written >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_recovers_the_index_across_sessions() {
+        let dir = scratch("reopen");
+        let a = sealed(21);
+        {
+            let mut st = TieredStore::open(cfg(&dir, 1 << 20))
+                .expect("open");
+            st.insert_arc("k/a".into(), Arc::new(a.clone()));
+            st.demote_all();
+            // Drop flushes any remainder and closes the file.
+        }
+        let mut st =
+            TieredStore::open(cfg(&dir, 1 << 20)).expect("reopen");
+        assert_eq!(st.stats().disk_entries, 1);
+        let got = st.get("k/a").expect("recovered index must hit");
+        assert_eq!(*got, a);
+        let s = st.stats();
+        assert_eq!((s.disk_hits, s.misses), (1, 0));
+        assert_eq!(s.pages_rejected, 0);
+        // Promotion put it in RAM: second lookup is a RAM hit.
+        assert!(st.get("k/a").is_some());
+        assert_eq!(st.stats().ram_hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_page_degrades_to_a_clean_miss() {
+        let dir = scratch("corrupt");
+        let a = sealed(3);
+        {
+            let mut st = TieredStore::open(cfg(&dir, 1 << 20))
+                .expect("open");
+            st.insert_arc("a".into(), Arc::new(a));
+            st.demote_all();
+        }
+        // Flip a payload byte: the checksum must reject the page at
+        // reopen, leaving an empty index — never a wrong-bytes hit.
+        let path = dir.join("streams.pages");
+        let mut bytes = std::fs::read(&path).expect("read");
+        bytes[PAGE_HEADER_BYTES + 3] ^= 0x40;
+        std::fs::write(&path, &bytes).expect("write");
+        let mut st =
+            TieredStore::open(cfg(&dir, 1 << 20)).expect("reopen");
+        let s = st.stats();
+        assert_eq!(s.disk_entries, 0);
+        assert!(s.pages_rejected >= 1);
+        assert!(st.get("a").is_none());
+        assert!(conservation_holds(&st.stats()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_behind_queue_serves_hits_before_any_page_lands() {
+        let dir = scratch("pending");
+        // Generous page size: nothing fills a page, everything stays
+        // queued until flush.
+        let mut c = cfg(&dir, 40);
+        c.page_size_bytes = 1 << 16;
+        let mut st = TieredStore::open(c).expect("open");
+        st.insert_arc("a".into(), Arc::new(stream_of(30)));
+        st.insert_arc("b".into(), Arc::new(stream_of(30)));
+        let got = st.get("a").expect("queued spill must serve");
+        assert_eq!(got.stream_bytes(), 30);
+        let s = st.stats();
+        assert_eq!(s.disk_hits, 1);
+        assert_eq!(s.page_faults, 0, "no page was ever written");
+        assert_eq!(s.pages_written, 0);
+        assert!(s.pending_spills >= 1);
+        st.flush();
+        assert_eq!(st.stats().pending_spills, 0);
+        assert!(st.stats().pages_written >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversize_stream_is_a_counted_spill_failure() {
+        let dir = scratch("oversize");
+        let mut st =
+            TieredStore::open(cfg(&dir, 100)).expect("open");
+        // Page payload capacity is 4096-32; this stream cannot fit
+        // one page, and it overflows the RAM budget too.
+        st.insert_arc("big".into(), Arc::new(stream_of(8000)));
+        let s = st.stats();
+        assert_eq!(s.spill_failures, 1);
+        assert_eq!(s.spills, 0);
+        assert!(st.get("big").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_fault_injection_is_deterministic_and_degrades_cleanly()
+    {
+        let dir = scratch("spillfail");
+        let mut c = cfg(&dir, 40);
+        c.spill_fail = Some((2, 0)); // spills 0, 2, 4, … fail
+        let mut st = TieredStore::open(c).expect("open");
+        for i in 0..6 {
+            st.insert_arc(
+                format!("k{i}"),
+                Arc::new(stream_of(30)),
+            );
+        }
+        // 5 evictions happened (k5 still in RAM): seq 0,2,4 failed.
+        let s = st.stats();
+        assert_eq!(s.spill_failures, 3);
+        assert_eq!(s.spills, 2);
+        // Failed spills are clean misses; surviving ones serve.
+        assert!(st.get("k0").is_none(), "seq 0 failed");
+        assert!(st.get("k1").is_some(), "seq 1 spilled");
+        let s = st.stats();
+        assert!(conservation_holds(&s));
+        assert_eq!(s.disk_hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn get_or_seal_probes_disk_before_resealing() {
+        let dir = scratch("getorseal");
+        let a = sealed(11);
+        let mut st = TieredStore::open(cfg(&dir, 1 << 20))
+            .expect("open");
+        st.insert_arc("a".into(), Arc::new(a.clone()));
+        st.demote_all();
+        let mut seals = 0;
+        let got = st.get_or_seal("a", || {
+            seals += 1;
+            sealed(11)
+        });
+        assert_eq!(seals, 0, "disk hit must preempt the re-seal");
+        assert_eq!(*got, a);
+        let miss = st.get_or_seal("fresh", || {
+            seals += 1;
+            sealed(12)
+        });
+        assert_eq!(seals, 1);
+        assert_eq!(*miss, sealed(12));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn accounting_stays_exact_through_tiered_churn() {
+        let dir = scratch("churn");
+        let mut c = cfg(&dir, 256);
+        c.page_size_bytes = 2048;
+        let mut st = TieredStore::open(c).expect("open");
+        for i in 0..400usize {
+            let key = format!("k{}", i % 37);
+            let size = 16 + (i * 31) % 120;
+            match i % 4 {
+                0 => st.insert_arc(
+                    key,
+                    Arc::new(stream_of(size)),
+                ),
+                1 => {
+                    let _ = st.get(&key);
+                }
+                2 => {
+                    let _ =
+                        st.get_or_seal(&key, || stream_of(size));
+                }
+                _ => {
+                    if i % 40 == 3 {
+                        st.flush();
+                    } else {
+                        let _ = st.get(&key);
+                    }
+                }
+            }
+            let s = st.stats();
+            assert!(conservation_holds(&s), "after op {i}");
+            assert_eq!(
+                st.bytes_held(),
+                st.recounted_bytes(),
+                "after op {i}"
+            );
+        }
+        let s = st.stats();
+        assert!(s.spills > 0, "churn must spill");
+        assert!(s.disk_hits > 0, "churn must hit the disk tier");
+        assert!(s.pages_written > 0, "churn must write pages");
+        assert_eq!(s.spill_failures, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

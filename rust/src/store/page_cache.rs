@@ -1,0 +1,186 @@
+//! Bounded LRU cache of verified page payloads.
+//!
+//! The disk tier never hands out bytes that have not passed the page
+//! checksum, so the cache holds *validated payloads* (header already
+//! stripped), `Arc`-shared like every other byte payload in the
+//! pipeline. Capacity is counted in pages (`max_entries`), not bytes:
+//! pages are fixed-size, so entries × page_size bounds the RAM spent
+//! on the disk tier's hot set. Same Vec-backed LRU idiom as
+//! [`InterlayerCache`](crate::coordinator::InterlayerCache) — front
+//! is coldest, a hit refreshes recency.
+
+use std::sync::Arc;
+
+/// Configuration of the in-memory page cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageCacheConfig {
+    /// Maximum number of cached pages (0 disables caching — every
+    /// disk hit is a page fault).
+    pub max_entries: usize,
+}
+
+impl Default for PageCacheConfig {
+    fn default() -> Self {
+        PageCacheConfig { max_entries: 64 }
+    }
+}
+
+/// Counters + occupancy snapshot of a [`PageCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PageCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub max_entries: usize,
+}
+
+/// LRU page-payload cache keyed by page sequence number.
+pub struct PageCache {
+    max_entries: usize,
+    /// LRU order: front = coldest, back = most recently used.
+    held: Vec<(u64, Arc<Vec<u8>>)>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl PageCache {
+    pub fn new(cfg: PageCacheConfig) -> Self {
+        PageCache {
+            max_entries: cfg.max_entries,
+            held: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up a page payload; a hit refreshes recency.
+    pub fn get(&mut self, page: u64) -> Option<Arc<Vec<u8>>> {
+        if let Some(i) =
+            self.held.iter().position(|(p, _)| *p == page)
+        {
+            self.hits += 1;
+            let entry = self.held.remove(i);
+            self.held.push(entry);
+            Some(Arc::clone(&self.held.last().expect(
+                "invariant: entry just pushed for recency refresh",
+            ).1))
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Insert a verified payload (replacing any same-page entry),
+    /// then evict coldest pages down to capacity.
+    pub fn insert(&mut self, page: u64, payload: Arc<Vec<u8>>) {
+        if let Some(i) =
+            self.held.iter().position(|(p, _)| *p == page)
+        {
+            self.held.remove(i);
+        }
+        self.held.push((page, payload));
+        while self.held.len() > self.max_entries {
+            self.held.remove(0);
+            self.evictions += 1;
+        }
+    }
+
+    /// Drop a page (its file slot was found corrupt or stale).
+    pub fn invalidate(&mut self, page: u64) {
+        self.held.retain(|(p, _)| *p != page);
+    }
+
+    pub fn stats(&self) -> PageCacheStats {
+        PageCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.held.len(),
+            max_entries: self.max_entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(page: u64) -> Arc<Vec<u8>> {
+        Arc::new(vec![page as u8; 16])
+    }
+
+    #[test]
+    fn hit_refreshes_recency_and_counts() {
+        let mut c =
+            PageCache::new(PageCacheConfig { max_entries: 2 });
+        c.insert(0, payload(0));
+        c.insert(1, payload(1));
+        assert!(c.get(0).is_some()); // 1 is now coldest
+        c.insert(2, payload(2));
+        let s = c.stats();
+        assert_eq!((s.hits, s.evictions, s.entries), (1, 1, 2));
+        assert!(c.get(1).is_none(), "coldest page evicted");
+        assert!(c.get(0).is_some());
+        assert!(c.get(2).is_some());
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn accounting_stays_exact_under_churn() {
+        let mut c =
+            PageCache::new(PageCacheConfig { max_entries: 4 });
+        let mut expect_live: Vec<u64> = Vec::new();
+        let mut gets = 0u64;
+        for i in 0..200u64 {
+            let page = i % 11;
+            if i % 3 == 0 {
+                c.insert(page, payload(page));
+                expect_live.retain(|p| *p != page);
+                expect_live.push(page);
+                if expect_live.len() > 4 {
+                    expect_live.remove(0);
+                }
+            } else {
+                gets += 1;
+                let hit = c.get(page).is_some();
+                assert_eq!(
+                    hit,
+                    expect_live.contains(&page),
+                    "op {i}"
+                );
+                if hit {
+                    expect_live.retain(|p| *p != page);
+                    expect_live.push(page);
+                }
+            }
+            let s = c.stats();
+            assert_eq!(s.entries, expect_live.len(), "op {i}");
+            assert!(s.entries <= 4, "op {i}");
+            assert_eq!(s.hits + s.misses, gets, "op {i}");
+        }
+        let s = c.stats();
+        assert!(s.evictions > 0);
+        assert!(s.hits > 0 && s.misses > 0);
+    }
+
+    #[test]
+    fn zero_capacity_caches_nothing() {
+        let mut c =
+            PageCache::new(PageCacheConfig { max_entries: 0 });
+        c.insert(7, payload(7));
+        assert_eq!(c.stats().entries, 0);
+        assert!(c.get(7).is_none());
+    }
+
+    #[test]
+    fn invalidate_removes_the_page() {
+        let mut c = PageCache::new(PageCacheConfig::default());
+        c.insert(3, payload(3));
+        c.invalidate(3);
+        assert!(c.get(3).is_none());
+        assert_eq!(c.stats().entries, 0);
+    }
+}

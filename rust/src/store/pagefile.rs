@@ -1,0 +1,524 @@
+//! Append-only page file: the disk tier's storage layout.
+//!
+//! The file is an array of fixed-size pages (`page_size_bytes`,
+//! chosen at open). Each page is written exactly once — the
+//! write-behind queue packs one or more length-prefixed sealed-stream
+//! records into a page, stamps a checksummed header, appends it, and
+//! never touches it again. Immutability is the crash-safety model:
+//! a page is either fully present with a valid checksum (its entries
+//! are servable) or it is rejected wholesale at open (its entries
+//! were never promised to anyone — the RAM tier re-seals on miss).
+//!
+//! Page layout (all little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  "FMCP"
+//!      4     2  version (1)
+//!      6     2  reserved (0)
+//!      8     4  entry_count
+//!     12     4  payload_len
+//!     16     8  fnv1a64(payload[..payload_len])
+//!     24     8  page_seq (== page index in the file)
+//!     32     …  payload, zero-padded to page_size_bytes
+//! ```
+//!
+//! Payload = `entry_count` records, each
+//! `u32 key_len | u32 record_len | key utf-8 | record` where `record`
+//! is a [`super::codec`] sealed-stream record. The in-memory index
+//! locates an entry as (page_seq, offset-into-payload, record_len).
+//!
+//! Opening an existing file re-scans every page slot: pages that fail
+//! the magic/version/checksum/bounds checks (a torn tail after a
+//! crash, bit rot, a hand-corrupted file) are counted and skipped —
+//! never a panic, and never an index entry that could serve wrong
+//! bytes. The next append overwrites any rejected tail slot.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+use anyhow::{bail, Context};
+
+pub(crate) const PAGE_MAGIC: [u8; 4] = *b"FMCP";
+pub(crate) const PAGE_VERSION: u16 = 1;
+/// Fixed page header size; the payload capacity of a page is
+/// `page_size - PAGE_HEADER_BYTES`.
+pub const PAGE_HEADER_BYTES: usize = 32;
+/// Smallest sane page: header + room for a minimal record.
+pub const MIN_PAGE_BYTES: usize = 512;
+
+/// Location of one sealed-stream record inside the page file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EntryLoc {
+    /// Page sequence number (== page index in the file).
+    pub page: u64,
+    /// Byte offset of the record inside the page payload.
+    pub offset: u32,
+    /// Record length in bytes.
+    pub len: u32,
+}
+
+/// FNV-1a 64-bit — tiny, dependency-free, and plenty to reject torn
+/// or bit-rotted pages (this is corruption *detection*, not crypto).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Outcome of scanning an existing page file at open.
+pub struct Recovered {
+    /// Servable entries, in (page, offset) order — later pages win
+    /// duplicate keys when folded into the index.
+    pub entries: Vec<(String, EntryLoc)>,
+    /// Page slots dropped by the magic/version/checksum/bounds
+    /// checks.
+    pub pages_rejected: u64,
+    /// Valid pages found.
+    pub pages_valid: u64,
+}
+
+/// The append-only page file. All writes go through
+/// [`PageFile::append_page`]; the handle is `&mut`-only, so the
+/// owning store's lock serializes reads against the append cursor.
+pub struct PageFile {
+    file: File,
+    path: PathBuf,
+    page_size: usize,
+    next_seq: u64,
+}
+
+impl PageFile {
+    /// Per-page payload capacity for a given page size.
+    pub fn payload_capacity_of(page_size: usize) -> usize {
+        page_size.saturating_sub(PAGE_HEADER_BYTES)
+    }
+
+    pub fn payload_capacity(&self) -> usize {
+        Self::payload_capacity_of(self.page_size)
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Open (creating if absent) the page file inside `dir`, scanning
+    /// any existing pages into a recovered entry list.
+    pub fn open(dir: &Path, page_size: usize)
+                -> Result<(PageFile, Recovered)> {
+        if page_size < MIN_PAGE_BYTES {
+            bail!(
+                "store: page size {page_size} below minimum \
+                 {MIN_PAGE_BYTES}"
+            );
+        }
+        std::fs::create_dir_all(dir).with_context(|| {
+            format!("store: creating dir {}", dir.display())
+        })?;
+        let path = dir.join("streams.pages");
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)
+            .with_context(|| {
+                format!("store: opening {}", path.display())
+            })?;
+        let file_len = file
+            .metadata()
+            .with_context(|| {
+                format!("store: stat {}", path.display())
+            })?
+            .len();
+        let slots = file_len.div_ceil(page_size as u64);
+        let mut recovered = Recovered {
+            entries: Vec::new(),
+            pages_rejected: 0,
+            pages_valid: 0,
+        };
+        let mut buf = vec![0u8; page_size];
+        // Appends resume after the last VALID page: a trailing run of
+        // rejected slots (torn crash tail) is overwritten rather than
+        // left as a dead gap.
+        let mut next_seq = 0u64;
+        for seq in 0..slots {
+            match read_slot(&mut file, page_size, seq, &mut buf) {
+                Ok(()) => {
+                    match parse_page(&buf, page_size, seq) {
+                        Ok(entries) => {
+                            recovered.pages_valid += 1;
+                            recovered.entries.extend(entries);
+                            next_seq = seq + 1;
+                        }
+                        Err(_) => recovered.pages_rejected += 1,
+                    }
+                }
+                // A short tail (crash mid-append) is a rejected
+                // page, not an open failure.
+                Err(_) => recovered.pages_rejected += 1,
+            }
+        }
+        Ok((
+            PageFile { file, path, page_size, next_seq },
+            recovered,
+        ))
+    }
+
+    /// Pack `entries` (key, encoded record) into one page and append
+    /// it. The caller guarantees the entries fit the payload
+    /// capacity; returns the page's locations in entry order.
+    pub fn append_page(
+        &mut self, entries: &[(String, Vec<u8>)],
+    ) -> Result<(u64, Vec<EntryLoc>)> {
+        let seq = self.next_seq;
+        let mut payload =
+            Vec::with_capacity(self.payload_capacity());
+        let mut locs = Vec::with_capacity(entries.len());
+        for (key, rec) in entries {
+            payload
+                .extend_from_slice(&(key.len() as u32).to_le_bytes());
+            payload
+                .extend_from_slice(&(rec.len() as u32).to_le_bytes());
+            payload.extend_from_slice(key.as_bytes());
+            let offset = payload.len() as u32;
+            payload.extend_from_slice(rec);
+            locs.push(EntryLoc { page: seq, offset, len: rec.len() as u32 });
+        }
+        if payload.len() > self.payload_capacity() {
+            bail!(
+                "store: page overpacked: {} payload bytes > {} \
+                 capacity",
+                payload.len(),
+                self.payload_capacity()
+            );
+        }
+        let mut page = vec![0u8; self.page_size];
+        page[0..4].copy_from_slice(&PAGE_MAGIC);
+        page[4..6].copy_from_slice(&PAGE_VERSION.to_le_bytes());
+        page[8..12].copy_from_slice(
+            &(entries.len() as u32).to_le_bytes(),
+        );
+        page[12..16]
+            .copy_from_slice(&(payload.len() as u32).to_le_bytes());
+        page[16..24]
+            .copy_from_slice(&fnv1a64(&payload).to_le_bytes());
+        page[24..32].copy_from_slice(&seq.to_le_bytes());
+        page[PAGE_HEADER_BYTES..PAGE_HEADER_BYTES + payload.len()]
+            .copy_from_slice(&payload);
+        self.file
+            .seek(SeekFrom::Start(seq * self.page_size as u64))
+            .context("store: seek for append")?;
+        self.file
+            .write_all(&page)
+            .context("store: page append")?;
+        self.file.flush().context("store: page flush")?;
+        self.next_seq = seq + 1;
+        Ok((seq, locs))
+    }
+
+    /// Read and validate one page, returning its payload (sized to
+    /// `payload_len`). Any validation failure is an `Err` — the
+    /// caller drops the page's index entries rather than serving it.
+    pub fn read_page(&mut self, seq: u64) -> Result<Vec<u8>> {
+        if seq >= self.next_seq {
+            bail!("store: page {seq} past end of file");
+        }
+        let mut buf = vec![0u8; self.page_size];
+        read_slot(&mut self.file, self.page_size, seq, &mut buf)?;
+        validate_page(&buf, self.page_size, seq)?;
+        let payload_len = u32::from_le_bytes([
+            buf[12], buf[13], buf[14], buf[15],
+        ]) as usize;
+        buf.drain(..PAGE_HEADER_BYTES);
+        buf.truncate(payload_len);
+        Ok(buf)
+    }
+}
+
+fn read_slot(file: &mut File, page_size: usize, seq: u64,
+             buf: &mut [u8]) -> Result<()> {
+    file.seek(SeekFrom::Start(seq * page_size as u64))
+        .context("store: seek")?;
+    file.read_exact(buf)
+        .with_context(|| format!("store: short read of page {seq}"))
+}
+
+/// Header checks shared by the open-time scan and the read path.
+fn validate_page(buf: &[u8], page_size: usize, seq: u64)
+                 -> Result<()> {
+    if buf[0..4] != PAGE_MAGIC {
+        bail!("store: page {seq}: bad magic");
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if version != PAGE_VERSION {
+        bail!("store: page {seq}: unknown version {version}");
+    }
+    let payload_len =
+        u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]])
+            as usize;
+    if payload_len > page_size - PAGE_HEADER_BYTES {
+        bail!("store: page {seq}: payload length out of bounds");
+    }
+    let want = u64::from_le_bytes([
+        buf[16], buf[17], buf[18], buf[19], buf[20], buf[21],
+        buf[22], buf[23],
+    ]);
+    let payload = &buf
+        [PAGE_HEADER_BYTES..PAGE_HEADER_BYTES + payload_len];
+    if fnv1a64(payload) != want {
+        bail!("store: page {seq}: checksum mismatch");
+    }
+    let stamped = u64::from_le_bytes([
+        buf[24], buf[25], buf[26], buf[27], buf[28], buf[29],
+        buf[30], buf[31],
+    ]);
+    if stamped != seq {
+        bail!(
+            "store: page {seq}: stamped seq {stamped} does not \
+             match slot"
+        );
+    }
+    Ok(())
+}
+
+/// Validate a page and walk its payload into (key, loc) entries.
+fn parse_page(buf: &[u8], page_size: usize, seq: u64)
+              -> Result<Vec<(String, EntryLoc)>> {
+    validate_page(buf, page_size, seq)?;
+    let entry_count =
+        u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]])
+            as usize;
+    let payload_len =
+        u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]])
+            as usize;
+    let payload = &buf
+        [PAGE_HEADER_BYTES..PAGE_HEADER_BYTES + payload_len];
+    let mut entries = Vec::with_capacity(entry_count);
+    let mut pos = 0usize;
+    for _ in 0..entry_count {
+        if pos + 8 > payload.len() {
+            bail!("store: page {seq}: truncated entry header");
+        }
+        let key_len = u32::from_le_bytes([
+            payload[pos], payload[pos + 1], payload[pos + 2],
+            payload[pos + 3],
+        ]) as usize;
+        let rec_len = u32::from_le_bytes([
+            payload[pos + 4], payload[pos + 5], payload[pos + 6],
+            payload[pos + 7],
+        ]) as usize;
+        let key_end = pos + 8 + key_len;
+        let rec_end = key_end + rec_len;
+        if rec_end > payload.len() {
+            bail!("store: page {seq}: entry past payload end");
+        }
+        let key = std::str::from_utf8(&payload[pos + 8..key_end])
+            .with_context(|| {
+                format!("store: page {seq}: key not utf-8")
+            })?
+            .to_string();
+        entries.push((
+            key,
+            EntryLoc {
+                page: seq,
+                offset: key_end as u32,
+                len: rec_len as u32,
+            },
+        ));
+        pos = rec_end;
+    }
+    if pos != payload.len() {
+        bail!("store: page {seq}: trailing payload bytes");
+    }
+    Ok(entries)
+}
+
+/// Parse one record out of a validated page payload (the page-cache
+/// hit path). Bounds-checked: a stale location can only produce an
+/// `Err`, never a wrong slice.
+pub fn record_in_payload<'a>(payload: &'a [u8], loc: &EntryLoc)
+                             -> Result<&'a [u8]> {
+    let start = loc.offset as usize;
+    let end = start + loc.len as usize;
+    if end > payload.len() {
+        bail!("store: record location past payload end");
+    }
+    Ok(&payload[start..end])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fmc-pagefile-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn rec(n: usize, fill: u8) -> Vec<u8> {
+        vec![fill; n]
+    }
+
+    #[test]
+    fn pages_round_trip_across_reopen() {
+        let dir = scratch("roundtrip");
+        let mut locs = Vec::new();
+        {
+            let (mut pf, rec0) =
+                PageFile::open(&dir, 512).expect("open");
+            assert_eq!(rec0.entries.len(), 0);
+            let (seq, l) = pf
+                .append_page(&[
+                    ("a".into(), rec(40, 1)),
+                    ("b".into(), rec(60, 2)),
+                ])
+                .expect("append 0");
+            assert_eq!(seq, 0);
+            locs.extend(l);
+            let (seq, l) = pf
+                .append_page(&[("c".into(), rec(200, 3))])
+                .expect("append 1");
+            assert_eq!(seq, 1);
+            locs.extend(l);
+        }
+        let (mut pf, recovered) =
+            PageFile::open(&dir, 512).expect("reopen");
+        assert_eq!(recovered.pages_valid, 2);
+        assert_eq!(recovered.pages_rejected, 0);
+        let keys: Vec<&str> = recovered
+            .entries
+            .iter()
+            .map(|(k, _)| k.as_str())
+            .collect();
+        assert_eq!(keys, ["a", "b", "c"]);
+        for ((_, loc), want) in
+            recovered.entries.iter().zip([rec(40, 1), rec(60, 2),
+                                          rec(200, 3)])
+        {
+            let payload =
+                pf.read_page(loc.page).expect("read page");
+            let got = record_in_payload(&payload, loc)
+                .expect("record");
+            assert_eq!(got, &want[..]);
+        }
+        // Recovered locations must equal the ones append reported.
+        let recovered_locs: Vec<EntryLoc> =
+            recovered.entries.iter().map(|(_, l)| *l).collect();
+        assert_eq!(recovered_locs, locs);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_tail_is_rejected_not_fatal() {
+        let dir = scratch("trunc");
+        {
+            let (mut pf, _) =
+                PageFile::open(&dir, 512).expect("open");
+            pf.append_page(&[("a".into(), rec(40, 1))])
+                .expect("append 0");
+            pf.append_page(&[("b".into(), rec(40, 2))])
+                .expect("append 1");
+        }
+        let path = dir.join("streams.pages");
+        let full = std::fs::metadata(&path).expect("stat").len();
+        let f = OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .expect("reopen for truncate");
+        f.set_len(full - 100).expect("truncate");
+        let (_, recovered) =
+            PageFile::open(&dir, 512).expect("reopen");
+        assert_eq!(recovered.pages_valid, 1);
+        assert_eq!(recovered.pages_rejected, 1);
+        assert_eq!(recovered.entries.len(), 1);
+        assert_eq!(recovered.entries[0].0, "a");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flipped_payload_byte_fails_checksum() {
+        let dir = scratch("corrupt");
+        {
+            let (mut pf, _) =
+                PageFile::open(&dir, 512).expect("open");
+            pf.append_page(&[("a".into(), rec(64, 7))])
+                .expect("append");
+        }
+        let path = dir.join("streams.pages");
+        let mut bytes = std::fs::read(&path).expect("read");
+        bytes[PAGE_HEADER_BYTES + 20] ^= 0xff;
+        std::fs::write(&path, &bytes).expect("write back");
+        let (mut pf, recovered) =
+            PageFile::open(&dir, 512).expect("reopen");
+        assert_eq!(recovered.pages_valid, 0);
+        assert_eq!(recovered.pages_rejected, 1);
+        assert!(recovered.entries.is_empty());
+        // The read path rejects it too (stale-index simulation).
+        assert!(pf.read_page(0).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejected_tail_slot_is_overwritten_by_next_append() {
+        let dir = scratch("tailslot");
+        {
+            let (mut pf, _) =
+                PageFile::open(&dir, 512).expect("open");
+            pf.append_page(&[("a".into(), rec(40, 1))])
+                .expect("append");
+        }
+        let path = dir.join("streams.pages");
+        let full = std::fs::metadata(&path).expect("stat").len();
+        OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .expect("reopen")
+            .set_len(full - 1)
+            .expect("truncate 1 byte");
+        let (mut pf, recovered) =
+            PageFile::open(&dir, 512).expect("reopen");
+        assert_eq!(recovered.pages_rejected, 1);
+        let (seq, _) = pf
+            .append_page(&[("b".into(), rec(40, 2))])
+            .expect("append over tail");
+        assert_eq!(seq, 0, "tail slot must be reused");
+        let (_, recovered) =
+            PageFile::open(&dir, 512).expect("reopen again");
+        assert_eq!(recovered.pages_valid, 1);
+        assert_eq!(recovered.entries[0].0, "b");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overpacked_page_is_an_error_not_a_panic() {
+        let dir = scratch("overpack");
+        let (mut pf, _) =
+            PageFile::open(&dir, 512).expect("open");
+        let cap = pf.payload_capacity();
+        assert!(pf
+            .append_page(&[("k".into(), rec(cap + 1, 0))])
+            .is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tiny_page_size_is_rejected() {
+        let dir = scratch("tiny");
+        assert!(PageFile::open(&dir, 64).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

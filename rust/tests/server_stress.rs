@@ -31,6 +31,15 @@
 //! fault-free run, and property-checks the conservation identity
 //! `submitted == replied + shed_* + failed` under churn.
 //!
+//! Tiered store (ISSUE 10): the RAM interlayer cache is now the top
+//! tier of a [`fmc_accel::store::TieredStore`] whose evictions spill
+//! to a paged disk tier instead of dropping. The store tests below
+//! require the tri-identity — a disk-tier hit answers bit-identical
+//! to a RAM hit and to a cold re-seal — and hammer the spill /
+//! backfill path from many threads, gating the exact byte accounting
+//! plus the tier-hit conservation identity
+//! `ram_hits + disk_hits + misses == lookups`.
+//!
 //! Sharded front door (ISSUE 9): the single batcher is gone —
 //! submits land in per-worker bounded shards and workers pull and
 //! form their own batches, stealing whole batches from sibling
@@ -70,6 +79,7 @@ use fmc_accel::obs::{
 };
 use fmc_accel::sim::scheduler::{self, CompressionProfile};
 use fmc_accel::sim::Accelerator;
+use fmc_accel::store::{TieredStore, TieredStoreConfig};
 use fmc_accel::util::json::Json;
 
 /// Deterministic synthetic engine: class = (first pixel) mod 7, and
@@ -275,7 +285,7 @@ fn idle_arrivals_still_coalesce() {
 /// interlayer transport; returns the response payloads relevant to
 /// accounting plus the shutdown metrics.
 fn run_accounted_server(
-    cache: Arc<Mutex<InterlayerCache>>,
+    cache: Arc<Mutex<TieredStore>>,
     transport: Arc<dyn InterlayerTransport>,
 ) -> (Vec<(usize, u64, f64)>, Metrics) {
     let factory: EngineFactory = Arc::new(|_: usize| {
@@ -321,12 +331,12 @@ fn cache_hit_responses_equal_cache_miss_responses() {
     // (sealed streams reused, no recompression) answers with exactly
     // the same classes and simulated-hardware accounting as the
     // server that sealed everything from scratch.
-    let cache = Arc::new(Mutex::new(InterlayerCache::new(
+    let cache = Arc::new(Mutex::new(TieredStore::ram_only(
         64 * 1024 * 1024,
     )));
     let (miss_resps, miss_metrics) =
         run_accounted_server(cache.clone(), Arc::new(SealedTransport));
-    let after_miss = cache.lock().unwrap().stats();
+    let after_miss = cache.lock().unwrap().cache_stats();
     assert!(after_miss.misses > 0, "first run must seal streams");
     assert_eq!(after_miss.hits, 0);
     assert!(after_miss.bytes_held > 0, "streams retained");
@@ -335,7 +345,7 @@ fn cache_hit_responses_equal_cache_miss_responses() {
 
     let (hit_resps, hit_metrics) =
         run_accounted_server(cache.clone(), Arc::new(SealedTransport));
-    let after_hit = cache.lock().unwrap().stats();
+    let after_hit = cache.lock().unwrap().cache_stats();
     assert_eq!(
         after_hit.misses, after_miss.misses,
         "hit path must not reseal"
@@ -355,7 +365,7 @@ fn sealed_hit_batches_equal_dense_miss_batches() {
     // fresh, dense batcher→worker currency) must answer exactly like
     // a sealed-transport server on the warm cache (profiles from
     // cached streams, sealed currency end to end).
-    let cache = Arc::new(Mutex::new(InterlayerCache::new(
+    let cache = Arc::new(Mutex::new(TieredStore::ram_only(
         64 * 1024 * 1024,
     )));
     let (dense_miss, m1) =
@@ -679,6 +689,152 @@ fn interlayer_cache_byte_accounting_survives_eviction_races() {
     assert!(stats.evictions > 0, "budget pressure must evict");
 }
 
+// --- tiered sealed-stream store under the server (ISSUE 10) -----------
+
+/// Fresh scratch directory for a disk-backed store, named so
+/// `make test-store`'s `/tmp/fmc-store-*` hygiene globs cover it.
+fn store_scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "fmc-store-{}-stress-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn store_disk_hits_answer_bit_identical_to_ram_and_cold() {
+    // Tentpole acceptance (tri-identity): the same server run served
+    // three ways — cold (every stream sealed fresh), warm RAM (every
+    // profile from the RAM tier), and disk (the whole RAM tier
+    // demoted to the page file first) — must produce byte-identical
+    // responses: class, sim_cycles, and sim_energy_j all equal.
+    let dir = store_scratch("tri");
+    let mut cfg = TieredStoreConfig::new(&dir, 64 * 1024 * 1024);
+    cfg.page_size_bytes = 1 << 20; // every record must fit one page
+    let store = Arc::new(Mutex::new(
+        TieredStore::open(cfg).expect("open store"),
+    ));
+
+    let (cold, m_cold) =
+        run_accounted_server(store.clone(), Arc::new(SealedTransport));
+    assert!(m_cold.cache_misses > 0, "cold run must seal streams");
+    assert_eq!(m_cold.cache_hits, 0);
+
+    let (ram, m_ram) =
+        run_accounted_server(store.clone(), Arc::new(SealedTransport));
+    assert!(m_ram.cache_hits > 0, "warm run must hit the RAM tier");
+    assert_eq!(m_ram.cache_misses, 0);
+    {
+        let s = store.lock().unwrap();
+        let st = s.stats();
+        assert!(st.ram_hits > 0, "warm run's hits are RAM hits");
+        assert_eq!(st.disk_hits, 0, "nothing demoted yet");
+    }
+
+    // Force the disk tier: demote every cached stream to the page
+    // file, then serve again — the hits must come back from disk.
+    {
+        let mut s = store.lock().unwrap();
+        s.demote_all();
+        assert_eq!(s.bytes_held(), 0, "RAM tier fully demoted");
+        let st = s.stats();
+        assert_eq!(st.spill_failures, 0, "every demotion must land");
+        assert_eq!(st.pending_spills, 0, "demote_all flushes");
+        assert!(st.pages_written > 0, "demotion must write pages");
+        assert!(st.disk_entries > 0, "demotion must index entries");
+    }
+    let (disk, m_disk) =
+        run_accounted_server(store.clone(), Arc::new(SealedTransport));
+    assert!(m_disk.cache_hits > 0, "disk hits still count as hits");
+    assert_eq!(m_disk.cache_misses, 0, "disk run must not re-seal");
+    {
+        let s = store.lock().unwrap();
+        let st = s.stats();
+        assert!(st.disk_hits > 0, "third run must hit the disk tier");
+        assert_eq!(
+            st.ram_hits + st.disk_hits + st.misses,
+            st.lookups,
+            "tier-hit conservation"
+        );
+    }
+
+    assert_eq!(cold, ram, "RAM hits drifted from the cold re-seal");
+    assert_eq!(ram, disk, "disk hits drifted from RAM hits");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_spill_race_keeps_exact_byte_accounting() {
+    // 8 worker threads hammer one shared disk-backed store with
+    // overlapping keys under a RAM budget small enough to force
+    // continuous eviction — every eviction now *spills* instead of
+    // dropping, and lookups race promotions racing drains. The byte
+    // counter must equal the recounted entry sum, the budget must
+    // hold, and the tier-hit conservation identity must account for
+    // every lookup with zero spill failures.
+    const THREADS: usize = 8;
+    const OPS: usize = 300;
+    let dir = store_scratch("race");
+    let mut cfg = TieredStoreConfig::new(&dir, 2048);
+    cfg.page_size_bytes = 4096;
+    let store = Arc::new(Mutex::new(
+        TieredStore::open(cfg).expect("open store"),
+    ));
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let store = Arc::clone(&store);
+            s.spawn(move || {
+                for i in 0..OPS {
+                    let key = format!("layer{}", (t * 7 + i * 13) % 23);
+                    // the server's pattern: lookup under the lock,
+                    // seal outside it, insert the sealed stream
+                    let hit = store.lock().unwrap().get(&key);
+                    match hit {
+                        Some(bs) => {
+                            assert!(bs.stream_bytes() > 0);
+                        }
+                        None => {
+                            let bs =
+                                stream_of(64 + (i * 31) % 200);
+                            store
+                                .lock()
+                                .unwrap()
+                                .insert_arc(key, Arc::new(bs));
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let mut s = store.lock().unwrap();
+    s.flush();
+    let stats = s.stats();
+    assert_eq!(
+        s.bytes_held(),
+        s.recounted_bytes(),
+        "byte counter drifted from the entries"
+    );
+    assert!(s.bytes_held() <= 2048, "budget violated");
+    assert_eq!(
+        stats.lookups,
+        (THREADS * OPS) as u64,
+        "every get is exactly one lookup"
+    );
+    assert_eq!(
+        stats.ram_hits + stats.disk_hits + stats.misses,
+        stats.lookups,
+        "tier-hit conservation under races"
+    );
+    assert!(stats.spills > 0, "budget pressure must spill");
+    assert!(stats.disk_hits > 0, "spilled keys must serve from disk");
+    assert_eq!(stats.spill_failures, 0, "no spill may be lost");
+    assert_eq!(stats.pending_spills, 0, "flush drains the queue");
+    assert!(stats.pages_written > 0, "churn must commit pages");
+    drop(s);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 // --- pipeline telemetry (ISSUE 6) -------------------------------------
 
 /// TagEngine server serving `n` requests at the given worker count;
@@ -880,9 +1036,33 @@ fn stats_json_shape_matches_schema() {
         num(pool.get("jobs_executed")),
         "pool job accounting must balance in the snapshot"
     );
-    // Schema 3 (ISSUE 9): the sharded-queue block, plus p999 on every
-    // histogram (asserted via hist_keys above).
-    assert_eq!(num(doc.get("schema")), 3.0);
+    // Schema 4 (ISSUE 10): the tiered-store block (and, from schema
+    // 3, the sharded-queue block plus p999 on every histogram,
+    // asserted via hist_keys above).
+    assert_eq!(num(doc.get("schema")), 4.0);
+    let store = doc.get("store");
+    for key in [
+        "lookups", "ram_hits", "disk_hits", "misses", "spills",
+        "spilled_bytes", "spill_failures", "page_faults",
+        "pages_written", "pages_rejected", "disk_entries",
+        "pending_spills",
+    ] {
+        assert!(
+            !matches!(store.get(key), Json::Null),
+            "store key {key} missing"
+        );
+        assert!(num(store.get(key)) >= 0.0, "store key {key} negative");
+    }
+    // Tier-hit conservation in the exported JSON — degenerate here
+    // (pinned sim_profile means the store saw no lookups), but the
+    // identity and the block's shape are what --check-stats gates.
+    assert_eq!(
+        num(store.get("ram_hits"))
+            + num(store.get("disk_hits"))
+            + num(store.get("misses")),
+        num(store.get("lookups")),
+        "tier-hit conservation in the exported JSON"
+    );
     let queue = doc.get("queue");
     for key in [
         "shards", "pulls", "steals", "stolen_requests",
@@ -1336,7 +1516,7 @@ fn run_accounted_chaos(
     let mut cfg =
         ServerConfig::new("/nonexistent-artifacts-not-used")
             .with_workers(2)
-            .with_cache(Arc::new(Mutex::new(InterlayerCache::new(
+            .with_cache(Arc::new(Mutex::new(TieredStore::ram_only(
                 64 * 1024 * 1024,
             ))))
             .with_transport(Arc::new(SealedTransport));

@@ -43,7 +43,10 @@ shed/requeue counters present and non-negative, with the conservation
 identity ``submitted == replied + shed_* + failed`` holding exactly —
 this is what ``make chaos`` gates after each fault-injected serve run
 — and, from schema v3 on, the sharded-queue block (shards / pulls /
-steals / stolen_requests / shard_depth_highwater, all non-negative).
+steals / stolen_requests / shard_depth_highwater, all non-negative),
+and, from schema v4 on, the tiered-store block: every tier counter
+present and non-negative with the tier-hit conservation identity
+``ram_hits + disk_hits + misses == lookups`` holding exactly.
 With ``--check-stats`` the BASELINE/FRESH positionals are optional.
 
 ``--check-serve-bench BENCH.json`` validates the sustained-rate
@@ -54,6 +57,13 @@ non-negative throughput, non-negative queue counters, and the
 conservation identity ``submitted == replied + shed + failed``. An
 empty ``runs`` list passes only on the checked-in
 ``"placeholder": true`` baseline.
+
+``--check-store-bench BENCH.json`` validates the cache-pressure
+benchmark written by ``cargo bench --bench cache_pressure``
+(``make bench-store`` / the quick smoke variant): every run entry
+must carry the required keys, non-negative counters, the tier-hit
+conservation identity ``ram_hits + disk_hits + misses == lookups``,
+and re-seals bounded by misses. Same placeholder rule as above.
 
 Exit code 0 = pass, 1 = regression, 2 = usage/file error.
 """
@@ -102,6 +112,13 @@ ADMISSION_KEYS = (("queue_cap", "submitted", "replied", "failed",
 # Sharded work-stealing queue block (schema v3, ISSUE 9).
 QUEUE_KEYS = ("shards", "pulls", "steals", "stolen_requests",
               "shard_depth_highwater")
+
+# Tiered sealed-stream store block (schema v4, ISSUE 10). The first
+# four partition: ram_hits + disk_hits + misses == lookups.
+STORE_KEYS = ("lookups", "ram_hits", "disk_hits", "misses",
+              "spills", "spilled_bytes", "spill_failures",
+              "page_faults", "pages_written", "pages_rejected",
+              "disk_entries", "pending_spills")
 
 
 def check_hist(doc, label, problems):
@@ -220,6 +237,38 @@ def check_stats(path):
                 f"queue.shards {queue['shards']} != workers "
                 f"{doc['workers']} (one shard per worker)")
 
+    # Tiered-store block (schema v4, ISSUE 10): every tier counter
+    # present and non-negative, and the tier-hit conservation
+    # identity ram_hits + disk_hits + misses == lookups must hold
+    # exactly — a lookup answered by zero or two tiers shows up here.
+    store = {}
+    if isinstance(doc.get("schema"), (int, float)) \
+            and doc["schema"] >= 4:
+        store = doc.get("store")
+        if not isinstance(store, dict):
+            problems.append("store block missing (schema >= 4)")
+            store = {}
+        s_missing = [k for k in STORE_KEYS if k not in store]
+        if s_missing:
+            problems.append(
+                f"store: missing {', '.join(s_missing)}")
+        s_negative = [k for k in STORE_KEYS
+                      if isinstance(store.get(k), (int, float))
+                      and store[k] < 0]
+        if s_negative:
+            problems.append(
+                f"store: negative {', '.join(s_negative)}")
+        if not s_missing and not s_negative:
+            tiers = (store["ram_hits"] + store["disk_hits"]
+                     + store["misses"])
+            if tiers != store["lookups"]:
+                problems.append(
+                    f"store conservation: ram_hits "
+                    f"{store['ram_hits']} + disk_hits "
+                    f"{store['disk_hits']} + misses "
+                    f"{store['misses']} != lookups "
+                    f"{store['lookups']}")
+
     if problems:
         print(f"bench_compare: stats check FAILED on {path}:",
               file=sys.stderr)
@@ -237,6 +286,15 @@ def check_stats(path):
           f"(requeued {adm['requeued_batches']} batches / "
           f"{adm['requeued_requests']} requests, "
           f"{adm['open_retries']} open retries)")
+    if store:
+        print(f"  [ok        ] store conservation: "
+              f"{store['lookups']} lookups == {store['ram_hits']} "
+              f"ram + {store['disk_hits']} disk + "
+              f"{store['misses']} miss ({store['spills']} spills / "
+              f"{store['spilled_bytes']}B, "
+              f"{store['spill_failures']} spill failures, "
+              f"{store['page_faults']} page faults, "
+              f"{store['pages_rejected']} pages rejected)")
     print(f"bench_compare: stats shape OK for {path}")
     return 0
 
@@ -348,6 +406,102 @@ def check_serve_bench(path):
     return 0
 
 
+# Required keys of one cache_pressure run entry.
+STORE_RUN_KEYS = ("scenario", "working_set", "passes",
+                  "ram_budget_bytes", "accesses", "seals",
+                  "lookups", "ram_hits", "disk_hits", "misses",
+                  "spills", "spilled_bytes", "spill_failures",
+                  "page_faults", "pages_written", "wall_ms")
+
+
+def check_store_run(i, run, problems):
+    """Validate one cache_pressure run entry."""
+    label = f"runs[{i}]"
+    if not isinstance(run, dict):
+        problems.append(f"{label}: not an object")
+        return
+    missing = [k for k in STORE_RUN_KEYS if k not in run]
+    if missing:
+        problems.append(f"{label}: missing {', '.join(missing)}")
+        return
+    if run["scenario"] not in ("ram_only", "tiered"):
+        problems.append(
+            f"{label}.scenario: {run['scenario']!r} not "
+            f"ram_only/tiered")
+    for k in STORE_RUN_KEYS:
+        if k == "scenario":
+            continue
+        if not isinstance(run[k], (int, float)) or run[k] < 0:
+            problems.append(f"{label}.{k}: not a non-negative number")
+            return
+    tiers = run["ram_hits"] + run["disk_hits"] + run["misses"]
+    if tiers != run["lookups"]:
+        problems.append(
+            f"{label}: conservation: ram_hits {run['ram_hits']} + "
+            f"disk_hits {run['disk_hits']} + misses "
+            f"{run['misses']} != lookups {run['lookups']}")
+    # A seal only ever happens on a miss, so re-seals are bounded by
+    # the miss count (the final bit-identity probe can miss without
+    # sealing, so equality is not required).
+    if run["seals"] > run["misses"]:
+        problems.append(
+            f"{label}: seals {run['seals']} > misses "
+            f"{run['misses']} (sealed without a miss)")
+    if run["scenario"] == "ram_only" and (
+            run["disk_hits"] or run["page_faults"]
+            or run["spilled_bytes"]):
+        problems.append(
+            f"{label}: ram_only run shows disk-tier activity")
+
+
+def check_store_bench(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot read {path}: {e}",
+              file=sys.stderr)
+        return 2
+
+    problems = []
+    if doc.get("bench") != "cache_pressure":
+        problems.append(
+            f"bench name {doc.get('bench')!r} != 'cache_pressure'")
+    runs = doc.get("runs")
+    if not isinstance(runs, list):
+        problems.append("runs missing or not a list")
+        runs = []
+    if not runs and not doc.get("placeholder"):
+        problems.append(
+            "runs is empty but the file is not the checked-in "
+            "placeholder")
+    for i, run in enumerate(runs):
+        check_store_run(i, run, problems)
+
+    if problems:
+        print(f"bench_compare: store-bench check FAILED on {path}:",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  [REGRESSION] {p}", file=sys.stderr)
+        return 1
+    if not runs:
+        print(f"bench_compare: {path} is the pre-toolchain "
+              "placeholder; nothing to gate")
+        return 0
+    for run in runs:
+        print(f"  [ok        ] {run['scenario']:8} ws "
+              f"{run['working_set']:3} x{run['passes']}: "
+              f"{run['seals']} seals / {run['accesses']} accesses, "
+              f"{run['disk_hits']} disk hits, "
+              f"{run['page_faults']} page faults, "
+              f"conservation {run['lookups']} == "
+              f"{run['ram_hits']} + {run['disk_hits']} + "
+              f"{run['misses']}")
+    print(f"bench_compare: store-bench shape OK for {path} "
+          f"({len(runs)} runs)")
+    return 0
+
+
 def load_entries(path):
     try:
         with open(path) as f:
@@ -383,8 +537,18 @@ def main():
                          "(schema shape, quantile monotonicity, "
                          "conservation identity) instead of (or "
                          "before) the bench comparison")
+    ap.add_argument("--check-store-bench", metavar="BENCH_JSON",
+                    help="validate a cache_pressure bench JSON "
+                         "(schema shape, counter sanity, tier-hit "
+                         "conservation identity) instead of (or "
+                         "before) the bench comparison")
     args = ap.parse_args()
 
+    if args.check_store_bench:
+        rc = check_store_bench(args.check_store_bench)
+        if rc or not (args.baseline or args.check_stats
+                      or args.check_serve_bench):
+            return rc
     if args.check_serve_bench:
         rc = check_serve_bench(args.check_serve_bench)
         if rc or not (args.baseline or args.check_stats):
@@ -395,8 +559,8 @@ def main():
             return rc
     if not args.baseline or not args.fresh:
         ap.error("BASELINE and FRESH are required unless "
-                 "--check-stats/--check-serve-bench is the only "
-                 "check")
+                 "--check-stats/--check-serve-bench/"
+                 "--check-store-bench is the only check")
 
     base = load_entries(args.baseline)
     fresh = load_entries(args.fresh)
